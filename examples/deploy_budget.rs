@@ -1,0 +1,75 @@
+//! Deploying under a hard memory budget: sweep a small hyperparameter
+//! grid, then let the planner pick the best model that fits each device
+//! class — the paper's `toad_forestsize` deployment story (§4.1–4.2).
+//!
+//! ```bash
+//! cargo run --release --example deploy_budget
+//! ```
+
+use toad::coordinator::{DeploymentPlanner, DeviceKind, ModelCard, SimulatedDevice};
+use toad::data::synth::PaperDataset;
+use toad::data::train_test_split;
+use toad::gbdt::GbdtParams;
+use toad::sweep::table::{human_bytes, render};
+use toad::toad::{train_toad, train_toad_with_budget, ToadParams};
+
+fn main() {
+    let ds = PaperDataset::CovertypeBinary;
+    let data = ds.generate(1).select(&(0..8000).collect::<Vec<_>>());
+    let (train_set, test_set) = train_test_split(&data, 0.2, 1);
+    println!("dataset: {} ({} train rows)", ds.name(), train_set.n_rows());
+
+    // Candidate sweep: rounds × depth × penalties.
+    let mut planner = DeploymentPlanner::new();
+    for rounds in [8usize, 32, 128] {
+        for depth in [2usize, 3] {
+            for (iota, xi) in [(0.0, 0.0), (2.0, 1.0), (16.0, 8.0)] {
+                let params = ToadParams::new(GbdtParams::paper(rounds, depth), iota, xi);
+                let m = train_toad(&train_set, &params);
+                planner.add_candidate(ModelCard {
+                    id: format!("r{rounds}_d{depth}_i{iota}_x{xi}"),
+                    score: m.model.score(&test_set),
+                    size_bytes: m.size_bytes(),
+                    blob: m.blob,
+                });
+            }
+        }
+    }
+    println!("{} candidates swept", planner.candidates().len());
+
+    // Pareto frontier (nondominated solutions, paper §4.4).
+    let rows: Vec<Vec<String>> = planner
+        .pareto_frontier()
+        .iter()
+        .map(|c| vec![c.id.clone(), human_bytes(c.size_bytes), format!("{:.4}", c.score)])
+        .collect();
+    println!("\nquality-memory Pareto frontier:");
+    print!("{}", render(&["model", "size", "accuracy"], &rows));
+
+    // Deploy the best fit per device class.
+    println!("\ndeployments:");
+    for kind in [DeviceKind::TinyNode, DeviceKind::UnoR4, DeviceKind::Esp32S3] {
+        let mut dev = SimulatedDevice::new(0, kind);
+        match planner.deploy_to(&mut dev) {
+            Ok(id) => println!(
+                "  {:?} (budget {}): deployed `{id}` ({})",
+                kind,
+                human_bytes(dev.budget_bytes),
+                human_bytes(dev.model_size().unwrap()),
+            ),
+            Err(e) => println!("  {kind:?}: {e}"),
+        }
+    }
+
+    // Direct budget-bounded training (`toad_forestsize`): grow until the
+    // encoded model would exceed 1 KB.
+    let mut params = ToadParams::new(GbdtParams::paper(256, 2), 2.0, 1.0);
+    params.forestsize_bytes = Some(1024);
+    let budgeted = train_toad_with_budget(&train_set, &params);
+    println!(
+        "\nforestsize=1KB training: {} trees, {} bytes, accuracy {:.4}",
+        budgeted.model.n_trees(),
+        budgeted.size_bytes(),
+        budgeted.model.score(&test_set)
+    );
+}

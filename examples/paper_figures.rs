@@ -1,0 +1,232 @@
+//! Regenerate the paper's figures on fuller grids than the benches.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures -- [fig4|fig5|fig6|fig7|fig8|table2|all]
+//! ```
+//!
+//! The benches (`cargo bench`) run the same drivers on reduced grids;
+//! this binary trades minutes of compute for denser curves. Output is
+//! aligned tables plus TSV blocks for plotting.
+
+use toad::data::synth::PaperDataset;
+use toad::sweep::figures::{
+    fig4_rows, fig8_rows, multivariate_rows, table2_rows, univariate_rows, PenaltyKind,
+};
+use toad::sweep::table::{human_bytes, render};
+
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "all".into());
+    match which.as_str() {
+        "fig4" => fig4(),
+        "fig5" => fig5(),
+        "fig6" => fig6(),
+        "fig7" => fig7(),
+        "fig8" => fig8(),
+        "table2" => table2(),
+        "all" => {
+            fig4();
+            fig5();
+            fig6();
+            fig7();
+            fig8();
+            table2();
+        }
+        other => eprintln!("unknown figure `{other}`"),
+    }
+}
+
+const KB: usize = 1024;
+
+fn fig4() {
+    println!("== Figure 4: accuracy vs memory, all methods ==");
+    let limits = [KB / 4, KB / 2, KB, 2 * KB, 4 * KB, 8 * KB, 16 * KB, 32 * KB, 128 * KB];
+    let penalties = [(1.0, 0.5), (4.0, 2.0), (32.0, 16.0), (256.0, 128.0)];
+    for ds in [
+        PaperDataset::BreastCancer,
+        PaperDataset::KrVsKp,
+        PaperDataset::Mushroom,
+        PaperDataset::CovertypeBinary,
+        PaperDataset::CaliforniaHousing,
+        PaperDataset::Kin8nm,
+        PaperDataset::WineQuality,
+        PaperDataset::Covertype,
+    ] {
+        let row_cap = if matches!(ds, PaperDataset::Covertype | PaperDataset::CovertypeBinary) {
+            8000
+        } else {
+            6000
+        };
+        let rows = fig4_rows(ds, &[1, 2, 3], &[1, 2, 3], 7, &penalties, &limits, row_cap);
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .filter(|r| r.n > 0)
+            .map(|r| {
+                vec![
+                    r.series.clone(),
+                    human_bytes(r.limit_bytes),
+                    format!("{:.4}", r.mean),
+                    format!("{:.4}", r.std),
+                    format!("{}", r.n),
+                ]
+            })
+            .collect();
+        println!("\n-- {} --", ds.name());
+        print!("{}", render(&["series", "limit", "mean", "std", "seeds"], &table));
+    }
+}
+
+fn fig5() {
+    println!("\n== Figure 5: penalty grid at a fixed 1 KB budget, California Housing ==");
+    let mut grid: Vec<f64> = vec![0.0];
+    grid.extend((-4..=10).step_by(2).map(|e| 2f64.powi(e)));
+    let rows = toad::sweep::figures::multivariate_budget_rows(
+        PaperDataset::CaliforniaHousing,
+        1,
+        &grid,
+        &grid,
+        1024,
+        2,
+        KB,
+        6000,
+    );
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.3}", r.iota),
+                format!("{:.3}", r.xi),
+                human_bytes(r.size_bytes),
+                format!("{:.4}", r.score),
+            ]
+        })
+        .collect();
+    print!("{}", render(&["iota", "xi", "size(<=1KB)", "R2"], &table));
+}
+
+fn fig6() {
+    println!("\n== Figure 6: univariate sensitivity (256 iters, depth 2) ==");
+    let values: Vec<f64> = (-10..=15).map(|e| 2f64.powi(e)).collect();
+    for ds in [
+        PaperDataset::BreastCancer,
+        PaperDataset::CaliforniaHousing,
+        PaperDataset::Kin8nm,
+        PaperDataset::CovertypeBinary,
+        PaperDataset::WineQuality,
+    ] {
+        for (kind, label) in [(PenaltyKind::Feature, "iota"), (PenaltyKind::Threshold, "xi")] {
+            let rows = univariate_rows(ds, 1, kind, &values, 256, 2, 6000);
+            let table: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        format!("{:.4}", r.penalty),
+                        format!("{:.4}", r.score),
+                        format!("{}", r.n_features),
+                        format!("{}", r.n_global_values),
+                        format!("{:.2}", r.reuse_factor),
+                    ]
+                })
+                .collect();
+            println!("\n-- {} / {} --", ds.name(), label);
+            print!(
+                "{}",
+                render(&[label, "score", "features", "global_values", "ReF"], &table)
+            );
+        }
+    }
+}
+
+fn fig7() {
+    println!("\n== Figure 7: multivariate penalty grids (256 iters, depth 2) ==");
+    let grid: Vec<f64> = (-10..=15).step_by(5).map(|e| 2f64.powi(e)).collect();
+    for ds in [
+        PaperDataset::BreastCancer,
+        PaperDataset::CaliforniaHousing,
+        PaperDataset::CovertypeBinary,
+        PaperDataset::WineQuality,
+    ] {
+        let rows = multivariate_rows(ds, 1, &grid, &grid, 256, 2, 6000);
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{:.4}", r.iota),
+                    format!("{:.4}", r.xi),
+                    human_bytes(r.size_bytes),
+                    format!("{:.4}", r.score),
+                ]
+            })
+            .collect();
+        println!("\n-- {} --", ds.name());
+        print!("{}", render(&["iota", "xi", "memory", "score"], &table));
+    }
+}
+
+fn fig8() {
+    println!("\n== Figure 8 / Appendix D: boosted vs RF & pruned RF ==");
+    let limits = [2 * KB, 8 * KB, 32 * KB, 128 * KB, 512 * KB];
+    for ds in [PaperDataset::BreastCancer, PaperDataset::KrVsKp, PaperDataset::Mushroom] {
+        let rows = fig8_rows(ds, &[1, 2], &[2, 3], &limits, 3000);
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .filter(|r| r.n > 0)
+            .map(|r| {
+                vec![
+                    r.series.clone(),
+                    human_bytes(r.limit_bytes),
+                    format!("{:.4}", r.mean),
+                    format!("{:.4}", r.std),
+                ]
+            })
+            .collect();
+        println!("\n-- {} --", ds.name());
+        print!("{}", render(&["series", "limit", "mean", "std"], &table));
+    }
+}
+
+fn table2() {
+    println!("\n== Table 2 / Appendix E.1: per-prediction latency ==");
+    let (rows, packed, test) = table2_rows(1, 8000);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.hardware.to_string(),
+                format!("{:.2}", r.toad_us),
+                format!("{:.2}", r.lgbm_us),
+                format!("{:.1}x", r.slowdown),
+            ]
+        })
+        .collect();
+    print!("{}", render(&["hardware", "ToaD(us)", "LightGBM(us)", "slowdown"], &table));
+    println!("model: {} bytes packed; paper measured 137us/513us with slowdown 5-8x", packed.size_bytes());
+
+    // Host wall-clock cross-check of the two interpreters (500
+    // predictions × 20 runs, as in Appendix E.1).
+    let decoded = toad::layout::decode(packed.bytes());
+    let rows_500: Vec<Vec<f32>> = (0..500).map(|i| test.row(i % test.n_rows())).collect();
+    let mut t_packed = f64::INFINITY;
+    let mut t_decoded = f64::INFINITY;
+    for _ in 0..20 {
+        let s = std::time::Instant::now();
+        let mut acc = 0.0f64;
+        for r in &rows_500 {
+            acc += packed.predict_raw(r)[0];
+        }
+        t_packed = t_packed.min(s.elapsed().as_secs_f64() / 500.0);
+        std::hint::black_box(acc);
+        let s = std::time::Instant::now();
+        let mut acc2 = 0.0f64;
+        for r in &rows_500 {
+            acc2 += decoded.predict_raw(r)[0];
+        }
+        t_decoded = t_decoded.min(s.elapsed().as_secs_f64() / 500.0);
+        std::hint::black_box(acc2);
+    }
+    println!(
+        "host wall-clock: packed {:.2}us vs decoded {:.2}us per prediction ({:.1}x)",
+        t_packed * 1e6,
+        t_decoded * 1e6,
+        t_packed / t_decoded
+    );
+}

@@ -1,0 +1,60 @@
+//! Quickstart: train a compact ToaD model, inspect its size, and run
+//! bit-packed inference — the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use toad::data::synth::PaperDataset;
+use toad::data::train_test_split;
+use toad::gbdt::GbdtParams;
+use toad::layout::{baseline, PackedModel};
+use toad::sweep::table::human_bytes;
+use toad::toad::{train_toad, ToadParams};
+
+fn main() {
+    // 1. Data: the Breast Cancer stand-in (569 rows × 30 features).
+    let data = PaperDataset::BreastCancer.generate(1);
+    let (train_set, test_set) = train_test_split(&data, 0.2, 1);
+    println!("dataset: {} ({} train / {} test rows, {} features)",
+        data.name, train_set.n_rows(), test_set.n_rows(), data.n_features());
+
+    // 2. Train with reuse penalties: ι charges new features, ξ new
+    //    thresholds (paper Eq. 3).
+    let params = ToadParams::new(GbdtParams::paper(32, 2), 2.0, 1.0);
+    let model = train_toad(&train_set, &params);
+    println!(
+        "trained {} trees, depth ≤ 2: accuracy {:.3}",
+        model.model.n_trees(),
+        model.model.score(&test_set)
+    );
+
+    // 3. Size: the ToaD layout vs the baselines of paper §4.2.
+    let toad_b = model.size_bytes();
+    let ptr_b = baseline::pointer_f32_bytes(&model.model);
+    let q16_b = baseline::pointer_f16_bytes(&model.model);
+    let arr_b = baseline::array_f32_bytes(&model.model);
+    println!("sizes: toad={} pointer_f32={} pointer_f16={} array_f32={}",
+        human_bytes(toad_b), human_bytes(ptr_b), human_bytes(q16_b), human_bytes(arr_b));
+    println!("compression vs float32 pointers: {:.1}x", ptr_b as f64 / toad_b as f64);
+    println!(
+        "reuse: |F_U|={} thresholds={} leaf values={} ReF={:.2}",
+        model.stats.n_features_used,
+        model.stats.n_thresholds,
+        model.stats.n_leaf_values,
+        model.reuse_factor()
+    );
+
+    // 4. Inference directly from the packed bits (what an MCU runs).
+    let packed = PackedModel::from_bytes(model.blob.clone());
+    let mut hits = 0usize;
+    for i in 0..test_set.n_rows() {
+        if packed.predict_class(&test_set.row(i)) == test_set.labels[i] {
+            hits += 1;
+        }
+    }
+    println!(
+        "bit-packed inference accuracy: {:.3} (identical routing)",
+        hits as f64 / test_set.n_rows() as f64
+    );
+}

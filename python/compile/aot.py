@@ -1,0 +1,133 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Artifacts (shapes baked in; the Rust runtime pads models/batches):
+
+    predict_n{N}_t{T}_d{D}_f{F}_o{O}.hlo.txt   — predict_outputs
+    pertree_n{N}_t{T}_d{D}_f{F}.hlo.txt        — per-tree values
+    histogram_s{S}_f{F}_b{B}.hlo.txt           — gradient histograms
+    MANIFEST.txt                               — one line per artifact
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (batch, trees, depth, features, outputs) predict configurations.
+# n32 is the low-latency serving shape; n256 the batch/throughput shape.
+PREDICT_CONFIGS = [
+    (32, 256, 4, 64, 1),
+    (256, 256, 4, 64, 1),
+    (256, 256, 4, 64, 8),
+]
+PERTREE_CONFIGS = [
+    (256, 256, 4, 64),
+]
+# (samples, features, bins) histogram configurations.
+HISTOGRAM_CONFIGS = [
+    (4096, 64, 64),
+]
+
+
+def to_hlo_text(lowered):
+    """Convert a jitted-and-lowered function to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_predict(n, t, depth, f, o):
+    i_slots = (1 << depth) - 1
+    l_slots = 1 << depth
+    fn = functools.partial(model.predict_outputs, n_outputs=o)
+    lowered = jax.jit(fn).lower(
+        _spec((n, f), jnp.float32),
+        _spec((t, i_slots), jnp.int32),
+        _spec((t, i_slots), jnp.float32),
+        _spec((t, l_slots), jnp.float32),
+        _spec((o,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_pertree(n, t, depth, f):
+    i_slots = (1 << depth) - 1
+    l_slots = 1 << depth
+    lowered = jax.jit(model.predict_pertree).lower(
+        _spec((n, f), jnp.float32),
+        _spec((t, i_slots), jnp.int32),
+        _spec((t, i_slots), jnp.float32),
+        _spec((t, l_slots), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_histogram(s, f, b):
+    fn = functools.partial(model.histogram_fn, n_bins=b)
+    lowered = jax.jit(fn).lower(
+        _spec((s, f), jnp.int32),
+        _spec((s,), jnp.float32),
+        _spec((s,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+
+    for n, t, d, f, o in PREDICT_CONFIGS:
+        name = f"predict_n{n}_t{t}_d{d}_f{f}_o{o}.hlo.txt"
+        text = lower_predict(n, t, d, f, o)
+        with open(os.path.join(args.out_dir, name), "w") as fh:
+            fh.write(text)
+        manifest.append(f"predict {name} n={n} t={t} d={d} f={f} o={o}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for n, t, d, f in PERTREE_CONFIGS:
+        name = f"pertree_n{n}_t{t}_d{d}_f{f}.hlo.txt"
+        text = lower_pertree(n, t, d, f)
+        with open(os.path.join(args.out_dir, name), "w") as fh:
+            fh.write(text)
+        manifest.append(f"pertree {name} n={n} t={t} d={d} f={f}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for s, f, b in HISTOGRAM_CONFIGS:
+        name = f"histogram_s{s}_f{f}_b{b}.hlo.txt"
+        text = lower_histogram(s, f, b)
+        with open(os.path.join(args.out_dir, name), "w") as fh:
+            fh.write(text)
+        manifest.append(f"histogram {name} s={s} f={f} b={b}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    # Manifest last: the Makefile uses it as the up-to-date sentinel.
+    with open(os.path.join(args.out_dir, "MANIFEST.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"wrote MANIFEST.txt ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Two kernels cover the system's compute hot-spots:
+
+* :mod:`.histogram` — gradient/hessian histogram accumulation, the GBDT
+  training hot path, expressed as a one-hot matmul (MXU-friendly TPU
+  adaptation of the GPU scatter-add idiom).
+* :mod:`.ensemble` — tensorized complete-tree ensemble traversal, the
+  serving hot path; level-synchronous gathers over the pointer-less
+  array layout that ToaD stores.
+
+Both are authored for TPU BlockSpecs but validated under
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic
+custom-calls); :mod:`.ref` holds the pure-jnp oracles.
+"""

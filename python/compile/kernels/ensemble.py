@@ -1,0 +1,71 @@
+"""Pallas kernel: tensorized complete-tree ensemble traversal.
+
+The ToaD layout stores trees as pointer-less complete arrays — which is
+*also* the ideal execution format on TPU: instead of per-thread pointer
+chasing (the GPU idiom), traversal becomes ``depth`` level-synchronous
+gathers, fully vectorized over the (batch × tree) plane:
+
+    idx ← 2·idx + 1 + (x[:, feat[t, idx]] > thr[t, idx])
+
+The grid walks batch blocks; every step keeps the whole (padded) model —
+``feat``/``thr`` ``(T, I)`` and ``leaves`` ``(T, L)`` — resident in VMEM
+(256 trees × 15 slots is tiny) and emits the per-tree leaf values
+``(N_B, T)``. The L2 model reduces over trees per output stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 32
+
+
+def _predict_kernel(x_ref, feat_ref, thr_ref, leaves_ref, out_ref, *, depth):
+    x = x_ref[...]  # (N_B, D)
+    feat = feat_ref[...]  # (T, I)
+    thr = thr_ref[...]  # (T, I)
+    leaves = leaves_ref[...]  # (T, L)
+    n_b = x.shape[0]
+    t = feat.shape[0]
+    i_slots = feat.shape[1]
+    idx = jnp.zeros((n_b, t), dtype=jnp.int32)
+    t_ar = jnp.arange(t)[None, :]
+    n_ar = jnp.arange(n_b)[:, None]
+    for _ in range(depth):
+        f = feat[t_ar, idx]  # (N_B, T)
+        v = x[n_ar, f]
+        tv = thr[t_ar, idx]
+        idx = 2 * idx + 1 + (v > tv).astype(jnp.int32)
+    out_ref[...] = leaves[t_ar, idx - i_slots]
+
+
+def predict_pertree(x, feat, thr, leaves, *, block_n=DEFAULT_BLOCK_N, interpret=True):
+    """Per-tree leaf values ``(N, T)`` for a batch of rows.
+
+    Trees must be complete at a common depth (pad shallower trees by
+    replicating early leaves; pad the tree count with all-zero-leaf
+    trees). ``N`` must be a multiple of ``block_n``.
+    """
+    n, d = x.shape
+    t, i_slots = feat.shape
+    depth = (i_slots + 1).bit_length() - 1
+    assert (1 << depth) - 1 == i_slots, "internal slots must be 2^d - 1"
+    assert leaves.shape == (t, 1 << depth)
+    assert n % block_n == 0, f"batch {n} not a multiple of block {block_n}"
+    grid = (n // block_n,)
+    kernel = functools.partial(_predict_kernel, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec(feat.shape, lambda i: (0, 0)),
+            pl.BlockSpec(thr.shape, lambda i: (0, 0)),
+            pl.BlockSpec(leaves.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, t), jnp.float32),
+        interpret=interpret,
+    )(x, feat, thr, leaves)

@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suites compare against;
+they favour obviousness over speed.
+"""
+
+import jax.numpy as jnp
+
+
+def histogram_ref(bins, grad, hess, n_bins):
+    """Gradient/hessian histograms.
+
+    Args:
+        bins: int32 ``(S, F)`` — per-row bin index of each feature.
+        grad: f32 ``(S,)`` — gradients.
+        hess: f32 ``(S,)`` — hessians.
+        n_bins: static bin count ``B``.
+
+    Returns:
+        f32 ``(F, B, 2)`` — per feature and bin, ``[Σ grad, Σ hess]``.
+    """
+    onehot = (bins[:, :, None] == jnp.arange(n_bins, dtype=bins.dtype)[None, None, :]).astype(
+        jnp.float32
+    )
+    gh = jnp.stack([grad, hess], axis=-1)  # (S, 2)
+    return jnp.einsum("sfb,sc->fbc", onehot, gh)
+
+
+def predict_ref(x, feat, thr, leaves):
+    """Per-tree leaf values for complete trees in heap layout.
+
+    Args:
+        x: f32 ``(N, D)`` — input rows.
+        feat: int32 ``(T, I)`` — split feature per internal slot,
+            ``I = 2^depth − 1``; slot ``i``'s children are ``2i+1``/``2i+2``.
+        thr: f32 ``(T, I)`` — split thresholds (route left iff ``x <= thr``).
+        leaves: f32 ``(T, L)`` — leaf values, ``L = 2^depth``.
+
+    Returns:
+        f32 ``(N, T)`` — the leaf value each row reaches in each tree.
+    """
+    n = x.shape[0]
+    t, i_slots = feat.shape
+    depth = (i_slots + 1).bit_length() - 1
+    assert (1 << depth) - 1 == i_slots, "internal slots must be 2^d - 1"
+    idx = jnp.zeros((n, t), dtype=jnp.int32)
+    t_ar = jnp.arange(t)[None, :]
+    n_ar = jnp.arange(n)[:, None]
+    for _ in range(depth):
+        f = feat[t_ar, idx]
+        v = x[n_ar, f]
+        tv = thr[t_ar, idx]
+        idx = 2 * idx + 1 + (v > tv).astype(jnp.int32)
+    return leaves[t_ar, idx - i_slots]
+
+
+def predict_sum_ref(x, feat, thr, leaves):
+    """Summed raw scores over all trees: ``(N,)``."""
+    return predict_ref(x, feat, thr, leaves).sum(axis=1)

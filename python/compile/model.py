@@ -1,0 +1,55 @@
+"""Layer-2 JAX model functions (build-time only).
+
+The compute graphs the Rust runtime executes, composed from the Layer-1
+Pallas kernels:
+
+* :func:`predict_outputs` — the serving path: per-tree kernel values
+  reduced per output stream and shifted by the base scores. Trees are
+  laid out ``[output0 round0..K-1, output1 round0..K-1, …]``.
+* :func:`histogram_fn` — the training hot path (gradient histograms).
+
+``aot.py`` lowers jitted instances of these at fixed shapes to HLO text;
+Python never runs at serving time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ensemble, histogram
+
+
+def predict_pertree(x, feat, thr, leaves):
+    """Per-tree leaf values ``(N, T)`` (thin wrapper over the kernel)."""
+    return ensemble.predict_pertree(x, feat, thr, leaves)
+
+
+def predict_outputs(x, feat, thr, leaves, base, *, n_outputs):
+    """Raw scores per output stream.
+
+    Args:
+        x: f32 ``(N, D)``.
+        feat/thr/leaves: packed complete-tree tensors with
+            ``T = n_outputs * K`` trees, grouped by output stream.
+        base: f32 ``(n_outputs,)`` base scores.
+        n_outputs: static output-stream count.
+
+    Returns:
+        f32 ``(N, n_outputs)``.
+    """
+    per_tree = ensemble.predict_pertree(x, feat, thr, leaves)  # (N, T)
+    n = per_tree.shape[0]
+    grouped = per_tree.reshape(n, n_outputs, -1).sum(axis=2)
+    return grouped + base[None, :]
+
+
+def histogram_fn(bins, grad, hess, *, n_bins):
+    """Gradient/hessian histograms ``(F, B, 2)`` (kernel wrapper)."""
+    return histogram.histogram(bins, grad, hess, n_bins)
+
+
+def predict_outputs_ref(x, feat, thr, leaves, base, *, n_outputs):
+    """Pure-jnp reference of :func:`predict_outputs` for tests."""
+    from .kernels import ref
+
+    per_tree = ref.predict_ref(x, feat, thr, leaves)
+    n = per_tree.shape[0]
+    return per_tree.reshape(n, n_outputs, -1).sum(axis=2) + jnp.asarray(base)[None, :]

@@ -1,0 +1,151 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and value distributions; fixed-seed examples
+pin the edge cases (empty gradients, boundary routing, padding rows).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ensemble, histogram, ref
+
+RNG = np.random.default_rng(0x70AD)
+
+
+def random_complete_trees(rng, t, depth, d):
+    """Random complete trees: features, thresholds, leaves."""
+    i_slots = (1 << depth) - 1
+    l_slots = 1 << depth
+    feat = rng.integers(0, d, size=(t, i_slots), dtype=np.int32)
+    thr = rng.normal(size=(t, i_slots)).astype(np.float32)
+    leaves = rng.normal(size=(t, l_slots)).astype(np.float32)
+    return feat, thr, leaves
+
+
+# ---------------------------------------------------------------- histogram
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s_blocks=st.integers(1, 4),
+    f=st.integers(1, 8),
+    b=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_histogram_matches_ref(s_blocks, f, b, seed):
+    rng = np.random.default_rng(seed)
+    block = 8
+    s = s_blocks * block
+    bins = rng.integers(0, b, size=(s, f), dtype=np.int32)
+    grad = rng.normal(size=s).astype(np.float32)
+    hess = rng.uniform(0.1, 2.0, size=s).astype(np.float32)
+    got = histogram.histogram(bins, grad, hess, b, block_s=block)
+    want = ref.histogram_ref(bins, grad, hess, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_histogram_counts_mass():
+    # Total gradient mass is preserved per feature.
+    s, f, b = 512, 4, 8
+    bins = RNG.integers(0, b, size=(s, f), dtype=np.int32)
+    grad = RNG.normal(size=s).astype(np.float32)
+    hess = np.ones(s, dtype=np.float32)
+    out = np.asarray(histogram.histogram(bins, grad, hess, b))
+    for fi in range(f):
+        np.testing.assert_allclose(out[fi, :, 0].sum(), grad.sum(), rtol=1e-4)
+        np.testing.assert_allclose(out[fi, :, 1].sum(), s, rtol=1e-6)
+
+
+def test_histogram_padding_rows_are_noops():
+    # Padding convention: bin 0, grad = hess = 0.
+    s, f, b = 256, 3, 4
+    bins = RNG.integers(0, b, size=(s, f), dtype=np.int32)
+    grad = RNG.normal(size=s).astype(np.float32)
+    hess = RNG.uniform(0.5, 1.0, size=s).astype(np.float32)
+    base = np.asarray(histogram.histogram(bins, grad, hess, b))
+
+    pad = 256
+    bins_p = np.vstack([bins, np.zeros((pad, f), np.int32)])
+    grad_p = np.concatenate([grad, np.zeros(pad, np.float32)])
+    hess_p = np.concatenate([hess, np.zeros(pad, np.float32)])
+    padded = np.asarray(histogram.histogram(bins_p, grad_p, hess_p, b))
+    np.testing.assert_allclose(padded, base, rtol=1e-5, atol=1e-6)
+
+
+def test_histogram_multiblock_accumulates():
+    # Two grid steps must accumulate, not overwrite.
+    s, f, b = 512, 2, 4
+    bins = np.zeros((s, f), np.int32)  # everything in bin 0
+    grad = np.ones(s, np.float32)
+    hess = np.ones(s, np.float32)
+    out = np.asarray(histogram.histogram(bins, grad, hess, b, block_s=256))
+    np.testing.assert_allclose(out[:, 0, 0], s, rtol=1e-6)
+    np.testing.assert_allclose(out[:, 1:, :], 0.0)
+
+
+# ----------------------------------------------------------------- ensemble
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    t=st.integers(1, 16),
+    depth=st.integers(1, 5),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_predict_matches_ref(n_blocks, t, depth, d, seed):
+    rng = np.random.default_rng(seed)
+    block = 8
+    n = n_blocks * block
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    feat, thr, leaves = random_complete_trees(rng, t, depth, d)
+    got = ensemble.predict_pertree(x, feat, thr, leaves, block_n=block)
+    want = ref.predict_ref(x, feat, thr, leaves)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_predict_boundary_routes_left():
+    # x == threshold must go left (<= semantics), matching the Rust side.
+    feat = np.zeros((1, 1), np.int32)
+    thr = np.array([[1.5]], np.float32)
+    leaves = np.array([[10.0, 20.0]], np.float32)
+    x = np.array([[1.5]] * 32, np.float32)
+    out = np.asarray(ensemble.predict_pertree(x, feat, thr, leaves, block_n=32))
+    np.testing.assert_allclose(out, 10.0)
+    x2 = np.array([[1.5000001]] * 32, np.float32)
+    out2 = np.asarray(ensemble.predict_pertree(x2, feat, thr, leaves, block_n=32))
+    np.testing.assert_allclose(out2, 20.0)
+
+
+def test_predict_against_scalar_traversal():
+    # Cross-check the vectorized descent against a plain per-row walk.
+    rng = np.random.default_rng(7)
+    t, depth, d, n = 8, 3, 5, 16
+    feat, thr, leaves = random_complete_trees(rng, t, depth, d)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    got = np.asarray(ensemble.predict_pertree(x, feat, thr, leaves, block_n=16))
+    i_slots = (1 << depth) - 1
+    for i in range(n):
+        for tt in range(t):
+            idx = 0
+            while idx < i_slots:
+                go_right = x[i, feat[tt, idx]] > thr[tt, idx]
+                idx = 2 * idx + 2 if go_right else 2 * idx + 1
+            want = leaves[tt, idx - i_slots]
+            assert got[i, tt] == pytest.approx(want, rel=1e-6)
+
+
+def test_zero_leaf_padding_trees_contribute_nothing():
+    rng = np.random.default_rng(9)
+    t, depth, d, n = 4, 2, 3, 8
+    feat, thr, leaves = random_complete_trees(rng, t, depth, d)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    base = np.asarray(ensemble.predict_pertree(x, feat, thr, leaves, block_n=8)).sum(axis=1)
+    # Add 4 padding trees with zero leaves.
+    feat_p = np.vstack([feat, np.zeros((4, feat.shape[1]), np.int32)])
+    thr_p = np.vstack([thr, np.zeros((4, thr.shape[1]), np.float32)])
+    leaves_p = np.vstack([leaves, np.zeros((4, leaves.shape[1]), np.float32)])
+    padded = np.asarray(ensemble.predict_pertree(x, feat_p, thr_p, leaves_p, block_n=8)).sum(axis=1)
+    np.testing.assert_allclose(padded, base, rtol=1e-6)

@@ -1,0 +1,84 @@
+//! Ablations of the design choices DESIGN.md calls out — what each
+//! ToaD ingredient contributes, measured independently:
+//!
+//! 1. layout only (pointer → bit-wise encoding, same trees),
+//! 2. + f16 thresholds (EncodeOptions::allow_f16),
+//! 3. + reuse penalties (linear, paper Eq. 2),
+//! 4. penalty shape: linear vs escalating (paper footnote 3),
+//! 5. + leaf-value sharing (future-work extension; mantissa truncation).
+
+use toad::data::synth::PaperDataset;
+use toad::data::train_test_split;
+use toad::gbdt::GbdtParams;
+use toad::layout::{baseline, encode, toad_format::size_breakdown, EncodeOptions, FeatureInfo};
+use toad::sweep::table::{human_bytes, render};
+use toad::toad::penalty::PenaltyShape;
+use toad::toad::{train_toad, ToadParams};
+
+fn main() {
+    let ds = PaperDataset::CovertypeBinary;
+    let data = ds.generate(1).select(&(0..6000).collect::<Vec<_>>());
+    let (tr, te) = train_test_split(&data, 0.2, 1);
+    let gbdt = GbdtParams::paper(64, 3);
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut push = |label: &str, score: f64, bytes: usize, baseline_bytes: usize| {
+        rows.push(vec![
+            label.to_string(),
+            format!("{score:.4}"),
+            human_bytes(bytes),
+            format!("{:.1}x", baseline_bytes as f64 / bytes as f64),
+        ]);
+    };
+
+    // Plain training once; re-encoded under different options.
+    let plain = train_toad(&tr, &ToadParams::new(gbdt, 0.0, 0.0));
+    let finfo = FeatureInfo::from_dataset(&tr);
+    let ptr = baseline::pointer_f32_bytes(&plain.model);
+    push("pointer f32 (reference)", plain.model.score(&te), ptr, ptr);
+    push(
+        "array f32 (pointer-less only)",
+        plain.model.score(&te),
+        baseline::array_f32_bytes(&plain.model),
+        ptr,
+    );
+
+    let no_f16 = EncodeOptions { allow_f16: false, ..Default::default() };
+    let bd = size_breakdown(&plain.model, &finfo, &no_f16);
+    push("toad layout, f32 thresholds", plain.model.score(&te), bd.total_bytes(), ptr);
+
+    let with_f16 = EncodeOptions::default();
+    let bd = size_breakdown(&plain.model, &finfo, &with_f16);
+    push("toad layout, +f16 thresholds", plain.model.score(&te), bd.total_bytes(), ptr);
+
+    let shared = EncodeOptions { leaf_mantissa_bits: Some(8), ..Default::default() };
+    let blob = encode(&plain.model, &finfo, &shared);
+    let dec = toad::layout::decode(&blob);
+    push("toad layout, +leaf sharing (8-bit mantissa)", dec.score(&te), blob.len(), ptr);
+
+    // Penalized runs: linear vs escalating shape at matched (ι, ξ).
+    let lin = train_toad(&tr, &ToadParams::new(gbdt, 4.0, 2.0));
+    push("+penalties linear (i=4, x=2)", lin.model.score(&te), lin.size_bytes(), ptr);
+
+    let mut esc_params = ToadParams::new(gbdt, 0.25, 0.02);
+    esc_params.shape = PenaltyShape::Escalating;
+    let esc = train_toad(&tr, &esc_params);
+    push(
+        "+penalties escalating (i=.25, x=.02)",
+        esc.model.score(&te),
+        esc.size_bytes(),
+        ptr,
+    );
+
+    println!("== Ablations ({}, 64 rounds, depth 3) ==", ds.name());
+    print!("{}", render(&["configuration", "accuracy", "size", "vs pointer"], &rows));
+    println!(
+        "\nreuse stats: linear |F_U|={} thr={} ReF={:.2} | escalating |F_U|={} thr={} ReF={:.2}",
+        lin.stats.n_features_used,
+        lin.stats.n_thresholds,
+        lin.reuse_factor(),
+        esc.stats.n_features_used,
+        esc.stats.n_thresholds,
+        esc.reuse_factor(),
+    );
+}

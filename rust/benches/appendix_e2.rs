@@ -1,0 +1,47 @@
+//! Appendix E.2: the univariate sensitivity analysis across
+//! hyperparameter settings — iterations ∈ {4, 64} × depth ∈ {2, 4}
+//! (the appendix also shows 1024 iterations / depth 8; run
+//! `examples/paper_figures.rs` for denser settings).
+//!
+//! Expected: the Figure 6 patterns persist across settings — threshold
+//! counts fall with ξ, ReF peaks then collapses, accuracy knees later
+//! for feature-rich datasets.
+
+use toad::data::synth::PaperDataset;
+use toad::sweep::figures::{univariate_rows, PenaltyKind};
+use toad::sweep::table::render;
+
+fn main() {
+    let values: Vec<f64> = (-4..=15).step_by(3).map(|e| 2f64.powi(e)).collect();
+    for (iters, depth) in [(4usize, 2usize), (4, 4), (64, 2), (64, 4)] {
+        for (ds, cap) in
+            [(PaperDataset::BreastCancer, 569), (PaperDataset::CovertypeBinary, 3000)]
+        {
+            for (kind, label) in
+                [(PenaltyKind::Feature, "iota"), (PenaltyKind::Threshold, "xi")]
+            {
+                let rows = univariate_rows(ds, 1, kind, &values, iters, depth, cap);
+                println!(
+                    "\n== E.2: {} / {label}, max_iterations={iters}, max_depth={depth} ==",
+                    ds.name()
+                );
+                let table: Vec<Vec<String>> = rows
+                    .iter()
+                    .map(|r| {
+                        vec![
+                            format!("{}", r.penalty),
+                            format!("{:.4}", r.score),
+                            format!("{}", r.n_features),
+                            format!("{}", r.n_global_values),
+                            format!("{:.2}", r.reuse_factor),
+                        ]
+                    })
+                    .collect();
+                print!(
+                    "{}",
+                    render(&[label, "score", "features", "values", "ReF"], &table)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Appendix E.3: the multivariate (ι × ξ) analysis across
+//! hyperparameter settings — iterations ∈ {4, 64} × depth ∈ {2, 4}.
+//!
+//! Expected: useful penalty combinations (small score loss, large
+//! memory drop) exist at every setting; with more iterations the
+//! memory span between the free and heavily-penalized corners widens.
+
+use toad::data::synth::PaperDataset;
+use toad::sweep::figures::multivariate_rows;
+use toad::sweep::table::{human_bytes, render};
+
+fn main() {
+    let grid: Vec<f64> = vec![0.0, 1.0, 32.0, 1024.0, 32768.0];
+    for (iters, depth) in [(4usize, 2usize), (4, 4), (64, 2), (64, 4)] {
+        for (ds, cap) in
+            [(PaperDataset::BreastCancer, 569), (PaperDataset::CaliforniaHousing, 3000)]
+        {
+            let rows = multivariate_rows(ds, 1, &grid, &grid, iters, depth, cap);
+            println!(
+                "\n== E.3: {}, max_iterations={iters}, max_depth={depth} ==",
+                ds.name()
+            );
+            let table: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        format!("{}", r.iota),
+                        format!("{}", r.xi),
+                        human_bytes(r.size_bytes),
+                        format!("{:.4}", r.score),
+                    ]
+                })
+                .collect();
+            print!("{}", render(&["iota", "xi", "memory", "score"], &table));
+            let free = &rows[0];
+            let heavy = rows.last().unwrap();
+            println!(
+                "finding: memory {} -> {} from free to max-penalty corner",
+                human_bytes(free.size_bytes),
+                human_bytes(heavy.size_bytes)
+            );
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Figure 4: accuracy/R² vs memory for ToaD (penalized + plain) against
+//! LightGBM float32 / quantized / array, CEGB and CCP.
+//!
+//! Reduced grid (full grid: `cargo run --release --example
+//! paper_figures -- fig4`). Expected shape (paper §4.2.1): ToaD wins at
+//! every limit in the ≤128 KB regime; competitors need ~4–16× the
+//! memory for equal score; array-based LightGBM sits between ToaD and
+//! pointer LightGBM.
+
+use std::time::Instant;
+use toad::data::synth::PaperDataset;
+use toad::sweep::figures::fig4_rows;
+use toad::sweep::table::{human_bytes, render};
+
+fn main() {
+    const KB: usize = 1024;
+    let limits = [KB / 2, KB, 2 * KB, 8 * KB, 32 * KB];
+    let penalties = [(2.0, 1.0), (16.0, 8.0)];
+    let start = Instant::now();
+    for (ds, row_cap) in [
+        (PaperDataset::BreastCancer, 569),
+        (PaperDataset::CovertypeBinary, 4000),
+        (PaperDataset::CaliforniaHousing, 4000),
+        (PaperDataset::WineQuality, 3000),
+    ] {
+        let rows = fig4_rows(ds, &[1, 2], &[2, 3], 6, &penalties, &limits, row_cap);
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .filter(|r| r.n > 0)
+            .map(|r| {
+                vec![
+                    r.series.clone(),
+                    human_bytes(r.limit_bytes),
+                    format!("{:.4}", r.mean),
+                    format!("{:.4}", r.std),
+                    format!("{}", r.n),
+                ]
+            })
+            .collect();
+        println!("\n== Figure 4 ({}) ==", ds.name());
+        print!("{}", render(&["series", "limit", "mean", "std", "seeds"], &table));
+
+        // Headline check: memory ToaD needs for the f32 baseline's best
+        // small-budget score.
+        let lgbm_1k = rows
+            .iter()
+            .find(|r| r.series == "lgbm_f32" && r.limit_bytes == 2 * KB && r.n > 0)
+            .map(|r| r.mean);
+        if let Some(target) = lgbm_1k {
+            let toad_needs = limits
+                .iter()
+                .find(|&&l| {
+                    rows.iter().any(|r| {
+                        r.series == "toad(penalized)" && r.limit_bytes == l && r.mean >= target
+                    })
+                })
+                .copied();
+            if let Some(l) = toad_needs {
+                println!(
+                    "headline: lgbm_f32@2KB scores {:.4}; toad matches it at {} ({}x less)",
+                    target,
+                    human_bytes(l),
+                    2 * KB / l.max(1)
+                );
+            }
+        }
+    }
+    println!("\ntotal bench time: {:.1?}", start.elapsed());
+}

@@ -1,0 +1,58 @@
+//! Figure 5: model performance on California Housing under a 1 KB
+//! memory limit as a function of the two penalties.
+//!
+//! Matches the paper's protocol: the memory budget is fixed via
+//! `toad_forestsize` and training adds trees until the next one would
+//! overflow it — so each (ι, ξ) cell reports how much *quality* fits
+//! into the same bytes. Expected shape (paper §4.2.1): moderate
+//! penalty combinations dominate the unpenalized corner.
+
+use toad::data::synth::PaperDataset;
+use toad::sweep::figures::multivariate_budget_rows;
+use toad::sweep::table::{human_bytes, render};
+
+fn main() {
+    const KB: usize = 1024;
+    let grid: Vec<f64> = vec![0.0, 0.25, 1.0, 4.0, 16.0, 64.0, 256.0];
+    let rows = multivariate_budget_rows(
+        PaperDataset::CaliforniaHousing,
+        1,
+        &grid,
+        &grid,
+        512, // round cap; the byte budget is the real stop
+        2,
+        KB,
+        4000,
+    );
+
+    println!("== Figure 5: California Housing, 1 KB budget ==");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.iota),
+                format!("{}", r.xi),
+                human_bytes(r.size_bytes),
+                format!("{:.4}", r.score),
+            ]
+        })
+        .collect();
+    print!("{}", render(&["iota", "xi", "size", "R2"], &table));
+
+    let best_pen = rows
+        .iter()
+        .filter(|r| r.iota > 0.0 || r.xi > 0.0)
+        .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap());
+    let plain = rows.iter().find(|r| r.iota == 0.0 && r.xi == 0.0);
+    if let (Some(p), Some(q)) = (best_pen, plain) {
+        println!(
+            "\nbest penalized: R2={:.4} at (i={}, x={}); unpenalized: R2={:.4} — \
+             penalties {} the same 1 KB",
+            p.score,
+            p.iota,
+            p.xi,
+            q.score,
+            if p.score > q.score { "beat" } else { "match" }
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Figure 7: the combined (ι × ξ) grids — memory (top) and score
+//! (bottom) per cell, at 256 iterations, depth 2.
+//!
+//! Expected shape (paper §4.4): memory falls steeply past a
+//! dataset-specific penalty threshold (covtype/california: ~KBs down to
+//! ~tens of bytes); score stays flat until the same region then
+//! collapses; very few cells are dominated.
+
+use toad::data::synth::PaperDataset;
+use toad::sweep::figures::multivariate_rows;
+use toad::sweep::table::{human_bytes, render};
+
+fn main() {
+    let grid: Vec<f64> = vec![0.0, 0.0625, 1.0, 16.0, 256.0, 4096.0, 32768.0];
+    for (ds, row_cap) in [
+        (PaperDataset::BreastCancer, 569),
+        (PaperDataset::CaliforniaHousing, 4000),
+        (PaperDataset::CovertypeBinary, 4000),
+        (PaperDataset::WineQuality, 3000),
+    ] {
+        let rows = multivariate_rows(ds, 1, &grid, &grid, 128, 2, row_cap);
+        println!("\n== Figure 7 ({}) ==", ds.name());
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r.iota),
+                    format!("{}", r.xi),
+                    human_bytes(r.size_bytes),
+                    format!("{:.4}", r.score),
+                ]
+            })
+            .collect();
+        print!("{}", render(&["iota", "xi", "memory", "score"], &table));
+
+        // Domination census (paper: only ~3.4% of solutions dominated).
+        let mut dominated = 0usize;
+        for a in &rows {
+            if rows.iter().any(|b| {
+                (b.score > a.score && b.size_bytes <= a.size_bytes)
+                    || (b.score >= a.score && b.size_bytes < a.size_bytes)
+            }) {
+                dominated += 1;
+            }
+        }
+        let max_mem = rows.iter().map(|r| r.size_bytes).max().unwrap();
+        let min_mem = rows.iter().map(|r| r.size_bytes).min().unwrap();
+        println!(
+            "finding: memory spans {} .. {}; {}/{} cells dominated",
+            human_bytes(min_mem),
+            human_bytes(max_mem),
+            dominated,
+            rows.len()
+        );
+    }
+}

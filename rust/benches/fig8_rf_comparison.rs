@@ -1,0 +1,54 @@
+//! Figure 8 / Appendix D: boosted methods vs random forests and
+//! Guo-et-al.-pruned forests, classification datasets, ≤256 trees.
+//!
+//! Expected shape (paper App. D): boosted/ToaD dominates at small
+//! budgets; RF needs far more memory per accuracy point (deep trees,
+//! 128-bit nodes); Guo pruning moves RF toward the origin but not past
+//! ToaD.
+
+use toad::data::synth::PaperDataset;
+use toad::sweep::figures::fig8_rows;
+use toad::sweep::table::{human_bytes, render};
+
+fn main() {
+    const KB: usize = 1024;
+    let limits = [2 * KB, 8 * KB, 32 * KB, 128 * KB, 512 * KB];
+    for (ds, row_cap) in [
+        (PaperDataset::BreastCancer, 569),
+        (PaperDataset::KrVsKp, 3196),
+        (PaperDataset::Mushroom, 3000),
+    ] {
+        let rows = fig8_rows(ds, &[1, 2], &[2, 3], &limits, row_cap);
+        println!("\n== Figure 8 ({}) ==", ds.name());
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .filter(|r| r.n > 0)
+            .map(|r| {
+                vec![
+                    r.series.clone(),
+                    human_bytes(r.limit_bytes),
+                    format!("{:.4}", r.mean),
+                    format!("{:.4}", r.std),
+                ]
+            })
+            .collect();
+        print!("{}", render(&["series", "limit", "mean", "std"], &table));
+
+        // Finding: smallest budget at which each series reaches 95% of
+        // its own best score.
+        for series in ["toad(penalized)", "rf", "rf_guo_pruned"] {
+            let best = rows
+                .iter()
+                .filter(|r| r.series == series && r.n > 0)
+                .map(|r| r.mean)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let first = limits.iter().find(|&&l| {
+                rows.iter()
+                    .any(|r| r.series == series && r.limit_bytes == l && r.mean >= 0.95 * best)
+            });
+            if let Some(&l) = first {
+                println!("finding: {series} reaches 95% of its best at {}", human_bytes(l));
+            }
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! §Perf: micro/meso benchmarks of every hot path in the stack.
+//! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
+//!
+//! L3 native: histogram build, split scan, boosting round, native and
+//! bit-packed inference, ToaD encode/decode. Runtime: XLA batch predict
+//! throughput and gateway batching overhead (needs `make artifacts`).
+
+use std::time::{Duration, Instant};
+use toad::data::synth::PaperDataset;
+use toad::data::Binner;
+use toad::gbdt::histogram::HistogramSet;
+use toad::gbdt::{self, GbdtParams};
+use toad::layout::{encode, EncodeOptions, FeatureInfo, PackedModel};
+
+fn time<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = start.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:44} {:>12.3} us/iter", per * 1e6);
+    per
+}
+
+fn main() {
+    let data = PaperDataset::CovertypeBinary.generate(1);
+    let data = data.select(&(0..16_384).collect::<Vec<_>>());
+    let binner = Binner::fit(&data, 255);
+    let binned = binner.bin_dataset(&data);
+    let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+    let n = data.n_rows();
+    let grad: Vec<f64> = (0..n).map(|i| (i % 7) as f64 - 3.0).collect();
+    let hess = vec![1.0f64; n];
+    let rows: Vec<u32> = (0..n as u32).collect();
+
+    println!("== L3 hot paths (covtype_binary, {n} rows × {} features) ==", data.n_features());
+
+    // Histogram build: the training hot path.
+    let mut hist = HistogramSet::new(&bins);
+    let per = time("histogram build (16k rows, 54 feats)", 20, || {
+        hist.build(&binned, &rows, &grad, &hess);
+    });
+    let pts = (n * data.n_features()) as f64 / per;
+    println!("{:44} {:>12.1} M (row,feature)/s", "  -> throughput", pts / 1e6);
+
+    // One boosting round end to end.
+    time("boosting round (depth 3, 16k rows)", 5, || {
+        let _ = gbdt::booster::train(&data, GbdtParams::paper(1, 3));
+    });
+
+    // Inference paths.
+    let model = gbdt::booster::train(&data, GbdtParams::paper(64, 4));
+    let finfo = FeatureInfo::from_dataset(&data);
+    let blob = encode(&model, &finfo, &EncodeOptions::default());
+    println!(
+        "model: {} trees depth<=4, toad blob {} bytes",
+        model.n_trees(),
+        blob.len()
+    );
+    let packed = PackedModel::from_bytes(blob.clone());
+    let test_rows: Vec<Vec<f32>> = (0..512).map(|i| data.row(i)).collect();
+
+    time("native predict (512 rows, 64 trees)", 20, || {
+        let mut acc = 0.0;
+        for r in &test_rows {
+            acc += model.predict_raw(r)[0];
+        }
+        std::hint::black_box(acc);
+    });
+    time("bit-packed predict (512 rows)", 5, || {
+        let mut acc = 0.0;
+        for r in &test_rows {
+            acc += packed.predict_raw(r)[0];
+        }
+        std::hint::black_box(acc);
+    });
+
+    // Layout codec.
+    time("toad encode", 50, || {
+        std::hint::black_box(encode(&model, &finfo, &EncodeOptions::default()));
+    });
+    time("toad decode", 50, || {
+        std::hint::black_box(toad::layout::decode(&blob));
+    });
+
+    // XLA runtime (optional).
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("MANIFEST.txt").exists() {
+        println!("\n== XLA runtime ==");
+        let rt = toad::runtime::XlaRuntime::open(&artifacts).unwrap();
+        let tm = toad::runtime::tensorize(&model, 256, 4, 64, 1).unwrap();
+        let t = Instant::now();
+        let mut engine = toad::runtime::PredictEngine::new(&rt, tm.clone(), 256, 64).unwrap();
+        println!("{:44} {:>12.3} ms", "compile predict artifact (one-off)", t.elapsed().as_secs_f64() * 1e3);
+        let batch: Vec<Vec<f32>> = test_rows.iter().take(256).cloned().collect();
+        let per = time("xla batch predict (256 rows/call)", 20, || {
+            std::hint::black_box(engine.predict(&batch).unwrap());
+        });
+        println!(
+            "{:44} {:>12.1} K rows/s",
+            "  -> throughput",
+            256.0 / per / 1e3
+        );
+
+        // Gateway batching overhead: single-row latency through the
+        // batcher vs direct engine call.
+        let batcher = toad::coordinator::Batcher::spawn(
+            tm,
+            toad::coordinator::BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_micros(200),
+            },
+            toad::coordinator::batcher::Backend::Xla { artifacts_dir: artifacts, features: 64 },
+        );
+        time("gateway single-row predict (batch=1 flush)", 50, || {
+            std::hint::black_box(batcher.predict(test_rows[0].clone()));
+        });
+    } else {
+        println!("\n(xla section skipped: run `make artifacts`)");
+    }
+}

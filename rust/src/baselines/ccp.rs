@@ -1,0 +1,239 @@
+//! Minimal cost-complexity pruning (Breiman et al., 1984), adapted to
+//! boosted trees.
+//!
+//! Classic CCP prunes the subtree with the smallest *effective alpha*
+//!
+//! ```text
+//! α_eff(t) = (R(t) − R(T_t)) / (|leaves(T_t)| − 1)
+//! ```
+//!
+//! until every remaining internal node has `α_eff > α`. For a boosted
+//! regression tree the natural risk functional is the second-order
+//! objective of the boosting round (paper Eq. 6): a node with gradient
+//! statistics `(G, H)` has `R(node) = −½·G²/(H+λ)`, so pruning a split
+//! undoes exactly the gain it contributed. Each tree is pruned right
+//! after it is grown — while its round's gradients are valid — before
+//! the raw scores are updated, which is the faithful way to apply CCP
+//! inside a boosting loop.
+
+use crate::data::{BinnedDataset, Dataset};
+use crate::gbdt::booster::{Booster, GbdtParams};
+use crate::gbdt::splitter::{leaf_weight, NoPenalty};
+use crate::gbdt::tree::{Node, Tree};
+use crate::gbdt::GbdtModel;
+
+/// Per-node statistics recomputed by routing the round's rows.
+#[derive(Clone, Copy, Debug, Default)]
+struct NodeStats {
+    g: f64,
+    h: f64,
+}
+
+/// Prune `tree` with cost-complexity parameter `alpha` using the
+/// round's gradient/hessian statistics; leaf values of collapsed nodes
+/// are refitted as `−G/(H+λ) · leaf_scale`.
+pub fn prune_tree(
+    tree: &Tree,
+    binned: &BinnedDataset,
+    grad: &[f64],
+    hess: &[f64],
+    lambda: f64,
+    leaf_scale: f64,
+    alpha: f64,
+) -> Tree {
+    if tree.n_internal() == 0 {
+        return tree.clone();
+    }
+    // Route every row to accumulate (G, H) per node.
+    let mut stats = vec![NodeStats::default(); tree.nodes.len()];
+    for i in 0..binned.n_rows {
+        let mut idx = 0usize;
+        loop {
+            stats[idx].g += grad[i];
+            stats[idx].h += hess[i];
+            match &tree.nodes[idx] {
+                Node::Leaf { .. } => break,
+                Node::Internal { feature, bin, left, right, .. } => {
+                    idx = if binned.bins[*feature][i] <= *bin { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    // Work on a mutable copy: repeatedly collapse the weakest link.
+    let mut nodes = tree.nodes.clone();
+    loop {
+        let weakest = weakest_link(&nodes, &stats, lambda);
+        match weakest {
+            Some((idx, a_eff)) if a_eff <= alpha => {
+                let s = stats[idx];
+                nodes[idx] =
+                    Node::Leaf { value: leaf_weight(s.g, s.h, lambda) * leaf_scale };
+            }
+            _ => break,
+        }
+    }
+    compact(&nodes)
+}
+
+/// Find the internal node with minimal effective alpha. Subtree leaves
+/// and risk are computed bottom-up on each call (trees are tiny).
+fn weakest_link(nodes: &[Node], stats: &[NodeStats], lambda: f64) -> Option<(usize, f64)> {
+    fn subtree(
+        nodes: &[Node],
+        stats: &[NodeStats],
+        lambda: f64,
+        idx: usize,
+    ) -> (f64 /*risk*/, usize /*leaves*/) {
+        match &nodes[idx] {
+            Node::Leaf { .. } => {
+                let s = stats[idx];
+                (-0.5 * s.g * s.g / (s.h + lambda), 1)
+            }
+            Node::Internal { left, right, .. } => {
+                let (rl, ll) = subtree(nodes, stats, lambda, *left);
+                let (rr, lr) = subtree(nodes, stats, lambda, *right);
+                (rl + rr, ll + lr)
+            }
+        }
+    }
+    let mut best: Option<(usize, f64)> = None;
+    for (idx, n) in nodes.iter().enumerate() {
+        if !matches!(n, Node::Internal { .. }) {
+            continue;
+        }
+        // Is this node reachable? (Collapsed subtrees leave orphans.)
+        if !reachable(nodes, idx) {
+            continue;
+        }
+        let s = stats[idx];
+        let r_node = -0.5 * s.g * s.g / (s.h + lambda);
+        let (r_sub, leaves) = subtree(nodes, stats, lambda, idx);
+        if leaves <= 1 {
+            continue;
+        }
+        let a_eff = (r_node - r_sub) / (leaves - 1) as f64;
+        if best.map_or(true, |(_, a)| a_eff < a) {
+            best = Some((idx, a_eff));
+        }
+    }
+    best
+}
+
+fn reachable(nodes: &[Node], target: usize) -> bool {
+    let mut stack = vec![0usize];
+    while let Some(i) = stack.pop() {
+        if i == target {
+            return true;
+        }
+        if let Node::Internal { left, right, .. } = &nodes[i] {
+            stack.push(*left);
+            stack.push(*right);
+        }
+    }
+    false
+}
+
+/// Drop orphaned nodes and reindex children.
+fn compact(nodes: &[Node]) -> Tree {
+    let mut out = Vec::new();
+    fn copy(nodes: &[Node], idx: usize, out: &mut Vec<Node>) -> usize {
+        let new_idx = out.len();
+        match &nodes[idx] {
+            Node::Leaf { value } => {
+                out.push(Node::Leaf { value: *value });
+            }
+            Node::Internal { feature, bin, threshold, left, right } => {
+                out.push(Node::Leaf { value: 0.0 }); // placeholder
+                let l = copy(nodes, *left, out);
+                let r = copy(nodes, *right, out);
+                out[new_idx] = Node::Internal {
+                    feature: *feature,
+                    bin: *bin,
+                    threshold: *threshold,
+                    left: l,
+                    right: r,
+                };
+            }
+        }
+        new_idx
+    }
+    copy(nodes, 0, &mut out);
+    Tree { nodes: out }
+}
+
+/// Train a boosted ensemble with per-tree CCP at parameter `alpha`.
+pub fn train_ccp(data: &Dataset, params: GbdtParams, alpha: f64) -> GbdtModel {
+    let lambda = params.lambda;
+    let leaf_scale = params.learning_rate;
+    let mut b = Booster::new(data, params, NoPenalty);
+    for _ in 0..params.n_rounds {
+        b.boost_round_map(|binned, grad, hess, tree| {
+            prune_tree(&tree, binned, grad, hess, lambda, leaf_scale, alpha)
+        });
+    }
+    b.into_model()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::data::train_test_split;
+
+    #[test]
+    fn zero_alpha_only_prunes_useless_splits() {
+        let data = PaperDataset::BreastCancer.generate(1);
+        let (train_set, test_set) = train_test_split(&data, 0.2, 1);
+        let params = GbdtParams::paper(16, 3);
+        let plain = crate::gbdt::booster::train(&train_set, params);
+        let pruned = train_ccp(&train_set, params, 0.0);
+        // alpha=0 prunes only zero-gain subtrees: score preserved.
+        let a = plain.score(&test_set);
+        let b = pruned.score(&test_set);
+        assert!((a - b).abs() < 0.05, "alpha=0 moved accuracy {a} -> {b}");
+    }
+
+    #[test]
+    fn large_alpha_collapses_trees() {
+        let data = PaperDataset::Mushroom.generate(2).select(&(0..2000).collect::<Vec<_>>());
+        let params = GbdtParams::paper(8, 4);
+        let pruned = train_ccp(&data, params, 1e12);
+        for t in pruned.trees.iter().flatten() {
+            assert_eq!(t.n_internal(), 0, "huge alpha must collapse to bare leaves");
+        }
+    }
+
+    #[test]
+    fn monotone_in_alpha() {
+        let data = PaperDataset::KrVsKp.generate(3).select(&(0..1500).collect::<Vec<_>>());
+        let params = GbdtParams::paper(8, 4);
+        let sizes: Vec<usize> = [0.0, 0.5, 5.0, 50.0]
+            .iter()
+            .map(|&a| {
+                let m = train_ccp(&data, params, a);
+                m.trees.iter().flatten().map(|t| t.n_nodes()).sum()
+            })
+            .collect();
+        for w in sizes.windows(2) {
+            assert!(w[1] <= w[0] + 2, "node count should shrink with alpha: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn pruned_tree_is_well_formed() {
+        let data = PaperDataset::CaliforniaHousing.generate(4).select(&(0..1000).collect::<Vec<_>>());
+        let params = GbdtParams::paper(6, 4);
+        let m = train_ccp(&data, params, 0.01);
+        for t in m.trees.iter().flatten() {
+            // Every node reachable, children indices in bounds.
+            for n in &t.nodes {
+                if let Node::Internal { left, right, .. } = n {
+                    assert!(*left < t.nodes.len() && *right < t.nodes.len());
+                }
+            }
+            let _ = t.depth();
+            assert_eq!(t.n_leaves() + t.n_internal(), t.n_nodes());
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Cost-efficient gradient boosting (Peter et al., NeurIPS 2017).
+//!
+//! CEGB penalizes the *acquisition cost* of features and the evaluation
+//! cost of deep trees: the gain of a candidate split is charged a
+//! feature cost the first time a feature is used anywhere in the
+//! ensemble ("coupled" costs, as in LightGBM's
+//! `cegb_penalty_feature_coupled`) plus a constant per-split cost
+//! (`cegb_penalty_split`). ToaD extends this idea with threshold costs
+//! and an encoding-aware layout; CEGB is therefore the closest training
+//! baseline (paper §4.2).
+
+use crate::data::Dataset;
+use crate::gbdt::booster::{Booster, GbdtParams};
+use crate::gbdt::splitter::SplitPenalty;
+use crate::gbdt::GbdtModel;
+
+/// CEGB gain penalty: coupled feature costs + per-split cost.
+#[derive(Clone, Debug)]
+pub struct CegbPenalty {
+    /// Cost charged the first time feature `f` is used by the ensemble.
+    pub feature_cost: Vec<f64>,
+    /// Constant cost per split (tree-evaluation cost).
+    pub split_cost: f64,
+    used: Vec<bool>,
+    version: u64,
+}
+
+impl CegbPenalty {
+    /// Uniform feature cost (the setting used in the paper's comparison,
+    /// where no per-feature acquisition prices exist).
+    pub fn uniform(n_features: usize, feature_cost: f64, split_cost: f64) -> CegbPenalty {
+        CegbPenalty {
+            feature_cost: vec![feature_cost; n_features],
+            split_cost,
+            used: vec![false; n_features],
+            version: 0,
+        }
+    }
+
+    /// Per-feature acquisition costs.
+    pub fn with_costs(feature_cost: Vec<f64>, split_cost: f64) -> CegbPenalty {
+        let n = feature_cost.len();
+        CegbPenalty { feature_cost, split_cost, used: vec![false; n], version: 0 }
+    }
+
+    pub fn n_features_used(&self) -> usize {
+        self.used.iter().filter(|&&u| u).count()
+    }
+}
+
+impl SplitPenalty for CegbPenalty {
+    #[inline]
+    fn penalty(&self, feature: usize, _bin: u16) -> f64 {
+        let acq = if self.used[feature] { 0.0 } else { self.feature_cost[feature] };
+        acq + self.split_cost
+    }
+
+    fn on_split(&mut self, feature: usize, _bin: u16) {
+        if !self.used[feature] {
+            self.used[feature] = true;
+            self.version += 1;
+        }
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+}
+
+/// Train a CEGB model.
+pub fn train_cegb(
+    data: &Dataset,
+    params: GbdtParams,
+    feature_cost: f64,
+    split_cost: f64,
+) -> GbdtModel {
+    let penalty = CegbPenalty::uniform(data.n_features(), feature_cost, split_cost);
+    let mut b = Booster::new(data, params, penalty);
+    b.run();
+    b.into_model()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::data::train_test_split;
+    use crate::toad::ReuseStats;
+
+    #[test]
+    fn penalty_semantics() {
+        let mut p = CegbPenalty::uniform(3, 2.0, 0.25);
+        assert_eq!(p.penalty(0, 5), 2.25);
+        p.on_split(0, 5);
+        assert_eq!(p.penalty(0, 9), 0.25, "used feature costs only the split");
+        assert_eq!(p.penalty(1, 0), 2.25);
+        assert_eq!(p.n_features_used(), 1);
+    }
+
+    #[test]
+    fn version_on_new_feature_only() {
+        let mut p = CegbPenalty::uniform(3, 1.0, 0.0);
+        let v0 = p.version();
+        p.on_split(2, 1);
+        assert!(p.version() > v0);
+        let v1 = p.version();
+        p.on_split(2, 7); // same feature, different threshold
+        assert_eq!(p.version(), v1);
+    }
+
+    #[test]
+    fn feature_cost_reduces_feature_count() {
+        let data = PaperDataset::BreastCancer.generate(1);
+        let (train_set, _) = train_test_split(&data, 0.2, 1);
+        let params = GbdtParams::paper(24, 2);
+        let free = train_cegb(&train_set, params, 0.0, 0.0);
+        let costly = train_cegb(&train_set, params, 100.0, 0.0);
+        let f_free = ReuseStats::from_model(&free).n_features_used;
+        let f_costly = ReuseStats::from_model(&costly).n_features_used;
+        assert!(f_costly <= f_free, "cegb features {f_costly} > {f_free}");
+    }
+
+    #[test]
+    fn split_cost_prunes_trees() {
+        let data = PaperDataset::Mushroom.generate(2);
+        let data = data.select(&(0..2000).collect::<Vec<_>>());
+        let params = GbdtParams::paper(8, 4);
+        let free = train_cegb(&data, params, 0.0, 0.0);
+        let costly = train_cegb(&data, params, 0.0, 5.0);
+        let n_free: usize = free.trees.iter().flatten().map(|t| t.n_internal()).sum();
+        let n_costly: usize = costly.trees.iter().flatten().map(|t| t.n_internal()).sum();
+        assert!(n_costly <= n_free, "split cost should shrink trees: {n_costly} vs {n_free}");
+    }
+}

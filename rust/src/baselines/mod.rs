@@ -1,0 +1,19 @@
+//! Every comparison method of the paper's evaluation (§4.2, Appendix D).
+//!
+//! * [`cegb`] — cost-efficient gradient boosting (Peter et al., 2017):
+//!   feature-acquisition and per-split costs in the gain.
+//! * [`ccp`] — minimal cost-complexity pruning (Breiman et al., 1984)
+//!   applied to each boosted tree at training time.
+//! * [`rf`] — random forests (Breiman, 2001) with gini split finding
+//!   and class distributions in the leaves.
+//! * [`guo`] — margin-&-diversity ordering-based ensemble pruning
+//!   (Guo et al., 2018) over random forests.
+//!
+//! The plain and quantized LightGBM baselines need no extra code: they
+//! are the [`crate::gbdt`] trainer scored under the
+//! [`crate::layout::baseline`] size models.
+
+pub mod ccp;
+pub mod cegb;
+pub mod guo;
+pub mod rf;

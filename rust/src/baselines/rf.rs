@@ -1,0 +1,327 @@
+//! Random forests (Breiman, 2001) — the Appendix D baseline.
+//!
+//! Classification-only (the paper's Figure 8 comparison is restricted to
+//! classification because the Guo et al. pruning method is). Trees are
+//! grown depth-first on bootstrap samples with per-split feature
+//! subsampling and gini split finding over binned features; leaves store
+//! the class distribution ("RF stores the class information in the
+//! nodes", paper Appendix D), and prediction averages leaf
+//! distributions.
+
+use crate::data::{Binner, BinnedDataset, Dataset};
+use crate::prng::Pcg64;
+
+/// Random-forest hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RfParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Features sampled per split; 0 = `ceil(sqrt(d))`.
+    pub n_feature_sample: usize,
+    pub max_bins: usize,
+    pub seed: u64,
+}
+
+impl Default for RfParams {
+    fn default() -> Self {
+        RfParams {
+            n_trees: 100,
+            max_depth: 12,
+            min_samples_leaf: 2,
+            n_feature_sample: 0,
+            max_bins: 64,
+            seed: 0,
+        }
+    }
+}
+
+/// One node of a random-forest tree.
+#[derive(Clone, Debug)]
+pub enum RfNode {
+    Internal { feature: usize, threshold: f32, left: usize, right: usize },
+    Leaf { dist: Vec<f32> },
+}
+
+/// A single forest tree (root at index 0).
+#[derive(Clone, Debug)]
+pub struct RfTree {
+    pub nodes: Vec<RfNode>,
+}
+
+impl RfTree {
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Leaf class distribution for a row.
+    pub fn predict_dist(&self, x: &[f32]) -> &[f32] {
+        let mut idx = 0usize;
+        loop {
+            match &self.nodes[idx] {
+                RfNode::Leaf { dist } => return dist,
+                RfNode::Internal { feature, threshold, left, right } => {
+                    idx = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+/// A trained random forest.
+#[derive(Clone, Debug)]
+pub struct RfModel {
+    pub trees: Vec<RfTree>,
+    pub n_classes: usize,
+    pub n_features: usize,
+}
+
+impl RfModel {
+    /// Soft-vote class prediction.
+    pub fn predict_class(&self, x: &[f32]) -> usize {
+        let mut acc = vec![0f32; self.n_classes];
+        for t in &self.trees {
+            for (c, &p) in t.predict_dist(x).iter().enumerate() {
+                acc[c] += p;
+            }
+        }
+        acc.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    }
+
+    pub fn score(&self, data: &Dataset) -> f64 {
+        let preds: Vec<usize> =
+            (0..data.n_rows()).map(|i| self.predict_class(&data.row(i))).collect();
+        crate::metrics::accuracy(&data.labels, &preds)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.n_nodes()).sum()
+    }
+
+    /// Pointer-layout size (128 bits per node, as for the boosted
+    /// baselines; leaves store the class id in the same node budget).
+    pub fn pointer_f32_bytes(&self) -> usize {
+        self.n_nodes() * 16
+    }
+
+    /// Keep only the given trees (used by ensemble pruning).
+    pub fn subensemble(&self, idx: &[usize]) -> RfModel {
+        RfModel {
+            trees: idx.iter().map(|&i| self.trees[i].clone()).collect(),
+            n_classes: self.n_classes,
+            n_features: self.n_features,
+        }
+    }
+}
+
+/// Train a random forest on a classification dataset.
+pub fn train_rf(data: &Dataset, params: RfParams) -> RfModel {
+    assert!(data.task.is_classification(), "RF baseline is classification-only");
+    let n_classes = data.task.n_classes();
+    let binner = Binner::fit(data, params.max_bins);
+    let binned = binner.bin_dataset(data);
+    let n = data.n_rows();
+    let d = data.n_features();
+    let n_feat = if params.n_feature_sample == 0 {
+        (d as f64).sqrt().ceil() as usize
+    } else {
+        params.n_feature_sample.min(d)
+    };
+    let mut rng = Pcg64::new(params.seed ^ 0xF0FE57);
+
+    let trees = (0..params.n_trees)
+        .map(|_| {
+            // Bootstrap sample.
+            let rows: Vec<u32> = (0..n).map(|_| rng.gen_range(n) as u32).collect();
+            let mut nodes = Vec::new();
+            grow(
+                &binned,
+                &binner,
+                &data.labels,
+                rows,
+                n_classes,
+                n_feat,
+                0,
+                &params,
+                &mut rng,
+                &mut nodes,
+            );
+            RfTree { nodes }
+        })
+        .collect();
+    RfModel { trees, n_classes, n_features: d }
+}
+
+/// Gini impurity of a class-count vector.
+fn gini(counts: &[u32], total: u32) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts.iter().map(|&c| (c as f64 / t) * (c as f64 / t)).sum::<f64>()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn grow(
+    binned: &BinnedDataset,
+    binner: &Binner,
+    labels: &[usize],
+    rows: Vec<u32>,
+    n_classes: usize,
+    n_feat: usize,
+    depth: usize,
+    params: &RfParams,
+    rng: &mut Pcg64,
+    nodes: &mut Vec<RfNode>,
+) -> usize {
+    let idx = nodes.len();
+    let mut counts = vec![0u32; n_classes];
+    for &i in &rows {
+        counts[labels[i as usize]] += 1;
+    }
+    let total = rows.len() as u32;
+    let make_leaf = |counts: &[u32], nodes: &mut Vec<RfNode>| {
+        let t = counts.iter().sum::<u32>().max(1) as f32;
+        nodes.push(RfNode::Leaf { dist: counts.iter().map(|&c| c as f32 / t).collect() });
+    };
+    let pure = counts.iter().filter(|&&c| c > 0).count() <= 1;
+    if depth >= params.max_depth || pure || rows.len() < 2 * params.min_samples_leaf {
+        make_leaf(&counts, nodes);
+        return idx;
+    }
+
+    // Best gini split over a random feature subset.
+    let parent_gini = gini(&counts, total);
+    let feats = rng.sample_indices(binned.n_features(), n_feat);
+    let mut best: Option<(usize, u16, f64)> = None; // (feature, boundary, gain)
+    for &f in &feats {
+        let n_bins = binner.n_bins(f);
+        if n_bins < 2 {
+            continue;
+        }
+        // Class counts per bin.
+        let mut hist = vec![0u32; n_bins * n_classes];
+        for &i in &rows {
+            let b = binned.bins[f][i as usize] as usize;
+            hist[b * n_classes + labels[i as usize]] += 1;
+        }
+        let mut left = vec![0u32; n_classes];
+        let mut left_total = 0u32;
+        for b in 0..(n_bins - 1) {
+            for c in 0..n_classes {
+                left[c] += hist[b * n_classes + c];
+            }
+            left_total = left.iter().sum();
+            let right_total = total - left_total;
+            if (left_total as usize) < params.min_samples_leaf
+                || (right_total as usize) < params.min_samples_leaf
+            {
+                continue;
+            }
+            let right: Vec<u32> = (0..n_classes).map(|c| counts[c] - left[c]).collect();
+            let w_l = left_total as f64 / total as f64;
+            let w_r = right_total as f64 / total as f64;
+            let gain = parent_gini - w_l * gini(&left, left_total) - w_r * gini(&right, right_total);
+            if gain > 1e-12 && best.map_or(true, |(_, _, g)| gain > g) {
+                best = Some((f, b as u16, gain));
+            }
+        }
+        let _ = left_total;
+    }
+
+    let Some((f, b, _)) = best else {
+        make_leaf(&counts, nodes);
+        return idx;
+    };
+    nodes.push(RfNode::Leaf { dist: vec![] }); // placeholder
+    let threshold = binner.threshold_value(f, b as usize);
+    let (mut lrows, mut rrows) = (Vec::new(), Vec::new());
+    for &i in &rows {
+        if binned.bins[f][i as usize] <= b {
+            lrows.push(i);
+        } else {
+            rrows.push(i);
+        }
+    }
+    let left =
+        grow(binned, binner, labels, lrows, n_classes, n_feat, depth + 1, params, rng, nodes);
+    let right =
+        grow(binned, binner, labels, rrows, n_classes, n_feat, depth + 1, params, rng, nodes);
+    nodes[idx] = RfNode::Internal { feature: f, threshold, left, right };
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::data::train_test_split;
+
+    #[test]
+    fn learns_breast_cancer() {
+        let data = PaperDataset::BreastCancer.generate(1);
+        let (train_set, test_set) = train_test_split(&data, 0.2, 1);
+        let rf = train_rf(
+            &train_set,
+            RfParams { n_trees: 30, max_depth: 8, ..Default::default() },
+        );
+        let acc = rf.score(&test_set);
+        assert!(acc > 0.9, "rf accuracy {acc}");
+        assert_eq!(rf.n_classes, 2);
+    }
+
+    #[test]
+    fn multiclass_votes() {
+        let data = PaperDataset::WineQuality.generate(2).select(&(0..2000).collect::<Vec<_>>());
+        let (train_set, test_set) = train_test_split(&data, 0.2, 2);
+        let rf = train_rf(
+            &train_set,
+            RfParams { n_trees: 20, max_depth: 10, ..Default::default() },
+        );
+        let mut counts = vec![0usize; 7];
+        for &l in &train_set.labels {
+            counts[l] += 1;
+        }
+        let maj = counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
+        let maj_acc = test_set.labels.iter().filter(|&&l| l == maj).count() as f64
+            / test_set.n_rows() as f64;
+        assert!(rf.score(&test_set) > maj_acc, "rf should beat majority vote");
+    }
+
+    #[test]
+    fn respects_depth() {
+        let data = PaperDataset::KrVsKp.generate(3).select(&(0..800).collect::<Vec<_>>());
+        let rf = train_rf(&data, RfParams { n_trees: 5, max_depth: 3, ..Default::default() });
+        for t in &rf.trees {
+            // depth <= 3 means at most 2^4 - 1 nodes
+            assert!(t.n_nodes() <= 15);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let data = PaperDataset::BreastCancer.generate(4).select(&(0..300).collect::<Vec<_>>());
+        let a = train_rf(&data, RfParams { n_trees: 5, seed: 9, ..Default::default() });
+        let b = train_rf(&data, RfParams { n_trees: 5, seed: 9, ..Default::default() });
+        assert_eq!(a.n_nodes(), b.n_nodes());
+        for i in 0..data.n_rows().min(50) {
+            assert_eq!(a.predict_class(&data.row(i)), b.predict_class(&data.row(i)));
+        }
+    }
+
+    #[test]
+    fn subensemble_selects() {
+        let data = PaperDataset::BreastCancer.generate(5).select(&(0..300).collect::<Vec<_>>());
+        let rf = train_rf(&data, RfParams { n_trees: 10, ..Default::default() });
+        let sub = rf.subensemble(&[0, 3, 7]);
+        assert_eq!(sub.trees.len(), 3);
+        assert!(sub.n_nodes() < rf.n_nodes());
+    }
+
+    #[test]
+    fn pointer_size_accounting() {
+        let data = PaperDataset::BreastCancer.generate(6).select(&(0..300).collect::<Vec<_>>());
+        let rf = train_rf(&data, RfParams { n_trees: 3, ..Default::default() });
+        assert_eq!(rf.pointer_f32_bytes(), rf.n_nodes() * 16);
+    }
+}

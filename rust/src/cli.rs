@@ -1,0 +1,111 @@
+//! Hand-rolled CLI argument parsing (no `clap` offline; DESIGN.md §6).
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand plus `--key value` flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first token is the subcommand, the rest are
+    /// `--key value` pairs (or bare `--switch`, stored as "true").
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = it.next().cloned().unwrap_or_default();
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument `{tok}`"));
+            };
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            args.flags.insert(key.to_string(), value);
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: invalid integer `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: invalid number `{v}`")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+/// Resolve a dataset name to its generator.
+pub fn dataset_by_name(name: &str) -> Option<crate::data::synth::PaperDataset> {
+    use crate::data::synth::PaperDataset as P;
+    Some(match name {
+        "covtype" => P::Covertype,
+        "covtype_binary" => P::CovertypeBinary,
+        "california_housing" => P::CaliforniaHousing,
+        "kin8nm" => P::Kin8nm,
+        "mushroom" => P::Mushroom,
+        "wine_quality" => P::WineQuality,
+        "kr_vs_kp" => P::KrVsKp,
+        "breastcancer" => P::BreastCancer,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = Args::parse(&argv("train --dataset breastcancer --rounds 32 --verbose")).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dataset"), Some("breastcancer"));
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 32);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_or("depth", "4"), "4");
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&argv("train oops")).is_err());
+    }
+
+    #[test]
+    fn invalid_numbers_error() {
+        let a = Args::parse(&argv("t --rounds abc")).unwrap();
+        assert!(a.get_usize("rounds", 1).is_err());
+        assert!(a.get_f64("rounds", 1.0).is_err());
+    }
+
+    #[test]
+    fn dataset_lookup() {
+        assert!(dataset_by_name("breastcancer").is_some());
+        assert!(dataset_by_name("kin8nm").is_some());
+        assert!(dataset_by_name("unknown").is_none());
+    }
+}

@@ -1,0 +1,250 @@
+//! Dynamic batching over the XLA predict engine.
+//!
+//! PJRT artifacts are compiled at a fixed batch size, so the gateway
+//! collects incoming rows until either the batch is full or a deadline
+//! expires, then runs one padded execution and fans the results back
+//! out. PJRT handles are not `Send`, so the engine lives entirely inside
+//! the worker thread; requests and responses cross via channels.
+
+use crate::runtime::tensorize::{eval_tensor_model, TensorModel};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are pending (must equal the
+    /// artifact's compiled batch for the XLA backend).
+    pub max_batch: usize,
+    /// Flush a partial batch after this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One in-flight request.
+struct Request {
+    row: Vec<f32>,
+    reply: Sender<Vec<f64>>,
+}
+
+/// Handle to a batching worker.
+pub struct Batcher {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// Which backend executes the batches.
+pub enum Backend {
+    /// XLA predict artifact from this directory (compiled in-thread).
+    Xla { artifacts_dir: std::path::PathBuf, features: usize },
+    /// Pure-Rust evaluation of the tensorized model (no artifacts
+    /// needed; used in tests and as a fallback).
+    Native,
+}
+
+impl Batcher {
+    /// Spawn a batching worker for `tensors` with the given `backend`.
+    pub fn spawn(tensors: TensorModel, config: BatcherConfig, backend: Backend) -> Batcher {
+        let (tx, rx) = channel::<Request>();
+        let worker = std::thread::spawn(move || worker_loop(tensors, config, backend, rx));
+        Batcher { tx: Some(tx), worker: Some(worker) }
+    }
+
+    /// Submit a row; the returned receiver yields the raw scores.
+    pub fn submit(&self, row: Vec<f32>) -> Receiver<Vec<f64>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("batcher running")
+            .send(Request { row, reply: reply_tx })
+            .expect("worker alive");
+        reply_rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn predict(&self, row: Vec<f32>) -> Vec<f64> {
+        self.submit(row).recv().expect("worker reply")
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; worker drains + exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    tensors: TensorModel,
+    config: BatcherConfig,
+    backend: Backend,
+    rx: Receiver<Request>,
+) {
+    // The XLA engine must be constructed inside the thread (not Send).
+    enum Engine {
+        Xla(crate::runtime::PredictEngine),
+        Native(TensorModel),
+    }
+    let engine = match backend {
+        Backend::Xla { artifacts_dir, features } => {
+            let rt = crate::runtime::XlaRuntime::open(&artifacts_dir)
+                .expect("open artifacts for batcher");
+            Engine::Xla(
+                crate::runtime::PredictEngine::new(&rt, tensors, config.max_batch, features)
+                    .expect("compile predict engine"),
+            )
+        }
+        Backend::Native => Engine::Native(tensors),
+    };
+
+    let mut engine = engine;
+    let mut pending: Vec<Request> = Vec::with_capacity(config.max_batch);
+    let mut deadline: Option<Instant> = None;
+    loop {
+        let timeout = match deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => Duration::from_millis(50),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                if pending.is_empty() {
+                    deadline = Some(Instant::now() + config.max_wait);
+                }
+                pending.push(req);
+                if pending.len() >= config.max_batch {
+                    flush(&mut engine, &mut pending);
+                    deadline = None;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() && deadline.is_some_and(|d| Instant::now() >= d) {
+                    flush(&mut engine, &mut pending);
+                    deadline = None;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    flush(&mut engine, &mut pending);
+                }
+                return;
+            }
+        }
+    }
+
+    fn flush(engine: &mut Engine, pending: &mut Vec<Request>) {
+        let rows: Vec<Vec<f32>> = pending.iter().map(|r| r.row.clone()).collect();
+        let outputs: Vec<Vec<f64>> = match engine {
+            Engine::Xla(e) => e.predict(&rows).expect("xla predict"),
+            Engine::Native(tm) => rows
+                .iter()
+                .map(|r| {
+                    let mut x = r.clone();
+                    // Native path needs explicit feature padding to the
+                    // tensor model's expectation; features beyond the
+                    // row length read as 0 (tree features are in range).
+                    let max_f = tm
+                        .feat
+                        .iter()
+                        .map(|&f| f as usize + 1)
+                        .max()
+                        .unwrap_or(0)
+                        .max(x.len());
+                    x.resize(max_f, 0.0);
+                    eval_tensor_model(tm, &x)
+                })
+                .collect(),
+        };
+        for (req, out) in pending.drain(..).zip(outputs) {
+            // A dropped receiver just means the client went away.
+            let _ = req.reply.send(out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::gbdt::{self, GbdtParams};
+    use crate::runtime::tensorize;
+
+    fn tensors() -> (TensorModel, crate::data::Dataset, crate::gbdt::GbdtModel) {
+        let data = PaperDataset::BreastCancer.generate(71).select(&(0..300).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
+        let tm = tensorize(&model, 32, 4, 64, 1).unwrap();
+        (tm, data, model)
+    }
+
+    #[test]
+    fn native_batcher_matches_model() {
+        let (tm, data, model) = tensors();
+        let b = Batcher::spawn(
+            tm,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            Backend::Native,
+        );
+        for i in 0..20 {
+            let row = data.row(i);
+            let got = b.predict(row.clone());
+            let want = model.predict_raw(&row)[0];
+            assert!((got[0] - want).abs() < 1e-4, "row {i}: {} vs {want}", got[0]);
+        }
+    }
+
+    #[test]
+    fn partial_batches_flush_on_deadline() {
+        let (tm, data, _) = tensors();
+        let b = Batcher::spawn(
+            tm,
+            BatcherConfig { max_batch: 1000, max_wait: Duration::from_millis(5) },
+            Backend::Native,
+        );
+        let start = Instant::now();
+        let out = b.predict(data.row(0));
+        assert_eq!(out.len(), 1);
+        assert!(start.elapsed() < Duration::from_millis(500), "deadline flush too slow");
+    }
+
+    #[test]
+    fn request_response_mapping_is_stable() {
+        // Submit distinct rows concurrently; every reply must match its
+        // own row's prediction (no cross-wiring in the batcher).
+        let (tm, data, model) = tensors();
+        let b = Batcher::spawn(
+            tm,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            Backend::Native,
+        );
+        let rxs: Vec<_> = (0..16).map(|i| (i, b.submit(data.row(i)))).collect();
+        for (i, rx) in rxs {
+            let got = rx.recv().unwrap();
+            let want = model.predict_raw(&data.row(i))[0];
+            assert!((got[0] - want).abs() < 1e-4, "row {i} cross-wired");
+        }
+    }
+
+    #[test]
+    fn drop_drains_pending() {
+        let (tm, data, _) = tensors();
+        let rx;
+        {
+            let b = Batcher::spawn(
+                tm,
+                BatcherConfig { max_batch: 1000, max_wait: Duration::from_secs(10) },
+                Backend::Native,
+            );
+            rx = b.submit(data.row(0));
+            // b dropped here with the request still pending
+        }
+        let out = rx.recv().expect("pending request must be served on shutdown");
+        assert_eq!(out.len(), 1);
+    }
+}

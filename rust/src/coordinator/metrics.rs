@@ -1,0 +1,100 @@
+//! Latency and throughput recording for the serving path.
+
+use std::time::Duration;
+
+/// Records request latencies and computes percentiles/throughput.
+#[derive(Default, Clone, Debug)]
+pub struct LatencyRecorder {
+    /// Latencies in microseconds.
+    samples_us: Vec<u64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        self.samples_us.push(latency.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// Percentile in microseconds (nearest-rank).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    /// Requests/second given the wall-clock span of the run.
+    pub fn throughput(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.count() as f64 / wall.as_secs_f64()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self, wall: Duration) -> String {
+        format!(
+            "n={} p50={}us p95={}us p99={}us mean={:.0}us throughput={:.0}/s",
+            self.count(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.mean_us(),
+            self.throughput(wall),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut r = LatencyRecorder::new();
+        for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
+            r.record(Duration::from_micros(us));
+        }
+        assert_eq!(r.count(), 10);
+        assert_eq!(r.percentile_us(0.0), 100);
+        assert_eq!(r.percentile_us(100.0), 1000);
+        let p50 = r.percentile_us(50.0);
+        assert!((500..=600).contains(&p50));
+        assert!((r.mean_us() - 550.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.percentile_us(50.0), 0);
+        assert_eq!(r.mean_us(), 0.0);
+        assert_eq!(r.throughput(Duration::from_secs(1)), 0.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut r = LatencyRecorder::new();
+        for _ in 0..100 {
+            r.record(Duration::from_micros(10));
+        }
+        assert!((r.throughput(Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+    }
+}

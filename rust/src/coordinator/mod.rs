@@ -1,0 +1,31 @@
+//! Layer-3 coordination: the IoT fleet runtime.
+//!
+//! The paper's deployment story (Figure 1) is a fleet of
+//! memory-constrained sensor nodes running compressed models locally and
+//! transmitting only relevant events. This module provides the
+//! server-side counterpart plus a device simulation:
+//!
+//! * [`device`] — simulated microcontrollers with byte budgets that run
+//!   the packed (bit-level) model, with MCU-model latency accounting.
+//! * [`planner`] — picks, from a sweep's model candidates, the best
+//!   scorer that fits a device's memory budget (paper §4.2: "best model
+//!   with memory ≤ limit").
+//! * [`batcher`] — dynamic batching worker feeding the XLA predict
+//!   engine (gateway-side inference for fleets too small to deploy on).
+//! * [`router`] — routes requests to deployments by model key.
+//! * [`metrics`] — latency/throughput recording.
+//! * [`server`] — ties devices + gateway batching into one front door.
+
+pub mod batcher;
+pub mod device;
+pub mod metrics;
+pub mod planner;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use device::{DeviceKind, SimulatedDevice};
+pub use metrics::LatencyRecorder;
+pub use planner::{DeploymentPlanner, ModelCard};
+pub use router::Router;
+pub use server::FleetServer;

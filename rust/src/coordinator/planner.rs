@@ -1,0 +1,190 @@
+//! Deployment planning: best model under a byte budget.
+//!
+//! The paper's Figure 4 protocol — "the best-performing models with a
+//! memory consumption ≤ the respective upper limit were chosen from the
+//! grid search results" — is exactly the planner's query, applied at
+//! deployment time: given the candidate models a sweep produced, pick
+//! the best scorer that fits each device.
+
+use super::device::SimulatedDevice;
+use thiserror::Error;
+
+/// A candidate model produced by a training sweep.
+#[derive(Clone, Debug)]
+pub struct ModelCard {
+    pub id: String,
+    /// Validation/test score (higher is better: accuracy or R²).
+    pub score: f64,
+    pub size_bytes: usize,
+    /// The encoded ToaD blob.
+    pub blob: Vec<u8>,
+}
+
+#[derive(Debug, Error)]
+pub enum PlanError {
+    #[error("no candidate fits the budget of {budget} bytes (smallest is {smallest})")]
+    NothingFits { budget: usize, smallest: usize },
+    #[error("no candidates registered")]
+    Empty,
+    #[error("deploying `{id}` failed: {reason}")]
+    DeployFailed { id: String, reason: String },
+}
+
+/// Picks deployments from a candidate pool.
+#[derive(Default)]
+pub struct DeploymentPlanner {
+    candidates: Vec<ModelCard>,
+}
+
+impl DeploymentPlanner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_candidate(&mut self, card: ModelCard) {
+        self.candidates.push(card);
+    }
+
+    pub fn candidates(&self) -> &[ModelCard] {
+        &self.candidates
+    }
+
+    /// Best-scoring candidate with `size <= budget`; ties break toward
+    /// the smaller model (cheaper deployment, same quality).
+    pub fn best_under(&self, budget: usize) -> Result<&ModelCard, PlanError> {
+        if self.candidates.is_empty() {
+            return Err(PlanError::Empty);
+        }
+        self.candidates
+            .iter()
+            .filter(|c| c.size_bytes <= budget)
+            .max_by(|a, b| {
+                a.score
+                    .partial_cmp(&b.score)
+                    .unwrap()
+                    .then(b.size_bytes.cmp(&a.size_bytes))
+            })
+            .ok_or_else(|| PlanError::NothingFits {
+                budget,
+                smallest: self.candidates.iter().map(|c| c.size_bytes).min().unwrap(),
+            })
+    }
+
+    /// Plan and deploy onto a device; returns the chosen card id.
+    /// Fitting is guaranteed by construction; corrupt blobs surface as
+    /// [`PlanError::DeployFailed`].
+    pub fn deploy_to(&self, device: &mut SimulatedDevice) -> Result<String, PlanError> {
+        let card = self.best_under(device.budget_bytes)?;
+        device.deploy(card.blob.clone()).map_err(|e| PlanError::DeployFailed {
+            id: card.id.clone(),
+            reason: e.to_string(),
+        })?;
+        Ok(card.id.clone())
+    }
+
+    /// The quality-vs-memory Pareto frontier of the candidate pool
+    /// (nondominated solutions, paper §4.4), sorted by size.
+    pub fn pareto_frontier(&self) -> Vec<&ModelCard> {
+        let mut sorted: Vec<&ModelCard> = self.candidates.iter().collect();
+        sorted.sort_by(|a, b| {
+            a.size_bytes.cmp(&b.size_bytes).then(b.score.partial_cmp(&a.score).unwrap())
+        });
+        let mut out: Vec<&ModelCard> = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        for c in sorted {
+            if c.score > best {
+                best = c.score;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::device::DeviceKind;
+
+    fn card(id: &str, score: f64, size: usize) -> ModelCard {
+        ModelCard { id: id.into(), score, size_bytes: size, blob: vec![0u8; size] }
+    }
+
+    fn pool() -> DeploymentPlanner {
+        let mut p = DeploymentPlanner::new();
+        p.add_candidate(card("tiny", 0.80, 300));
+        p.add_candidate(card("small", 0.88, 900));
+        p.add_candidate(card("medium", 0.92, 4_000));
+        p.add_candidate(card("large", 0.95, 40_000));
+        p
+    }
+
+    #[test]
+    fn picks_best_that_fits() {
+        let p = pool();
+        assert_eq!(p.best_under(1024).unwrap().id, "small");
+        assert_eq!(p.best_under(10_000).unwrap().id, "medium");
+        assert_eq!(p.best_under(100_000).unwrap().id, "large");
+    }
+
+    #[test]
+    fn nothing_fits() {
+        let p = pool();
+        let err = p.best_under(100).unwrap_err();
+        assert!(matches!(err, PlanError::NothingFits { smallest: 300, .. }));
+        let empty = DeploymentPlanner::new();
+        assert!(matches!(empty.best_under(100).unwrap_err(), PlanError::Empty));
+    }
+
+    #[test]
+    fn tie_breaks_to_smaller() {
+        let mut p = DeploymentPlanner::new();
+        p.add_candidate(card("big", 0.9, 2000));
+        p.add_candidate(card("small", 0.9, 500));
+        assert_eq!(p.best_under(10_000).unwrap().id, "small");
+    }
+
+    #[test]
+    fn deploy_respects_device_budget() {
+        // Use real encoded blobs: deployment validates them.
+        use crate::data::synth::PaperDataset;
+        use crate::gbdt::{self, GbdtParams};
+        use crate::layout::{encode, EncodeOptions, FeatureInfo};
+        let data =
+            PaperDataset::BreastCancer.generate(77).select(&(0..250).collect::<Vec<_>>());
+        let finfo = FeatureInfo::from_dataset(&data);
+        let mut p = DeploymentPlanner::new();
+        for (id, rounds, score) in [("small", 4usize, 0.9), ("large", 64, 0.95)] {
+            let m = gbdt::booster::train(&data, GbdtParams::paper(rounds, 2));
+            let blob = encode(&m, &finfo, &EncodeOptions::default());
+            p.add_candidate(ModelCard { id: id.into(), score, size_bytes: blob.len(), blob });
+        }
+        let small_size = p.candidates()[0].size_bytes;
+        let mut dev = super::super::device::SimulatedDevice::new(0, DeviceKind::TinyNode)
+            .with_budget(small_size + 16); // only `small` fits
+        let id = p.deploy_to(&mut dev).unwrap();
+        assert_eq!(id, "small");
+        assert!(dev.model_size().unwrap() <= dev.budget_bytes);
+    }
+
+    #[test]
+    fn deploy_corrupt_candidate_surfaces_error() {
+        let mut p = DeploymentPlanner::new();
+        p.add_candidate(card("junk", 0.9, 64)); // zero-filled, invalid blob
+        let mut dev = super::super::device::SimulatedDevice::new(1, DeviceKind::UnoR4);
+        let err = p.deploy_to(&mut dev).unwrap_err();
+        assert!(matches!(err, PlanError::DeployFailed { .. }), "{err}");
+    }
+
+    #[test]
+    fn pareto_frontier_is_monotone() {
+        let mut p = pool();
+        p.add_candidate(card("dominated", 0.70, 5_000)); // worse & bigger than medium
+        let front = p.pareto_frontier();
+        let ids: Vec<&str> = front.iter().map(|c| c.id.as_str()).collect();
+        assert_eq!(ids, vec!["tiny", "small", "medium", "large"]);
+        for w in front.windows(2) {
+            assert!(w[1].score > w[0].score && w[1].size_bytes > w[0].size_bytes);
+        }
+    }
+}

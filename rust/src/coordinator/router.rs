@@ -1,0 +1,87 @@
+//! Request routing: model key → deployment target(s).
+//!
+//! Deployments are either on-device (a simulated node runs the packed
+//! model locally) or gateway-side (a [`super::batcher::Batcher`] feeding
+//! the XLA engine). The router resolves a model key to a target and
+//! round-robins across replicas.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// An opaque deployment target id registered with the router.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TargetId(pub usize);
+
+/// Maps model keys to deployment targets with round-robin replica
+/// selection.
+#[derive(Default)]
+pub struct Router {
+    routes: HashMap<String, Vec<TargetId>>,
+    counters: HashMap<String, AtomicUsize>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Register a replica target for a model key.
+    pub fn add_route(&mut self, model: &str, target: TargetId) {
+        self.routes.entry(model.to_string()).or_default().push(target);
+        self.counters.entry(model.to_string()).or_insert_with(|| AtomicUsize::new(0));
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.routes.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn replicas(&self, model: &str) -> usize {
+        self.routes.get(model).map_or(0, |v| v.len())
+    }
+
+    /// Next target for a model (round-robin), if any replica exists.
+    pub fn route(&self, model: &str) -> Option<TargetId> {
+        let targets = self.routes.get(model)?;
+        if targets.is_empty() {
+            return None;
+        }
+        let c = self.counters.get(model)?;
+        let i = c.fetch_add(1, Ordering::Relaxed);
+        Some(targets[i % targets.len()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_over_replicas() {
+        let mut r = Router::new();
+        r.add_route("m", TargetId(10));
+        r.add_route("m", TargetId(11));
+        r.add_route("m", TargetId(12));
+        let picks: Vec<usize> = (0..6).map(|_| r.route("m").unwrap().0).collect();
+        assert_eq!(picks, vec![10, 11, 12, 10, 11, 12]);
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        let r = Router::new();
+        assert!(r.route("nope").is_none());
+    }
+
+    #[test]
+    fn models_and_replicas() {
+        let mut r = Router::new();
+        r.add_route("a", TargetId(0));
+        r.add_route("b", TargetId(1));
+        r.add_route("b", TargetId(2));
+        assert_eq!(r.replicas("a"), 1);
+        assert_eq!(r.replicas("b"), 2);
+        assert_eq!(r.replicas("c"), 0);
+        let mut models = r.models();
+        models.sort_unstable();
+        assert_eq!(models, vec!["a", "b"]);
+    }
+}

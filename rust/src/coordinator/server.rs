@@ -1,0 +1,138 @@
+//! The fleet front door: devices + gateway batchers behind one API.
+//!
+//! A [`FleetServer`] owns simulated devices (on-device inference) and
+//! gateway batchers (XLA-backed batched inference), a [`Router`] mapping
+//! model keys to them, and a latency recorder per model. This is the
+//! component the end-to-end example (`examples/iot_fleet.rs`) drives.
+
+use super::batcher::Batcher;
+use super::device::SimulatedDevice;
+use super::metrics::LatencyRecorder;
+use super::router::{Router, TargetId};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+enum Target {
+    Device(SimulatedDevice),
+    Gateway(Batcher),
+}
+
+/// Fleet coordinator: routes rows to deployments and records latency.
+pub struct FleetServer {
+    targets: Vec<Target>,
+    router: Router,
+    metrics: HashMap<String, LatencyRecorder>,
+}
+
+impl Default for FleetServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FleetServer {
+    pub fn new() -> FleetServer {
+        FleetServer { targets: Vec::new(), router: Router::new(), metrics: HashMap::new() }
+    }
+
+    /// Register an on-device deployment for `model`.
+    pub fn add_device(&mut self, model: &str, device: SimulatedDevice) -> TargetId {
+        let id = TargetId(self.targets.len());
+        self.targets.push(Target::Device(device));
+        self.router.add_route(model, id);
+        self.metrics.entry(model.to_string()).or_default();
+        id
+    }
+
+    /// Register a gateway batcher for `model`.
+    pub fn add_gateway(&mut self, model: &str, batcher: Batcher) -> TargetId {
+        let id = TargetId(self.targets.len());
+        self.targets.push(Target::Gateway(batcher));
+        self.router.add_route(model, id);
+        self.metrics.entry(model.to_string()).or_default();
+        id
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Serve one request synchronously; records wall-clock latency.
+    pub fn predict(&mut self, model: &str, row: Vec<f32>) -> Result<Vec<f64>> {
+        let target = self.router.route(model).ok_or_else(|| anyhow!("no route for {model}"))?;
+        let start = Instant::now();
+        let out = match &mut self.targets[target.0] {
+            Target::Device(dev) => dev.predict(&row).map_err(|e| anyhow!(e))?,
+            Target::Gateway(b) => b.predict(row),
+        };
+        self.metrics.get_mut(model).unwrap().record(start.elapsed());
+        Ok(out)
+    }
+
+    pub fn metrics(&self, model: &str) -> Option<&LatencyRecorder> {
+        self.metrics.get(model)
+    }
+
+    /// Sum of simulated on-device busy seconds across the fleet.
+    pub fn fleet_sim_busy_seconds(&self) -> f64 {
+        self.targets
+            .iter()
+            .map(|t| match t {
+                Target::Device(d) => d.sim_busy_seconds(),
+                Target::Gateway(_) => 0.0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{Backend, BatcherConfig};
+    use crate::coordinator::device::DeviceKind;
+    use crate::data::synth::PaperDataset;
+    use crate::gbdt::{self, GbdtParams};
+    use crate::layout::{encode, EncodeOptions, FeatureInfo};
+    use crate::runtime::tensorize;
+
+    #[test]
+    fn device_and_gateway_routes_agree() {
+        let data = PaperDataset::BreastCancer.generate(81).select(&(0..300).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
+        let finfo = FeatureInfo::from_dataset(&data);
+        let blob = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() });
+        let tm = tensorize(&model, 32, 4, 64, 1).unwrap();
+
+        let mut server = FleetServer::new();
+        let mut dev = SimulatedDevice::new(0, DeviceKind::UnoR4);
+        dev.deploy(blob).unwrap();
+        server.add_device("bc", dev);
+        server.add_gateway(
+            "bc",
+            Batcher::spawn(
+                tm,
+                BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+                Backend::Native,
+            ),
+        );
+
+        // Round-robin alternates device / gateway; both must agree with
+        // the source model.
+        for i in 0..10 {
+            let row = data.row(i);
+            let want = model.predict_raw(&row)[0];
+            let got = server.predict("bc", row).unwrap();
+            assert!((got[0] - want).abs() < 1e-4, "req {i}");
+        }
+        let m = server.metrics("bc").unwrap();
+        assert_eq!(m.count(), 10);
+        assert!(server.fleet_sim_busy_seconds() > 0.0);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let mut server = FleetServer::new();
+        assert!(server.predict("ghost", vec![0.0]).is_err());
+    }
+}

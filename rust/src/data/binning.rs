@@ -1,0 +1,260 @@
+//! Histogram binning (the LightGBM-style discretization substrate).
+//!
+//! GBDT split finding enumerates candidate thresholds. Exact enumeration
+//! over all distinct values is quadratic-ish and cache-hostile; LightGBM
+//! instead *bins* every feature into at most `max_bins` quantile buckets
+//! and restricts candidate thresholds to bucket boundaries. ToaD inherits
+//! this discretization: the identity of a threshold for the reuse penalty
+//! (paper §3.1) is the pair *(feature, boundary index)*, and the boundary
+//! *value* is what ends up in the global threshold array of the memory
+//! layout (§3.2.2).
+
+use super::dataset::Dataset;
+
+/// Per-feature binning rule learned from training data.
+#[derive(Clone, Debug)]
+pub struct Binner {
+    /// `boundaries[f][b]` is the split value between bin `b` and `b+1`;
+    /// a row goes left when `x[f] <= boundaries[f][b]`.
+    pub boundaries: Vec<Vec<f32>>,
+}
+
+impl Binner {
+    /// Learn quantile bin boundaries from the columns of `data`.
+    ///
+    /// For each feature the distinct sorted values are walked and up to
+    /// `max_bins - 1` boundaries are placed at (approximately) equal-mass
+    /// quantiles, always *between* two distinct values so that binning is
+    /// exact on training data.
+    pub fn fit(data: &Dataset, max_bins: usize) -> Binner {
+        assert!(max_bins >= 2, "need at least 2 bins");
+        let n = data.n_rows();
+        let boundaries = data
+            .features
+            .iter()
+            .map(|col| {
+                // Sort a copy; NaNs are not supported by the generators.
+                let mut v: Vec<f32> = col.clone();
+                v.sort_by(|a, b| a.partial_cmp(b).expect("NaN feature value"));
+                let mut distinct: Vec<(f32, usize)> = Vec::new();
+                for &x in &v {
+                    match distinct.last_mut() {
+                        Some((d, c)) if *d == x => *c += 1,
+                        _ => distinct.push((x, 1)),
+                    }
+                }
+                if distinct.len() <= 1 {
+                    return Vec::new(); // constant feature: no candidate splits
+                }
+                if distinct.len() <= max_bins {
+                    // One bin per distinct value; boundary at midpoints.
+                    return distinct
+                        .windows(2)
+                        .map(|w| midpoint(w[0].0, w[1].0))
+                        .collect();
+                }
+                // Equal-mass quantile placement over distinct values.
+                let n_bounds = max_bins - 1;
+                let mut bounds = Vec::with_capacity(n_bounds);
+                let mut cum = 0usize;
+                let mut target_idx = 1usize;
+                for w in distinct.windows(2) {
+                    cum += w[0].1;
+                    let target = target_idx * n / max_bins;
+                    if cum >= target && bounds.len() < n_bounds {
+                        bounds.push(midpoint(w[0].0, w[1].0));
+                        while target_idx * n / max_bins <= cum {
+                            target_idx += 1;
+                        }
+                    }
+                }
+                bounds
+            })
+            .collect();
+        Binner { boundaries }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.boundaries.len()
+    }
+
+    /// Number of bins for feature `f` (boundaries + 1).
+    pub fn n_bins(&self, f: usize) -> usize {
+        self.boundaries[f].len() + 1
+    }
+
+    /// Largest bin count over all features.
+    pub fn max_bin_count(&self) -> usize {
+        (0..self.n_features()).map(|f| self.n_bins(f)).max().unwrap_or(1)
+    }
+
+    /// Bin a single value of feature `f` (binary search over boundaries).
+    #[inline]
+    pub fn bin_value(&self, f: usize, x: f32) -> u16 {
+        let b = &self.boundaries[f];
+        // partition_point: first boundary >= x fails `x <= bound` check…
+        // we want the count of boundaries strictly below x, i.e. the
+        // number of `bound < x`.
+        b.partition_point(|&bound| bound < x) as u16
+    }
+
+    /// Bin an entire dataset (column-major, same orientation as input).
+    pub fn bin_dataset(&self, data: &Dataset) -> BinnedDataset {
+        assert_eq!(data.n_features(), self.n_features());
+        let bins = data
+            .features
+            .iter()
+            .enumerate()
+            .map(|(f, col)| col.iter().map(|&x| self.bin_value(f, x)).collect())
+            .collect();
+        BinnedDataset { bins, n_rows: data.n_rows() }
+    }
+
+    /// The threshold *value* represented by boundary index `b` of feature
+    /// `f` — this is what the ToaD global threshold array stores.
+    #[inline]
+    pub fn threshold_value(&self, f: usize, b: usize) -> f32 {
+        self.boundaries[f][b]
+    }
+}
+
+#[inline]
+fn midpoint(a: f32, b: f32) -> f32 {
+    let m = a + (b - a) * 0.5;
+    // Guard against rounding collapsing onto `b` (then `x <= m` would
+    // misroute the right value); bias to `a` which keeps binning exact.
+    if m >= b {
+        a
+    } else {
+        m
+    }
+}
+
+/// A dataset mapped to bin indices, column-major like [`Dataset`].
+#[derive(Clone, Debug)]
+pub struct BinnedDataset {
+    /// `bins[f][i]` is the bin of row `i` on feature `f`.
+    pub bins: Vec<Vec<u16>>,
+    pub n_rows: usize,
+}
+
+impl BinnedDataset {
+    pub fn n_features(&self) -> usize {
+        self.bins.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Task;
+    use crate::prng::Pcg64;
+
+    fn ds(cols: Vec<Vec<f32>>) -> Dataset {
+        let n = cols[0].len();
+        Dataset {
+            name: "t".into(),
+            features: cols,
+            targets: vec![0.0; n],
+            labels: vec![],
+            task: Task::Regression,
+        }
+    }
+
+    #[test]
+    fn constant_feature_has_no_boundaries() {
+        let d = ds(vec![vec![5.0; 10]]);
+        let b = Binner::fit(&d, 16);
+        assert!(b.boundaries[0].is_empty());
+        assert_eq!(b.n_bins(0), 1);
+        assert_eq!(b.bin_value(0, 5.0), 0);
+    }
+
+    #[test]
+    fn few_distinct_values_get_exact_bins() {
+        let d = ds(vec![vec![0.0, 1.0, 0.0, 2.0, 1.0, 2.0]]);
+        let b = Binner::fit(&d, 16);
+        assert_eq!(b.n_bins(0), 3);
+        assert_eq!(b.bin_value(0, 0.0), 0);
+        assert_eq!(b.bin_value(0, 1.0), 1);
+        assert_eq!(b.bin_value(0, 2.0), 2);
+    }
+
+    #[test]
+    fn binning_is_monotone() {
+        let mut rng = Pcg64::new(21);
+        let col: Vec<f32> = (0..500).map(|_| rng.gen_f32() * 10.0).collect();
+        let d = ds(vec![col.clone()]);
+        let b = Binner::fit(&d, 32);
+        let mut pairs: Vec<(f32, u16)> = col.iter().map(|&x| (x, b.bin_value(0, x))).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in pairs.windows(2) {
+            assert!(w[0].1 <= w[1].1, "bins must be monotone in the value");
+        }
+    }
+
+    #[test]
+    fn bin_count_respects_max() {
+        let mut rng = Pcg64::new(22);
+        let col: Vec<f32> = (0..10_000).map(|_| rng.gen_f32()).collect();
+        let d = ds(vec![col]);
+        let b = Binner::fit(&d, 255);
+        assert!(b.n_bins(0) <= 255);
+        assert!(b.n_bins(0) >= 200, "should use most of the budget, got {}", b.n_bins(0));
+    }
+
+    #[test]
+    fn bins_roughly_equal_mass() {
+        let mut rng = Pcg64::new(23);
+        let col: Vec<f32> = (0..8_000).map(|_| rng.gen_f32()).collect();
+        let d = ds(vec![col.clone()]);
+        let b = Binner::fit(&d, 16);
+        let binned = b.bin_dataset(&d);
+        let mut counts = vec![0usize; b.n_bins(0)];
+        for &x in &binned.bins[0] {
+            counts[x as usize] += 1;
+        }
+        let expect = 8_000 / 16;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                c > expect / 3 && c < expect * 3,
+                "bin {i} count {c} far from equal mass {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn threshold_value_separates_bins() {
+        let mut rng = Pcg64::new(24);
+        let col: Vec<f32> = (0..1000).map(|_| rng.gen_f32() * 5.0).collect();
+        let d = ds(vec![col.clone()]);
+        let b = Binner::fit(&d, 16);
+        // Every training value in bin <= k must satisfy x <= threshold(k),
+        // and every value in bin > k must violate it.
+        for k in 0..b.boundaries[0].len() {
+            let thr = b.threshold_value(0, k);
+            for &x in &col {
+                let bin = b.bin_value(0, x);
+                if (bin as usize) <= k {
+                    assert!(x <= thr, "x={x} bin={bin} thr={thr} k={k}");
+                } else {
+                    assert!(x > thr, "x={x} bin={bin} thr={thr} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_heavy_distribution() {
+        // 90% zeros, 10% spread: boundary placement must not panic and
+        // must keep monotonicity.
+        let mut rng = Pcg64::new(25);
+        let col: Vec<f32> = (0..2000)
+            .map(|_| if rng.gen_bool(0.9) { 0.0 } else { rng.gen_f32() })
+            .collect();
+        let d = ds(vec![col]);
+        let b = Binner::fit(&d, 8);
+        assert!(b.n_bins(0) >= 2);
+        assert_eq!(b.bin_value(0, 0.0), 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Minimal CSV reader/writer for [`Dataset`]s.
+//!
+//! Real data can be dropped into the experiments through this module
+//! (replacing the synthetic generators) — the format is a plain numeric
+//! CSV with a header row; the label/target column is named `target`.
+//! No external CSV crate is available offline, so this is a small,
+//! strict parser: numeric fields only, comma separator, no quoting.
+
+use super::dataset::{Dataset, Task};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Read a dataset from CSV. The column named `target` (any position)
+/// becomes the label/target; `task` tells how to interpret it.
+pub fn read_csv(path: &Path, name: &str, task: Task) -> anyhow::Result<Dataset> {
+    let file = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(file).lines();
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty csv"))??;
+    let cols: Vec<&str> = header.split(',').map(|s| s.trim()).collect();
+    let target_idx = cols
+        .iter()
+        .position(|&c| c == "target")
+        .ok_or_else(|| anyhow::anyhow!("no `target` column in {path:?}"))?;
+    let n_features = cols.len() - 1;
+
+    let mut features: Vec<Vec<f32>> = vec![Vec::new(); n_features];
+    let mut targets: Vec<f64> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
+        if fields.len() != cols.len() {
+            anyhow::bail!("line {}: {} fields, expected {}", lineno + 2, fields.len(), cols.len());
+        }
+        let mut fi = 0usize;
+        for (c, field) in fields.iter().enumerate() {
+            if c == target_idx {
+                match task {
+                    Task::Regression => targets.push(field.parse::<f64>()?),
+                    _ => labels.push(field.parse::<f64>()? as usize),
+                }
+            } else {
+                features[fi].push(field.parse::<f32>()?);
+                fi += 1;
+            }
+        }
+    }
+    let ds = Dataset { name: name.to_string(), features, targets, labels, task };
+    ds.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(ds)
+}
+
+/// Write a dataset as CSV (feature columns `f0..f{d-1}` plus `target`).
+pub fn write_csv(data: &Dataset, path: &Path) -> anyhow::Result<()> {
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let header: Vec<String> =
+        (0..data.n_features()).map(|f| format!("f{f}")).chain(["target".to_string()]).collect();
+    writeln!(out, "{}", header.join(","))?;
+    for i in 0..data.n_rows() {
+        let mut fields: Vec<String> =
+            data.features.iter().map(|col| format!("{}", col[i])).collect();
+        let target = match data.task {
+            Task::Regression => format!("{}", data.targets[i]),
+            _ => format!("{}", data.labels[i]),
+        };
+        fields.push(target);
+        writeln!(out, "{}", fields.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+
+    #[test]
+    fn roundtrip_classification() {
+        let d = PaperDataset::BreastCancer.generate(1);
+        let dir = std::env::temp_dir();
+        let path = dir.join("toad_test_bc.csv");
+        write_csv(&d, &path).unwrap();
+        let r = read_csv(&path, "breastcancer", Task::Binary).unwrap();
+        assert_eq!(r.n_rows(), d.n_rows());
+        assert_eq!(r.n_features(), d.n_features());
+        assert_eq!(r.labels, d.labels);
+        assert_eq!(r.features[3], d.features[3]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_regression() {
+        let mut d = PaperDataset::Kin8nm.generate(2);
+        // shrink for test speed
+        let idx: Vec<usize> = (0..200).collect();
+        d = d.select(&idx);
+        let path = std::env::temp_dir().join("toad_test_kin.csv");
+        write_csv(&d, &path).unwrap();
+        let r = read_csv(&path, "kin8nm", Task::Regression).unwrap();
+        assert_eq!(r.n_rows(), 200);
+        for (a, b) in r.targets.iter().zip(&d.targets) {
+            assert!((a - b).abs() < 1e-9 || (a - b).abs() / b.abs() < 1e-6);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_missing_target() {
+        let path = std::env::temp_dir().join("toad_test_bad.csv");
+        std::fs::write(&path, "a,b\n1,2\n").unwrap();
+        assert!(read_csv(&path, "x", Task::Binary).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let path = std::env::temp_dir().join("toad_test_ragged.csv");
+        std::fs::write(&path, "f0,target\n1,0\n1,2,3\n").unwrap();
+        assert!(read_csv(&path, "x", Task::Binary).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

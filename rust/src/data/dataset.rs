@@ -1,0 +1,174 @@
+//! Core dataset representation.
+//!
+//! Features are stored **column-major** (`features[f][i]`): histogram
+//! construction, binning, and split finding all scan one feature at a
+//! time, so this is the cache-friendly orientation for the training path.
+
+/// Learning task of a dataset. The paper uses accuracy for the two
+/// classification flavours and R² for regression (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Regression,
+    Binary,
+    /// Multiclass with the given number of classes; boosted trees train
+    /// one ensemble per class (one-vs-all softmax), as the paper notes.
+    Multiclass(usize),
+}
+
+impl Task {
+    /// Number of boosting ensembles the task requires.
+    pub fn n_ensembles(&self) -> usize {
+        match self {
+            Task::Regression | Task::Binary => 1,
+            Task::Multiclass(c) => *c,
+        }
+    }
+
+    pub fn is_classification(&self) -> bool {
+        !matches!(self, Task::Regression)
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Task::Regression => 0,
+            Task::Binary => 2,
+            Task::Multiclass(c) => *c,
+        }
+    }
+}
+
+/// An in-memory tabular dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Column-major feature matrix: `features[f][i]` is feature `f` of row `i`.
+    pub features: Vec<Vec<f32>>,
+    /// Regression targets (empty for classification).
+    pub targets: Vec<f64>,
+    /// Class labels in `0..n_classes` (empty for regression).
+    pub labels: Vec<usize>,
+    pub task: Task,
+}
+
+impl Dataset {
+    pub fn n_rows(&self) -> usize {
+        self.features.first().map_or(0, |c| c.len())
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.features.len()
+    }
+
+    /// Row accessor (allocates); the hot paths never use this — they scan
+    /// columns — but examples and the serving path do.
+    pub fn row(&self, i: usize) -> Vec<f32> {
+        self.features.iter().map(|c| c[i]).collect()
+    }
+
+    /// Select a subset of rows by index, preserving order.
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            features: self
+                .features
+                .iter()
+                .map(|col| idx.iter().map(|&i| col[i]).collect())
+                .collect(),
+            targets: if self.targets.is_empty() {
+                vec![]
+            } else {
+                idx.iter().map(|&i| self.targets[i]).collect()
+            },
+            labels: if self.labels.is_empty() {
+                vec![]
+            } else {
+                idx.iter().map(|&i| self.labels[i]).collect()
+            },
+            task: self.task,
+        }
+    }
+
+    /// Validate internal consistency (row counts, label ranges).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n_rows();
+        for (f, col) in self.features.iter().enumerate() {
+            if col.len() != n {
+                return Err(format!("feature {f} has {} rows, expected {n}", col.len()));
+            }
+        }
+        match self.task {
+            Task::Regression => {
+                if self.targets.len() != n {
+                    return Err(format!("targets {} != rows {n}", self.targets.len()));
+                }
+            }
+            Task::Binary | Task::Multiclass(_) => {
+                if self.labels.len() != n {
+                    return Err(format!("labels {} != rows {n}", self.labels.len()));
+                }
+                let c = self.task.n_classes();
+                if let Some(&bad) = self.labels.iter().find(|&&l| l >= c) {
+                    return Err(format!("label {bad} out of range 0..{c}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            name: "toy".into(),
+            features: vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]],
+            targets: vec![],
+            labels: vec![0, 1, 0],
+            task: Task::Binary,
+        }
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let d = toy();
+        assert_eq!(d.n_rows(), 3);
+        assert_eq!(d.n_features(), 2);
+        assert_eq!(d.row(1), vec![2.0, 5.0]);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn select_preserves_order() {
+        let d = toy();
+        let s = d.select(&[2, 0]);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.features[0], vec![3.0, 1.0]);
+        assert_eq!(s.labels, vec![0, 0]);
+    }
+
+    #[test]
+    fn validate_catches_bad_label() {
+        let mut d = toy();
+        d.labels[0] = 7;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_ragged() {
+        let mut d = toy();
+        d.features[1].pop();
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn task_ensembles() {
+        assert_eq!(Task::Regression.n_ensembles(), 1);
+        assert_eq!(Task::Binary.n_ensembles(), 1);
+        assert_eq!(Task::Multiclass(7).n_ensembles(), 7);
+        assert_eq!(Task::Multiclass(7).n_classes(), 7);
+        assert!(Task::Binary.is_classification());
+        assert!(!Task::Regression.is_classification());
+    }
+}

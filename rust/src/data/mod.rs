@@ -1,0 +1,19 @@
+//! Dataset substrate: representation, binning, splits, synthesis, I/O.
+//!
+//! The paper evaluates on eight public tabular datasets (Appendix B).
+//! This environment is offline, so [`synth`] re-creates each dataset's
+//! *schema and learning character* (feature count, feature kinds, task,
+//! size, noise/redundancy profile) with deterministic generators — see
+//! DESIGN.md §5 for the substitution rationale. Everything downstream
+//! (trainers, sweeps, benches) consumes the same [`Dataset`] type, so
+//! real CSV data can be dropped in via [`csv`].
+
+pub mod binning;
+pub mod csv;
+pub mod dataset;
+pub mod splits;
+pub mod synth;
+
+pub use binning::{BinnedDataset, Binner};
+pub use dataset::{Dataset, Task};
+pub use splits::{kfold, train_test_split, train_valid_test_split};

@@ -1,0 +1,128 @@
+//! Train/validation/test splitting and k-fold cross-validation.
+//!
+//! The paper uses an 80/20 train/test split with seeds 1–12, 5-fold CV on
+//! the two smallest datasets, and a 10% validation carve-out for the
+//! bigger ones (§4.1). These helpers reproduce that protocol.
+
+use super::dataset::Dataset;
+use crate::prng::Pcg64;
+
+/// Shuffled 80/20-style split; `test_frac` of the rows go to the test set.
+pub fn train_test_split(data: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let n = data.n_rows();
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg64::new(seed ^ 0x5111_7000);
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    (data.select(train_idx), data.select(test_idx))
+}
+
+/// Train / validation / test split matching the paper's protocol for the
+/// larger datasets: `test_frac` test, then `valid_frac` of the remaining
+/// training rows as validation.
+pub fn train_valid_test_split(
+    data: &Dataset,
+    test_frac: f64,
+    valid_frac: f64,
+    seed: u64,
+) -> (Dataset, Dataset, Dataset) {
+    let (train_all, test) = train_test_split(data, test_frac, seed);
+    let n = train_all.n_rows();
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg64::new(seed ^ 0x0A11_D000);
+    rng.shuffle(&mut idx);
+    let n_valid = ((n as f64) * valid_frac).round() as usize;
+    let (valid_idx, train_idx) = idx.split_at(n_valid);
+    (train_all.select(train_idx), train_all.select(valid_idx), test)
+}
+
+/// K-fold cross-validation index sets: returns `k` (train, valid) pairs.
+pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg64::new(seed ^ 0xF01D);
+    rng.shuffle(&mut idx);
+    (0..k)
+        .map(|fold| {
+            let lo = fold * n / k;
+            let hi = (fold + 1) * n / k;
+            let valid: Vec<usize> = idx[lo..hi].to_vec();
+            let train: Vec<usize> =
+                idx[..lo].iter().chain(idx[hi..].iter()).copied().collect();
+            (train, valid)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Task;
+
+    fn ds(n: usize) -> Dataset {
+        Dataset {
+            name: "t".into(),
+            features: vec![(0..n).map(|i| i as f32).collect()],
+            targets: (0..n).map(|i| i as f64).collect(),
+            labels: vec![],
+            task: Task::Regression,
+        }
+    }
+
+    #[test]
+    fn split_sizes_and_disjoint() {
+        let d = ds(100);
+        let (tr, te) = train_test_split(&d, 0.2, 1);
+        assert_eq!(tr.n_rows(), 80);
+        assert_eq!(te.n_rows(), 20);
+        let mut all: Vec<i64> =
+            tr.features[0].iter().chain(te.features[0].iter()).map(|&x| x as i64).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn split_deterministic_per_seed() {
+        let d = ds(50);
+        let (a, _) = train_test_split(&d, 0.2, 7);
+        let (b, _) = train_test_split(&d, 0.2, 7);
+        assert_eq!(a.features[0], b.features[0]);
+        let (c, _) = train_test_split(&d, 0.2, 8);
+        assert_ne!(a.features[0], c.features[0]);
+    }
+
+    #[test]
+    fn three_way_split_partitions() {
+        let d = ds(200);
+        let (tr, va, te) = train_valid_test_split(&d, 0.2, 0.1, 3);
+        assert_eq!(te.n_rows(), 40);
+        assert_eq!(va.n_rows(), 16);
+        assert_eq!(tr.n_rows(), 144);
+        let mut all: Vec<i64> = tr.features[0]
+            .iter()
+            .chain(va.features[0].iter())
+            .chain(te.features[0].iter())
+            .map(|&x| x as i64)
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..200).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn kfold_partitions_everything() {
+        let folds = kfold(103, 5, 9);
+        assert_eq!(folds.len(), 5);
+        let mut seen: Vec<usize> = folds.iter().flat_map(|(_, v)| v.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..103).collect::<Vec<usize>>());
+        for (tr, va) in &folds {
+            assert_eq!(tr.len() + va.len(), 103);
+            // train and valid are disjoint
+            for i in va {
+                assert!(!tr.contains(i));
+            }
+        }
+    }
+}

@@ -1,0 +1,414 @@
+//! The boosting loop: K rounds of tree growth over all output streams.
+//!
+//! [`Booster`] exposes an *incremental* API (`boost_round`) so callers
+//! can interleave training with external stopping criteria. The ToaD
+//! `toad_forestsize` feature (train until a byte budget is exhausted,
+//! paper §4.1) is built exactly this way: `toad::train_with_budget`
+//! drives rounds and measures the encoded model size after each one.
+
+use super::grower::{grow_tree, resolve_thresholds, GrowerParams};
+use super::loss::Objective;
+use super::model::GbdtModel;
+use super::splitter::{NoPenalty, SplitParams, SplitPenalty};
+use super::tree::{Node, Tree};
+use crate::data::{Binner, BinnedDataset, Dataset};
+
+/// Hyperparameters of a boosting run. Field names follow the paper's
+/// grid (§4): `n_rounds` = "maximum number of iterations", `max_depth` =
+/// "maximum depth per tree".
+#[derive(Clone, Copy, Debug)]
+pub struct GbdtParams {
+    pub n_rounds: usize,
+    pub max_depth: usize,
+    /// Leaf cap; defaults to the complete-tree count `2^max_depth`.
+    pub max_leaves: usize,
+    pub learning_rate: f64,
+    pub lambda: f64,
+    pub gamma: f64,
+    pub min_data_in_leaf: u32,
+    pub min_hess_in_leaf: f64,
+    pub max_bins: usize,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams {
+            n_rounds: 100,
+            max_depth: 6,
+            max_leaves: 64,
+            learning_rate: 0.1,
+            lambda: 1e-3,
+            gamma: 0.0,
+            min_data_in_leaf: 20,
+            min_hess_in_leaf: 1e-3,
+            max_bins: 255,
+        }
+    }
+}
+
+impl GbdtParams {
+    /// Paper-style constructor: iterations × depth, complete-tree leaves.
+    pub fn paper(n_rounds: usize, max_depth: usize) -> GbdtParams {
+        GbdtParams {
+            n_rounds,
+            max_depth,
+            max_leaves: 1usize << max_depth.min(16),
+            ..Default::default()
+        }
+    }
+
+    fn grower(&self) -> GrowerParams {
+        GrowerParams {
+            split: SplitParams {
+                lambda: self.lambda,
+                gamma: self.gamma,
+                min_data_in_leaf: self.min_data_in_leaf,
+                min_hess_in_leaf: self.min_hess_in_leaf,
+            },
+            max_depth: self.max_depth,
+            max_leaves: self.max_leaves,
+            learning_rate: self.learning_rate,
+        }
+    }
+}
+
+/// Incremental boosting state.
+pub struct Booster<P: SplitPenalty> {
+    params: GbdtParams,
+    objective: Objective,
+    binner: Binner,
+    binned: BinnedDataset,
+    bins_per_feature: Vec<usize>,
+    targets: Vec<f64>,
+    labels: Vec<usize>,
+    /// Current raw scores, `[output][row]`.
+    raw: Vec<Vec<f64>>,
+    grad: Vec<Vec<f64>>,
+    hess: Vec<Vec<f64>>,
+    penalty: P,
+    model: GbdtModel,
+    rounds_done: usize,
+}
+
+impl<P: SplitPenalty> Booster<P> {
+    /// Bin the training data and initialize raw scores at the base score.
+    pub fn new(train: &Dataset, params: GbdtParams, penalty: P) -> Booster<P> {
+        train.validate().expect("invalid training dataset");
+        let objective = Objective::for_task(train.task);
+        let binner = Binner::fit(train, params.max_bins);
+        let binned = binner.bin_dataset(train);
+        let bins_per_feature: Vec<usize> =
+            (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let n = train.n_rows();
+        let n_out = objective.n_outputs();
+        let base = objective.base_scores(&train.targets, &train.labels);
+        let raw: Vec<Vec<f64>> = base.iter().map(|&b| vec![b; n]).collect();
+        let model = GbdtModel {
+            objective,
+            base_scores: base,
+            trees: vec![Vec::new(); n_out],
+            n_features: train.n_features(),
+            name: train.name.clone(),
+        };
+        Booster {
+            params,
+            objective,
+            binner,
+            binned,
+            bins_per_feature,
+            targets: train.targets.clone(),
+            labels: train.labels.clone(),
+            raw,
+            grad: vec![vec![0.0; n]; n_out],
+            hess: vec![vec![0.0; n]; n_out],
+            penalty,
+            model,
+            rounds_done: 0,
+        }
+    }
+
+    pub fn rounds_done(&self) -> usize {
+        self.rounds_done
+    }
+
+    pub fn model(&self) -> &GbdtModel {
+        &self.model
+    }
+
+    pub fn penalty(&self) -> &P {
+        &self.penalty
+    }
+
+    pub fn binner(&self) -> &Binner {
+        &self.binner
+    }
+
+    /// Run one boosting round where each grown tree is first passed
+    /// through `map` (e.g. a pruning pass) before being committed; the
+    /// raw-score update then re-routes rows through the mapped tree.
+    /// Used by the CCP baseline.
+    pub fn boost_round_map(
+        &mut self,
+        mut map: impl FnMut(&BinnedDataset, &[f64], &[f64], Tree) -> Tree,
+    ) -> bool {
+        self.objective.grad_hess(
+            &self.raw,
+            &self.targets,
+            &self.labels,
+            &mut self.grad,
+            &mut self.hess,
+        );
+        let grower = self.params.grower();
+        let n = self.binned.n_rows;
+        let mut any_split = false;
+        for k in 0..self.objective.n_outputs() {
+            let rows: Vec<u32> = (0..n as u32).collect();
+            let grown = grow_tree(
+                &self.binned,
+                &self.bins_per_feature,
+                rows,
+                &self.grad[k],
+                &self.hess[k],
+                &grower,
+                &mut self.penalty,
+            );
+            let mut tree = map(&self.binned, &self.grad[k], &self.hess[k], grown.tree);
+            resolve_thresholds(&mut tree, |f, b| self.binner.threshold_value(f, b as usize));
+            any_split |= tree.n_internal() > 0;
+            for i in 0..n {
+                self.raw[k][i] += super::model::predict_binned(&tree, &self.binned, i);
+            }
+            self.model.trees[k].push(tree);
+        }
+        self.rounds_done += 1;
+        any_split
+    }
+
+    /// Run one boosting round (one new tree per output stream).
+    /// Returns `false` when every new tree degenerated to a bare leaf
+    /// with no improvement — the natural stopping point.
+    pub fn boost_round(&mut self) -> bool {
+        self.objective.grad_hess(
+            &self.raw,
+            &self.targets,
+            &self.labels,
+            &mut self.grad,
+            &mut self.hess,
+        );
+        let grower = self.params.grower();
+        let n = self.binned.n_rows;
+        let mut any_split = false;
+        for k in 0..self.objective.n_outputs() {
+            let rows: Vec<u32> = (0..n as u32).collect();
+            let grown = grow_tree(
+                &self.binned,
+                &self.bins_per_feature,
+                rows,
+                &self.grad[k],
+                &self.hess[k],
+                &grower,
+                &mut self.penalty,
+            );
+            let mut tree = grown.tree;
+            resolve_thresholds(&mut tree, |f, b| self.binner.threshold_value(f, b as usize));
+            any_split |= tree.n_internal() > 0;
+            // O(n) raw-score update from the final leaf partitions.
+            for (node_idx, rows) in &grown.leaf_rows {
+                let Node::Leaf { value } = tree.nodes[*node_idx] else {
+                    panic!("leaf_rows must reference leaves")
+                };
+                for &i in rows {
+                    self.raw[k][i as usize] += value;
+                }
+            }
+            self.model.trees[k].push(tree);
+        }
+        self.rounds_done += 1;
+        any_split
+    }
+
+    /// Run all remaining rounds, stopping early once a round yields no
+    /// split anywhere (every further round would be an identical bare
+    /// leaf — LightGBM's "no further splits with positive gain" stop).
+    pub fn run(&mut self) {
+        while self.rounds_done < self.params.n_rounds {
+            if !self.boost_round() {
+                break;
+            }
+        }
+    }
+
+    pub fn into_model(self) -> GbdtModel {
+        self.model
+    }
+
+    /// Current training loss (for debugging / convergence tests).
+    pub fn train_loss(&self) -> f64 {
+        match self.objective {
+            Objective::L2 => {
+                let n = self.targets.len();
+                self.targets
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &y)| {
+                        let d = self.raw[0][i] - y;
+                        d * d
+                    })
+                    .sum::<f64>()
+                    / n as f64
+            }
+            Objective::Logistic => {
+                let p: Vec<f64> =
+                    self.raw[0].iter().map(|&r| super::loss::sigmoid(r)).collect();
+                crate::metrics::binary_logloss(&self.labels, &p)
+            }
+            Objective::Softmax { n_classes } => {
+                let n = self.labels.len();
+                let probs: Vec<Vec<f64>> = (0..n)
+                    .map(|i| {
+                        let mx = (0..n_classes)
+                            .map(|k| self.raw[k][i])
+                            .fold(f64::NEG_INFINITY, f64::max);
+                        let e: Vec<f64> =
+                            (0..n_classes).map(|k| (self.raw[k][i] - mx).exp()).collect();
+                        let z: f64 = e.iter().sum();
+                        e.iter().map(|&x| x / z).collect()
+                    })
+                    .collect();
+                crate::metrics::multiclass_logloss(&self.labels, &probs)
+            }
+        }
+    }
+}
+
+/// One-shot training without penalties.
+pub fn train(data: &Dataset, params: GbdtParams) -> GbdtModel {
+    let mut b = Booster::new(data, params, NoPenalty);
+    b.run();
+    b.into_model()
+}
+
+/// One-shot training with a custom penalty.
+pub fn train_with_penalty<P: SplitPenalty>(
+    data: &Dataset,
+    params: GbdtParams,
+    penalty: P,
+) -> (GbdtModel, P) {
+    let mut b = Booster::new(data, params, penalty);
+    b.run();
+    let Booster { model, penalty, .. } = b;
+    (model, penalty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::data::train_test_split;
+
+    fn small(ds: PaperDataset, n: usize) -> Dataset {
+        let full = ds.generate(1);
+        let idx: Vec<usize> = (0..n.min(full.n_rows())).collect();
+        full.select(&idx)
+    }
+
+    #[test]
+    fn regression_loss_decreases_monotonically_in_training() {
+        let data = small(PaperDataset::Kin8nm, 2000);
+        let mut b = Booster::new(
+            &data,
+            GbdtParams { n_rounds: 30, max_depth: 4, max_leaves: 16, ..Default::default() },
+            NoPenalty,
+        );
+        let mut prev = f64::INFINITY;
+        for _ in 0..30 {
+            b.boost_round();
+            let loss = b.train_loss();
+            assert!(loss <= prev + 1e-9, "train loss must not increase: {prev} -> {loss}");
+            prev = loss;
+        }
+    }
+
+    #[test]
+    fn binary_classification_beats_majority() {
+        let data = small(PaperDataset::BreastCancer, 569);
+        let (train_set, test_set) = train_test_split(&data, 0.2, 1);
+        let model = train(
+            &train_set,
+            GbdtParams { n_rounds: 50, max_depth: 3, max_leaves: 8, ..Default::default() },
+        );
+        let acc = model.score(&test_set);
+        assert!(acc > 0.9, "breast cancer accuracy {acc} too low");
+    }
+
+    #[test]
+    fn multiclass_learns() {
+        let data = small(PaperDataset::WineQuality, 3000);
+        let (train_set, test_set) = train_test_split(&data, 0.2, 2);
+        let model = train(
+            &train_set,
+            GbdtParams { n_rounds: 30, max_depth: 3, max_leaves: 8, ..Default::default() },
+        );
+        // Majority class baseline
+        let mut counts = vec![0usize; 7];
+        for &l in &train_set.labels {
+            counts[l] += 1;
+        }
+        let maj = counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
+        let maj_acc = test_set.labels.iter().filter(|&&l| l == maj).count() as f64
+            / test_set.n_rows() as f64;
+        let acc = model.score(&test_set);
+        assert!(acc > maj_acc + 0.03, "multiclass acc {acc} vs majority {maj_acc}");
+        assert_eq!(model.n_outputs(), 7);
+        assert_eq!(model.n_trees(), 30 * 7);
+    }
+
+    #[test]
+    fn regression_r2_reasonable() {
+        let data = small(PaperDataset::CaliforniaHousing, 4000);
+        let (train_set, test_set) = train_test_split(&data, 0.2, 3);
+        let model = train(
+            &train_set,
+            GbdtParams { n_rounds: 100, max_depth: 4, max_leaves: 16, ..Default::default() },
+        );
+        let r2 = model.score(&test_set);
+        assert!(r2 > 0.5, "california R² {r2} too low");
+    }
+
+    #[test]
+    fn rounds_and_tree_counts() {
+        let data = small(PaperDataset::BreastCancer, 300);
+        let model = train(&data, GbdtParams::paper(8, 2));
+        assert_eq!(model.n_rounds(), 8);
+        assert_eq!(model.n_trees(), 8);
+        assert!(model.max_depth() <= 2);
+    }
+
+    #[test]
+    fn incremental_api_matches_one_shot() {
+        let data = small(PaperDataset::BreastCancer, 300);
+        let p = GbdtParams::paper(5, 2);
+        let one = train(&data, p);
+        let mut b = Booster::new(&data, p, NoPenalty);
+        for _ in 0..5 {
+            b.boost_round();
+        }
+        let inc = b.into_model();
+        assert_eq!(one.n_trees(), inc.n_trees());
+        // identical predictions
+        for i in (0..data.n_rows()).step_by(37) {
+            let x = data.row(i);
+            assert_eq!(one.predict_raw(&x), inc.predict_raw(&x));
+        }
+    }
+
+    #[test]
+    fn depth_zero_trains_base_only() {
+        let data = small(PaperDataset::Kin8nm, 500);
+        let model = train(&data, GbdtParams::paper(4, 0));
+        // All trees are bare leaves; prediction is constant.
+        let a = model.predict_value(&data.row(0));
+        let b = model.predict_value(&data.row(1));
+        assert!((a - b).abs() < 1e-12);
+    }
+}

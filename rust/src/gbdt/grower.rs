@@ -1,0 +1,428 @@
+//! Leaf-wise (best-first) tree growth with penalty-aware split selection.
+//!
+//! The grower repeatedly splits the open leaf with the highest penalized
+//! gain, as LightGBM does, bounded by `max_depth` and `max_leaves`.
+//!
+//! Reuse penalties make stored candidate gains *stale*: when a split is
+//! applied elsewhere, a feature/threshold that was "new" (and therefore
+//! charged ι/ξ) may become "used" and free. Stored gains are then lower
+//! bounds. The grower handles this exactly with lazy revalidation: every
+//! candidate records the penalty registry version it was computed under;
+//! on pop, a stale candidate is recomputed against the current registry
+//! and re-queued. The loop only ever *applies* a candidate whose version
+//! is current, so the applied split is always the true argmax.
+
+use super::histogram::HistogramSet;
+use super::splitter::{best_split, leaf_weight, SplitInfo, SplitParams, SplitPenalty};
+use super::tree::{Node, Tree};
+use crate::data::BinnedDataset;
+use std::collections::BinaryHeap;
+
+/// Parameters controlling the growth of a single tree.
+#[derive(Clone, Copy, Debug)]
+pub struct GrowerParams {
+    pub split: SplitParams,
+    /// Maximum tree depth (0 = a bare leaf, 1 = a single stump, …).
+    pub max_depth: usize,
+    /// Maximum number of leaves (LightGBM `num_leaves`).
+    pub max_leaves: usize,
+    /// Shrinkage applied to leaf values.
+    pub learning_rate: f64,
+}
+
+impl Default for GrowerParams {
+    fn default() -> Self {
+        GrowerParams {
+            split: SplitParams::default(),
+            max_depth: 6,
+            max_leaves: 31,
+            learning_rate: 0.1,
+        }
+    }
+}
+
+/// Heap entry: candidate split for an open leaf.
+struct Candidate {
+    leaf_id: usize,
+    gain: f64,
+    version: u64,
+}
+
+impl PartialEq for Candidate {
+    fn eq(&self, other: &Self) -> bool {
+        self.gain == other.gain
+    }
+}
+impl Eq for Candidate {}
+impl PartialOrd for Candidate {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Candidate {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.gain.partial_cmp(&other.gain).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// State of an open (splittable) leaf during growth.
+struct LeafState {
+    /// Rows routed to this leaf.
+    rows: Vec<u32>,
+    hist: HistogramSet,
+    totals: (f64, f64, u32),
+    depth: usize,
+    /// Index of the placeholder `Node::Leaf` in the tree being built.
+    node_idx: usize,
+    /// Best split under the registry version `version`, if any.
+    best: Option<SplitInfo>,
+    consumed: bool,
+}
+
+/// A grown tree together with its final leaf partitions, so the booster
+/// can update raw scores in O(n) without re-traversing the tree.
+pub struct GrownTree {
+    pub tree: Tree,
+    /// `(leaf node index, rows routed to it)`; the row sets partition the
+    /// tree's training rows.
+    pub leaf_rows: Vec<(usize, Vec<u32>)>,
+}
+
+/// Grow one regression tree on the given gradient/hessian statistics.
+///
+/// `rows` selects the training rows this tree sees (all rows, or a
+/// subsample). `penalty` carries reuse registries across trees: applied
+/// splits are reported via [`SplitPenalty::on_split`].
+pub fn grow_tree(
+    binned: &BinnedDataset,
+    bins_per_feature: &[usize],
+    rows: Vec<u32>,
+    grad: &[f64],
+    hess: &[f64],
+    params: &GrowerParams,
+    penalty: &mut dyn SplitPenalty,
+) -> GrownTree {
+    let (gt, ht): (f64, f64) = rows
+        .iter()
+        .fold((0.0, 0.0), |(g, h), &i| (g + grad[i as usize], h + hess[i as usize]));
+    let root_value = leaf_weight(gt, ht, params.split.lambda) * params.learning_rate;
+
+    let mut tree = Tree { nodes: vec![Node::Leaf { value: root_value }] };
+    if params.max_depth == 0 || params.max_leaves <= 1 || rows.is_empty() {
+        return GrownTree { tree, leaf_rows: vec![(0, rows)] };
+    }
+
+    let mut hist = HistogramSet::new(bins_per_feature);
+    hist.build(binned, &rows, grad, hess);
+    let totals = (gt, ht, rows.len() as u32);
+
+    let mut leaves: Vec<LeafState> = Vec::new();
+    let mut heap: BinaryHeap<Candidate> = BinaryHeap::new();
+
+    let root_best = best_split(&hist, totals, &params.split, penalty);
+    leaves.push(LeafState {
+        rows,
+        hist,
+        totals,
+        depth: 0,
+        node_idx: 0,
+        best: root_best,
+        consumed: false,
+    });
+    if let Some(s) = root_best {
+        heap.push(Candidate { leaf_id: 0, gain: s.gain, version: penalty.version() });
+    }
+
+    let mut n_leaves = 1usize;
+    while n_leaves < params.max_leaves {
+        // Pop candidates until one is current; recompute stale ones.
+        let leaf_id = loop {
+            let Some(c) = heap.pop() else { break usize::MAX };
+            if leaves[c.leaf_id].consumed {
+                continue;
+            }
+            let v = penalty.version();
+            if c.version != v {
+                // Recompute against the current registries and requeue.
+                let leaf = &mut leaves[c.leaf_id];
+                leaf.best = best_split(&leaf.hist, leaf.totals, &params.split, penalty);
+                if let Some(s) = leaf.best {
+                    heap.push(Candidate { leaf_id: c.leaf_id, gain: s.gain, version: v });
+                }
+                continue;
+            }
+            break c.leaf_id;
+        };
+        if leaf_id == usize::MAX {
+            break; // no positive-gain candidate remains
+        }
+
+        // ---- apply the split ----
+        let (split, depth, node_idx) = {
+            let leaf = &mut leaves[leaf_id];
+            leaf.consumed = true;
+            (leaf.best.expect("queued candidate must have a split"), leaf.depth, leaf.node_idx)
+        };
+        penalty.on_split(split.feature, split.bin);
+
+        // Partition rows by the split predicate.
+        let col = &binned.bins[split.feature];
+        let parent_rows = std::mem::take(&mut leaves[leaf_id].rows);
+        let mut left_rows = Vec::with_capacity(split.left_count as usize);
+        let mut right_rows = Vec::with_capacity(split.right_count as usize);
+        for &i in &parent_rows {
+            if col[i as usize] <= split.bin {
+                left_rows.push(i);
+            } else {
+                right_rows.push(i);
+            }
+        }
+        debug_assert_eq!(left_rows.len() as u32, split.left_count);
+        debug_assert_eq!(right_rows.len() as u32, split.right_count);
+
+        // Child leaf values.
+        let lv = leaf_weight(split.left_grad, split.left_hess, params.split.lambda)
+            * params.learning_rate;
+        let rv = leaf_weight(split.right_grad, split.right_hess, params.split.lambda)
+            * params.learning_rate;
+        let left_idx = tree.nodes.len();
+        tree.nodes.push(Node::Leaf { value: lv });
+        let right_idx = tree.nodes.len();
+        tree.nodes.push(Node::Leaf { value: rv });
+        // Threshold value must be resolved by the caller's binner; we
+        // store the bin and patch the float threshold via the closure
+        // below. (The binned dataset does not carry boundary values, so
+        // growers receive them lazily through `thresholds`.)
+        tree.nodes[node_idx] = Node::Internal {
+            feature: split.feature,
+            bin: split.bin,
+            threshold: f32::NAN, // patched by `resolve_thresholds`
+            left: left_idx,
+            right: right_idx,
+        };
+
+        // Child histograms: build the smaller, subtract for the larger.
+        let child_depth = depth + 1;
+        let parent_hist = std::mem::replace(
+            &mut leaves[leaf_id].hist,
+            HistogramSet::new(&[]), // placeholder; parent is consumed
+        );
+        let (small_rows, large_rows, small_is_left) = if left_rows.len() <= right_rows.len() {
+            (left_rows, right_rows, true)
+        } else {
+            (right_rows, left_rows, false)
+        };
+        let mut small_hist = HistogramSet::new(bins_per_feature);
+        small_hist.build(binned, &small_rows, grad, hess);
+        let mut large_hist = HistogramSet::new(bins_per_feature);
+        large_hist.subtract_into(&parent_hist, &small_hist);
+
+        let (l_totals, r_totals) = (
+            (split.left_grad, split.left_hess, split.left_count),
+            (split.right_grad, split.right_hess, split.right_count),
+        );
+        let mk_leaf = |rows: Vec<u32>, hist: HistogramSet, totals, node_idx| LeafState {
+            rows,
+            hist,
+            totals,
+            depth: child_depth,
+            node_idx,
+            best: None,
+            consumed: false,
+        };
+        let (lh, rh, lr, rr) = if small_is_left {
+            (small_hist, large_hist, small_rows, large_rows)
+        } else {
+            (large_hist, small_hist, large_rows, small_rows)
+        };
+        let left_leaf = mk_leaf(lr, lh, l_totals, left_idx);
+        let right_leaf = mk_leaf(rr, rh, r_totals, right_idx);
+
+        n_leaves += 1;
+        for mut leaf in [left_leaf, right_leaf] {
+            if leaf.depth < params.max_depth {
+                leaf.best = best_split(&leaf.hist, leaf.totals, &params.split, penalty);
+                if let Some(s) = leaf.best {
+                    heap.push(Candidate {
+                        leaf_id: leaves.len(),
+                        gain: s.gain,
+                        version: penalty.version(),
+                    });
+                }
+            }
+            leaves.push(leaf);
+        }
+    }
+
+    let leaf_rows = leaves
+        .into_iter()
+        .filter(|l| !l.consumed)
+        .map(|l| (l.node_idx, l.rows))
+        .collect();
+    GrownTree { tree, leaf_rows }
+}
+
+/// Patch the float threshold values into a grown tree using the binner's
+/// boundary table (`thresholds(feature, bin)`).
+pub fn resolve_thresholds(tree: &mut Tree, thresholds: impl Fn(usize, u16) -> f32) {
+    for node in &mut tree.nodes {
+        if let Node::Internal { feature, bin, threshold, .. } = node {
+            *threshold = thresholds(*feature, *bin);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Binner, Dataset, Task};
+    use crate::gbdt::splitter::NoPenalty;
+    use crate::prng::Pcg64;
+
+    /// Dataset where y = sign(x0 > 0) is perfectly learnable by a stump.
+    fn stump_data(n: usize, seed: u64) -> (Dataset, Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let x: Vec<f32> = (0..n).map(|_| (rng.gen_f32() - 0.5) * 2.0).collect();
+        let y: Vec<f64> = x.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+        let ds = Dataset {
+            name: "stump".into(),
+            features: vec![x],
+            targets: y.clone(),
+            labels: vec![],
+            task: Task::Regression,
+        };
+        // L2 loss at F=0: grad = -y, hess = 1.
+        let grad: Vec<f64> = y.iter().map(|&v| -v).collect();
+        let hess = vec![1.0; n];
+        (ds, grad, hess)
+    }
+
+    fn grow_on(
+        ds: &Dataset,
+        grad: &[f64],
+        hess: &[f64],
+        params: &GrowerParams,
+    ) -> (Tree, Binner) {
+        let binner = Binner::fit(ds, 64);
+        let binned = binner.bin_dataset(ds);
+        let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let grown = grow_tree(&binned, &bins, rows, grad, hess, params, &mut NoPenalty);
+        // Invariant: leaf_rows partitions the training rows.
+        let mut all: Vec<u32> =
+            grown.leaf_rows.iter().flat_map(|(_, r)| r.iter().copied()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..ds.n_rows() as u32).collect::<Vec<_>>());
+        let mut tree = grown.tree;
+        resolve_thresholds(&mut tree, |f, b| binner.threshold_value(f, b as usize));
+        (tree, binner)
+    }
+
+    #[test]
+    fn learns_a_stump() {
+        let (ds, grad, hess) = stump_data(500, 1);
+        let params = GrowerParams {
+            split: SplitParams { lambda: 0.0, gamma: 0.0, min_data_in_leaf: 5, min_hess_in_leaf: 0.0 },
+            max_depth: 1,
+            max_leaves: 2,
+            learning_rate: 1.0,
+        };
+        let (tree, _) = grow_on(&ds, &grad, &hess, &params);
+        assert_eq!(tree.depth(), 1);
+        assert_eq!(tree.n_leaves(), 2);
+        // Predicts close to ±1 on each side.
+        assert!((tree.predict_row(&[-0.5]) + 1.0).abs() < 0.05);
+        assert!((tree.predict_row(&[0.5]) - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn respects_max_depth_and_leaves() {
+        let mut rng = Pcg64::new(2);
+        let n = 800;
+        let x0: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+        let x1: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+        let y: Vec<f64> = x0
+            .iter()
+            .zip(&x1)
+            .map(|(&a, &b)| (a * 4.0).sin() as f64 + (b * 3.0) as f64)
+            .collect();
+        let ds = Dataset {
+            name: "t".into(),
+            features: vec![x0, x1],
+            targets: y.clone(),
+            labels: vec![],
+            task: Task::Regression,
+        };
+        let grad: Vec<f64> = y.iter().map(|&v| -v).collect();
+        let hess = vec![1.0; n];
+        for max_depth in [1usize, 2, 3, 5] {
+            let params = GrowerParams {
+                split: SplitParams { min_data_in_leaf: 5, ..Default::default() },
+                max_depth,
+                max_leaves: 1 << max_depth,
+                learning_rate: 0.5,
+            };
+            let (tree, _) = grow_on(&ds, &grad, &hess, &params);
+            assert!(tree.depth() <= max_depth, "depth {} > {}", tree.depth(), max_depth);
+            assert!(tree.n_leaves() <= 1 << max_depth);
+        }
+    }
+
+    #[test]
+    fn max_depth_zero_is_bare_leaf() {
+        let (ds, grad, hess) = stump_data(100, 3);
+        let params = GrowerParams { max_depth: 0, ..Default::default() };
+        let (tree, _) = grow_on(&ds, &grad, &hess, &params);
+        assert_eq!(tree.n_nodes(), 1);
+        // value = -G/(H+λ)·lr ≈ mean(y)·lr ≈ 0 for balanced ±1
+        assert!(tree.predict_row(&[0.0]).abs() < 0.2);
+    }
+
+    #[test]
+    fn thresholds_resolved() {
+        let (ds, grad, hess) = stump_data(300, 4);
+        let params = GrowerParams {
+            split: SplitParams { min_data_in_leaf: 5, ..Default::default() },
+            max_depth: 3,
+            max_leaves: 8,
+            learning_rate: 1.0,
+        };
+        let (tree, _) = grow_on(&ds, &grad, &hess, &params);
+        for (_, _, thr) in tree.splits() {
+            assert!(thr.is_finite(), "threshold not resolved");
+        }
+    }
+
+    #[test]
+    fn splits_reported_to_penalty() {
+        struct Recorder {
+            splits: Vec<(usize, u16)>,
+        }
+        impl SplitPenalty for Recorder {
+            fn penalty(&self, _f: usize, _b: u16) -> f64 {
+                0.0
+            }
+            fn on_split(&mut self, f: usize, b: u16) {
+                self.splits.push((f, b));
+            }
+            fn version(&self) -> u64 {
+                self.splits.len() as u64
+            }
+        }
+        let (ds, grad, hess) = stump_data(400, 5);
+        let binner = Binner::fit(&ds, 32);
+        let binned = binner.bin_dataset(&ds);
+        let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let mut rec = Recorder { splits: vec![] };
+        let params = GrowerParams {
+            split: SplitParams { min_data_in_leaf: 5, ..Default::default() },
+            max_depth: 3,
+            max_leaves: 8,
+            learning_rate: 1.0,
+        };
+        let grown = grow_tree(&binned, &bins, rows, &grad, &hess, &params, &mut rec);
+        assert_eq!(rec.splits.len(), grown.tree.n_internal());
+        assert_eq!(grown.leaf_rows.len(), grown.tree.n_leaves());
+    }
+}

@@ -1,0 +1,206 @@
+//! Gradient/hessian histograms — the GBDT training hot path.
+//!
+//! For a leaf with row set `I`, split finding needs, for every feature
+//! `f` and bin `b`, the sums `Σ g_i`, `Σ h_i` and the count over rows in
+//! `I` whose feature `f` falls in bin `b`. Histograms for sibling leaves
+//! satisfy `hist(parent) = hist(left) + hist(right)`, so the larger
+//! sibling is obtained by subtraction (the classic LightGBM trick) —
+//! see [`HistogramSet::subtract_into`].
+//!
+//! Storage is a single flat `(grad, hess, count)` triple array over all
+//! features (per-feature offsets), which keeps leaf histogram
+//! construction memory-local and makes the pool reusable across leaves.
+
+use crate::data::BinnedDataset;
+
+/// Flat histogram over all features of a dataset.
+///
+/// Storage is an interleaved `[grad, hess, count]` f64 triple per bin:
+/// one histogram update touches a single 24-byte span (≤ 2 cache
+/// lines) instead of three separate arrays (§Perf iteration 3; counts
+/// are exact in f64 far beyond any dataset size here).
+#[derive(Clone, Debug)]
+pub struct HistogramSet {
+    /// Per-feature start offset into the flat triple array (in bins).
+    offsets: Vec<usize>,
+    /// `3 * total_bins` values: `[g, h, c]` per bin.
+    data: Vec<f64>,
+}
+
+impl HistogramSet {
+    /// Allocate for the given per-feature bin counts.
+    pub fn new(bins_per_feature: &[usize]) -> HistogramSet {
+        let mut offsets = Vec::with_capacity(bins_per_feature.len() + 1);
+        let mut total = 0usize;
+        for &b in bins_per_feature {
+            offsets.push(total);
+            total += b;
+        }
+        offsets.push(total);
+        HistogramSet { offsets, data: vec![0.0; 3 * total] }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn n_bins(&self, f: usize) -> usize {
+        self.offsets[f + 1] - self.offsets[f]
+    }
+
+    /// Zero all bins (before rebuilding into a pooled set).
+    pub fn reset(&mut self) {
+        self.data.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Accumulate the histogram for the rows of one leaf.
+    ///
+    /// `rows` are indices into the binned dataset; `grad`/`hess` are the
+    /// per-row boosting statistics of the current round.
+    pub fn build(&mut self, binned: &BinnedDataset, rows: &[u32], grad: &[f64], hess: &[f64]) {
+        self.reset();
+        for f in 0..self.n_features() {
+            let off = self.offsets[f];
+            let col = &binned.bins[f];
+            let data = &mut self.data;
+            // Hot loop: one 24-byte random-access update per
+            // (row, feature).
+            for &i in rows {
+                let i = i as usize;
+                let b = 3 * (off + col[i] as usize);
+                data[b] += grad[i];
+                data[b + 1] += hess[i];
+                data[b + 2] += 1.0;
+            }
+        }
+    }
+
+    /// `self = parent − sibling`, the histogram-subtraction trick.
+    pub fn subtract_into(&mut self, parent: &HistogramSet, sibling: &HistogramSet) {
+        debug_assert_eq!(self.data.len(), parent.data.len());
+        debug_assert_eq!(self.data.len(), sibling.data.len());
+        for i in 0..self.data.len() {
+            self.data[i] = parent.data[i] - sibling.data[i];
+        }
+    }
+
+    /// Bin accessors for the splitter's left-to-right scan.
+    #[inline]
+    pub fn bin(&self, f: usize, b: usize) -> (f64, f64, u32) {
+        let i = 3 * (self.offsets[f] + b);
+        (self.data[i], self.data[i + 1], self.data[i + 2] as u32)
+    }
+
+    /// Total (G, H, count) over the bins of feature `f` — identical for
+    /// all features of the same leaf, used as the leaf totals.
+    pub fn totals(&self, f: usize) -> (f64, f64, u32) {
+        let (mut g, mut h, mut c) = (0.0, 0.0, 0u32);
+        for b in 0..self.n_bins(f) {
+            let (bg, bh, bc) = self.bin(f, b);
+            g += bg;
+            h += bh;
+            c += bc;
+        }
+        (g, h, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::testutil::prop::run_prop;
+
+    fn toy_binned() -> BinnedDataset {
+        // 2 features, 6 rows.
+        BinnedDataset {
+            bins: vec![vec![0, 1, 2, 0, 1, 2], vec![1, 1, 0, 0, 1, 1]],
+            n_rows: 6,
+        }
+    }
+
+    #[test]
+    fn build_counts_and_sums() {
+        let binned = toy_binned();
+        let mut h = HistogramSet::new(&[3, 2]);
+        let grad = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let hess = vec![1.0; 6];
+        let rows: Vec<u32> = (0..6).collect();
+        h.build(&binned, &rows, &grad, &hess);
+        assert_eq!(h.bin(0, 0), (5.0, 2.0, 2)); // rows 0,3
+        assert_eq!(h.bin(0, 1), (7.0, 2.0, 2)); // rows 1,4
+        assert_eq!(h.bin(0, 2), (9.0, 2.0, 2)); // rows 2,5
+        assert_eq!(h.bin(1, 0), (7.0, 2.0, 2)); // rows 2,3
+        assert_eq!(h.bin(1, 1), (14.0, 4.0, 4));
+        assert_eq!(h.totals(0), (21.0, 6.0, 6));
+        assert_eq!(h.totals(1), (21.0, 6.0, 6));
+    }
+
+    #[test]
+    fn build_subset_of_rows() {
+        let binned = toy_binned();
+        let mut h = HistogramSet::new(&[3, 2]);
+        let grad = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let hess = vec![0.5; 6];
+        h.build(&binned, &[1, 2], &grad, &hess);
+        assert_eq!(h.bin(0, 0), (0.0, 0.0, 0));
+        assert_eq!(h.bin(0, 1), (2.0, 0.5, 1));
+        assert_eq!(h.bin(0, 2), (3.0, 0.5, 1));
+    }
+
+    #[test]
+    fn prop_subtraction_equals_direct_build() {
+        run_prop("histogram subtraction == direct build", 60, |g| {
+            let n = g.usize_in(10, 200);
+            let d = g.usize_in(1, 6);
+            let bins_per: Vec<usize> = (0..d).map(|_| g.usize_in(2, 16)).collect();
+            let binned = BinnedDataset {
+                bins: (0..d)
+                    .map(|f| (0..n).map(|_| g.usize(bins_per[f]) as u16).collect())
+                    .collect(),
+                n_rows: n,
+            };
+            let grad: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+            let hess: Vec<f64> = (0..n).map(|_| g.f64_in(0.01, 2.0)).collect();
+            // random partition of rows
+            let split = g.usize_in(0, n);
+            let mut rows: Vec<u32> = (0..n as u32).collect();
+            let mut rng = Pcg64::new(g.case_seed ^ 0xA5);
+            rng.shuffle(&mut rows);
+            let (left, right) = rows.split_at(split);
+            let all: Vec<u32> = rows.clone();
+
+            let mut hp = HistogramSet::new(&bins_per);
+            hp.build(&binned, &all, &grad, &hess);
+            let mut hl = HistogramSet::new(&bins_per);
+            hl.build(&binned, left, &grad, &hess);
+            let mut hr_direct = HistogramSet::new(&bins_per);
+            hr_direct.build(&binned, right, &grad, &hess);
+            let mut hr_sub = HistogramSet::new(&bins_per);
+            hr_sub.subtract_into(&hp, &hl);
+
+            for f in 0..d {
+                for b in 0..bins_per[f] {
+                    let (g1, h1, c1) = hr_direct.bin(f, b);
+                    let (g2, h2, c2) = hr_sub.bin(f, b);
+                    assert_eq!(c1, c2);
+                    assert!((g1 - g2).abs() < 1e-9, "grad mismatch {g1} {g2}");
+                    assert!((h1 - h2).abs() < 1e-9);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let binned = toy_binned();
+        let mut h = HistogramSet::new(&[3, 2]);
+        h.build(&binned, &[0, 1, 2], &[1.0; 6], &[1.0; 6]);
+        h.reset();
+        for f in 0..2 {
+            for b in 0..h.n_bins(f) {
+                assert_eq!(h.bin(f, b), (0.0, 0.0, 0));
+            }
+        }
+    }
+}

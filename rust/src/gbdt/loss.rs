@@ -1,0 +1,219 @@
+//! Boosting objectives: gradients/hessians of the training losses.
+//!
+//! Boosting works on *raw scores* `F(x)`; each objective defines how raw
+//! scores map to predictions, the base (round-0) score, and the
+//! first/second derivatives `g_i, h_i` used by the simplified objective
+//! (paper Eq. 6 / Appendix A).
+
+use crate::data::Task;
+
+/// Objective kind; carries no state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// ½(y − F)² — regression.
+    L2,
+    /// log(1 + e^{−yF}) — binary classification, labels {0, 1}.
+    Logistic,
+    /// Softmax cross-entropy with one ensemble (raw score) per class.
+    Softmax { n_classes: usize },
+}
+
+impl Objective {
+    pub fn for_task(task: Task) -> Objective {
+        match task {
+            Task::Regression => Objective::L2,
+            Task::Binary => Objective::Logistic,
+            Task::Multiclass(c) => Objective::Softmax { n_classes: c },
+        }
+    }
+
+    /// Number of parallel raw-score streams (ensembles).
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            Objective::Softmax { n_classes } => *n_classes,
+            _ => 1,
+        }
+    }
+
+    /// Initial raw score per output, from the label distribution.
+    pub fn base_scores(&self, targets: &[f64], labels: &[usize]) -> Vec<f64> {
+        match self {
+            Objective::L2 => {
+                let mean = targets.iter().sum::<f64>() / targets.len().max(1) as f64;
+                vec![mean]
+            }
+            Objective::Logistic => {
+                let p = labels.iter().sum::<usize>() as f64 / labels.len().max(1) as f64;
+                let p = p.clamp(1e-6, 1.0 - 1e-6);
+                vec![(p / (1.0 - p)).ln()]
+            }
+            Objective::Softmax { n_classes } => {
+                // Log-priors (uniform fallback for empty classes).
+                let mut counts = vec![0usize; *n_classes];
+                for &l in labels {
+                    counts[l] += 1;
+                }
+                let n = labels.len().max(1) as f64;
+                counts
+                    .iter()
+                    .map(|&c| ((c as f64 / n).max(1e-6)).ln())
+                    .collect()
+            }
+        }
+    }
+
+    /// Compute gradients and hessians in-place.
+    ///
+    /// `raw` is `[n_outputs][n_rows]` of current raw scores; `grad`/`hess`
+    /// have the same shape. For L2 / Logistic only stream 0 is used.
+    pub fn grad_hess(
+        &self,
+        raw: &[Vec<f64>],
+        targets: &[f64],
+        labels: &[usize],
+        grad: &mut [Vec<f64>],
+        hess: &mut [Vec<f64>],
+    ) {
+        match self {
+            Objective::L2 => {
+                for i in 0..targets.len() {
+                    grad[0][i] = raw[0][i] - targets[i];
+                    hess[0][i] = 1.0;
+                }
+            }
+            Objective::Logistic => {
+                for i in 0..labels.len() {
+                    let p = sigmoid(raw[0][i]);
+                    grad[0][i] = p - labels[i] as f64;
+                    hess[0][i] = (p * (1.0 - p)).max(1e-16);
+                }
+            }
+            Objective::Softmax { n_classes } => {
+                let n = labels.len();
+                for i in 0..n {
+                    // Stable softmax over the class scores of row i.
+                    let mut mx = f64::NEG_INFINITY;
+                    for k in 0..*n_classes {
+                        mx = mx.max(raw[k][i]);
+                    }
+                    let mut z = 0.0;
+                    for k in 0..*n_classes {
+                        z += (raw[k][i] - mx).exp();
+                    }
+                    for k in 0..*n_classes {
+                        let p = (raw[k][i] - mx).exp() / z;
+                        let y = (labels[i] == k) as usize as f64;
+                        grad[k][i] = p - y;
+                        // LightGBM's multiclass hessian factor 2·p(1−p)… we
+                        // use the plain diagonal p(1−p) with a floor.
+                        hess[k][i] = (p * (1.0 - p)).max(1e-16);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Map raw scores to the task's prediction:
+    /// regression value, or the argmax class.
+    pub fn predict_class(&self, raw_row: &[f64]) -> usize {
+        match self {
+            Objective::L2 => panic!("predict_class on regression"),
+            Objective::Logistic => (raw_row[0] > 0.0) as usize,
+            Objective::Softmax { .. } => {
+                let mut best = 0;
+                for (k, &v) in raw_row.iter().enumerate() {
+                    if v > raw_row[best] {
+                        best = k;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Positive-class probability (binary) from a raw score.
+    pub fn proba_binary(&self, raw: f64) -> f64 {
+        sigmoid(raw)
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_grad_is_residual() {
+        let obj = Objective::L2;
+        let raw = vec![vec![1.0, 2.0]];
+        let mut g = vec![vec![0.0; 2]];
+        let mut h = vec![vec![0.0; 2]];
+        obj.grad_hess(&raw, &[3.0, 2.0], &[], &mut g, &mut h);
+        assert_eq!(g[0], vec![-2.0, 0.0]);
+        assert_eq!(h[0], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn logistic_grad_signs() {
+        let obj = Objective::Logistic;
+        let raw = vec![vec![0.0, 0.0]];
+        let mut g = vec![vec![0.0; 2]];
+        let mut h = vec![vec![0.0; 2]];
+        obj.grad_hess(&raw, &[], &[1, 0], &mut g, &mut h);
+        assert!((g[0][0] + 0.5).abs() < 1e-12); // p=0.5, y=1 -> -0.5
+        assert!((g[0][1] - 0.5).abs() < 1e-12);
+        assert!((h[0][0] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn softmax_grads_sum_to_zero() {
+        let obj = Objective::Softmax { n_classes: 3 };
+        let raw = vec![vec![0.3], vec![-0.1], vec![1.2]];
+        let mut g = vec![vec![0.0]; 3];
+        let mut h = vec![vec![0.0]; 3];
+        obj.grad_hess(&raw, &[], &[2], &mut g, &mut h);
+        let s: f64 = (0..3).map(|k| g[k][0]).sum();
+        assert!(s.abs() < 1e-12, "softmax grads sum to 0 across classes");
+        assert!(g[2][0] < 0.0, "true class gradient is negative");
+        assert!(h.iter().all(|hk| hk[0] > 0.0));
+    }
+
+    #[test]
+    fn base_scores_match_priors() {
+        let obj = Objective::Logistic;
+        let b = obj.base_scores(&[], &[1, 1, 1, 0]);
+        assert!((sigmoid(b[0]) - 0.75).abs() < 1e-9);
+
+        let obj = Objective::Softmax { n_classes: 2 };
+        let b = obj.base_scores(&[], &[0, 0, 1, 1]);
+        assert!((b[0] - b[1]).abs() < 1e-12);
+
+        let obj = Objective::L2;
+        let b = obj.base_scores(&[2.0, 4.0], &[]);
+        assert_eq!(b, vec![3.0]);
+    }
+
+    #[test]
+    fn predict_class_argmax() {
+        let obj = Objective::Softmax { n_classes: 3 };
+        assert_eq!(obj.predict_class(&[0.1, 0.9, -0.5]), 1);
+        let obj = Objective::Logistic;
+        assert_eq!(obj.predict_class(&[0.2]), 1);
+        assert_eq!(obj.predict_class(&[-0.2]), 0);
+    }
+
+    #[test]
+    fn for_task_mapping() {
+        assert_eq!(Objective::for_task(Task::Regression), Objective::L2);
+        assert_eq!(Objective::for_task(Task::Binary), Objective::Logistic);
+        assert_eq!(
+            Objective::for_task(Task::Multiclass(7)),
+            Objective::Softmax { n_classes: 7 }
+        );
+        assert_eq!(Objective::Softmax { n_classes: 7 }.n_outputs(), 7);
+    }
+}

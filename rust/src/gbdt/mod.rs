@@ -1,0 +1,25 @@
+//! Histogram-based gradient-boosted decision trees, from scratch.
+//!
+//! This is the LightGBM-equivalent substrate the paper builds on: the
+//! second-order boosting objective of Chen & Guestrin (2016) (paper
+//! Eq. 1/6), leaf-wise best-first tree growth bounded by `max_depth`,
+//! and histogram split finding over quantile-binned features.
+//!
+//! The ToaD extension hooks in through [`splitter::SplitPenalty`]: every
+//! candidate split's gain can be charged an extra cost (paper Eq. 3:
+//! `Δ_l = Δ − s_f·ι − s_t·ξ`), and applied splits are reported back so
+//! reuse registries stay current. The same hook implements the CEGB
+//! baseline (Peter et al., 2017).
+
+pub mod booster;
+pub mod grower;
+pub mod histogram;
+pub mod loss;
+pub mod model;
+pub mod splitter;
+pub mod tree;
+
+pub use booster::{Booster, GbdtParams};
+pub use model::GbdtModel;
+pub use splitter::{NoPenalty, SplitPenalty};
+pub use tree::{Node, Tree};

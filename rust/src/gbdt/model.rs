@@ -1,0 +1,161 @@
+//! The trained ensemble model and its prediction paths.
+
+use super::loss::Objective;
+use super::tree::Tree;
+use crate::data::{BinnedDataset, Dataset, Task};
+
+/// A trained gradient-boosted ensemble.
+///
+/// For multiclass tasks the model carries `n_outputs` parallel tree
+/// sequences (one ensemble per class, as the paper notes in §4.2);
+/// regression and binary tasks have a single sequence.
+#[derive(Clone, Debug)]
+pub struct GbdtModel {
+    pub objective: Objective,
+    /// Round-0 raw score per output stream.
+    pub base_scores: Vec<f64>,
+    /// `trees[output][round]`.
+    pub trees: Vec<Vec<Tree>>,
+    pub n_features: usize,
+    pub name: String,
+}
+
+impl GbdtModel {
+    pub fn n_outputs(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Total number of trees across all outputs.
+    pub fn n_trees(&self) -> usize {
+        self.trees.iter().map(|t| t.len()).sum()
+    }
+
+    /// Boosting rounds completed (trees per output).
+    pub fn n_rounds(&self) -> usize {
+        self.trees.first().map_or(0, |t| t.len())
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.trees.iter().flatten().map(|t| t.depth()).max().unwrap_or(0)
+    }
+
+    /// Raw scores for one dense row (one value per output stream).
+    pub fn predict_raw(&self, x: &[f32]) -> Vec<f64> {
+        let mut out = self.base_scores.clone();
+        for (k, trees) in self.trees.iter().enumerate() {
+            for t in trees {
+                out[k] += t.predict_row(x);
+            }
+        }
+        out
+    }
+
+    /// Regression prediction.
+    pub fn predict_value(&self, x: &[f32]) -> f64 {
+        debug_assert_eq!(self.objective, Objective::L2);
+        self.predict_raw(x)[0]
+    }
+
+    /// Class prediction (binary or multiclass).
+    pub fn predict_class(&self, x: &[f32]) -> usize {
+        let raw = self.predict_raw(x);
+        self.objective.predict_class(&raw)
+    }
+
+    /// Evaluate the task metric on a dataset: accuracy for
+    /// classification, R² for regression (paper §4.1).
+    pub fn score(&self, data: &Dataset) -> f64 {
+        match data.task {
+            Task::Regression => {
+                let preds: Vec<f64> =
+                    (0..data.n_rows()).map(|i| self.predict_value(&data.row(i))).collect();
+                crate::metrics::r2_score(&data.targets, &preds)
+            }
+            _ => {
+                let preds: Vec<usize> =
+                    (0..data.n_rows()).map(|i| self.predict_class(&data.row(i))).collect();
+                crate::metrics::accuracy(&data.labels, &preds)
+            }
+        }
+    }
+
+    /// Raw-score prediction over binned data (training-path shortcut:
+    /// routing by bin index is exact on rows binned with the same
+    /// binner).
+    pub fn predict_raw_binned(&self, binned: &BinnedDataset, i: usize) -> Vec<f64> {
+        let mut out = self.base_scores.clone();
+        for (k, trees) in self.trees.iter().enumerate() {
+            for t in trees {
+                out[k] += predict_binned(t, binned, i);
+            }
+        }
+        out
+    }
+}
+
+/// Traverse a tree using bin indices instead of float thresholds.
+#[inline]
+pub fn predict_binned(tree: &Tree, binned: &BinnedDataset, i: usize) -> f64 {
+    use super::tree::Node;
+    let mut idx = 0usize;
+    loop {
+        match &tree.nodes[idx] {
+            Node::Leaf { value } => return *value,
+            Node::Internal { feature, bin, left, right, .. } => {
+                idx = if binned.bins[*feature][i] <= *bin { *left } else { *right };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::tree::Node;
+
+    fn two_tree_model() -> GbdtModel {
+        let t1 = Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 0, threshold: 0.0, left: 1, right: 2 },
+                Node::Leaf { value: -1.0 },
+                Node::Leaf { value: 1.0 },
+            ],
+        };
+        let t2 = Tree::leaf(0.5);
+        GbdtModel {
+            objective: Objective::L2,
+            base_scores: vec![10.0],
+            trees: vec![vec![t1, t2]],
+            n_features: 1,
+            name: "m".into(),
+        }
+    }
+
+    #[test]
+    fn raw_is_base_plus_trees() {
+        let m = two_tree_model();
+        assert_eq!(m.predict_raw(&[-1.0]), vec![9.5]);
+        assert_eq!(m.predict_raw(&[1.0]), vec![11.5]);
+        assert_eq!(m.n_trees(), 2);
+        assert_eq!(m.n_rounds(), 2);
+        assert_eq!(m.max_depth(), 1);
+    }
+
+    #[test]
+    fn binary_class_prediction() {
+        let mut m = two_tree_model();
+        m.objective = Objective::Logistic;
+        m.base_scores = vec![0.0];
+        assert_eq!(m.predict_class(&[1.0]), 1); // raw = 1.5 > 0
+        assert_eq!(m.predict_class(&[-10.0]), 0); // raw = -0.5
+    }
+
+    #[test]
+    fn binned_prediction_matches() {
+        let m = two_tree_model();
+        let binned = BinnedDataset { bins: vec![vec![0, 1]], n_rows: 2 };
+        // bin 0 <= 0 -> left; bin 1 > 0 -> right
+        assert_eq!(m.predict_raw_binned(&binned, 0), vec![9.5]);
+        assert_eq!(m.predict_raw_binned(&binned, 1), vec![11.5]);
+    }
+}

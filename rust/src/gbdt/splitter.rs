@@ -1,0 +1,261 @@
+//! Split finding: the gain scan over leaf histograms, with the penalty
+//! hook that carries the paper's contribution.
+//!
+//! For a leaf with totals `(G, H)`, splitting feature `i` at boundary
+//! `µ` gives (paper Eq. 7):
+//!
+//! ```text
+//! Δ_l(I, i, µ) = ½ (G_L²/(H_L+λ) + G_R²/(H_R+λ) − G²/(H+λ)) − γ − s_f·ι − s_t·ξ
+//! ```
+//!
+//! The `− s_f·ι − s_t·ξ` term is abstracted behind [`SplitPenalty`]:
+//! ToaD charges new features/thresholds (and the CEGB baseline charges
+//! feature acquisition), while the plain trainer uses [`NoPenalty`].
+
+use super::histogram::HistogramSet;
+
+/// Pluggable gain penalty (paper Eq. 3). Implementations must be cheap:
+/// `penalty` is called once per candidate `(feature, boundary)` pair.
+pub trait SplitPenalty {
+    /// Extra cost subtracted from the raw gain for splitting `feature`
+    /// at boundary index `bin`.
+    fn penalty(&self, feature: usize, bin: u16) -> f64;
+
+    /// Called when a split is actually applied, so reuse registries can
+    /// absorb the new feature/threshold.
+    fn on_split(&mut self, feature: usize, bin: u16);
+
+    /// Monotone counter bumped whenever registry state changes in a way
+    /// that can alter future `penalty` values. The grower uses this to
+    /// lazily recompute stale candidate splits.
+    fn version(&self) -> u64;
+}
+
+/// The unpenalized baseline: plain LightGBM-style gain.
+#[derive(Default, Clone, Debug)]
+pub struct NoPenalty;
+
+impl SplitPenalty for NoPenalty {
+    #[inline]
+    fn penalty(&self, _feature: usize, _bin: u16) -> f64 {
+        0.0
+    }
+    fn on_split(&mut self, _feature: usize, _bin: u16) {}
+    fn version(&self) -> u64 {
+        0
+    }
+}
+
+/// Structural regularization of the underlying booster.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitParams {
+    /// L2 leaf-value regularization λ.
+    pub lambda: f64,
+    /// Per-leaf cost γ (a split adds one leaf, so it is charged once).
+    pub gamma: f64,
+    /// Minimum rows on each side of a split.
+    pub min_data_in_leaf: u32,
+    /// Minimum hessian mass on each side.
+    pub min_hess_in_leaf: f64,
+}
+
+impl Default for SplitParams {
+    fn default() -> Self {
+        SplitParams { lambda: 1e-3, gamma: 0.0, min_data_in_leaf: 20, min_hess_in_leaf: 1e-3 }
+    }
+}
+
+/// A chosen candidate split for a leaf.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SplitInfo {
+    pub feature: usize,
+    /// Boundary index: rows with `bin <= this` go left.
+    pub bin: u16,
+    /// Penalized gain Δ_l.
+    pub gain: f64,
+    pub left_grad: f64,
+    pub left_hess: f64,
+    pub left_count: u32,
+    pub right_grad: f64,
+    pub right_hess: f64,
+    pub right_count: u32,
+}
+
+/// Leaf-objective contribution `G²/(H+λ)` (×½ applied by the caller).
+#[inline]
+fn score(g: f64, h: f64, lambda: f64) -> f64 {
+    g * g / (h + lambda)
+}
+
+/// Optimal leaf weight `−G/(H+λ)`.
+#[inline]
+pub fn leaf_weight(g: f64, h: f64, lambda: f64) -> f64 {
+    -g / (h + lambda)
+}
+
+/// Scan all features/bins of a leaf histogram and return the best
+/// positive-gain split under `params` and `penalty`, if any.
+pub fn best_split(
+    hist: &HistogramSet,
+    totals: (f64, f64, u32),
+    params: &SplitParams,
+    penalty: &dyn SplitPenalty,
+) -> Option<SplitInfo> {
+    let (gt, ht, ct) = totals;
+    let parent_score = score(gt, ht, params.lambda);
+    let mut best: Option<SplitInfo> = None;
+
+    for f in 0..hist.n_features() {
+        let n_bins = hist.n_bins(f);
+        if n_bins < 2 {
+            continue; // constant feature
+        }
+        let (mut gl, mut hl, mut cl) = (0.0f64, 0.0f64, 0u32);
+        // Boundary b separates bins [0..=b] from (b..): the last bin can
+        // never be a left side on its own, hence `n_bins - 1` boundaries.
+        for b in 0..(n_bins - 1) {
+            let (bg, bh, bc) = hist.bin(f, b);
+            gl += bg;
+            hl += bh;
+            cl += bc;
+            let cr = ct - cl;
+            if cl < params.min_data_in_leaf {
+                continue;
+            }
+            if cr < params.min_data_in_leaf {
+                break; // right side only shrinks from here on
+            }
+            let gr = gt - gl;
+            let hr = ht - hl;
+            if hl < params.min_hess_in_leaf || hr < params.min_hess_in_leaf {
+                continue;
+            }
+            let raw_gain = 0.5 * (score(gl, hl, params.lambda) + score(gr, hr, params.lambda)
+                - parent_score)
+                - params.gamma;
+            let gain = raw_gain - penalty.penalty(f, b as u16);
+            if gain > 0.0 && best.map_or(true, |s| gain > s.gain) {
+                best = Some(SplitInfo {
+                    feature: f,
+                    bin: b as u16,
+                    gain,
+                    left_grad: gl,
+                    left_hess: hl,
+                    left_count: cl,
+                    right_grad: gr,
+                    right_hess: hr,
+                    right_count: cr,
+                });
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::BinnedDataset;
+
+    /// Build a histogram where feature 0 perfectly separates gradients.
+    fn separable_hist() -> (HistogramSet, (f64, f64, u32)) {
+        let binned = BinnedDataset {
+            bins: vec![
+                vec![0, 0, 0, 1, 1, 1], // perfect separation at boundary 0
+                vec![0, 1, 0, 1, 0, 1], // uninformative
+            ],
+            n_rows: 6,
+        };
+        let grad = vec![-1.0, -1.0, -1.0, 1.0, 1.0, 1.0];
+        let hess = vec![1.0; 6];
+        let mut h = HistogramSet::new(&[2, 2]);
+        let rows: Vec<u32> = (0..6).collect();
+        h.build(&binned, &rows, &grad, &hess);
+        (h, (0.0, 6.0, 6))
+    }
+
+    fn loose() -> SplitParams {
+        SplitParams { lambda: 1.0, gamma: 0.0, min_data_in_leaf: 1, min_hess_in_leaf: 0.0 }
+    }
+
+    #[test]
+    fn finds_separating_split() {
+        let (h, totals) = separable_hist();
+        let s = best_split(&h, totals, &loose(), &NoPenalty).unwrap();
+        assert_eq!(s.feature, 0);
+        assert_eq!(s.bin, 0);
+        assert_eq!(s.left_count, 3);
+        assert_eq!(s.right_count, 3);
+        // gain = 0.5*(9/4 + 9/4 - 0) = 2.25
+        assert!((s.gain - 2.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_reduces_gain() {
+        let (h, totals) = separable_hist();
+        let mut p = loose();
+        p.gamma = 1.0;
+        let s = best_split(&h, totals, &p, &NoPenalty).unwrap();
+        assert!((s.gain - 1.25).abs() < 1e-12);
+        p.gamma = 3.0; // exceeds raw gain -> no split
+        assert!(best_split(&h, totals, &p, &NoPenalty).is_none());
+    }
+
+    #[test]
+    fn min_data_blocks_small_sides() {
+        let (h, totals) = separable_hist();
+        let mut p = loose();
+        p.min_data_in_leaf = 4; // both sides have 3
+        assert!(best_split(&h, totals, &p, &NoPenalty).is_none());
+    }
+
+    #[test]
+    fn penalty_changes_choice() {
+        // Forbidding feature 0 redirects the split to the weaker
+        // feature 1 (gain 0.25); forbidding feature 1 keeps feature 0.
+        struct Forbid(usize);
+        impl SplitPenalty for Forbid {
+            fn penalty(&self, f: usize, _b: u16) -> f64 {
+                if f == self.0 {
+                    1e9
+                } else {
+                    0.0
+                }
+            }
+            fn on_split(&mut self, _f: usize, _b: u16) {}
+            fn version(&self) -> u64 {
+                0
+            }
+        }
+        let (h, totals) = separable_hist();
+        let s1 = best_split(&h, totals, &loose(), &Forbid(0)).unwrap();
+        assert_eq!(s1.feature, 1);
+        assert!((s1.gain - 0.25).abs() < 1e-12);
+        let s0 = best_split(&h, totals, &loose(), &Forbid(1)).unwrap();
+        assert_eq!(s0.feature, 0);
+    }
+
+    #[test]
+    fn penalized_gain_never_exceeds_raw() {
+        struct Flat(f64);
+        impl SplitPenalty for Flat {
+            fn penalty(&self, _f: usize, _b: u16) -> f64 {
+                self.0
+            }
+            fn on_split(&mut self, _f: usize, _b: u16) {}
+            fn version(&self) -> u64 {
+                0
+            }
+        }
+        let (h, totals) = separable_hist();
+        let raw = best_split(&h, totals, &loose(), &NoPenalty).unwrap();
+        let pen = best_split(&h, totals, &loose(), &Flat(0.5)).unwrap();
+        assert!((raw.gain - pen.gain - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leaf_weight_formula() {
+        assert_eq!(leaf_weight(-2.0, 3.0, 1.0), 0.5);
+        assert_eq!(leaf_weight(0.0, 1.0, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,335 @@
+//! Decision-tree representation shared by the trainer, the layouts, and
+//! the native inference engines.
+//!
+//! Trees are stored as a flat node vector with explicit child indices
+//! (root at index 0). Internal nodes carry both the split *threshold
+//! value* (used at inference time) and the *boundary bin index* it came
+//! from (the threshold's identity for the ToaD reuse registries and the
+//! global threshold table, paper §3.1/§3.2.2).
+
+/// One node of a decision tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Node {
+    Internal {
+        /// Feature the node splits on.
+        feature: usize,
+        /// Boundary index within the feature's binning — the threshold's
+        /// identity for reuse accounting.
+        bin: u16,
+        /// The split value; a row goes left iff `x[feature] <= threshold`.
+        threshold: f32,
+        /// Index of the left child in [`Tree::nodes`].
+        left: usize,
+        /// Index of the right child in [`Tree::nodes`].
+        right: usize,
+    },
+    Leaf {
+        /// Additive contribution of this leaf (shrinkage already applied).
+        value: f64,
+    },
+}
+
+/// A single decision tree. `nodes[0]` is the root; a tree that is a bare
+/// leaf has exactly one node.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// A tree consisting of a single leaf.
+    pub fn leaf(value: f64) -> Tree {
+        Tree { nodes: vec![Node::Leaf { value }] }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Leaf { .. })).count()
+    }
+
+    pub fn n_internal(&self) -> usize {
+        self.nodes.len() - self.n_leaves()
+    }
+
+    /// Maximum root-to-leaf edge count.
+    pub fn depth(&self) -> usize {
+        fn go(tree: &Tree, idx: usize) -> usize {
+            match &tree.nodes[idx] {
+                Node::Leaf { .. } => 0,
+                Node::Internal { left, right, .. } => 1 + go(tree, *left).max(go(tree, *right)),
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            go(self, 0)
+        }
+    }
+
+    /// Evaluate the tree on a dense feature row.
+    #[inline]
+    pub fn predict_row(&self, x: &[f32]) -> f64 {
+        let mut idx = 0usize;
+        loop {
+            match &self.nodes[idx] {
+                Node::Leaf { value } => return *value,
+                Node::Internal { feature, threshold, left, right, .. } => {
+                    idx = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Iterate over `(feature, bin, threshold)` of all internal nodes.
+    pub fn splits(&self) -> impl Iterator<Item = (usize, u16, f32)> + '_ {
+        self.nodes.iter().filter_map(|n| match n {
+            Node::Internal { feature, bin, threshold, .. } => Some((*feature, *bin, *threshold)),
+            Node::Leaf { .. } => None,
+        })
+    }
+
+    /// Iterate over all leaf values.
+    pub fn leaf_values(&self) -> impl Iterator<Item = f64> + '_ {
+        self.nodes.iter().filter_map(|n| match n {
+            Node::Leaf { value } => Some(*value),
+            Node::Internal { .. } => None,
+        })
+    }
+
+    /// Lay the tree out as a *complete* binary tree of its depth:
+    /// position 0 is the root, children of position `i` are `2i+1` and
+    /// `2i+2` (paper §3.2.1). Leaves shallower than the full depth are
+    /// replicated into their would-be subtree so every slot is filled.
+    /// Returns `(internal_slots, leaf_slots)` where `internal_slots` has
+    /// `2^depth - 1` entries of `Option<(feature, bin, threshold)>`
+    /// (`None` = pass-through slot under an early leaf) and `leaf_slots`
+    /// has `2^depth` leaf values.
+    pub fn to_complete(&self) -> (Vec<Option<(usize, u16, f32)>>, Vec<f64>) {
+        self.to_complete_at(self.depth())
+    }
+
+    /// Like [`Tree::to_complete`] but padded to a caller-chosen depth
+    /// `d >= self.depth()` (used to tensorize ensembles to a fixed shape
+    /// for the XLA runtime).
+    pub fn to_complete_at(&self, d: usize) -> (Vec<Option<(usize, u16, f32)>>, Vec<f64>) {
+        assert!(d >= self.depth(), "target depth {d} < tree depth {}", self.depth());
+        let n_internal = (1usize << d) - 1;
+        let n_leaves = 1usize << d;
+        let mut internal: Vec<Option<(usize, u16, f32)>> = vec![None; n_internal];
+        let mut leaves = vec![0f64; n_leaves];
+
+        // Walk (tree node, complete-slot, depth); early leaves fill the
+        // whole leaf range under their slot.
+        fn go(
+            tree: &Tree,
+            node: usize,
+            slot: usize,
+            depth_left: usize,
+            internal: &mut [Option<(usize, u16, f32)>],
+            leaves: &mut [f64],
+        ) {
+            match &tree.nodes[node] {
+                Node::Leaf { value } => {
+                    // All leaf slots in this subtree take this value.
+                    // slot is relative to a complete tree with
+                    // `depth_left` levels remaining below.
+                    fill_leaves(slot, depth_left, *value, leaves, internal.len());
+                }
+                Node::Internal { feature, bin, threshold, left, right } => {
+                    debug_assert!(depth_left > 0);
+                    internal[slot] = Some((*feature, *bin, *threshold));
+                    go(tree, *left, 2 * slot + 1, depth_left - 1, internal, leaves);
+                    go(tree, *right, 2 * slot + 2, depth_left - 1, internal, leaves);
+                }
+            }
+        }
+
+        /// Fill every leaf slot reachable from `slot` with `value`.
+        fn fill_leaves(
+            slot: usize,
+            depth_left: usize,
+            value: f64,
+            leaves: &mut [f64],
+            n_internal: usize,
+        ) {
+            if depth_left == 0 {
+                // `slot` indexes the heap array; leaf positions start at
+                // n_internal.
+                leaves[slot - n_internal] = value;
+            } else {
+                fill_leaves(2 * slot + 1, depth_left - 1, value, leaves, n_internal);
+                fill_leaves(2 * slot + 2, depth_left - 1, value, leaves, n_internal);
+            }
+        }
+
+        if d == 0 {
+            // Bare leaf: one leaf slot, no internals.
+            if let Node::Leaf { value } = self.nodes[0] {
+                leaves[0] = value;
+            }
+            return (internal, leaves);
+        }
+        go(self, 0, 0, d, &mut internal, &mut leaves);
+        (internal, leaves)
+    }
+}
+
+/// Evaluate a complete-layout tree (as produced by [`Tree::to_complete`])
+/// on a row — the pointer-less descent `i ← 2i+1+(x>µ)` of paper §3.2.1.
+/// Pass-through slots (`None`) route left, matching the replication done
+/// by `to_complete`.
+#[inline]
+pub fn predict_complete(
+    internal: &[Option<(usize, u16, f32)>],
+    leaves: &[f64],
+    x: &[f32],
+) -> f64 {
+    let n_internal = internal.len();
+    let mut i = 0usize;
+    while i < n_internal {
+        i = match internal[i] {
+            Some((f, _, thr)) => {
+                if x[f] <= thr {
+                    2 * i + 1
+                } else {
+                    2 * i + 2
+                }
+            }
+            None => 2 * i + 1,
+        };
+    }
+    leaves[i - n_internal]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::testutil::prop::run_prop;
+
+    /// x0 <= 0.5 ? (x1 <= 2.0 ? 1.0 : 2.0) : 3.0
+    fn sample_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 3, threshold: 0.5, left: 1, right: 2 },
+                Node::Internal { feature: 1, bin: 7, threshold: 2.0, left: 3, right: 4 },
+                Node::Leaf { value: 3.0 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 2.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn predict_routes_correctly() {
+        let t = sample_tree();
+        assert_eq!(t.predict_row(&[0.4, 1.0]), 1.0);
+        assert_eq!(t.predict_row(&[0.4, 3.0]), 2.0);
+        assert_eq!(t.predict_row(&[0.6, 0.0]), 3.0);
+        // boundary goes left
+        assert_eq!(t.predict_row(&[0.5, 2.0]), 1.0);
+    }
+
+    #[test]
+    fn counts_and_depth() {
+        let t = sample_tree();
+        assert_eq!(t.n_nodes(), 5);
+        assert_eq!(t.n_leaves(), 3);
+        assert_eq!(t.n_internal(), 2);
+        assert_eq!(t.depth(), 2);
+        assert_eq!(Tree::leaf(7.0).depth(), 0);
+        assert_eq!(Tree::leaf(7.0).n_leaves(), 1);
+    }
+
+    #[test]
+    fn splits_iterator() {
+        let t = sample_tree();
+        let s: Vec<_> = t.splits().collect();
+        assert_eq!(s, vec![(0, 3, 0.5), (1, 7, 2.0)]);
+        let lv: Vec<f64> = t.leaf_values().collect();
+        assert_eq!(lv, vec![3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn complete_layout_matches_pointer_tree() {
+        let t = sample_tree();
+        let (internal, leaves) = t.to_complete();
+        assert_eq!(internal.len(), 3);
+        assert_eq!(leaves.len(), 4);
+        // The early leaf (value 3.0) is replicated under slot 2.
+        assert_eq!(internal[2], None);
+        for x in [[0.4f32, 1.0], [0.4, 3.0], [0.6, 0.0], [0.5, 2.0], [0.9, 9.9]] {
+            assert_eq!(predict_complete(&internal, &leaves, &x), t.predict_row(&x));
+        }
+    }
+
+    #[test]
+    fn complete_at_padded_depth_is_equivalent() {
+        let t = sample_tree(); // depth 2
+        let (internal, leaves) = t.to_complete_at(4);
+        assert_eq!(internal.len(), 15);
+        assert_eq!(leaves.len(), 16);
+        for x in [[0.4f32, 1.0], [0.4, 3.0], [0.6, 0.0], [0.5, 2.0]] {
+            assert_eq!(predict_complete(&internal, &leaves, &x), t.predict_row(&x));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "target depth")]
+    fn complete_at_too_shallow_panics() {
+        sample_tree().to_complete_at(1);
+    }
+
+    #[test]
+    fn bare_leaf_complete() {
+        let t = Tree::leaf(42.0);
+        let (internal, leaves) = t.to_complete();
+        assert!(internal.is_empty());
+        assert_eq!(leaves, vec![42.0]);
+        assert_eq!(predict_complete(&internal, &leaves, &[1.0]), 42.0);
+    }
+
+    /// Build a random tree over `d` features with random structure.
+    fn random_tree(rng: &mut Pcg64, d: usize, max_depth: usize) -> Tree {
+        fn grow(rng: &mut Pcg64, d: usize, depth: usize, max_depth: usize, nodes: &mut Vec<Node>) -> usize {
+            let idx = nodes.len();
+            if depth >= max_depth || rng.gen_bool(0.3) {
+                nodes.push(Node::Leaf { value: rng.gen_uniform(-2.0, 2.0) });
+                return idx;
+            }
+            nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+            let feature = rng.gen_range(d);
+            let bin = rng.gen_range(32) as u16;
+            let threshold = rng.gen_uniform(-1.0, 1.0) as f32;
+            let left = grow(rng, d, depth + 1, max_depth, nodes);
+            let right = grow(rng, d, depth + 1, max_depth, nodes);
+            nodes[idx] = Node::Internal { feature, bin, threshold, left, right };
+            idx
+        }
+        let mut nodes = Vec::new();
+        grow(rng, d, 0, max_depth, &mut nodes);
+        Tree { nodes }
+    }
+
+    #[test]
+    fn prop_complete_layout_equivalence() {
+        // Property: for any tree and any input, the complete-array
+        // descent returns the same value as pointer traversal — the
+        // invariant the whole ToaD layout rests on.
+        run_prop("complete layout equivalence", 200, |g| {
+            let d = g.usize_in(1, 8);
+            let max_depth = g.usize_in(0, 5);
+            let t = random_tree(g.rng(), d, max_depth);
+            let (internal, leaves) = t.to_complete();
+            assert_eq!(internal.len() + 1, leaves.len());
+            for _ in 0..16 {
+                let x: Vec<f32> =
+                    (0..d).map(|_| g.f64_in(-1.5, 1.5) as f32).collect();
+                assert_eq!(predict_complete(&internal, &leaves, &x), t.predict_row(&x));
+            }
+        });
+    }
+}

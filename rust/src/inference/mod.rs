@@ -1,0 +1,126 @@
+//! Native inference engines and the unified predictor interface.
+//!
+//! Three prediction paths exist in the system, all agreeing numerically
+//! (integration-tested):
+//!
+//! 1. decoded pointer trees ([`crate::gbdt::GbdtModel`]) — fastest on a
+//!    host CPU,
+//! 2. direct bit-packed traversal ([`crate::layout::PackedModel`]) —
+//!    what a microcontroller with the blob in flash executes,
+//! 3. the XLA runtime ([`crate::runtime::PredictEngine`]) — the batched
+//!    serving path.
+//!
+//! [`Predictor`] abstracts over the single-row paths so the coordinator
+//! and benches can swap engines.
+
+use crate::data::{Dataset, Task};
+use crate::gbdt::loss::Objective;
+use crate::gbdt::GbdtModel;
+use crate::layout::PackedModel;
+
+/// A single-row raw-score predictor.
+pub trait Predictor {
+    fn predict_raw(&self, x: &[f32]) -> Vec<f64>;
+    fn n_outputs(&self) -> usize;
+    fn objective(&self) -> Objective;
+
+    /// Task-level prediction: class index (classification) packed as
+    /// `f64`, or the regression value.
+    fn predict_task(&self, x: &[f32]) -> f64 {
+        let raw = self.predict_raw(x);
+        match self.objective() {
+            Objective::L2 => raw[0],
+            obj => obj.predict_class(&raw) as f64,
+        }
+    }
+
+    /// Dataset score: accuracy (classification) or R² (regression).
+    fn score(&self, data: &Dataset) -> f64 {
+        match data.task {
+            Task::Regression => {
+                let preds: Vec<f64> =
+                    (0..data.n_rows()).map(|i| self.predict_raw(&data.row(i))[0]).collect();
+                crate::metrics::r2_score(&data.targets, &preds)
+            }
+            _ => {
+                let preds: Vec<usize> = (0..data.n_rows())
+                    .map(|i| {
+                        let raw = self.predict_raw(&data.row(i));
+                        self.objective().predict_class(&raw)
+                    })
+                    .collect();
+                crate::metrics::accuracy(&data.labels, &preds)
+            }
+        }
+    }
+}
+
+impl Predictor for GbdtModel {
+    fn predict_raw(&self, x: &[f32]) -> Vec<f64> {
+        GbdtModel::predict_raw(self, x)
+    }
+    fn n_outputs(&self) -> usize {
+        GbdtModel::n_outputs(self)
+    }
+    fn objective(&self) -> Objective {
+        self.objective
+    }
+}
+
+impl Predictor for PackedModel {
+    fn predict_raw(&self, x: &[f32]) -> Vec<f64> {
+        PackedModel::predict_raw(self, x)
+    }
+    fn n_outputs(&self) -> usize {
+        PackedModel::n_outputs(self)
+    }
+    fn objective(&self) -> Objective {
+        PackedModel::objective(self)
+    }
+}
+
+/// Batch helper over any predictor.
+pub fn predict_batch(p: &dyn Predictor, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
+    rows.iter().map(|r| p.predict_raw(r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::gbdt::{self, GbdtParams};
+    use crate::layout::{encode, EncodeOptions, FeatureInfo};
+
+    #[test]
+    fn predictor_paths_agree() {
+        let data = PaperDataset::BreastCancer.generate(41).select(&(0..400).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(10, 3));
+        let finfo = FeatureInfo::from_dataset(&data);
+        let blob = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() });
+        let packed = PackedModel::from_bytes(blob);
+
+        let s1 = Predictor::score(&model, &data);
+        let s2 = Predictor::score(&packed, &data);
+        assert!((s1 - s2).abs() < 1e-9, "decoded {s1} vs packed {s2}");
+
+        let rows: Vec<Vec<f32>> = (0..8).map(|i| data.row(i)).collect();
+        let a = predict_batch(&model, &rows);
+        let b = predict_batch(&packed, &rows);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x[0] - y[0]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn predict_task_regression_vs_classification() {
+        let reg = PaperDataset::Kin8nm.generate(42).select(&(0..300).collect::<Vec<_>>());
+        let m = gbdt::booster::train(&reg, GbdtParams::paper(5, 2));
+        let v = m.predict_task(&reg.row(0));
+        assert!(v.is_finite());
+
+        let cls = PaperDataset::Mushroom.generate(43).select(&(0..300).collect::<Vec<_>>());
+        let mc = gbdt::booster::train(&cls, GbdtParams::paper(5, 2));
+        let c = mc.predict_task(&cls.row(0));
+        assert!(c == 0.0 || c == 1.0);
+    }
+}

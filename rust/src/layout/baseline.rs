@@ -1,0 +1,118 @@
+//! Size models of the baseline memory layouts (paper §4.2).
+//!
+//! Following the paper (and Buschjäger & Morik 2023):
+//!
+//! * **float32 pointer layout** — 128 bits per node: one feature
+//!   identifier, one threshold, and two child pointers, each 32 bits.
+//!   Leaf-ness is encoded in the feature/child identifiers, so no extra
+//!   boolean is charged; boosted trees store no class info in leaves.
+//! * **quantized (fp16) pointer layout** — 64 bits per node (all four
+//!   fields halved; thresholds and leaf values at 16-bit precision).
+//! * **array-based layout** — pointer-less complete trees as in §3.2.1:
+//!   per tree of depth `D`, `2^D − 1` internal slots of (feature id,
+//!   threshold) and `2^D` leaf-value slots, each field `value_bits`
+//!   wide (32 for float32, 16 for the quantized variant).
+
+use crate::gbdt::GbdtModel;
+
+/// Bytes of the float32 pointer layout: 128 bits × all nodes.
+pub fn pointer_f32_bytes(model: &GbdtModel) -> usize {
+    let nodes: usize = model.trees.iter().flatten().map(|t| t.n_nodes()).sum();
+    nodes * 128 / 8
+}
+
+/// Bytes of the quantized (16-bit) pointer layout: 64 bits × all nodes.
+pub fn pointer_f16_bytes(model: &GbdtModel) -> usize {
+    let nodes: usize = model.trees.iter().flatten().map(|t| t.n_nodes()).sum();
+    nodes * 64 / 8
+}
+
+/// Bytes of the pointer-less array layout at `value_bits` per field.
+///
+/// Each tree is padded to a complete tree of its own depth; internal
+/// slots store (feature id, threshold) and leaf slots one value.
+pub fn array_bytes(model: &GbdtModel, value_bits: usize) -> usize {
+    let bits: usize = model
+        .trees
+        .iter()
+        .flatten()
+        .map(|t| {
+            let d = t.depth();
+            let internal = (1usize << d) - 1;
+            let leaves = 1usize << d;
+            internal * 2 * value_bits + leaves * value_bits
+        })
+        .sum();
+    (bits + 7) / 8
+}
+
+/// Convenience: float32 array layout (the paper's "array-based LightGBM").
+pub fn array_f32_bytes(model: &GbdtModel) -> usize {
+    array_bytes(model, 32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::loss::Objective;
+    use crate::gbdt::tree::{Node, Tree};
+
+    fn model(trees: Vec<Tree>) -> GbdtModel {
+        GbdtModel {
+            objective: Objective::L2,
+            base_scores: vec![0.0],
+            trees: vec![trees],
+            n_features: 4,
+            name: "m".into(),
+        }
+    }
+
+    fn stump() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 0, threshold: 0.5, left: 1, right: 2 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 2.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn pointer_sizes() {
+        let m = model(vec![stump()]); // 3 nodes
+        assert_eq!(pointer_f32_bytes(&m), 3 * 16);
+        assert_eq!(pointer_f16_bytes(&m), 3 * 8);
+    }
+
+    #[test]
+    fn array_size_complete_stump() {
+        let m = model(vec![stump()]); // depth 1: 1 internal + 2 leaves
+        // internal: 2 fields × 32 bits; leaves: 2 × 32 bits => 128 bits
+        assert_eq!(array_f32_bytes(&m), 16);
+        assert_eq!(array_bytes(&m, 16), 8);
+    }
+
+    #[test]
+    fn array_pads_incomplete_trees() {
+        // Depth-2 tree with only 2 leaves on one side (3 leaves total).
+        let t = Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 0, threshold: 0.5, left: 1, right: 2 },
+                Node::Internal { feature: 1, bin: 0, threshold: 0.1, left: 3, right: 4 },
+                Node::Leaf { value: 3.0 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 2.0 },
+            ],
+        };
+        let m = model(vec![t]);
+        // Complete depth-2: 3 internal × 64 + 4 leaves × 32 = 320 bits
+        assert_eq!(array_f32_bytes(&m), 40);
+    }
+
+    #[test]
+    fn bare_leaf_tree() {
+        let m = model(vec![Tree::leaf(1.0)]);
+        assert_eq!(pointer_f32_bytes(&m), 16);
+        assert_eq!(array_f32_bytes(&m), 4); // one 32-bit leaf slot
+    }
+}

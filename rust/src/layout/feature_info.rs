@@ -1,0 +1,208 @@
+//! Per-feature value characteristics for threshold-width selection.
+//!
+//! The ToaD layout stores thresholds at per-feature minimal widths
+//! (paper §3.2.1, item (b)): 1-bit booleans, 2/4-bit small integers, or
+//! 8/16/32-bit integers and floats. Which width is safe depends on the
+//! *feature's* values, not just the threshold: for an integer-valued
+//! feature, `x ≤ 2.5` routes identically to `x ≤ 2`, so the threshold
+//! can be floored and stored as an integer.
+
+use crate::data::Dataset;
+
+/// Value characteristics of one input feature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FeatureInfo {
+    /// All observed values are non-negative integers.
+    pub is_integer: bool,
+    pub min: f32,
+    pub max: f32,
+}
+
+impl FeatureInfo {
+    /// Derive characteristics for every feature of a dataset.
+    pub fn from_dataset(data: &Dataset) -> Vec<FeatureInfo> {
+        data.features
+            .iter()
+            .map(|col| {
+                let mut min = f32::INFINITY;
+                let mut max = f32::NEG_INFINITY;
+                let mut is_integer = true;
+                for &x in col {
+                    min = min.min(x);
+                    max = max.max(x);
+                    if x < 0.0 || x.fract() != 0.0 {
+                        is_integer = false;
+                    }
+                }
+                if col.is_empty() {
+                    min = 0.0;
+                    max = 0.0;
+                }
+                FeatureInfo { is_integer, min, max }
+            })
+            .collect()
+    }
+
+    /// Fallback when no dataset is available: treat as generic float.
+    pub fn generic_float() -> FeatureInfo {
+        FeatureInfo { is_integer: false, min: f32::NEG_INFINITY, max: f32::INFINITY }
+    }
+}
+
+/// How a feature's thresholds are stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThresholdEncoding {
+    /// Unsigned integer of the given width ∈ {1, 2, 4, 8, 16, 32} bits;
+    /// the stored value is `floor(µ)` (routing-equivalent on integer
+    /// features).
+    Uint { width: u32 },
+    /// IEEE-754 half precision (16 bits).
+    F16,
+    /// IEEE-754 single precision (32 bits).
+    F32,
+}
+
+impl ThresholdEncoding {
+    pub fn width_bits(&self) -> u32 {
+        match self {
+            ThresholdEncoding::Uint { width } => *width,
+            ThresholdEncoding::F16 => 16,
+            ThresholdEncoding::F32 => 32,
+        }
+    }
+
+    /// Power-of-two exponent stored in the map (3 bits; paper item (b)).
+    pub fn width_exponent(&self) -> u32 {
+        self.width_bits().trailing_zeros()
+    }
+
+    /// Map-stored numeric-type bit (paper item (c)): 0 = integer, 1 = float.
+    pub fn is_float(&self) -> bool {
+        !matches!(self, ThresholdEncoding::Uint { .. })
+    }
+
+    pub fn from_exponent(exp: u32, is_float: bool) -> ThresholdEncoding {
+        let width = 1u32 << exp;
+        if is_float {
+            match width {
+                16 => ThresholdEncoding::F16,
+                32 => ThresholdEncoding::F32,
+                _ => panic!("invalid float width {width}"),
+            }
+        } else {
+            ThresholdEncoding::Uint { width }
+        }
+    }
+}
+
+/// Pick the minimal safe encoding for a feature's used thresholds.
+///
+/// `allow_f16` gates the lossy half-precision path (used by the encoder's
+/// options); when a float threshold does not round-trip through f16
+/// within a relative error of 1e-3, f32 is used.
+pub fn select_encoding(
+    info: &FeatureInfo,
+    thresholds: &[f32],
+    allow_f16: bool,
+) -> ThresholdEncoding {
+    if info.is_integer {
+        // Floored thresholds are routing-equivalent for integer features.
+        let max_floor = thresholds.iter().map(|&t| t.floor().max(0.0) as u64).max().unwrap_or(0);
+        let needed = 64 - max_floor.leading_zeros().min(63);
+        let width = [1u32, 2, 4, 8, 16, 32]
+            .into_iter()
+            .find(|&w| w >= needed.max(1))
+            .unwrap_or(32);
+        if max_floor < (1u64 << width) {
+            return ThresholdEncoding::Uint { width };
+        }
+        // Integer too large for 32 bits — fall through to float.
+    }
+    if allow_f16 {
+        let ok = thresholds.iter().all(|&t| {
+            let r = crate::bitio::f16_bits_to_f32(crate::bitio::f32_to_f16_bits(t));
+            (r - t).abs() <= 1e-3 * t.abs().max(1e-3)
+        });
+        if ok {
+            return ThresholdEncoding::F16;
+        }
+    }
+    ThresholdEncoding::F32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Task;
+
+    #[test]
+    fn detects_integer_features() {
+        let ds = Dataset {
+            name: "t".into(),
+            features: vec![vec![0.0, 1.0, 2.0], vec![0.5, 1.0, 2.0], vec![-1.0, 0.0, 1.0]],
+            targets: vec![0.0; 3],
+            labels: vec![],
+            task: Task::Regression,
+        };
+        let info = FeatureInfo::from_dataset(&ds);
+        assert!(info[0].is_integer);
+        assert!(!info[1].is_integer); // fractional value
+        assert!(!info[2].is_integer); // negative value
+        assert_eq!(info[0].min, 0.0);
+        assert_eq!(info[0].max, 2.0);
+    }
+
+    #[test]
+    fn boolean_feature_gets_one_bit() {
+        let info = FeatureInfo { is_integer: true, min: 0.0, max: 1.0 };
+        let enc = select_encoding(&info, &[0.5], true);
+        assert_eq!(enc, ThresholdEncoding::Uint { width: 1 });
+        assert_eq!(enc.width_exponent(), 0);
+        assert!(!enc.is_float());
+    }
+
+    #[test]
+    fn small_int_widths() {
+        let info = FeatureInfo { is_integer: true, min: 0.0, max: 11.0 };
+        // floor(2.5)=2 -> needs 2 bits
+        assert_eq!(select_encoding(&info, &[2.5], true), ThresholdEncoding::Uint { width: 2 });
+        // floor(9.5)=9 -> needs 4 bits
+        assert_eq!(select_encoding(&info, &[9.5, 2.5], true), ThresholdEncoding::Uint { width: 4 });
+        // floor(300.0)=300 -> 16 bits (9 needed, next pow2 width is 16)
+        assert_eq!(
+            select_encoding(&info, &[300.0], true),
+            ThresholdEncoding::Uint { width: 16 }
+        );
+    }
+
+    #[test]
+    fn float_f16_when_safe() {
+        let info = FeatureInfo { is_integer: false, min: -10.0, max: 10.0 };
+        // 0.5 is exactly representable in f16.
+        assert_eq!(select_encoding(&info, &[0.5, 1.5], true), ThresholdEncoding::F16);
+        // f16 disabled -> f32.
+        assert_eq!(select_encoding(&info, &[0.5], false), ThresholdEncoding::F32);
+    }
+
+    #[test]
+    fn float_f32_when_f16_lossy() {
+        let info = FeatureInfo { is_integer: false, min: 0.0, max: 1e6 };
+        // 100000.7 far exceeds f16 range -> f32 required.
+        assert_eq!(select_encoding(&info, &[100000.7], true), ThresholdEncoding::F32);
+    }
+
+    #[test]
+    fn exponent_roundtrip() {
+        for enc in [
+            ThresholdEncoding::Uint { width: 1 },
+            ThresholdEncoding::Uint { width: 4 },
+            ThresholdEncoding::Uint { width: 32 },
+            ThresholdEncoding::F16,
+            ThresholdEncoding::F32,
+        ] {
+            let e = enc.width_exponent();
+            let f = enc.is_float();
+            assert_eq!(ThresholdEncoding::from_exponent(e, f), enc);
+        }
+    }
+}

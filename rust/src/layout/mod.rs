@@ -1,0 +1,19 @@
+//! Model memory layouts and their exact size models.
+//!
+//! * [`feature_info`] — per-feature value characteristics (integer vs
+//!   float, value range) used to pick minimal threshold bit-widths.
+//! * [`toad_format`] — the paper's five-component bit-wise layout
+//!   (§3.2, Figures 2 and 3): metadata, Feature & Threshold Map, Global
+//!   Features & Thresholds, Global Leaf Values, and pointer-less
+//!   complete-tree arrays. Encoder, decoder, and a [`PackedModel`] view
+//!   that predicts *directly from the packed bits* (what an MCU runs).
+//! * [`baseline`] — size models of the comparison layouts in §4.2:
+//!   float32 pointer nodes (128 bits/node), quantized pointer nodes
+//!   (64 bits/node), and the pointer-less array layout.
+
+pub mod baseline;
+pub mod feature_info;
+pub mod toad_format;
+
+pub use feature_info::FeatureInfo;
+pub use toad_format::{decode, encode, EncodeOptions, PackedModel, SizeBreakdown};

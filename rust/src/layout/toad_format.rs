@@ -1,0 +1,942 @@
+//! The ToaD bit-wise memory layout (paper §3.2, Figures 2–3).
+//!
+//! Five components, bit-packed back to back:
+//!
+//! 1. **Metadata** — task, output count, rounds `K`, maximum tree depth,
+//!    input feature count `d`, `|F_U|`, `max_f |T^f|`, global leaf-value
+//!    count, and the per-output base scores.
+//! 2. **Feature & Threshold Map** — per used feature: input feature
+//!    index (`⌈log₂ d⌉` bits), threshold bit-width as a power-of-two
+//!    exponent (3 bits), numeric type (1 bit), threshold count − 1
+//!    (`⌈log₂ maxT⌉` bits). (Paper §3.2.1 items (a)–(d).)
+//! 3. **Global Features & Thresholds** — per-feature threshold value
+//!    arrays at the feature's width, concatenated.
+//! 4. **Global Leaf Values** — deduplicated leaf values, fixed 32-bit
+//!    floats (paper §3.2.2), shared across all trees.
+//! 5. **Trees** — per tree: its depth, then the pointer-less complete
+//!    array (`2^depth − 1` internal slots of feature-ref + threshold-ref,
+//!    `2^depth` leaf slots of leaf-value refs; child of slot `i` is
+//!    `2i+1` / `2i+2`).
+//!
+//! Early leaves of non-complete trees are *replicated* into their
+//! subtree: the pass-through internal slot stores the dummy reference
+//! `(0, 0)` and every leaf slot below carries the same value, so the
+//! descent lands correctly without a leaf-marker bit (cf. the paper's
+//! remark that leaf-ness needs no extra boolean).
+
+use super::feature_info::{select_encoding, FeatureInfo, ThresholdEncoding};
+use crate::bitio::{bits_for, BitReader, BitWriter};
+use crate::gbdt::loss::Objective;
+use crate::gbdt::tree::{Node, Tree};
+use crate::gbdt::GbdtModel;
+use std::collections::BTreeMap;
+
+/// Encoder options.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeOptions {
+    /// Allow lossy 16-bit float thresholds when they round-trip within
+    /// 1e-3 relative error. Disable for bit-exact threshold round-trips.
+    pub allow_f16: bool,
+    /// Leaf-value *sharing* (paper's future-work direction "reuse leaf
+    /// values more effectively"): truncate leaf-value mantissas to this
+    /// many bits before deduplication, merging near-identical leaves so
+    /// more references point at fewer global values. `None` keeps full
+    /// f32 precision (the paper's configuration).
+    pub leaf_mantissa_bits: Option<u32>,
+}
+
+impl Default for EncodeOptions {
+    fn default() -> Self {
+        EncodeOptions { allow_f16: true, leaf_mantissa_bits: None }
+    }
+}
+
+/// Truncate an f32 mantissa to `bits` (0..=23), round-to-zero — cheap
+/// leaf-value clustering for the sharing option.
+fn truncate_mantissa(v: f32, bits: u32) -> f32 {
+    debug_assert!(bits <= 23);
+    let mask = !((1u32 << (23 - bits)) - 1);
+    f32::from_bits(v.to_bits() & mask)
+}
+
+/// Apply the leaf-sharing quantization configured in `opts`.
+#[inline]
+fn quantize_leaf(v: f32, opts: &EncodeOptions) -> f32 {
+    match opts.leaf_mantissa_bits {
+        Some(bits) => truncate_mantissa(v, bits.min(23)),
+        None => v,
+    }
+}
+
+/// Bit sizes of the five layout components.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SizeBreakdown {
+    pub header_bits: usize,
+    pub map_bits: usize,
+    pub thresholds_bits: usize,
+    pub leaf_values_bits: usize,
+    pub trees_bits: usize,
+}
+
+impl SizeBreakdown {
+    pub fn total_bits(&self) -> usize {
+        self.header_bits + self.map_bits + self.thresholds_bits + self.leaf_values_bits
+            + self.trees_bits
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        (self.total_bits() + 7) / 8
+    }
+}
+
+// Fixed header field widths.
+const W_TASK: u32 = 2;
+const W_OUTPUTS: u32 = 8;
+const W_ROUNDS: u32 = 16;
+const W_DEPTH: u32 = 4;
+const W_D: u32 = 16;
+const W_FU: u32 = 16;
+const W_MAXT: u32 = 16;
+const W_NLEAF: u32 = 24;
+
+/// Everything the encoder derives from a model before packing bits.
+struct EncodePlan {
+    /// Used features ascending; `per_feature[i]` lists `(bin, value)`
+    /// ascending by bin.
+    features: Vec<usize>,
+    per_feature: Vec<Vec<(u16, f32)>>,
+    encodings: Vec<ThresholdEncoding>,
+    /// Deduplicated leaf values (first-use order) and value → index.
+    leaf_values: Vec<f32>,
+    leaf_index: BTreeMap<u32, usize>,
+    max_t: usize,
+    max_depth: usize,
+}
+
+fn plan(model: &GbdtModel, finfo: &[FeatureInfo], opts: &EncodeOptions) -> EncodePlan {
+    let mut thr: BTreeMap<usize, BTreeMap<u16, f32>> = BTreeMap::new();
+    let mut leaf_values: Vec<f32> = Vec::new();
+    let mut leaf_index: BTreeMap<u32, usize> = BTreeMap::new();
+    let mut max_depth = 0usize;
+    for tree in model.trees.iter().flatten() {
+        max_depth = max_depth.max(tree.depth());
+        for (f, b, v) in tree.splits() {
+            thr.entry(f).or_default().insert(b, v);
+        }
+        for v in tree.leaf_values() {
+            let q = quantize_leaf(v as f32, opts);
+            leaf_index.entry(q.to_bits()).or_insert_with(|| {
+                leaf_values.push(q);
+                leaf_values.len() - 1
+            });
+        }
+    }
+    let features: Vec<usize> = thr.keys().copied().collect();
+    let per_feature: Vec<Vec<(u16, f32)>> = features
+        .iter()
+        .map(|f| thr[f].iter().map(|(&b, &v)| (b, v)).collect())
+        .collect();
+    let encodings: Vec<ThresholdEncoding> = features
+        .iter()
+        .zip(&per_feature)
+        .map(|(&f, list)| {
+            let vals: Vec<f32> = list.iter().map(|&(_, v)| v).collect();
+            let info = finfo.get(f).copied().unwrap_or_else(FeatureInfo::generic_float);
+            select_encoding(&info, &vals, opts.allow_f16)
+        })
+        .collect();
+    let max_t = per_feature.iter().map(|l| l.len()).max().unwrap_or(0);
+    EncodePlan { features, per_feature, encodings, leaf_values, leaf_index, max_t, max_depth }
+}
+
+/// Exact size of the encoded model, by component, without encoding.
+pub fn size_breakdown(
+    model: &GbdtModel,
+    finfo: &[FeatureInfo],
+    opts: &EncodeOptions,
+) -> SizeBreakdown {
+    let p = plan(model, finfo, opts);
+    breakdown_from_plan(model, &p)
+}
+
+fn breakdown_from_plan(model: &GbdtModel, p: &EncodePlan) -> SizeBreakdown {
+    let wd = bits_for(model.n_features);
+    let wc = bits_for(p.max_t);
+    let w_f = bits_for(p.features.len());
+    let w_t = bits_for(p.max_t);
+    let w_l = bits_for(p.leaf_values.len());
+    let w_dep = bits_for(p.max_depth + 1);
+
+    let header_bits =
+        (W_TASK + W_OUTPUTS + W_ROUNDS + W_DEPTH + W_D + W_FU + W_MAXT + W_NLEAF) as usize
+            + 32 * model.n_outputs();
+    let map_bits = p.features.len() * (wd + 3 + 1 + wc) as usize;
+    let thresholds_bits: usize = p
+        .per_feature
+        .iter()
+        .zip(&p.encodings)
+        .map(|(list, enc)| list.len() * enc.width_bits() as usize)
+        .sum();
+    let leaf_values_bits = p.leaf_values.len() * 32;
+    let trees_bits: usize = model
+        .trees
+        .iter()
+        .flatten()
+        .map(|t| {
+            let d = t.depth();
+            let n_internal = (1usize << d) - 1;
+            let n_leaves = 1usize << d;
+            w_dep as usize + n_internal * (w_f + w_t) as usize + n_leaves * w_l as usize
+        })
+        .sum();
+    SizeBreakdown { header_bits, map_bits, thresholds_bits, leaf_values_bits, trees_bits }
+}
+
+/// Encode a trained model into the ToaD bit-wise layout.
+pub fn encode(model: &GbdtModel, finfo: &[FeatureInfo], opts: &EncodeOptions) -> Vec<u8> {
+    let p = plan(model, finfo, opts);
+    let mut w = BitWriter::new();
+
+    // -- 1. metadata --
+    let task_code: u64 = match model.objective {
+        Objective::L2 => 0,
+        Objective::Logistic => 1,
+        Objective::Softmax { .. } => 2,
+    };
+    w.write(task_code, W_TASK);
+    w.write(model.n_outputs() as u64, W_OUTPUTS);
+    w.write(model.n_rounds() as u64, W_ROUNDS);
+    w.write(p.max_depth as u64, W_DEPTH);
+    w.write(model.n_features as u64, W_D);
+    w.write(p.features.len() as u64, W_FU);
+    w.write(p.max_t as u64, W_MAXT);
+    w.write(p.leaf_values.len() as u64, W_NLEAF);
+    for &b in &model.base_scores {
+        w.write_f32(b as f32);
+    }
+
+    // -- 2. feature & threshold map --
+    let wd = bits_for(model.n_features);
+    let wc = bits_for(p.max_t);
+    for (i, &f) in p.features.iter().enumerate() {
+        w.write(f as u64, wd);
+        w.write(p.encodings[i].width_exponent() as u64, 3);
+        w.write(p.encodings[i].is_float() as u64, 1);
+        w.write((p.per_feature[i].len() - 1) as u64, wc);
+    }
+
+    // -- 3. global thresholds --
+    for (i, list) in p.per_feature.iter().enumerate() {
+        for &(_, v) in list {
+            write_threshold(&mut w, v, p.encodings[i]);
+        }
+    }
+
+    // -- 4. global leaf values --
+    for &v in &p.leaf_values {
+        w.write_f32(v);
+    }
+
+    // -- 5. trees --
+    let w_f = bits_for(p.features.len());
+    let w_t = bits_for(p.max_t);
+    let w_l = bits_for(p.leaf_values.len());
+    let w_dep = bits_for(p.max_depth + 1);
+    let feat_rank: BTreeMap<usize, usize> =
+        p.features.iter().enumerate().map(|(i, &f)| (f, i)).collect();
+    let bin_rank: Vec<BTreeMap<u16, usize>> = p
+        .per_feature
+        .iter()
+        .map(|list| list.iter().enumerate().map(|(i, &(b, _))| (b, i)).collect())
+        .collect();
+
+    for tree in model.trees.iter().flatten() {
+        let d = tree.depth();
+        w.write(d as u64, w_dep);
+        let (internal, leaves) = tree.to_complete();
+        for slot in &internal {
+            match slot {
+                Some((f, b, _)) => {
+                    let fr = feat_rank[f];
+                    let tr = bin_rank[fr][b];
+                    w.write(fr as u64, w_f);
+                    w.write(tr as u64, w_t);
+                }
+                None => {
+                    // Pass-through: dummy reference; leaves below are
+                    // replicated so routing is unaffected.
+                    w.write(0, w_f);
+                    w.write(0, w_t);
+                }
+            }
+        }
+        for &v in &leaves {
+            let idx = p.leaf_index[&quantize_leaf(v as f32, opts).to_bits()];
+            w.write(idx as u64, w_l);
+        }
+    }
+
+    w.into_bytes()
+}
+
+fn write_threshold(w: &mut BitWriter, v: f32, enc: ThresholdEncoding) {
+    match enc {
+        ThresholdEncoding::Uint { width } => w.write(v.floor().max(0.0) as u64, width),
+        ThresholdEncoding::F16 => w.write_f16(v),
+        ThresholdEncoding::F32 => w.write_f32(v),
+    }
+}
+
+fn read_threshold(r: &mut BitReader, enc: ThresholdEncoding) -> f32 {
+    match enc {
+        ThresholdEncoding::Uint { width } => r.read(width) as f32,
+        ThresholdEncoding::F16 => r.read_f16(),
+        ThresholdEncoding::F32 => r.read_f32(),
+    }
+}
+
+/// Parsed header + map of a packed model; shared by [`decode`] and
+/// [`PackedModel`].
+#[derive(Clone, Debug)]
+struct Parsed {
+    objective: Objective,
+    n_outputs: usize,
+    n_rounds: usize,
+    max_depth: usize,
+    n_features: usize,
+    base_scores: Vec<f64>,
+    /// Per used feature: input index, encoding, threshold count.
+    map: Vec<(usize, ThresholdEncoding, usize)>,
+    /// Bit offset of each feature's threshold array.
+    thr_offsets: Vec<usize>,
+    /// Bit offset of the global leaf values.
+    leaf_off: usize,
+    n_leaf_values: usize,
+    /// Bit offset where tree data starts.
+    trees_off: usize,
+    max_t: usize,
+}
+
+fn parse(bytes: &[u8]) -> Parsed {
+    let mut r = BitReader::new(bytes);
+    let task_code = r.read(W_TASK);
+    let n_outputs = r.read(W_OUTPUTS) as usize;
+    let n_rounds = r.read(W_ROUNDS) as usize;
+    let max_depth = r.read(W_DEPTH) as usize;
+    let n_features = r.read(W_D) as usize;
+    let n_used = r.read(W_FU) as usize;
+    let max_t = r.read(W_MAXT) as usize;
+    let n_leaf_values = r.read(W_NLEAF) as usize;
+    let base_scores: Vec<f64> = (0..n_outputs).map(|_| r.read_f32() as f64).collect();
+    let objective = match task_code {
+        0 => Objective::L2,
+        1 => Objective::Logistic,
+        2 => Objective::Softmax { n_classes: n_outputs },
+        _ => panic!("bad task code {task_code}"),
+    };
+
+    let wd = bits_for(n_features);
+    let wc = bits_for(max_t);
+    let mut map = Vec::with_capacity(n_used);
+    for _ in 0..n_used {
+        let f = r.read(wd) as usize;
+        let exp = r.read(3) as u32;
+        let is_float = r.read(1) == 1;
+        let count = r.read(wc) as usize + 1;
+        map.push((f, ThresholdEncoding::from_exponent(exp, is_float), count));
+    }
+
+    // Threshold arrays begin right after the map.
+    let mut off = r.bit_pos();
+    let mut thr_offsets = Vec::with_capacity(n_used);
+    for &(_, enc, count) in &map {
+        thr_offsets.push(off);
+        off += count * enc.width_bits() as usize;
+    }
+    let leaf_off = off;
+    let trees_off = leaf_off + n_leaf_values * 32;
+
+    Parsed {
+        objective,
+        n_outputs,
+        n_rounds,
+        max_depth,
+        n_features,
+        base_scores,
+        map,
+        thr_offsets,
+        leaf_off,
+        n_leaf_values,
+        trees_off,
+        max_t,
+    }
+}
+
+/// Validate that a blob is structurally sound: the header parses, every
+/// component lies within the buffer, and reference widths are
+/// consistent. Returns the total bit length on success. Run this before
+/// [`decode`]/[`PackedModel::from_bytes`] on untrusted bytes (e.g. a
+/// blob read back from device flash).
+pub fn validate_blob(bytes: &[u8]) -> Result<usize, String> {
+    let total_bits = bytes.len() * 8;
+    let header_min = (W_TASK + W_OUTPUTS + W_ROUNDS + W_DEPTH + W_D + W_FU + W_MAXT + W_NLEAF)
+        as usize;
+    if total_bits < header_min {
+        return Err(format!("blob too small: {total_bits} bits < header {header_min}"));
+    }
+    let mut r = BitReader::new(bytes);
+    let task = r.read(W_TASK);
+    if task > 2 {
+        return Err(format!("invalid task code {task}"));
+    }
+    let n_outputs = r.read(W_OUTPUTS) as usize;
+    if n_outputs == 0 {
+        return Err("zero outputs".into());
+    }
+    if task < 2 && n_outputs != 1 {
+        return Err(format!("task {task} requires 1 output, found {n_outputs}"));
+    }
+    let n_rounds = r.read(W_ROUNDS) as usize;
+    let max_depth = r.read(W_DEPTH) as usize;
+    let n_features = r.read(W_D) as usize;
+    let n_used = r.read(W_FU) as usize;
+    if n_used > n_features {
+        return Err(format!("|F_U|={n_used} exceeds d={n_features}"));
+    }
+    let max_t = r.read(W_MAXT) as usize;
+    if n_used > 0 && max_t == 0 {
+        return Err("used features but no thresholds".into());
+    }
+    let n_leaf_values = r.read(W_NLEAF) as usize;
+    if n_leaf_values == 0 && n_rounds > 0 {
+        return Err("trees without leaf values".into());
+    }
+    // Walk the map, thresholds, leaves, and trees checking bounds.
+    let wd = bits_for(n_features);
+    let wc = bits_for(max_t);
+    let need =
+        r.bit_pos() + 32 * n_outputs + n_used * (wd + 3 + 1 + wc) as usize;
+    if need > total_bits {
+        return Err("map truncated".into());
+    }
+    r.seek(r.bit_pos() + 32 * n_outputs);
+    let mut thr_bits = 0usize;
+    for i in 0..n_used {
+        let f = r.read(wd) as usize;
+        if f >= n_features {
+            return Err(format!("map[{i}]: feature {f} out of range"));
+        }
+        let exp = r.read(3) as u32;
+        let is_float = r.read(1) == 1;
+        if is_float && !(4..=5).contains(&exp) {
+            return Err(format!("map[{i}]: invalid float width 2^{exp}"));
+        }
+        let count = r.read(wc) as usize + 1;
+        if count > max_t {
+            return Err(format!("map[{i}]: count {count} > maxT {max_t}"));
+        }
+        thr_bits += count * (1usize << exp);
+    }
+    let w_f = bits_for(n_used);
+    let w_t = bits_for(max_t);
+    let w_l = bits_for(n_leaf_values);
+    let w_dep = bits_for(max_depth + 1);
+    let mut pos = r.bit_pos() + thr_bits + n_leaf_values * 32;
+    if pos > total_bits {
+        return Err("threshold/leaf tables truncated".into());
+    }
+    let mut r2 = BitReader::new(bytes);
+    for t in 0..n_outputs * n_rounds {
+        if pos + w_dep as usize > total_bits {
+            return Err(format!("tree {t}: depth field truncated"));
+        }
+        r2.seek(pos);
+        let d = r2.read(w_dep) as usize;
+        if d > max_depth {
+            return Err(format!("tree {t}: depth {d} > max {max_depth}"));
+        }
+        let n_internal = (1usize << d) - 1;
+        pos = r2.bit_pos()
+            + n_internal * (w_f + w_t) as usize
+            + (1usize << d) * w_l as usize;
+        if pos > total_bits {
+            return Err(format!("tree {t}: body truncated"));
+        }
+    }
+    Ok(pos)
+}
+
+/// Decode a packed blob back into a [`GbdtModel`].
+///
+/// Decoded trees are *complete* trees of their stored depth (replicated
+/// early leaves become real leaves), so node counts can exceed the
+/// original; predictions are identical up to threshold quantization.
+/// The synthetic `bin` stored on decoded nodes is the per-feature
+/// threshold rank, not the original training-bin index.
+///
+/// Panics on malformed input — run [`validate_blob`] first on untrusted
+/// bytes, or use [`try_decode`].
+pub fn decode(bytes: &[u8]) -> GbdtModel {
+    let p = parse(bytes);
+    let mut r = BitReader::new(bytes);
+
+    // Load threshold tables and leaf values eagerly.
+    let thresholds: Vec<Vec<f32>> = p
+        .map
+        .iter()
+        .enumerate()
+        .map(|(i, &(_, enc, count))| {
+            r.seek(p.thr_offsets[i]);
+            (0..count).map(|_| read_threshold(&mut r, enc)).collect()
+        })
+        .collect();
+    r.seek(p.leaf_off);
+    let leaf_values: Vec<f32> = (0..p.n_leaf_values).map(|_| r.read_f32()).collect();
+
+    let w_f = bits_for(p.map.len());
+    let w_t = bits_for(p.max_t);
+    let w_l = bits_for(p.n_leaf_values);
+    let w_dep = bits_for(p.max_depth + 1);
+
+    r.seek(p.trees_off);
+    let mut trees: Vec<Vec<Tree>> = vec![Vec::with_capacity(p.n_rounds); p.n_outputs];
+    for out in trees.iter_mut() {
+        for _ in 0..p.n_rounds {
+            let d = r.read(w_dep) as usize;
+            let n_internal = (1usize << d) - 1;
+            let n_leaves = 1usize << d;
+            let mut internal = Vec::with_capacity(n_internal);
+            for _ in 0..n_internal {
+                let fr = r.read(w_f) as usize;
+                let tr = r.read(w_t) as usize;
+                internal.push((fr, tr));
+            }
+            let mut leaves = Vec::with_capacity(n_leaves);
+            for _ in 0..n_leaves {
+                let lr = r.read(w_l) as usize;
+                leaves.push(leaf_values[lr] as f64);
+            }
+            out.push(complete_to_tree(&internal, &leaves, &p, &thresholds));
+        }
+    }
+
+    GbdtModel {
+        objective: p.objective,
+        base_scores: p.base_scores,
+        trees,
+        n_features: p.n_features,
+        name: "decoded".into(),
+    }
+}
+
+/// Validated decode for untrusted bytes.
+pub fn try_decode(bytes: &[u8]) -> Result<GbdtModel, String> {
+    validate_blob(bytes)?;
+    Ok(decode(bytes))
+}
+
+/// Rebuild a pointer [`Tree`] from a complete-array representation.
+fn complete_to_tree(
+    internal: &[(usize, usize)],
+    leaves: &[f64],
+    p: &Parsed,
+    thresholds: &[Vec<f32>],
+) -> Tree {
+    fn build(
+        slot: usize,
+        internal: &[(usize, usize)],
+        leaves: &[f64],
+        p: &Parsed,
+        thresholds: &[Vec<f32>],
+        nodes: &mut Vec<Node>,
+    ) -> usize {
+        let idx = nodes.len();
+        if slot >= internal.len() {
+            nodes.push(Node::Leaf { value: leaves[slot - internal.len()] });
+            return idx;
+        }
+        let (fr, tr) = internal[slot];
+        let (f, _, count) = p.map[fr];
+        // Guard decoded references (dummy slots always store (0,0),
+        // which is valid whenever any feature exists).
+        let tr = tr.min(count - 1);
+        let threshold = thresholds[fr][tr];
+        nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+        let left = build(2 * slot + 1, internal, leaves, p, thresholds, nodes);
+        let right = build(2 * slot + 2, internal, leaves, p, thresholds, nodes);
+        nodes[idx] = Node::Internal { feature: f, bin: tr as u16, threshold, left, right };
+        idx
+    }
+    if internal.is_empty() {
+        return Tree::leaf(leaves[0]);
+    }
+    let mut nodes = Vec::new();
+    build(0, internal, leaves, p, thresholds, &mut nodes);
+    Tree { nodes }
+}
+
+/// A zero-copy view over a packed blob that predicts **directly from the
+/// bits** — node references, thresholds, and leaf values are extracted
+/// with bit reads on every access, exactly as a microcontroller with the
+/// blob in flash would operate. Used for the Table 2 latency comparison
+/// and by the [`crate::mcu`] cost model.
+pub struct PackedModel {
+    bytes: Vec<u8>,
+    p: Parsed,
+    /// Per-tree (depth, internal bit offset, leaf bit offset), in
+    /// `[output][round]` order flattened.
+    tree_offsets: Vec<(usize, usize, usize)>,
+    /// Load-time flat per-used-feature geometry: (input feature,
+    /// encoding, max threshold index, threshold array bit offset).
+    /// Avoids re-deriving map entries on every node visit (§Perf
+    /// iteration 2).
+    feat_table: Vec<(usize, ThresholdEncoding, usize, usize)>,
+    w_f: u32,
+    w_t: u32,
+    w_l: u32,
+}
+
+impl PackedModel {
+    pub fn from_bytes(bytes: Vec<u8>) -> PackedModel {
+        let p = parse(&bytes);
+        let w_f = bits_for(p.map.len());
+        let w_t = bits_for(p.max_t);
+        let w_l = bits_for(p.n_leaf_values);
+        let w_dep = bits_for(p.max_depth + 1);
+        let mut r = BitReader::new(&bytes);
+        r.seek(p.trees_off);
+        let n_trees = p.n_outputs * p.n_rounds;
+        let mut tree_offsets = Vec::with_capacity(n_trees);
+        for _ in 0..n_trees {
+            let d = r.read(w_dep) as usize;
+            let internal_off = r.bit_pos();
+            let n_internal = (1usize << d) - 1;
+            let leaf_off = internal_off + n_internal * (w_f + w_t) as usize;
+            let end = leaf_off + (1usize << d) * w_l as usize;
+            tree_offsets.push((d, internal_off, leaf_off));
+            r.seek(end);
+        }
+        let feat_table = p
+            .map
+            .iter()
+            .zip(&p.thr_offsets)
+            .map(|(&(f, enc, count), &off)| (f, enc, count - 1, off))
+            .collect();
+        PackedModel { bytes, p, tree_offsets, feat_table, w_f, w_t, w_l }
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.p.n_outputs
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.p.n_features
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.p.objective
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// The underlying packed blob.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Read threshold `tr` of used-feature `fr` straight from the bits.
+    #[inline]
+    fn threshold(&self, fr: usize, tr: usize) -> f32 {
+        let (_, enc, _) = self.p.map[fr];
+        let mut r = BitReader::new(&self.bytes);
+        r.seek(self.p.thr_offsets[fr] + tr * enc.width_bits() as usize);
+        read_threshold(&mut r, enc)
+    }
+
+    /// Raw scores for one row, traversing the packed bits.
+    pub fn predict_raw(&self, x: &[f32]) -> Vec<f64> {
+        let mut out = self.p.base_scores.clone();
+        let mut r = BitReader::new(&self.bytes);
+        let node_w = (self.w_f + self.w_t) as usize;
+        for k in 0..self.p.n_outputs {
+            for t in 0..self.p.n_rounds {
+                let (d, internal_off, leaf_off) = self.tree_offsets[k * self.p.n_rounds + t];
+                let n_internal = (1usize << d) - 1;
+                let mut i = 0usize;
+                while i < n_internal {
+                    r.seek(internal_off + i * node_w);
+                    let fr = r.read(self.w_f) as usize;
+                    let tr = r.read(self.w_t) as usize;
+                    let (f, enc, max_tr, thr_off) = self.feat_table[fr];
+                    let tr = tr.min(max_tr);
+                    r.seek(thr_off + tr * enc.width_bits() as usize);
+                    let thr = read_threshold(&mut r, enc);
+                    i = if x[f] <= thr { 2 * i + 1 } else { 2 * i + 2 };
+                }
+                r.seek(leaf_off + (i - n_internal) * self.w_l as usize);
+                let lref = r.read(self.w_l) as usize;
+                r.seek(self.p.leaf_off + lref * 32);
+                out[k] += r.read_f32() as f64;
+            }
+        }
+        out
+    }
+
+    /// Class prediction (binary/multiclass).
+    pub fn predict_class(&self, x: &[f32]) -> usize {
+        self.p.objective.predict_class(&self.predict_raw(x))
+    }
+
+    /// Regression prediction.
+    pub fn predict_value(&self, x: &[f32]) -> f64 {
+        self.predict_raw(x)[0]
+    }
+
+    /// Count the bit-level operations of one prediction (for the MCU
+    /// cycle model): returns `(nodes_visited, bits_read)`.
+    pub fn trace_row(&self, x: &[f32]) -> (usize, usize) {
+        let mut nodes = 0usize;
+        let mut bits = 0usize;
+        let mut r = BitReader::new(&self.bytes);
+        for k in 0..self.p.n_outputs {
+            for t in 0..self.p.n_rounds {
+                let (d, internal_off, leaf_off) = self.tree_offsets[k * self.p.n_rounds + t];
+                let n_internal = (1usize << d) - 1;
+                let mut i = 0usize;
+                while i < n_internal {
+                    r.seek(internal_off + i * (self.w_f + self.w_t) as usize);
+                    let fr = r.read(self.w_f) as usize;
+                    let tr = r.read(self.w_t) as usize;
+                    let (f, enc, count) = self.p.map[fr];
+                    let thr = self.threshold(fr, tr.min(count - 1));
+                    nodes += 1;
+                    bits += (self.w_f + self.w_t + enc.width_bits()) as usize;
+                    i = if x[f] <= thr { 2 * i + 1 } else { 2 * i + 2 };
+                }
+                r.seek(leaf_off + (i - n_internal) * self.w_l as usize);
+                let _ = r.read(self.w_l);
+                bits += self.w_l as usize + 32;
+                nodes += 1;
+            }
+        }
+        (nodes, bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::data::train_test_split;
+    use crate::gbdt::{self, GbdtParams};
+
+    fn trained(ds: PaperDataset, rounds: usize, depth: usize) -> (GbdtModel, crate::data::Dataset) {
+        let data = ds.generate(11);
+        let n = data.n_rows().min(1500);
+        let data = data.select(&(0..n).collect::<Vec<_>>());
+        let (train_set, test_set) = train_test_split(&data, 0.2, 1);
+        let model = gbdt::booster::train(&train_set, GbdtParams::paper(rounds, depth));
+        (model, test_set)
+    }
+
+    #[test]
+    fn roundtrip_predictions_exact_without_f16() {
+        let (model, test) = trained(PaperDataset::BreastCancer, 12, 3);
+        let finfo = FeatureInfo::from_dataset(&test);
+        let opts = EncodeOptions { allow_f16: false, ..Default::default() };
+        let bytes = encode(&model, &finfo, &opts);
+        let decoded = decode(&bytes);
+        for i in 0..test.n_rows() {
+            let x = test.row(i);
+            let a = model.predict_raw(&x);
+            let b = decoded.predict_raw(&x);
+            for (p, q) in a.iter().zip(&b) {
+                assert!((p - q).abs() < 1e-5, "row {i}: {p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn size_model_matches_encoded_length() {
+        for (ds, rounds, depth) in [
+            (PaperDataset::BreastCancer, 8, 2),
+            (PaperDataset::Mushroom, 6, 3),
+            (PaperDataset::Kin8nm, 10, 2),
+        ] {
+            let (model, test) = trained(ds, rounds, depth);
+            let finfo = FeatureInfo::from_dataset(&test);
+            for opts in [EncodeOptions { allow_f16: false, ..Default::default() }, EncodeOptions { allow_f16: true, ..Default::default() }] {
+                let bytes = encode(&model, &finfo, &opts);
+                let bd = size_breakdown(&model, &finfo, &opts);
+                assert_eq!(bd.total_bytes(), bytes.len(), "{:?}", ds);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_model_matches_decoded() {
+        let (model, test) = trained(PaperDataset::Mushroom, 10, 3);
+        let finfo = FeatureInfo::from_dataset(&test);
+        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        let decoded = decode(&bytes);
+        let packed = PackedModel::from_bytes(bytes);
+        for i in (0..test.n_rows()).step_by(7) {
+            let x = test.row(i);
+            let a = decoded.predict_raw(&x);
+            let b = packed.predict_raw(&x);
+            for (p, q) in a.iter().zip(&b) {
+                assert!((p - q).abs() < 1e-6, "row {i}: {p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn integer_features_get_narrow_thresholds() {
+        // kr-vs-kp is all-boolean: every threshold must be 1-bit.
+        let (model, test) = trained(PaperDataset::KrVsKp, 8, 2);
+        let finfo = FeatureInfo::from_dataset(&test);
+        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        let decoded = decode(&bytes);
+        // Accuracy preserved through 1-bit thresholds.
+        let a = model.score(&test);
+        let b = decoded.score(&test);
+        assert!((a - b).abs() < 1e-9, "accuracy changed: {a} vs {b}");
+        // And the thresholds section must be tiny: <= |F_U| * maxT bits.
+        let bd = size_breakdown(&model, &finfo, &EncodeOptions::default());
+        let stats = crate::toad::ReuseStats::from_model(&model);
+        assert!(
+            bd.thresholds_bits <= stats.n_thresholds,
+            "boolean thresholds must be 1 bit each: {} > {}",
+            bd.thresholds_bits,
+            stats.n_thresholds,
+        );
+    }
+
+    #[test]
+    fn f16_thresholds_keep_score() {
+        let (model, test) = trained(PaperDataset::CaliforniaHousing, 16, 3);
+        let finfo = FeatureInfo::from_dataset(&test);
+        let exact = decode(&encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() }));
+        let lossy = decode(&encode(&model, &finfo, &EncodeOptions { allow_f16: true, ..Default::default() }));
+        let a = exact.score(&test);
+        let b = lossy.score(&test);
+        assert!((a - b).abs() < 0.02, "f16 thresholds moved R² too much: {a} vs {b}");
+    }
+
+    #[test]
+    fn multiclass_roundtrip() {
+        let (model, test) = trained(PaperDataset::WineQuality, 6, 2);
+        let finfo = FeatureInfo::from_dataset(&test);
+        let bytes = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() });
+        let decoded = decode(&bytes);
+        assert_eq!(decoded.n_outputs(), 7);
+        for i in (0..test.n_rows()).step_by(11) {
+            let x = test.row(i);
+            assert_eq!(model.predict_class(&x), decoded.predict_class(&x));
+        }
+    }
+
+    #[test]
+    fn bare_leaf_ensemble_roundtrip() {
+        let data = PaperDataset::Kin8nm.generate(3).select(&(0..200).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(3, 0));
+        let finfo = FeatureInfo::from_dataset(&data);
+        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        let decoded = decode(&bytes);
+        let x = data.row(0);
+        assert!((model.predict_value(&x) - decoded.predict_value(&x)).abs() < 1e-6);
+        // No features used: layout is header + leaves + tiny trees.
+        let bd = size_breakdown(&model, &finfo, &EncodeOptions::default());
+        assert_eq!(bd.map_bits, 0);
+        assert_eq!(bd.thresholds_bits, 0);
+    }
+
+    #[test]
+    fn validate_accepts_every_encoded_model() {
+        for (ds, rounds, depth) in [
+            (PaperDataset::BreastCancer, 8, 2),
+            (PaperDataset::WineQuality, 4, 2),
+            (PaperDataset::Kin8nm, 6, 3),
+        ] {
+            let (model, test) = trained(ds, rounds, depth);
+            let finfo = FeatureInfo::from_dataset(&test);
+            let bytes = encode(&model, &finfo, &EncodeOptions::default());
+            let bits = validate_blob(&bytes).unwrap_or_else(|e| panic!("{:?}: {e}", ds));
+            assert!(bits <= bytes.len() * 8);
+            assert!(bits + 8 > bytes.len() * 8, "no trailing garbage allowed");
+            try_decode(&bytes).unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_rejects_garbage_and_truncation() {
+        // Random bytes: overwhelmingly rejected (never panics).
+        let mut rng = crate::prng::Pcg64::new(0xBAD);
+        for _ in 0..200 {
+            let n = 1 + rng.gen_range(64);
+            let bytes: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            let _ = validate_blob(&bytes); // must not panic
+        }
+        // Truncating a valid blob must be caught.
+        let (model, test) = trained(PaperDataset::BreastCancer, 8, 2);
+        let finfo = FeatureInfo::from_dataset(&test);
+        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        for cut in [1usize, bytes.len() / 4, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                validate_blob(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} must fail",
+                bytes.len()
+            );
+        }
+        assert!(try_decode(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn leaf_sharing_reduces_global_values() {
+        let (model, test) = trained(PaperDataset::CaliforniaHousing, 24, 3);
+        let finfo = FeatureInfo::from_dataset(&test);
+        let full = EncodeOptions::default();
+        let shared = EncodeOptions { leaf_mantissa_bits: Some(8), ..Default::default() };
+        let bd_full = size_breakdown(&model, &finfo, &full);
+        let bd_shared = size_breakdown(&model, &finfo, &shared);
+        assert!(
+            bd_shared.leaf_values_bits < bd_full.leaf_values_bits,
+            "mantissa truncation must merge leaf values: {} vs {}",
+            bd_shared.leaf_values_bits,
+            bd_full.leaf_values_bits
+        );
+        // Quality barely moves.
+        let a = decode(&encode(&model, &finfo, &full)).score(&test);
+        let b = decode(&encode(&model, &finfo, &shared)).score(&test);
+        assert!((a - b).abs() < 0.02, "leaf sharing moved R² too far: {a} vs {b}");
+        // Size model still exact under the option.
+        let bytes = encode(&model, &finfo, &shared);
+        assert_eq!(bd_shared.total_bytes(), bytes.len());
+    }
+
+    #[test]
+    fn leaf_sharing_zero_bits_collapses_to_exponent_grid() {
+        let (model, test) = trained(PaperDataset::BreastCancer, 16, 2);
+        let finfo = FeatureInfo::from_dataset(&test);
+        let extreme = EncodeOptions { leaf_mantissa_bits: Some(0), ..Default::default() };
+        let bytes = encode(&model, &finfo, &extreme);
+        let decoded = decode(&bytes);
+        // Still a functioning (if coarse) model.
+        let s = decoded.score(&test);
+        assert!(s > 0.7, "0-mantissa leaves should still classify: {s}");
+    }
+
+    #[test]
+    fn trace_row_counts_nodes() {
+        let (model, test) = trained(PaperDataset::BreastCancer, 4, 2);
+        let finfo = FeatureInfo::from_dataset(&test);
+        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        let packed = PackedModel::from_bytes(bytes);
+        let (nodes, bits) = packed.trace_row(&test.row(0));
+        // 4 trees × (≤2 internal + 1 leaf) visits.
+        assert!(nodes >= 4 && nodes <= 12, "nodes={nodes}");
+        assert!(bits > 0);
+    }
+}

@@ -1,0 +1,48 @@
+//! # Trees on a Diet (ToaD)
+//!
+//! A reproduction of *"Boosted Trees on a Diet: Compact Models for
+//! Resource-Constrained Devices"* (Herrmann et al., 2025) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The crate contains:
+//!
+//! * a from-scratch histogram-based GBDT trainer ([`gbdt`]) equivalent in
+//!   objective and growth strategy to LightGBM (the paper's substrate),
+//! * the ToaD training extension ([`toad`]): feature/threshold *reuse
+//!   penalties* folded into the split gain, and memory-budget-bounded
+//!   training (`toad_forestsize`),
+//! * the ToaD bit-wise memory layout ([`layout`]): pointer-less
+//!   complete-tree arrays referencing global threshold/leaf tables,
+//! * native inference engines ([`inference`]) including a direct
+//!   bit-packed interpreter (what an MCU would execute),
+//! * every baseline the paper evaluates ([`baselines`]): CEGB, CCP,
+//!   random forests, and Guo et al. ordering-based ensemble pruning,
+//! * an XLA/PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) for batched serving,
+//! * an IoT fleet coordinator ([`coordinator`]): simulated
+//!   memory-constrained devices, a deployment planner, request router and
+//!   dynamic batcher,
+//! * a microcontroller cycle-cost model ([`mcu`]) reproducing the paper's
+//!   Table 2 latency comparison, and
+//! * the experiment sweep harness ([`sweep`]) regenerating every figure
+//!   and table of the paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod baselines;
+pub mod bitio;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod export;
+pub mod gbdt;
+pub mod inference;
+pub mod layout;
+pub mod mcu;
+pub mod metrics;
+pub mod prng;
+pub mod runtime;
+pub mod sweep;
+pub mod testutil;
+pub mod toad;

@@ -1,0 +1,251 @@
+//! `toad` — train, size, and serve compact boosted tree ensembles.
+//!
+//! ```text
+//! toad datasets                                    # Table 1
+//! toad train   --dataset breastcancer --rounds 32 --depth 2 \
+//!              [--iota 2] [--xi 1] [--forestsize 1024] [--out model.toad]
+//! toad size    --model model.toad                  # layout breakdown
+//! toad predict --model model.toad --dataset breastcancer [--n 10]
+//! toad bench-inference --dataset covtype_binary    # packed vs decoded
+//! ```
+
+use toad::cli::{dataset_by_name, Args};
+use toad::data::train_test_split;
+use toad::gbdt::GbdtParams;
+use toad::layout::{self, toad_format::size_breakdown, EncodeOptions, FeatureInfo, PackedModel};
+use toad::sweep::table;
+use toad::toad::{train_toad, train_toad_with_budget, ToadParams};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_str() {
+        "datasets" => cmd_datasets(),
+        "train" => cmd_train(&args),
+        "size" => cmd_size(&args),
+        "predict" => cmd_predict(&args),
+        "sweep" => cmd_sweep(&args),
+        "export-c" => cmd_export_c(&args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            0
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+toad — Trees on a Diet (paper reproduction)
+
+commands:
+  datasets               print the Table 1 dataset inventory
+  train                  train a ToaD model (see flags in main.rs docs)
+  size                   print the layout size breakdown of a .toad blob
+  predict                run a saved model over a synthetic dataset
+  sweep                  run a penalty sweep: --dataset D [--kind feature|threshold]
+                         [--rounds N] [--depth D] (Figure 6-style table)
+  export-c               generate a self-contained C99 file from a blob:
+                         --model model.toad --out model.c [--outputs N --features D]
+  help                   this text
+";
+
+fn cmd_datasets() -> i32 {
+    use toad::data::synth::PaperDataset;
+    let rows: Vec<Vec<String>> = PaperDataset::TABLE1
+        .iter()
+        .map(|ds| {
+            vec![
+                ds.name().to_string(),
+                format!("{}", ds.paper_rows()),
+                format!("{}", ds.gen_rows()),
+                format!("{}", ds.n_features()),
+                format!("{:?}", ds.task()),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        table::render(&["dataset", "paper_rows", "gen_rows", "features", "task"], &rows)
+    );
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let name = args.get_or("dataset", "breastcancer");
+    let Some(ds) = dataset_by_name(&name) else {
+        eprintln!("unknown dataset `{name}`");
+        return 2;
+    };
+    let run = || -> Result<i32, String> {
+        let rounds = args.get_usize("rounds", 32)?;
+        let depth = args.get_usize("depth", 2)?;
+        let iota = args.get_f64("iota", 0.0)?;
+        let xi = args.get_f64("xi", 0.0)?;
+        let seed = args.get_usize("seed", 1)? as u64;
+        let data = ds.generate(seed);
+        let (train_set, test_set) = train_test_split(&data, 0.2, seed);
+        let mut params = ToadParams::new(GbdtParams::paper(rounds, depth), iota, xi);
+        let model = if let Some(fs) = args.get("forestsize") {
+            params.forestsize_bytes =
+                Some(fs.parse().map_err(|_| "--forestsize: invalid".to_string())?);
+            train_toad_with_budget(&train_set, &params)
+        } else {
+            train_toad(&train_set, &params)
+        };
+        let score = model.model.score(&test_set);
+        println!(
+            "{}: score={score:.4} size={} trees={} |F_U|={} thresholds={} ReF={:.2}",
+            name,
+            table::human_bytes(model.size_bytes()),
+            model.model.n_trees(),
+            model.stats.n_features_used,
+            model.stats.n_thresholds,
+            model.reuse_factor(),
+        );
+        if let Some(out) = args.get("out") {
+            std::fs::write(out, &model.blob).map_err(|e| e.to_string())?;
+            println!("wrote {out} ({} bytes)", model.blob.len());
+        }
+        Ok(0)
+    };
+    run().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        2
+    })
+}
+
+fn cmd_size(args: &Args) -> i32 {
+    let Some(path) = args.get("model") else {
+        eprintln!("--model required");
+        return 2;
+    };
+    let Ok(blob) = std::fs::read(path) else {
+        eprintln!("cannot read {path}");
+        return 2;
+    };
+    let model = layout::decode(&blob);
+    // Re-derive a breakdown from the decoded model (generic float info).
+    let finfo = vec![FeatureInfo::generic_float(); model.n_features];
+    let bd = size_breakdown(&model, &finfo, &EncodeOptions::default());
+    println!("blob:        {} bytes", blob.len());
+    println!("header:      {} bits", bd.header_bits);
+    println!("map:         {} bits", bd.map_bits);
+    println!("thresholds:  {} bits", bd.thresholds_bits);
+    println!("leaf values: {} bits", bd.leaf_values_bits);
+    println!("trees:       {} bits", bd.trees_bits);
+    println!(
+        "pointer layout would be: {} bytes ({}x)",
+        layout::baseline::pointer_f32_bytes(&model),
+        layout::baseline::pointer_f32_bytes(&model) / blob.len().max(1)
+    );
+    0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    use toad::sweep::figures::{univariate_rows, PenaltyKind};
+    let name = args.get_or("dataset", "breastcancer");
+    let Some(ds) = dataset_by_name(&name) else {
+        eprintln!("unknown dataset `{name}`");
+        return 2;
+    };
+    let kind = match args.get_or("kind", "threshold").as_str() {
+        "feature" => PenaltyKind::Feature,
+        "threshold" => PenaltyKind::Threshold,
+        other => {
+            eprintln!("--kind must be feature|threshold, got `{other}`");
+            return 2;
+        }
+    };
+    let rounds = args.get_usize("rounds", 64).unwrap_or(64);
+    let depth = args.get_usize("depth", 2).unwrap_or(2);
+    let values: Vec<f64> = (-4..=15).step_by(2).map(|e| 2f64.powi(e)).collect();
+    let rows = univariate_rows(ds, 1, kind, &values, rounds, depth, 4000);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.penalty),
+                format!("{:.4}", r.score),
+                format!("{}", r.n_features),
+                format!("{}", r.n_global_values),
+                format!("{:.2}", r.reuse_factor),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        table::render(&["penalty", "score", "features", "global_values", "ReF"], &table)
+    );
+    0
+}
+
+fn cmd_export_c(args: &Args) -> i32 {
+    let Some(path) = args.get("model") else {
+        eprintln!("--model required");
+        return 2;
+    };
+    let out_path = args.get_or("out", "model.c");
+    let Ok(blob) = std::fs::read(path) else {
+        eprintln!("cannot read {path}");
+        return 2;
+    };
+    // Outputs/features can be read off the decoded model when omitted.
+    let decoded = match toad::layout::toad_format::try_decode(&blob) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("invalid blob: {e}");
+            return 2;
+        }
+    };
+    let n_outputs = args.get_usize("outputs", decoded.n_outputs()).unwrap_or(1);
+    let n_features = args.get_usize("features", decoded.n_features).unwrap_or(1);
+    match toad::export::export_c(&blob, n_outputs, n_features) {
+        Ok(c) => {
+            if std::fs::write(&out_path, &c).is_err() {
+                eprintln!("cannot write {out_path}");
+                return 2;
+            }
+            println!("wrote {out_path} ({} bytes of C, {} byte blob)", c.len(), blob.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("export failed: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_predict(args: &Args) -> i32 {
+    let Some(path) = args.get("model") else {
+        eprintln!("--model required");
+        return 2;
+    };
+    let name = args.get_or("dataset", "breastcancer");
+    let Some(ds) = dataset_by_name(&name) else {
+        eprintln!("unknown dataset `{name}`");
+        return 2;
+    };
+    let n = args.get_usize("n", 5).unwrap_or(5);
+    let Ok(blob) = std::fs::read(path) else {
+        eprintln!("cannot read {path}");
+        return 2;
+    };
+    let packed = PackedModel::from_bytes(blob);
+    let data = ds.generate(1);
+    for i in 0..n.min(data.n_rows()) {
+        let x = data.row(i);
+        let raw = packed.predict_raw(&x);
+        println!("row {i}: raw={raw:?}");
+    }
+    0
+}

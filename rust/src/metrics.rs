@@ -1,0 +1,151 @@
+//! Evaluation metrics used throughout the experiments.
+//!
+//! The paper reports **accuracy** for classification datasets and the
+//! **R² score** for regression datasets (§4.1); log-loss and RMSE are
+//! used internally for early stopping and debugging.
+
+/// Classification accuracy from predicted labels.
+pub fn accuracy(y_true: &[usize], y_pred: &[usize]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    let hits = y_true.iter().zip(y_pred).filter(|(a, b)| a == b).count();
+    hits as f64 / y_true.len() as f64
+}
+
+/// Coefficient of determination R² = 1 − SS_res / SS_tot.
+///
+/// Returns 1.0 for a perfect fit; can be negative for models worse than
+/// predicting the mean. If the targets are constant, returns 1.0 when the
+/// predictions match exactly and 0.0 otherwise (scikit-learn convention).
+pub fn r2_score(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert!(!y_true.is_empty());
+    let mean = y_true.iter().sum::<f64>() / y_true.len() as f64;
+    let ss_tot: f64 = y_true.iter().map(|y| (y - mean) * (y - mean)).sum();
+    let ss_res: f64 = y_true.iter().zip(y_pred).map(|(y, p)| (y - p) * (y - p)).sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Root mean squared error.
+pub fn rmse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert!(!y_true.is_empty());
+    let mse: f64 =
+        y_true.iter().zip(y_pred).map(|(y, p)| (y - p) * (y - p)).sum::<f64>() / y_true.len() as f64;
+    mse.sqrt()
+}
+
+/// Binary log-loss over probabilities of the positive class.
+pub fn binary_logloss(y_true: &[usize], p_pos: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), p_pos.len());
+    assert!(!y_true.is_empty());
+    let eps = 1e-12;
+    let s: f64 = y_true
+        .iter()
+        .zip(p_pos)
+        .map(|(&y, &p)| {
+            let p = p.clamp(eps, 1.0 - eps);
+            if y == 1 {
+                -p.ln()
+            } else {
+                -(1.0 - p).ln()
+            }
+        })
+        .sum();
+    s / y_true.len() as f64
+}
+
+/// Multiclass log-loss over per-class probability rows.
+pub fn multiclass_logloss(y_true: &[usize], probs: &[Vec<f64>]) -> f64 {
+    assert_eq!(y_true.len(), probs.len());
+    assert!(!y_true.is_empty());
+    let eps = 1e-12;
+    let s: f64 = y_true
+        .iter()
+        .zip(probs)
+        .map(|(&y, row)| -(row[y].clamp(eps, 1.0)).ln())
+        .sum();
+    s / y_true.len() as f64
+}
+
+/// Mean and sample standard deviation of a series — used for the
+/// error-bar aggregation across the paper's 12 train/test splits.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if xs.len() == 1 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 1, 0], &[0, 1, 0, 0]), 0.75);
+        assert_eq!(accuracy(&[1, 1], &[1, 1]), 1.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        assert!((r2_score(&y, &y) - 1.0).abs() < 1e-12);
+        let mean_pred = [2.5; 4];
+        assert!(r2_score(&y, &mean_pred).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_worse_than_mean_is_negative() {
+        let y = [1.0, 2.0, 3.0];
+        let bad = [10.0, -5.0, 7.0];
+        assert!(r2_score(&y, &bad) < 0.0);
+    }
+
+    #[test]
+    fn r2_constant_targets() {
+        let y = [2.0, 2.0];
+        assert_eq!(r2_score(&y, &[2.0, 2.0]), 1.0);
+        assert_eq!(r2_score(&y, &[2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn rmse_known() {
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logloss_confident_correct_is_small() {
+        let ll = binary_logloss(&[1, 0], &[0.99, 0.01]);
+        assert!(ll < 0.02);
+        let bad = binary_logloss(&[1, 0], &[0.01, 0.99]);
+        assert!(bad > 4.0);
+    }
+
+    #[test]
+    fn multiclass_logloss_uniform() {
+        let probs = vec![vec![0.25; 4]; 3];
+        let ll = multiclass_logloss(&[0, 1, 2], &probs);
+        assert!((ll - (4.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!((m1, s1), (5.0, 0.0));
+    }
+}

@@ -1,0 +1,131 @@
+//! PJRT client wrapper and artifact management.
+//!
+//! Artifacts are HLO **text** (not serialized protos — xla_extension
+//! 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids; the text parser
+//! reassigns them). `MANIFEST.txt`, written last by `aot.py`, lists one
+//! artifact per line:
+//!
+//! ```text
+//! predict predict_n256_t256_d4_f64_o1.hlo.txt n=256 t=256 d=4 f=64 o=1
+//! histogram histogram_s4096_f64_b64.hlo.txt s=4096 f=64 b=64
+//! ```
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed manifest entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub kind: String,
+    pub file: String,
+    /// Shape parameters, e.g. `n`, `t`, `d`, `f`, `o`.
+    pub params: HashMap<String, usize>,
+}
+
+impl ArtifactSpec {
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+}
+
+/// Parse a MANIFEST.txt body.
+pub fn parse_manifest(text: &str) -> Vec<ArtifactSpec> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|line| {
+            let mut parts = line.split_whitespace();
+            let kind = parts.next()?.to_string();
+            let file = parts.next()?.to_string();
+            let params = parts
+                .filter_map(|kv| {
+                    let (k, v) = kv.split_once('=')?;
+                    Some((k.to_string(), v.parse().ok()?))
+                })
+                .collect();
+            Some(ArtifactSpec { kind, file, params })
+        })
+        .collect()
+}
+
+/// A PJRT CPU client together with the artifact directory.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (reads MANIFEST.txt) and create the
+    /// PJRT CPU client.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("MANIFEST.txt"))
+            .with_context(|| format!("no MANIFEST.txt in {dir:?}; run `make artifacts`"))?;
+        let specs = parse_manifest(&manifest);
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(XlaRuntime { client, dir, specs })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Find an artifact by kind and exact parameter constraints.
+    pub fn find(&self, kind: &str, constraints: &[(&str, usize)]) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| {
+            s.kind == kind && constraints.iter().all(|&(k, v)| s.param(k) == Some(v))
+        })
+    }
+
+    /// Load + compile an artifact.
+    pub fn compile(&self, spec: &ArtifactSpec) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {}", spec.file))
+    }
+
+    /// Upload a literal to the device (device 0).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let device = self
+            .client
+            .devices()
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no PJRT devices"))?;
+        self.client
+            .buffer_from_host_literal(Some(&device), lit)
+            .context("buffer_from_host_literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "predict predict_n256_t256_d4_f64_o1.hlo.txt n=256 t=256 d=4 f=64 o=1\n\
+                    histogram histogram_s4096_f64_b64.hlo.txt s=4096 f=64 b=64\n";
+        let specs = parse_manifest(text);
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].kind, "predict");
+        assert_eq!(specs[0].param("n"), Some(256));
+        assert_eq!(specs[0].param("o"), Some(1));
+        assert_eq!(specs[1].param("b"), Some(64));
+        assert_eq!(specs[1].param("zz"), None);
+    }
+
+    #[test]
+    fn manifest_skips_blank_lines() {
+        let specs = parse_manifest("\n\npredict a.hlo.txt n=1\n\n");
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].file, "a.hlo.txt");
+    }
+}

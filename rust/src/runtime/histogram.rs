@@ -1,0 +1,90 @@
+//! The gradient-histogram executable: offload the GBDT training
+//! hot-spot to the AOT-compiled Pallas kernel.
+//!
+//! The artifact computes, for a fixed `(S, F, B)` shape, the per
+//! (feature, bin) gradient/hessian sums via the one-hot-matmul kernel
+//! (see `python/compile/kernels/histogram.py`). Rows are padded with
+//! `bin = 0, grad = hess = 0` (no-ops by construction); features are
+//! padded with constant bin 0; extra bins simply stay empty.
+//!
+//! The native `HistogramSet` remains the trainer's default (at 16 k-row
+//! leaves the native scatter outperforms a CPU-interpreted XLA matmul);
+//! this engine exists to (a) prove the L1→L3 path end to end and (b)
+//! serve as the drop-in once a real TPU PJRT plugin is available.
+
+use super::client::XlaRuntime;
+use anyhow::{Context, Result};
+
+/// A compiled histogram executable.
+pub struct HistogramEngine {
+    exe: xla::PjRtLoadedExecutable,
+    s: usize,
+    f: usize,
+    b: usize,
+}
+
+impl HistogramEngine {
+    /// Compile the histogram artifact with shape `(s, f, b)`.
+    pub fn new(rt: &XlaRuntime, s: usize, f: usize, b: usize) -> Result<HistogramEngine> {
+        let spec = rt
+            .find("histogram", &[("s", s), ("f", f), ("b", b)])
+            .with_context(|| format!("no histogram artifact for s={s} f={f} b={b}"))?
+            .clone();
+        Ok(HistogramEngine { exe: rt.compile(&spec)?, s, f, b })
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.s, self.f, self.b)
+    }
+
+    /// Compute `(F, B, 2)` histograms for up to `s` rows.
+    ///
+    /// `bins[f][i]` is the bin of row `i` on feature `f` (column-major,
+    /// like [`crate::data::BinnedDataset`]); bins must be `< b`, rows
+    /// beyond `grad.len()` are padding.
+    pub fn run(
+        &self,
+        bins: &[Vec<u16>],
+        grad: &[f64],
+        hess: &[f64],
+    ) -> Result<Vec<[f64; 2]>> {
+        let n = grad.len();
+        anyhow::ensure!(n <= self.s, "rows {n} exceed artifact size {}", self.s);
+        anyhow::ensure!(bins.len() <= self.f, "features {} exceed {}", bins.len(), self.f);
+        anyhow::ensure!(hess.len() == n);
+
+        // Pack row-major padded int32 bins + f32 stats.
+        let mut bins_i32 = vec![0i32; self.s * self.f];
+        for (f, col) in bins.iter().enumerate() {
+            anyhow::ensure!(col.len() == n, "ragged bins");
+            for (i, &v) in col.iter().enumerate() {
+                anyhow::ensure!((v as usize) < self.b, "bin {v} out of range {}", self.b);
+                bins_i32[i * self.f + f] = v as i32;
+            }
+        }
+        let grad_f32: Vec<f32> = grad.iter().map(|&g| g as f32).chain(
+            std::iter::repeat(0.0).take(self.s - n),
+        ).collect();
+        let hess_f32: Vec<f32> = hess.iter().map(|&h| h as f32).chain(
+            std::iter::repeat(0.0).take(self.s - n),
+        ).collect();
+
+        let bins_lit =
+            xla::Literal::vec1(&bins_i32).reshape(&[self.s as i64, self.f as i64])?;
+        let grad_lit = xla::Literal::vec1(&grad_f32);
+        let hess_lit = xla::Literal::vec1(&hess_f32);
+        let out = self.exe.execute::<xla::Literal>(&[bins_lit, grad_lit, hess_lit])?;
+        let lit = out[0][0].to_literal_sync()?.to_tuple1()?;
+        let vals: Vec<f32> = lit.to_vec()?;
+        anyhow::ensure!(vals.len() == self.f * self.b * 2);
+        Ok(vals
+            .chunks_exact(2)
+            .map(|c| [c[0] as f64, c[1] as f64])
+            .collect())
+    }
+
+    /// Flat `(feature, bin)` index into [`HistogramEngine::run`] output.
+    pub fn index(&self, feature: usize, bin: usize) -> usize {
+        feature * self.b + bin
+    }
+}

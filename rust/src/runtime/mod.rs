@@ -1,0 +1,23 @@
+//! XLA/PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); at run time this
+//! module compiles the HLO **text** artifacts once per process with the
+//! PJRT CPU client and serves batched predictions from device-resident
+//! model tensors.
+//!
+//! * [`client`] — artifact discovery (MANIFEST.txt), HLO loading,
+//!   compilation.
+//! * [`tensorize`] — [`crate::gbdt::GbdtModel`] → fixed-shape complete
+//!   tree tensors (padding trees to the artifact depth/count).
+//! * [`predict`] — the batched predict engine used by the coordinator.
+
+pub mod client;
+pub mod histogram;
+pub mod predict;
+pub mod tensorize;
+
+pub use client::{ArtifactSpec, XlaRuntime};
+pub use histogram::HistogramEngine;
+pub use predict::PredictEngine;
+pub use tensorize::{tensorize, TensorModel};

@@ -1,0 +1,156 @@
+//! The batched predict engine: one compiled artifact + device-resident
+//! model tensors, serving raw scores for row batches.
+
+use super::client::XlaRuntime;
+use super::tensorize::TensorModel;
+use anyhow::{Context, Result};
+
+/// A compiled predict executable bound to one model's tensors.
+///
+/// The model tensors (`feat`, `thr`, `leaves`, `base`) are uploaded to
+/// the device once at construction; each call uploads only the batch.
+pub struct PredictEngine {
+    exe: xla::PjRtLoadedExecutable,
+    feat_buf: xla::PjRtBuffer,
+    thr_buf: xla::PjRtBuffer,
+    leaves_buf: xla::PjRtBuffer,
+    base_buf: xla::PjRtBuffer,
+    /// The host literals backing the device buffers.
+    ///
+    /// PJRT's `BufferFromHostLiteral` copies *asynchronously*: the
+    /// literal must outlive the copy, or the deferred transfer reads
+    /// freed memory (observed as a `literal.size_bytes() == b->size()`
+    /// check-failure inside TFRT). Holding them here pins the memory
+    /// for the engine's lifetime.
+    _model_literals: Vec<xla::Literal>,
+    /// Reused input literal: building a fresh `(batch, features)`
+    /// literal per call dominated small-batch latency (§Perf
+    /// iteration 5); `copy_raw_from` updates it in place.
+    x_lit: xla::Literal,
+    x_host: Vec<f32>,
+    runtime_batch: usize,
+    n_features: usize,
+    n_outputs: usize,
+    /// Native copy for fallback / verification.
+    tensors: TensorModel,
+}
+
+impl PredictEngine {
+    /// Compile the predict artifact matching `(batch, trees, depth,
+    /// features, outputs)` and bind `tensors` to it.
+    pub fn new(
+        rt: &XlaRuntime,
+        tensors: TensorModel,
+        batch: usize,
+        features: usize,
+    ) -> Result<PredictEngine> {
+        let spec = rt
+            .find(
+                "predict",
+                &[
+                    ("n", batch),
+                    ("t", tensors.n_trees),
+                    ("d", tensors.depth),
+                    ("f", features),
+                    ("o", tensors.n_outputs),
+                ],
+            )
+            .with_context(|| {
+                format!(
+                    "no predict artifact for n={batch} t={} d={} f={features} o={}",
+                    tensors.n_trees, tensors.depth, tensors.n_outputs
+                )
+            })?
+            .clone();
+        let exe = rt.compile(&spec)?;
+
+        let i = tensors.n_internal_slots as i64;
+        let l = tensors.n_leaf_slots as i64;
+        let t = tensors.n_trees as i64;
+        let feat_lit = xla::Literal::vec1(&tensors.feat).reshape(&[t, i])?;
+        let thr_lit = xla::Literal::vec1(&tensors.thr).reshape(&[t, i])?;
+        let leaves_lit = xla::Literal::vec1(&tensors.leaves).reshape(&[t, l])?;
+        let base_lit = xla::Literal::vec1(&tensors.base);
+        let feat_buf = rt.to_device(&feat_lit)?;
+        let thr_buf = rt.to_device(&thr_lit)?;
+        let leaves_buf = rt.to_device(&leaves_lit)?;
+        let base_buf = rt.to_device(&base_lit)?;
+        // Force the async host→device copies to complete while the
+        // literals are certainly alive (cheap: done once per engine).
+        for buf in [&feat_buf, &thr_buf, &leaves_buf, &base_buf] {
+            let _ = buf.to_literal_sync()?;
+        }
+        let x_host = vec![0f32; batch * features];
+        let x_lit =
+            xla::Literal::vec1(&x_host).reshape(&[batch as i64, features as i64])?;
+        Ok(PredictEngine {
+            feat_buf,
+            thr_buf,
+            leaves_buf,
+            base_buf,
+            _model_literals: vec![feat_lit, thr_lit, leaves_lit, base_lit],
+            x_lit,
+            x_host,
+            exe,
+            runtime_batch: batch,
+            n_features: features,
+            n_outputs: tensors.n_outputs,
+            tensors,
+        })
+    }
+
+    /// The fixed batch size the artifact was compiled for.
+    pub fn batch_size(&self) -> usize {
+        self.runtime_batch
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    pub fn tensors(&self) -> &TensorModel {
+        &self.tensors
+    }
+
+    /// Predict raw scores for up to `batch_size` rows (each row may have
+    /// fewer than `n_features` features; zero-padded). Returns one
+    /// `Vec<f64>` of length `n_outputs` per input row.
+    pub fn predict(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
+        anyhow::ensure!(
+            rows.len() <= self.runtime_batch,
+            "batch {} exceeds compiled size {}",
+            rows.len(),
+            self.runtime_batch
+        );
+        // Pack + pad the batch into the reused host staging buffer and
+        // refresh the input literal in place.
+        self.x_host.iter_mut().for_each(|v| *v = 0.0);
+        for (r, row) in rows.iter().enumerate() {
+            anyhow::ensure!(row.len() <= self.n_features, "row has too many features");
+            self.x_host[r * self.n_features..r * self.n_features + row.len()]
+                .copy_from_slice(row);
+        }
+        self.x_lit.copy_raw_from(&self.x_host)?;
+        let x_buf = self.exe.client().buffer_from_host_literal(
+            Some(&self.exe.client().devices().into_iter().next().unwrap()),
+            &self.x_lit,
+        )?;
+
+        let out = self
+            .exe
+            .execute_b(&[&x_buf, &self.feat_buf, &self.thr_buf, &self.leaves_buf, &self.base_buf])?;
+        let lit = out[0][0].to_literal_sync()?;
+        let result = lit.to_tuple1()?;
+        let vals: Vec<f32> = result.to_vec()?;
+        anyhow::ensure!(vals.len() == self.runtime_batch * self.n_outputs);
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(r, _)| {
+                (0..self.n_outputs)
+                    .map(|k| vals[r * self.n_outputs + k] as f64)
+                    .collect()
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,181 @@
+//! Convert a trained [`GbdtModel`] into the fixed-shape complete-tree
+//! tensors the AOT predict artifacts expect.
+//!
+//! The artifact is compiled for `(T, depth, F, O)`; the model is padded:
+//!
+//! * every tree is completed at the artifact depth (early leaves are
+//!   replicated; pass-through slots route left via a `+∞` threshold),
+//! * the tree count is padded per output stream with zero-leaf trees,
+//! * the feature dimension only requires `model.n_features ≤ F`
+//!   (inputs are zero-padded by the predict engine).
+
+use crate::gbdt::GbdtModel;
+use anyhow::{bail, Result};
+
+/// Row-major tensors mirroring the artifact's parameter order.
+#[derive(Clone, Debug)]
+pub struct TensorModel {
+    /// `(T, I)` split features (as i32), row-major.
+    pub feat: Vec<i32>,
+    /// `(T, I)` split thresholds.
+    pub thr: Vec<f32>,
+    /// `(T, L)` leaf values.
+    pub leaves: Vec<f32>,
+    /// `(O,)` base scores.
+    pub base: Vec<f32>,
+    pub n_trees: usize,
+    pub n_internal_slots: usize,
+    pub n_leaf_slots: usize,
+    pub n_outputs: usize,
+    pub depth: usize,
+}
+
+/// Tensorize `model` for an artifact with `t_total` trees at `depth`,
+/// `f` input features and `o` output streams.
+pub fn tensorize(model: &GbdtModel, t_total: usize, depth: usize, f: usize, o: usize) -> Result<TensorModel> {
+    if model.n_outputs() != o {
+        bail!("model has {} outputs, artifact expects {o}", model.n_outputs());
+    }
+    if model.n_features > f {
+        bail!("model has {} features, artifact supports {f}", model.n_features);
+    }
+    if model.max_depth() > depth {
+        bail!("model depth {} exceeds artifact depth {depth}", model.max_depth());
+    }
+    let per_output = t_total / o;
+    if t_total % o != 0 {
+        bail!("tree budget {t_total} not divisible by outputs {o}");
+    }
+    if model.n_rounds() > per_output {
+        bail!("model has {} rounds, artifact fits {per_output} per output", model.n_rounds());
+    }
+
+    let i_slots = (1usize << depth) - 1;
+    let l_slots = 1usize << depth;
+    let mut feat = vec![0i32; t_total * i_slots];
+    let mut thr = vec![0f32; t_total * i_slots];
+    let mut leaves = vec![0f32; t_total * l_slots];
+
+    for (k, trees) in model.trees.iter().enumerate() {
+        for (r, tree) in trees.iter().enumerate() {
+            let ti = k * per_output + r;
+            let (internal, leaf_vals) = tree.to_complete_at(depth);
+            for (s, slot) in internal.iter().enumerate() {
+                match slot {
+                    Some((fi, _, t)) => {
+                        feat[ti * i_slots + s] = *fi as i32;
+                        thr[ti * i_slots + s] = *t;
+                    }
+                    None => {
+                        // Pass-through: always route left.
+                        feat[ti * i_slots + s] = 0;
+                        thr[ti * i_slots + s] = f32::INFINITY;
+                    }
+                }
+            }
+            for (s, v) in leaf_vals.iter().enumerate() {
+                leaves[ti * l_slots + s] = *v as f32;
+            }
+        }
+        // Remaining tree slots of this output stay zero-leaf (no-ops);
+        // their thresholds stay 0 which routes deterministically.
+    }
+
+    Ok(TensorModel {
+        feat,
+        thr,
+        leaves,
+        base: model.base_scores.iter().map(|&b| b as f32).collect(),
+        n_trees: t_total,
+        n_internal_slots: i_slots,
+        n_leaf_slots: l_slots,
+        n_outputs: o,
+        depth,
+    })
+}
+
+/// Pure-Rust evaluation of a [`TensorModel`] — the oracle the XLA parity
+/// tests compare against, and a fallback predictor when no artifacts
+/// are built.
+pub fn eval_tensor_model(tm: &TensorModel, x: &[f32]) -> Vec<f64> {
+    let per_output = tm.n_trees / tm.n_outputs;
+    (0..tm.n_outputs)
+        .map(|k| {
+            let mut acc = tm.base[k] as f64;
+            for r in 0..per_output {
+                let ti = k * per_output + r;
+                let mut i = 0usize;
+                while i < tm.n_internal_slots {
+                    let f = tm.feat[ti * tm.n_internal_slots + i] as usize;
+                    let t = tm.thr[ti * tm.n_internal_slots + i];
+                    i = if x[f] <= t { 2 * i + 1 } else { 2 * i + 2 };
+                }
+                acc += tm.leaves[ti * tm.n_leaf_slots + (i - tm.n_internal_slots)] as f64;
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::gbdt::{self, GbdtParams};
+
+    fn model(rounds: usize, depth: usize) -> (GbdtModel, crate::data::Dataset) {
+        let data = PaperDataset::BreastCancer.generate(21);
+        let data = data.select(&(0..400).collect::<Vec<_>>());
+        (gbdt::booster::train(&data, GbdtParams::paper(rounds, depth)), data)
+    }
+
+    #[test]
+    fn tensorized_matches_native_predictions() {
+        let (m, data) = model(12, 3);
+        let tm = tensorize(&m, 256, 4, 64, 1).unwrap();
+        for i in (0..data.n_rows()).step_by(17) {
+            let mut x = data.row(i);
+            x.resize(64, 0.0); // feature padding
+            let a = m.predict_raw(&data.row(i))[0];
+            let b = eval_tensor_model(&tm, &x)[0];
+            assert!((a - b).abs() < 1e-4, "row {i}: native {a} vs tensor {b}");
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_models() {
+        let (m, _) = model(4, 3);
+        assert!(tensorize(&m, 256, 2, 64, 1).is_err(), "depth overflow");
+        assert!(tensorize(&m, 2, 4, 64, 1).is_err(), "tree overflow");
+        assert!(tensorize(&m, 256, 4, 8, 1).is_err(), "feature overflow");
+        assert!(tensorize(&m, 256, 4, 64, 3).is_err(), "output mismatch");
+    }
+
+    #[test]
+    fn padding_trees_are_neutral() {
+        let (m, data) = model(3, 2);
+        let small = tensorize(&m, 4, 4, 64, 1).unwrap();
+        let big = tensorize(&m, 64, 4, 64, 1).unwrap();
+        let mut x = data.row(0);
+        x.resize(64, 0.0);
+        let a = eval_tensor_model(&small, &x)[0];
+        let b = eval_tensor_model(&big, &x)[0];
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multiclass_grouping() {
+        let data = PaperDataset::WineQuality.generate(22).select(&(0..600).collect::<Vec<_>>());
+        let m = gbdt::booster::train(&data, GbdtParams::paper(4, 2));
+        let tm = tensorize(&m, 7 * 8, 4, 64, 7).unwrap();
+        for i in (0..data.n_rows()).step_by(41) {
+            let mut x = data.row(i);
+            x.resize(64, 0.0);
+            let a = m.predict_raw(&data.row(i));
+            let b = eval_tensor_model(&tm, &x);
+            for (p, q) in a.iter().zip(&b) {
+                assert!((p - q).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,461 @@
+//! Per-figure experiment drivers (paper §4, Appendices D–E).
+//!
+//! Every driver takes explicit grid parameters so benches can run
+//! reduced grids while `examples/paper_figures.rs` runs fuller ones.
+//! Rows come back as plain structs; rendering lives in [`super::table`].
+
+use super::grid::{pow2_rounds, GridRun, Series, Snapshot};
+use crate::baselines::{guo, rf};
+use crate::data::synth::PaperDataset;
+use crate::data::{train_test_split, Dataset};
+use crate::gbdt::GbdtParams;
+use crate::layout::{encode, EncodeOptions, FeatureInfo, PackedModel};
+use crate::mcu::{McuSpec, ESP32_S3, NANO_33_BLE};
+use crate::metrics::mean_std;
+use crate::toad::ToadParams;
+
+/// Subsample + split one paper dataset for a sweep.
+pub fn prep(ds: PaperDataset, seed: u64, row_cap: usize) -> (Dataset, Dataset) {
+    let full = ds.generate(1000 + seed); // dataset instance fixed per seed
+    let n = full.n_rows().min(row_cap);
+    let sub = full.select(&(0..n).collect::<Vec<_>>());
+    train_test_split(&sub, 0.2, seed)
+}
+
+// ------------------------------------------------------------- Figure 4
+
+/// One (series, memory-limit) point of Figure 4.
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub dataset: &'static str,
+    pub series: String,
+    pub limit_bytes: usize,
+    /// Mean/std of the best reachable score across seeds (NaN mean if
+    /// nothing fits at this limit for some seed — those seeds are
+    /// skipped, `n` reports how many contributed).
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+/// Best score among snapshots with `size <= limit`.
+fn best_at(snapshots: &[Snapshot], limit: usize) -> Option<f64> {
+    snapshots
+        .iter()
+        .filter(|s| s.size_bytes <= limit)
+        .map(|s| s.score)
+        .max_by(|a, b| a.partial_cmp(b).unwrap())
+}
+
+/// The Figure 4 protocol: per seed, collect candidates over the grid
+/// per series; report best-at-limit aggregated over seeds.
+#[allow(clippy::too_many_arguments)]
+pub fn fig4_rows(
+    ds: PaperDataset,
+    seeds: &[u64],
+    depths: &[usize],
+    log_max_rounds: u32,
+    penalty_grid: &[(f64, f64)],
+    limits: &[usize],
+    row_cap: usize,
+) -> Vec<Fig4Row> {
+    let rounds = pow2_rounds(log_max_rounds);
+    let base_series = [Series::ToadPlain, Series::LgbmF32, Series::LgbmQ16, Series::LgbmArray];
+    let extra = [
+        Series::Cegb { feature_cost: 2.0, split_cost: 0.1 },
+        Series::Ccp { alpha: 0.01 },
+    ];
+
+    // candidates[series_label][seed] -> snapshots
+    let mut candidates: Vec<(String, Vec<Vec<Snapshot>>)> = Vec::new();
+    let mut series_labels: Vec<String> = Vec::new();
+    let mut push = |label: String, per_seed: Vec<Vec<Snapshot>>| {
+        series_labels.push(label.clone());
+        candidates.push((label, per_seed));
+    };
+
+    // Penalized ToaD: union of the penalty grid (best-at-limit over all).
+    let mut toad_pen: Vec<Vec<Snapshot>> = vec![Vec::new(); seeds.len()];
+    for (si, &seed) in seeds.iter().enumerate() {
+        let (tr, te) = prep(ds, seed, row_cap);
+        for &depth in depths {
+            for &(iota, xi) in penalty_grid {
+                let snaps =
+                    GridRun::run(&tr, &te, Series::ToadPenalized { iota, xi }, depth, &rounds);
+                toad_pen[si].extend(snaps);
+            }
+        }
+    }
+    push("toad(penalized)".into(), toad_pen);
+
+    for series in base_series.into_iter().chain(extra) {
+        let mut per_seed: Vec<Vec<Snapshot>> = vec![Vec::new(); seeds.len()];
+        for (si, &seed) in seeds.iter().enumerate() {
+            let (tr, te) = prep(ds, seed, row_cap);
+            for &depth in depths {
+                per_seed[si].extend(GridRun::run(&tr, &te, series, depth, &rounds));
+            }
+        }
+        push(series.label(), per_seed);
+    }
+
+    let mut rows = Vec::new();
+    for (label, per_seed) in &candidates {
+        for &limit in limits {
+            let scores: Vec<f64> =
+                per_seed.iter().filter_map(|snaps| best_at(snaps, limit)).collect();
+            let (mean, std) = mean_std(&scores);
+            rows.push(Fig4Row {
+                dataset: ds.name(),
+                series: label.clone(),
+                limit_bytes: limit,
+                mean,
+                std,
+                n: scores.len(),
+            });
+        }
+    }
+    rows
+}
+
+// ------------------------------------------------- Figures 5/7 (multivariate)
+
+/// One (ι, ξ) cell of the multivariate grids.
+#[derive(Clone, Debug)]
+pub struct MultiRow {
+    pub iota: f64,
+    pub xi: f64,
+    pub size_bytes: usize,
+    pub score: f64,
+}
+
+/// Figure 5/7 driver: one model per (ι, ξ) at fixed rounds/depth.
+pub fn multivariate_rows(
+    ds: PaperDataset,
+    seed: u64,
+    iotas: &[f64],
+    xis: &[f64],
+    rounds: usize,
+    depth: usize,
+    row_cap: usize,
+) -> Vec<MultiRow> {
+    let (tr, te) = prep(ds, seed, row_cap);
+    let mut rows = Vec::with_capacity(iotas.len() * xis.len());
+    for &iota in iotas {
+        for &xi in xis {
+            let snaps =
+                GridRun::run(&tr, &te, Series::ToadPenalized { iota, xi }, depth, &[rounds]);
+            let s = &snaps[0];
+            rows.push(MultiRow { iota, xi, size_bytes: s.size_bytes, score: s.score });
+        }
+    }
+    rows
+}
+
+/// Figure 5 driver: like [`multivariate_rows`] but trains each (ι, ξ)
+/// under a fixed `toad_forestsize` byte budget ("the maximum memory
+/// size is fixed, allowing for an unlimited number of trees and
+/// nodes", paper §4.2.1), which is the semantics Figure 5 reports.
+#[allow(clippy::too_many_arguments)]
+pub fn multivariate_budget_rows(
+    ds: PaperDataset,
+    seed: u64,
+    iotas: &[f64],
+    xis: &[f64],
+    max_rounds: usize,
+    depth: usize,
+    budget_bytes: usize,
+    row_cap: usize,
+) -> Vec<MultiRow> {
+    let (tr, te) = prep(ds, seed, row_cap);
+    let mut rows = Vec::with_capacity(iotas.len() * xis.len());
+    for &iota in iotas {
+        for &xi in xis {
+            let mut params = ToadParams::new(GbdtParams::paper(max_rounds, depth), iota, xi);
+            params.forestsize_bytes = Some(budget_bytes);
+            let m = crate::toad::train_toad_with_budget(&tr, &params);
+            rows.push(MultiRow {
+                iota,
+                xi,
+                size_bytes: m.size_bytes(),
+                score: m.model.score(&te),
+            });
+        }
+    }
+    rows
+}
+
+// ------------------------------------------------- Figure 6 (univariate)
+
+/// Which penalty the univariate sweep varies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PenaltyKind {
+    Feature,
+    Threshold,
+}
+
+/// One point of the univariate sensitivity analysis.
+#[derive(Clone, Debug)]
+pub struct UniRow {
+    pub penalty: f64,
+    pub score: f64,
+    pub n_features: usize,
+    pub n_global_values: usize,
+    pub reuse_factor: f64,
+}
+
+/// Figure 6 / Appendix E.2 driver.
+pub fn univariate_rows(
+    ds: PaperDataset,
+    seed: u64,
+    kind: PenaltyKind,
+    values: &[f64],
+    rounds: usize,
+    depth: usize,
+    row_cap: usize,
+) -> Vec<UniRow> {
+    let (tr, te) = prep(ds, seed, row_cap);
+    values
+        .iter()
+        .map(|&v| {
+            let (iota, xi) = match kind {
+                PenaltyKind::Feature => (v, 0.0),
+                PenaltyKind::Threshold => (0.0, v),
+            };
+            let snaps =
+                GridRun::run(&tr, &te, Series::ToadPenalized { iota, xi }, depth, &[rounds]);
+            let s = &snaps[0];
+            UniRow {
+                penalty: v,
+                score: s.score,
+                n_features: s.stats.n_features_used,
+                n_global_values: s.stats.n_global_values(),
+                reuse_factor: s.stats.reuse_factor(),
+            }
+        })
+        .collect()
+}
+
+// ------------------------------------------------- Figure 8 (RF comparison)
+
+/// One (series, limit) point of the Appendix D comparison.
+#[derive(Clone, Debug)]
+pub struct Fig8Row {
+    pub dataset: &'static str,
+    pub series: String,
+    pub limit_bytes: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+/// Appendix D / Figure 8: boosted methods vs RF and Guo-pruned RF.
+/// Classification datasets only; tree budget capped at 256.
+pub fn fig8_rows(
+    ds: PaperDataset,
+    seeds: &[u64],
+    depths: &[usize],
+    limits: &[usize],
+    row_cap: usize,
+) -> Vec<Fig8Row> {
+    assert!(ds.task().is_classification(), "fig8 is classification-only");
+    let rounds = pow2_rounds(8); // up to 256 trees, as in the appendix
+    let mut out = Vec::new();
+
+    // Boosted series reuse the Figure 4 machinery.
+    for series in [Series::ToadPenalized { iota: 2.0, xi: 1.0 }, Series::LgbmF32] {
+        let mut per_seed: Vec<Vec<Snapshot>> = vec![Vec::new(); seeds.len()];
+        for (si, &seed) in seeds.iter().enumerate() {
+            let (tr, te) = prep(ds, seed, row_cap);
+            for &depth in depths {
+                per_seed[si].extend(GridRun::run(&tr, &te, series, depth, &rounds));
+            }
+        }
+        for &limit in limits {
+            let scores: Vec<f64> =
+                per_seed.iter().filter_map(|s| best_at(s, limit)).collect();
+            let (mean, std) = mean_std(&scores);
+            out.push(Fig8Row {
+                dataset: ds.name(),
+                series: if matches!(series, Series::LgbmF32) {
+                    "lgbm_f32".into()
+                } else {
+                    "toad(penalized)".into()
+                },
+                limit_bytes: limit,
+                mean,
+                std,
+                n: scores.len(),
+            });
+        }
+    }
+
+    // RF + Guo-pruned RF: prefixes of a 256-tree forest.
+    let mut rf_per_seed: Vec<Vec<(usize, f64)>> = Vec::new(); // (bytes, score)
+    let mut guo_per_seed: Vec<Vec<(usize, f64)>> = Vec::new();
+    for &seed in seeds {
+        let (tr_all, te) = prep(ds, seed, row_cap);
+        let (tr, prune_set) = train_test_split(&tr_all, 0.25, seed ^ 0x9);
+        let forest = rf::train_rf(
+            &tr,
+            rf::RfParams { n_trees: 256, max_depth: 8, seed, ..Default::default() },
+        );
+        let order = guo::order_trees(&forest, &prune_set, 0.5);
+        let mut rf_points = Vec::new();
+        let mut guo_points = Vec::new();
+        for &k in &rounds {
+            let natural = forest.subensemble(&(0..k).collect::<Vec<_>>());
+            rf_points.push((natural.pointer_f32_bytes(), natural.score(&te)));
+            let pruned = forest.subensemble(&order[..k]);
+            guo_points.push((pruned.pointer_f32_bytes(), pruned.score(&te)));
+        }
+        rf_per_seed.push(rf_points);
+        guo_per_seed.push(guo_points);
+    }
+    for (label, per_seed) in [("rf", &rf_per_seed), ("rf_guo_pruned", &guo_per_seed)] {
+        for &limit in limits {
+            let scores: Vec<f64> = per_seed
+                .iter()
+                .filter_map(|points| {
+                    points
+                        .iter()
+                        .filter(|(b, _)| *b <= limit)
+                        .map(|(_, s)| *s)
+                        .max_by(|a, b| a.partial_cmp(b).unwrap())
+                })
+                .collect();
+            let (mean, std) = mean_std(&scores);
+            out.push(Fig8Row {
+                dataset: ds.name(),
+                series: label.into(),
+                limit_bytes: limit,
+                mean,
+                std,
+                n: scores.len(),
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------- Table 2 (latency)
+
+/// One hardware row of Table 2.
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub hardware: &'static str,
+    pub toad_us: f64,
+    pub lgbm_us: f64,
+    pub slowdown: f64,
+}
+
+/// Appendix E.1 / Table 2: per-prediction latency of the bit-packed
+/// ToaD interpreter vs a pointer-layout traversal, on the MCU cycle
+/// model (DESIGN.md §5 hardware substitution). The model matches the
+/// paper's setup: Covertype-binary at a 0.5 KB budget (4 trees, depth 4).
+pub fn table2_rows(seed: u64, row_cap: usize) -> (Vec<Table2Row>, PackedModel, Dataset) {
+    let (tr, te) = prep(PaperDataset::CovertypeBinary, seed, row_cap);
+    let mut params = ToadParams::new(GbdtParams::paper(4, 4), 2.0, 1.0);
+    params.forestsize_bytes = Some(512);
+    let m = crate::toad::train_toad_with_budget(&tr, &params);
+    let finfo = FeatureInfo::from_dataset(&tr);
+    let blob = encode(&m.model, &finfo, &EncodeOptions::default());
+    let packed = PackedModel::from_bytes(blob);
+    let probe = te.row(0);
+    let rows = [ESP32_S3, NANO_33_BLE]
+        .iter()
+        .map(|spec: &McuSpec| {
+            let toad_s = spec.toad_latency(&packed, &probe);
+            let lgbm_s = spec.pointer_latency(&packed, &probe);
+            Table2Row {
+                hardware: spec.name,
+                toad_us: toad_s * 1e6,
+                lgbm_us: lgbm_s * 1e6,
+                slowdown: toad_s / lgbm_s,
+            }
+        })
+        .collect();
+    (rows, packed, te)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_reduced_grid_shapes() {
+        let limits = [512usize, 2048, 8192];
+        let rows = fig4_rows(
+            PaperDataset::BreastCancer,
+            &[1, 2],
+            &[2],
+            3,
+            &[(2.0, 1.0)],
+            &limits,
+            400,
+        );
+        // 7 series × 3 limits
+        assert_eq!(rows.len(), 7 * 3);
+        // At a generous limit every series must reach a decent score.
+        for r in rows.iter().filter(|r| r.limit_bytes == 8192) {
+            assert!(r.n == 2, "{}: {} seeds", r.series, r.n);
+            assert!(r.mean > 0.8, "{} mean {}", r.series, r.mean);
+        }
+        // ToaD at the tightest limit should not trail the f32 pointer
+        // baseline (it fits strictly more model into the budget).
+        let toad = rows
+            .iter()
+            .find(|r| r.series == "toad(penalized)" && r.limit_bytes == 512)
+            .unwrap();
+        let lgbm = rows.iter().find(|r| r.series == "lgbm_f32" && r.limit_bytes == 512).unwrap();
+        assert!(
+            toad.mean >= lgbm.mean - 0.02,
+            "toad {} vs lgbm {} at 512B",
+            toad.mean,
+            lgbm.mean
+        );
+    }
+
+    #[test]
+    fn univariate_threshold_penalty_reduces_values() {
+        let rows = univariate_rows(
+            PaperDataset::BreastCancer,
+            1,
+            PenaltyKind::Threshold,
+            &[0.0, 1.0, 64.0, 4096.0],
+            16,
+            2,
+            400,
+        );
+        assert!(rows.last().unwrap().n_global_values < rows[0].n_global_values);
+    }
+
+    #[test]
+    fn multivariate_grid_dimensions() {
+        let rows = multivariate_rows(
+            PaperDataset::CaliforniaHousing,
+            1,
+            &[0.0, 8.0],
+            &[0.0, 8.0],
+            8,
+            2,
+            1000,
+        );
+        assert_eq!(rows.len(), 4);
+        // More penalty, less (or equal) memory.
+        let free = rows.iter().find(|r| r.iota == 0.0 && r.xi == 0.0).unwrap();
+        let heavy = rows.iter().find(|r| r.iota == 8.0 && r.xi == 8.0).unwrap();
+        assert!(heavy.size_bytes <= free.size_bytes);
+    }
+
+    #[test]
+    fn table2_slowdown_band() {
+        let (rows, packed, _) = table2_rows(1, 3000);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.toad_us > r.lgbm_us, "{}: toad must be slower", r.hardware);
+            assert!((2.0..=15.0).contains(&r.slowdown), "{}: slowdown {}", r.hardware, r.slowdown);
+        }
+        assert!(packed.size_bytes() <= 512);
+    }
+}

@@ -1,0 +1,394 @@
+//! Snapshotting grid runs.
+//!
+//! The paper's grid (§4) crosses iterations 2^0..2^10 with depths
+//! 2^0..2^3 and penalty values. Training a separate model per iteration
+//! count would waste a factor of ~11: a boosting run's K-round prefix
+//! *is* the K-round model. [`GridRun`] therefore boosts once per
+//! (method, depth, penalty) configuration and snapshots score + sizes
+//! at each requested round.
+
+use crate::baselines::ccp;
+use crate::baselines::cegb::CegbPenalty;
+use crate::data::{Dataset, Task};
+use crate::gbdt::booster::{Booster, GbdtParams};
+use crate::gbdt::loss::Objective;
+use crate::gbdt::splitter::{NoPenalty, SplitPenalty};
+use crate::gbdt::{GbdtModel, Tree};
+use crate::layout::toad_format::size_breakdown;
+use crate::layout::{baseline, EncodeOptions, FeatureInfo};
+use crate::toad::{ReuseStats, ToadPenalty};
+
+/// A method series of the Figure 4 comparison. The three LightGBM size
+/// accountings (`LgbmF32`, `LgbmQ16`, `LgbmArray`) and `ToadPlain`
+/// share one unpenalized training run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Series {
+    /// ToaD layout + reuse penalties.
+    ToadPenalized { iota: f64, xi: f64 },
+    /// ToaD layout, ι = ξ = 0.
+    ToadPlain,
+    /// float32 pointer layout (128 bits/node).
+    LgbmF32,
+    /// fp16-quantized pointer layout (64 bits/node); score measured on
+    /// the quantized model.
+    LgbmQ16,
+    /// pointer-less array layout at float32.
+    LgbmArray,
+    /// Cost-efficient gradient boosting (pointer f32 accounting).
+    Cegb { feature_cost: f64, split_cost: f64 },
+    /// Per-tree cost-complexity pruning (pointer f32 accounting).
+    Ccp { alpha: f64 },
+}
+
+impl Series {
+    pub fn label(&self) -> String {
+        match self {
+            Series::ToadPenalized { iota, xi } => format!("toad(i={iota},x={xi})"),
+            Series::ToadPlain => "toad(plain)".into(),
+            Series::LgbmF32 => "lgbm_f32".into(),
+            Series::LgbmQ16 => "lgbm_q16".into(),
+            Series::LgbmArray => "lgbm_array".into(),
+            Series::Cegb { .. } => "cegb".into(),
+            Series::Ccp { .. } => "ccp".into(),
+        }
+    }
+}
+
+/// One measured point of a grid run.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub rounds: usize,
+    pub score: f64,
+    pub size_bytes: usize,
+    pub stats: ReuseStats,
+}
+
+/// Incremental test-set evaluation: raw scores updated tree by tree.
+struct TestEval {
+    rows: Vec<Vec<f32>>,
+    raw: Vec<Vec<f64>>, // [output][row]
+    objective: Objective,
+}
+
+impl TestEval {
+    fn new(test: &Dataset, base: &[f64], objective: Objective) -> TestEval {
+        let rows: Vec<Vec<f32>> = (0..test.n_rows()).map(|i| test.row(i)).collect();
+        let raw = base.iter().map(|&b| vec![b; rows.len()]).collect();
+        TestEval { rows, raw, objective }
+    }
+
+    fn add_tree(&mut self, output: usize, tree: &Tree) {
+        for (i, row) in self.rows.iter().enumerate() {
+            self.raw[output][i] += tree.predict_row(row);
+        }
+    }
+
+    fn score(&self, test: &Dataset) -> f64 {
+        match test.task {
+            Task::Regression => {
+                crate::metrics::r2_score(&test.targets, &self.raw[0])
+            }
+            _ => {
+                let preds: Vec<usize> = (0..self.rows.len())
+                    .map(|i| {
+                        let raw_row: Vec<f64> =
+                            (0..self.raw.len()).map(|k| self.raw[k][i]).collect();
+                        self.objective.predict_class(&raw_row)
+                    })
+                    .collect();
+                crate::metrics::accuracy(&test.labels, &preds)
+            }
+        }
+    }
+}
+
+/// Quantize thresholds and leaf values of a model to fp16 (the paper's
+/// "quantized LightGBM" baseline).
+pub fn quantize_f16(model: &GbdtModel) -> GbdtModel {
+    use crate::bitio::{f16_bits_to_f32, f32_to_f16_bits};
+    use crate::gbdt::tree::Node;
+    let mut q = model.clone();
+    for tree in q.trees.iter_mut().flatten() {
+        for node in &mut tree.nodes {
+            match node {
+                Node::Internal { threshold, .. } => {
+                    *threshold = f16_bits_to_f32(f32_to_f16_bits(*threshold));
+                }
+                Node::Leaf { value } => {
+                    *value = f16_bits_to_f32(f32_to_f16_bits(*value as f32)) as f64;
+                }
+            }
+        }
+    }
+    q
+}
+
+/// Run one boosting configuration and snapshot the requested rounds.
+///
+/// `snap_rounds` must be ascending (e.g. `[1, 2, 4, …, 1024]`).
+pub struct GridRun;
+
+impl GridRun {
+    pub fn run(
+        train: &Dataset,
+        test: &Dataset,
+        series: Series,
+        depth: usize,
+        snap_rounds: &[usize],
+    ) -> Vec<Snapshot> {
+        let max_rounds = *snap_rounds.last().expect("non-empty rounds");
+        let params = GbdtParams::paper(max_rounds, depth);
+        match series {
+            Series::ToadPenalized { iota, xi } => {
+                let pen = ToadPenalty::new(train.n_features(), iota, xi);
+                Self::boost_and_snapshot(train, test, params, pen, snap_rounds, series)
+            }
+            Series::ToadPlain | Series::LgbmF32 | Series::LgbmQ16 | Series::LgbmArray => {
+                Self::boost_and_snapshot(train, test, params, NoPenalty, snap_rounds, series)
+            }
+            Series::Cegb { feature_cost, split_cost } => {
+                let pen = CegbPenalty::uniform(train.n_features(), feature_cost, split_cost);
+                Self::boost_and_snapshot(train, test, params, pen, snap_rounds, series)
+            }
+            Series::Ccp { alpha } => {
+                Self::boost_ccp_and_snapshot(train, test, params, alpha, snap_rounds)
+            }
+        }
+    }
+
+    fn size_of(series: Series, model: &GbdtModel, finfo: &[FeatureInfo]) -> usize {
+        match series {
+            Series::ToadPenalized { .. } | Series::ToadPlain => {
+                size_breakdown(model, finfo, &EncodeOptions::default()).total_bytes()
+            }
+            Series::LgbmF32 | Series::Cegb { .. } | Series::Ccp { .. } => {
+                baseline::pointer_f32_bytes(model)
+            }
+            Series::LgbmQ16 => baseline::pointer_f16_bytes(model),
+            Series::LgbmArray => baseline::array_f32_bytes(model),
+        }
+    }
+
+    fn boost_and_snapshot<P: SplitPenalty>(
+        train: &Dataset,
+        test: &Dataset,
+        params: GbdtParams,
+        penalty: P,
+        snap_rounds: &[usize],
+        series: Series,
+    ) -> Vec<Snapshot> {
+        let finfo = FeatureInfo::from_dataset(train);
+        let mut booster = Booster::new(train, params, penalty);
+        let objective = booster.model().objective;
+        let quantized = matches!(series, Series::LgbmQ16);
+        let mut eval = TestEval::new(test, &booster.model().base_scores, objective);
+        let mut snapshots = Vec::with_capacity(snap_rounds.len());
+        let mut next = 0usize;
+        for round in 1..=params.n_rounds {
+            let any_split = booster.boost_round();
+            // Feed the new trees (one per output) into the test eval.
+            for k in 0..booster.model().n_outputs() {
+                let tree = &booster.model().trees[k][round - 1];
+                if quantized {
+                    let mut m1 = GbdtModel {
+                        objective,
+                        base_scores: vec![0.0],
+                        trees: vec![vec![tree.clone()]],
+                        n_features: train.n_features(),
+                        name: String::new(),
+                    };
+                    m1 = quantize_f16(&m1);
+                    eval.add_tree(k, &m1.trees[0][0]);
+                } else {
+                    eval.add_tree(k, tree);
+                }
+            }
+            while next < snap_rounds.len() && snap_rounds[next] == round {
+                let model = booster.model();
+                let size = if quantized {
+                    Self::size_of(series, model, &finfo)
+                } else {
+                    Self::size_of(series, model, &finfo)
+                };
+                snapshots.push(Snapshot {
+                    rounds: round,
+                    score: eval.score(test),
+                    size_bytes: size,
+                    stats: ReuseStats::from_model(model),
+                });
+                next += 1;
+            }
+            if !any_split {
+                break; // every later round would be an identical bare leaf
+            }
+        }
+        // Early stop: the remaining snapshot rounds equal the final state.
+        if next < snap_rounds.len() {
+            let model = booster.model();
+            let size = Self::size_of(series, model, &finfo);
+            let score = eval.score(test);
+            let stats = ReuseStats::from_model(model);
+            for &r in &snap_rounds[next..] {
+                snapshots.push(Snapshot { rounds: r, score, size_bytes: size, stats: stats.clone() });
+            }
+        }
+        snapshots
+    }
+
+    fn boost_ccp_and_snapshot(
+        train: &Dataset,
+        test: &Dataset,
+        params: GbdtParams,
+        alpha: f64,
+        snap_rounds: &[usize],
+    ) -> Vec<Snapshot> {
+        let finfo = FeatureInfo::from_dataset(train);
+        let lambda = params.lambda;
+        let scale = params.learning_rate;
+        let mut booster = Booster::new(train, params, NoPenalty);
+        let objective = booster.model().objective;
+        let mut eval = TestEval::new(test, &booster.model().base_scores, objective);
+        let mut snapshots = Vec::with_capacity(snap_rounds.len());
+        let mut next = 0usize;
+        for round in 1..=params.n_rounds {
+            let any_split = booster.boost_round_map(|binned, grad, hess, tree| {
+                ccp::prune_tree(&tree, binned, grad, hess, lambda, scale, alpha)
+            });
+            for k in 0..booster.model().n_outputs() {
+                let tree = booster.model().trees[k][round - 1].clone();
+                eval.add_tree(k, &tree);
+            }
+            while next < snap_rounds.len() && snap_rounds[next] == round {
+                let model = booster.model();
+                snapshots.push(Snapshot {
+                    rounds: round,
+                    score: eval.score(test),
+                    size_bytes: Self::size_of(Series::Ccp { alpha }, model, &finfo),
+                    stats: ReuseStats::from_model(model),
+                });
+                next += 1;
+            }
+            if !any_split {
+                break;
+            }
+        }
+        if next < snap_rounds.len() {
+            let model = booster.model();
+            let size = Self::size_of(Series::Ccp { alpha }, model, &finfo);
+            let score = eval.score(test);
+            let stats = ReuseStats::from_model(model);
+            for &r in &snap_rounds[next..] {
+                snapshots.push(Snapshot { rounds: r, score, size_bytes: size, stats: stats.clone() });
+            }
+        }
+        snapshots
+    }
+}
+
+/// Powers of two `2^0..=2^log_max`, the paper's iteration grid.
+pub fn pow2_rounds(log_max: u32) -> Vec<usize> {
+    (0..=log_max).map(|e| 1usize << e).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::data::train_test_split;
+
+    fn data() -> (Dataset, Dataset) {
+        let d = PaperDataset::BreastCancer.generate(91).select(&(0..400).collect::<Vec<_>>());
+        train_test_split(&d, 0.2, 1)
+    }
+
+    #[test]
+    fn snapshots_match_direct_training() {
+        let (tr, te) = data();
+        let snaps = GridRun::run(&tr, &te, Series::ToadPlain, 2, &[1, 4, 8]);
+        assert_eq!(snaps.len(), 3);
+        // Direct 4-round training must agree with the 4-round snapshot.
+        let direct = crate::gbdt::booster::train(&tr, GbdtParams::paper(4, 2));
+        let want = direct.score(&te);
+        assert!(
+            (snaps[1].score - want).abs() < 1e-9,
+            "prefix snapshot {} vs direct {}",
+            snaps[1].score,
+            want
+        );
+        // Sizes grow with rounds.
+        assert!(snaps[0].size_bytes <= snaps[1].size_bytes);
+        assert!(snaps[1].size_bytes <= snaps[2].size_bytes);
+    }
+
+    #[test]
+    fn series_size_orderings() {
+        let (tr, te) = data();
+        let f32s = GridRun::run(&tr, &te, Series::LgbmF32, 2, &[8]);
+        let q16s = GridRun::run(&tr, &te, Series::LgbmQ16, 2, &[8]);
+        let arrs = GridRun::run(&tr, &te, Series::LgbmArray, 2, &[8]);
+        let toad = GridRun::run(&tr, &te, Series::ToadPlain, 2, &[8]);
+        assert_eq!(q16s[0].size_bytes * 2, f32s[0].size_bytes);
+        assert!(arrs[0].size_bytes <= f32s[0].size_bytes, "array strips pointers");
+        assert!(
+            toad[0].size_bytes < arrs[0].size_bytes,
+            "toad {} must undercut array {}",
+            toad[0].size_bytes,
+            arrs[0].size_bytes
+        );
+    }
+
+    #[test]
+    fn penalized_run_is_smaller() {
+        let (tr, te) = data();
+        let plain = GridRun::run(&tr, &te, Series::ToadPlain, 2, &[16]);
+        let pen = GridRun::run(
+            &tr,
+            &te,
+            Series::ToadPenalized { iota: 4.0, xi: 2.0 },
+            2,
+            &[16],
+        );
+        assert!(pen[0].size_bytes <= plain[0].size_bytes);
+        assert!(pen[0].stats.n_thresholds <= plain[0].stats.n_thresholds);
+    }
+
+    #[test]
+    fn quantized_score_close_to_exact() {
+        let (tr, te) = data();
+        let f32s = GridRun::run(&tr, &te, Series::LgbmF32, 2, &[8]);
+        let q16s = GridRun::run(&tr, &te, Series::LgbmQ16, 2, &[8]);
+        assert!((f32s[0].score - q16s[0].score).abs() < 0.05);
+    }
+
+    #[test]
+    fn ccp_and_cegb_series_run() {
+        let (tr, te) = data();
+        let ccp = GridRun::run(&tr, &te, Series::Ccp { alpha: 0.01 }, 3, &[4]);
+        let cegb = GridRun::run(
+            &tr,
+            &te,
+            Series::Cegb { feature_cost: 1.0, split_cost: 0.1 },
+            3,
+            &[4],
+        );
+        assert!(ccp[0].score > 0.5);
+        assert!(cegb[0].score > 0.5);
+    }
+
+    #[test]
+    fn pow2_grid() {
+        assert_eq!(pow2_rounds(3), vec![1, 2, 4, 8]);
+        assert_eq!(pow2_rounds(0), vec![1]);
+    }
+
+    #[test]
+    fn quantize_f16_changes_precision_only() {
+        let (tr, _) = data();
+        let m = crate::gbdt::booster::train(&tr, GbdtParams::paper(4, 2));
+        let q = quantize_f16(&m);
+        assert_eq!(m.n_trees(), q.n_trees());
+        for (a, b) in m.trees[0].iter().zip(&q.trees[0]) {
+            assert_eq!(a.n_nodes(), b.n_nodes());
+        }
+    }
+}

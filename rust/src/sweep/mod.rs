@@ -1,0 +1,16 @@
+//! The experiment sweep harness: regenerates every table and figure of
+//! the paper's evaluation (see DESIGN.md §3 for the index).
+//!
+//! * [`grid`] — snapshotting grid runs: one boosting run per
+//!   (method, depth, penalties) yields *every* iteration count in the
+//!   grid (a K-round prefix of a boosting run is exactly the K-round
+//!   run, because boosting is incremental and the reuse registries grow
+//!   monotonically).
+//! * [`figures`] — per-figure drivers (Fig. 4–8, Table 2, appendices).
+//! * [`table`] — plain-text/TSV row emission shared by benches.
+
+pub mod figures;
+pub mod grid;
+pub mod table;
+
+pub use grid::{GridRun, Series, Snapshot};

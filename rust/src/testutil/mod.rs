@@ -1,0 +1,3 @@
+//! Test utilities, including the in-repo property-testing framework.
+
+pub mod prop;

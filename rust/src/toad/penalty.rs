@@ -1,0 +1,257 @@
+//! The ToaD reuse penalty (paper §3.1, Eq. 2/3, Appendix A).
+//!
+//! The modified regularizer `Ω_l(t_m) = Ω(t_m) + ι·|F_U| + ξ·Σ_f |T^f|`
+//! charges the objective once for every *distinct* feature the ensemble
+//! uses and once for every distinct threshold per feature. Folded into
+//! the split gain this becomes `Δ_l = Δ − s_f·ι − s_t·ξ`, where `s_f`
+//! (`s_t`) indicates that the candidate split would introduce a feature
+//! (threshold) not yet used by any tree built so far — *including* the
+//! tree currently being grown.
+//!
+//! Note that a split on a brand-new feature necessarily also introduces
+//! a new threshold for it, so it is charged `ι + ξ`.
+
+use crate::gbdt::splitter::SplitPenalty;
+use std::collections::HashSet;
+
+/// Penalty growth shape (paper §3.1, footnote 3).
+///
+/// * `Linear` — Eq. 2: every new feature costs ι, every new threshold
+///   ξ (the regularizer the paper uses throughout its evaluation).
+/// * `Escalating` — the footnote's alternative
+///   `Ω_e = Ω + ι·Σ_{j=1}^{|F_U|} j + ξ·Σ_{j=1}^{p} j`: the *marginal*
+///   cost of the (k+1)-th distinct feature is `ι·(k+1)` (and likewise
+///   for thresholds), so each additional distinct value is charged
+///   progressively more.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PenaltyShape {
+    #[default]
+    Linear,
+    Escalating,
+}
+
+/// Reuse registries shared across all trees (and, for multiclass, all
+/// per-class ensembles) of one training run.
+#[derive(Clone, Debug)]
+pub struct ToadPenalty {
+    /// Feature penalty ι (`toad_penalty_feature`).
+    pub iota: f64,
+    /// Threshold penalty ξ (`toad_penalty_threshold`).
+    pub xi: f64,
+    /// Linear (paper default) or escalating (footnote 3) growth.
+    pub shape: PenaltyShape,
+    /// `F_U`: features used so far.
+    used_features: Vec<bool>,
+    n_used_features: usize,
+    /// `T^f`: threshold boundary indices used so far, per feature.
+    used_thresholds: Vec<HashSet<u16>>,
+    n_used_thresholds: usize,
+    /// Bumped whenever a registry grows (see `SplitPenalty::version`).
+    version: u64,
+}
+
+impl ToadPenalty {
+    pub fn new(n_features: usize, iota: f64, xi: f64) -> ToadPenalty {
+        Self::with_shape(n_features, iota, xi, PenaltyShape::Linear)
+    }
+
+    /// Construct with an explicit penalty growth shape.
+    pub fn with_shape(
+        n_features: usize,
+        iota: f64,
+        xi: f64,
+        shape: PenaltyShape,
+    ) -> ToadPenalty {
+        ToadPenalty {
+            iota,
+            xi,
+            shape,
+            used_features: vec![false; n_features],
+            n_used_features: 0,
+            used_thresholds: vec![HashSet::new(); n_features],
+            n_used_thresholds: 0,
+            version: 0,
+        }
+    }
+
+    /// |F_U| — number of distinct features used.
+    pub fn n_features_used(&self) -> usize {
+        self.n_used_features
+    }
+
+    /// Σ_f |T^f| — total distinct thresholds across features.
+    pub fn n_thresholds_used(&self) -> usize {
+        self.n_used_thresholds
+    }
+
+    /// The set of used feature indices, sorted.
+    pub fn features_used(&self) -> Vec<usize> {
+        self.used_features
+            .iter()
+            .enumerate()
+            .filter_map(|(f, &u)| u.then_some(f))
+            .collect()
+    }
+
+    /// Sorted thresholds (boundary indices) used for feature `f`.
+    pub fn thresholds_used(&self, f: usize) -> Vec<u16> {
+        let mut v: Vec<u16> = self.used_thresholds[f].iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The regularizer value accumulated so far: `ι·|F_U| + ξ·Σ|T^f|`
+    /// (linear) or the footnote's triangular sums (escalating).
+    pub fn regularizer_value(&self) -> f64 {
+        let (nf, nt) = (self.n_used_features as f64, self.n_used_thresholds as f64);
+        match self.shape {
+            PenaltyShape::Linear => self.iota * nf + self.xi * nt,
+            PenaltyShape::Escalating => {
+                self.iota * nf * (nf + 1.0) / 2.0 + self.xi * nt * (nt + 1.0) / 2.0
+            }
+        }
+    }
+
+    /// Marginal cost of introducing one more distinct feature.
+    #[inline]
+    fn feature_cost(&self) -> f64 {
+        match self.shape {
+            PenaltyShape::Linear => self.iota,
+            PenaltyShape::Escalating => self.iota * (self.n_used_features + 1) as f64,
+        }
+    }
+
+    /// Marginal cost of introducing one more distinct threshold.
+    #[inline]
+    fn threshold_cost(&self) -> f64 {
+        match self.shape {
+            PenaltyShape::Linear => self.xi,
+            PenaltyShape::Escalating => self.xi * (self.n_used_thresholds + 1) as f64,
+        }
+    }
+}
+
+impl SplitPenalty for ToadPenalty {
+    #[inline]
+    fn penalty(&self, feature: usize, bin: u16) -> f64 {
+        let s_f = !self.used_features[feature];
+        // A new feature implies a new threshold for that feature.
+        let s_t = s_f || !self.used_thresholds[feature].contains(&bin);
+        (s_f as u8 as f64) * self.feature_cost() + (s_t as u8 as f64) * self.threshold_cost()
+    }
+
+    fn on_split(&mut self, feature: usize, bin: u16) {
+        let mut grew = false;
+        if !self.used_features[feature] {
+            self.used_features[feature] = true;
+            self.n_used_features += 1;
+            grew = true;
+        }
+        if self.used_thresholds[feature].insert(bin) {
+            self.n_used_thresholds += 1;
+            grew = true;
+        }
+        if grew {
+            self.version += 1;
+        }
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_feature_charges_both() {
+        let p = ToadPenalty::new(4, 2.0, 0.5);
+        assert_eq!(p.penalty(1, 7), 2.5);
+    }
+
+    #[test]
+    fn reused_feature_new_threshold_charges_xi_only() {
+        let mut p = ToadPenalty::new(4, 2.0, 0.5);
+        p.on_split(1, 7);
+        assert_eq!(p.penalty(1, 8), 0.5);
+    }
+
+    #[test]
+    fn full_reuse_is_free() {
+        let mut p = ToadPenalty::new(4, 2.0, 0.5);
+        p.on_split(1, 7);
+        assert_eq!(p.penalty(1, 7), 0.0);
+    }
+
+    #[test]
+    fn version_bumps_only_on_growth() {
+        let mut p = ToadPenalty::new(4, 1.0, 1.0);
+        assert_eq!(p.version(), 0);
+        p.on_split(0, 3);
+        let v1 = p.version();
+        assert!(v1 > 0);
+        p.on_split(0, 3); // no growth
+        assert_eq!(p.version(), v1);
+        p.on_split(0, 4); // new threshold
+        assert!(p.version() > v1);
+    }
+
+    #[test]
+    fn counters_and_sets() {
+        let mut p = ToadPenalty::new(8, 1.0, 1.0);
+        p.on_split(2, 1);
+        p.on_split(2, 5);
+        p.on_split(6, 1);
+        assert_eq!(p.n_features_used(), 2);
+        assert_eq!(p.n_thresholds_used(), 3);
+        assert_eq!(p.features_used(), vec![2, 6]);
+        assert_eq!(p.thresholds_used(2), vec![1, 5]);
+        assert_eq!(p.thresholds_used(6), vec![1]);
+        assert_eq!(p.regularizer_value(), 2.0 + 3.0);
+    }
+
+    #[test]
+    fn escalating_marginal_costs_grow() {
+        let mut p = ToadPenalty::with_shape(8, 1.0, 0.5, PenaltyShape::Escalating);
+        // First feature+threshold: 1·ι + 1·ξ.
+        assert_eq!(p.penalty(0, 0), 1.0 + 0.5);
+        p.on_split(0, 0);
+        // Second feature: 2·ι; its threshold is the 2nd overall: 2·ξ.
+        assert_eq!(p.penalty(1, 0), 2.0 + 1.0);
+        // Reused feature, new threshold: only 2·ξ.
+        assert_eq!(p.penalty(0, 1), 1.0);
+        p.on_split(0, 1);
+        // Third threshold now costs 3·ξ.
+        assert_eq!(p.penalty(0, 2), 1.5);
+    }
+
+    #[test]
+    fn escalating_regularizer_is_triangular() {
+        let mut p = ToadPenalty::with_shape(8, 2.0, 1.0, PenaltyShape::Escalating);
+        p.on_split(0, 0);
+        p.on_split(1, 0);
+        p.on_split(1, 1);
+        // |F_U| = 2, p = 3: ι·(1+2) + ξ·(1+2+3) = 6 + 6.
+        assert_eq!(p.regularizer_value(), 12.0);
+    }
+
+    #[test]
+    fn linear_matches_paper_eq2() {
+        let mut p = ToadPenalty::new(8, 2.0, 1.0);
+        p.on_split(0, 0);
+        p.on_split(1, 0);
+        p.on_split(1, 1);
+        assert_eq!(p.regularizer_value(), 2.0 * 2.0 + 1.0 * 3.0);
+    }
+
+    #[test]
+    fn zero_penalties_are_neutral() {
+        // ι = ξ = 0 must behave exactly like NoPenalty — this is the
+        // "ToaD (layout only)" configuration of Figure 4.
+        let p = ToadPenalty::new(4, 0.0, 0.0);
+        assert_eq!(p.penalty(0, 0), 0.0);
+        assert_eq!(p.penalty(3, 9), 0.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Reuse accounting over trained ensembles.
+//!
+//! The univariate sensitivity analysis (paper §4.3) tracks, per model:
+//! the number of distinct features, the number of *global values*
+//! (distinct thresholds + distinct leaf values), and the **reuse factor**
+//!
+//! ```text
+//! ReF = (#internal nodes + #leaves) / #global values
+//! ```
+//!
+//! `ReF = 1` means a naive one-value-per-node layout; `ReF = 2` means
+//! every stored value is used twice on average.
+
+use crate::gbdt::{GbdtModel, Tree};
+use std::collections::HashSet;
+
+/// Reuse statistics of a trained ensemble.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReuseStats {
+    /// |F_U| — distinct features used by any split.
+    pub n_features_used: usize,
+    /// Σ_f |T^f| — distinct `(feature, threshold)` pairs.
+    pub n_thresholds: usize,
+    /// Distinct leaf values (bit-exact f32 comparison, as stored).
+    pub n_leaf_values: usize,
+    /// Total internal nodes across all trees.
+    pub n_internal_nodes: usize,
+    /// Total leaves across all trees.
+    pub n_leaves: usize,
+}
+
+impl ReuseStats {
+    /// Compute the statistics from a trained model.
+    pub fn from_model(model: &GbdtModel) -> ReuseStats {
+        let mut features: HashSet<usize> = HashSet::new();
+        let mut thresholds: HashSet<(usize, u16)> = HashSet::new();
+        let mut leaf_values: HashSet<u32> = HashSet::new();
+        let mut n_internal = 0usize;
+        let mut n_leaves = 0usize;
+        for tree in model.trees.iter().flatten() {
+            collect_tree(tree, &mut features, &mut thresholds, &mut leaf_values);
+            n_internal += tree.n_internal();
+            n_leaves += tree.n_leaves();
+        }
+        ReuseStats {
+            n_features_used: features.len(),
+            n_thresholds: thresholds.len(),
+            n_leaf_values: leaf_values.len(),
+            n_internal_nodes: n_internal,
+            n_leaves,
+        }
+    }
+
+    /// Number of global values (thresholds + leaf values) — the
+    /// denominator of ReF and the y-axis of Figure 6 (bottom).
+    pub fn n_global_values(&self) -> usize {
+        self.n_thresholds + self.n_leaf_values
+    }
+
+    /// The reuse factor ReF (paper §4.3).
+    pub fn reuse_factor(&self) -> f64 {
+        let refs = self.n_internal_nodes + self.n_leaves;
+        let values = self.n_global_values();
+        if values == 0 {
+            1.0
+        } else {
+            refs as f64 / values as f64
+        }
+    }
+}
+
+fn collect_tree(
+    tree: &Tree,
+    features: &mut HashSet<usize>,
+    thresholds: &mut HashSet<(usize, u16)>,
+    leaf_values: &mut HashSet<u32>,
+) {
+    for (f, b, _) in tree.splits() {
+        features.insert(f);
+        thresholds.insert((f, b));
+    }
+    for v in tree.leaf_values() {
+        leaf_values.insert((v as f32).to_bits());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdt::loss::Objective;
+    use crate::gbdt::tree::Node;
+
+    fn model_with_reuse() -> GbdtModel {
+        // Two trees sharing feature 0 / bin 3 and one leaf value.
+        let t1 = Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 3, threshold: 0.5, left: 1, right: 2 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 2.0 },
+            ],
+        };
+        let t2 = Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 3, threshold: 0.5, left: 1, right: 2 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 3.0 },
+            ],
+        };
+        GbdtModel {
+            objective: Objective::L2,
+            base_scores: vec![0.0],
+            trees: vec![vec![t1, t2]],
+            n_features: 2,
+            name: "m".into(),
+        }
+    }
+
+    #[test]
+    fn counts_distinct_values() {
+        let s = ReuseStats::from_model(&model_with_reuse());
+        assert_eq!(s.n_features_used, 1);
+        assert_eq!(s.n_thresholds, 1);
+        assert_eq!(s.n_leaf_values, 3); // {1.0, 2.0, 3.0}
+        assert_eq!(s.n_internal_nodes, 2);
+        assert_eq!(s.n_leaves, 4);
+        assert_eq!(s.n_global_values(), 4);
+        // ReF = (2 + 4) / (1 + 3) = 1.5
+        assert!((s.reuse_factor() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_reuse_gives_ref_one() {
+        // A single stump: 1 threshold + 2 leaf values = 3 values, 3 refs.
+        let t = Tree {
+            nodes: vec![
+                Node::Internal { feature: 1, bin: 0, threshold: 0.1, left: 1, right: 2 },
+                Node::Leaf { value: -1.0 },
+                Node::Leaf { value: 1.0 },
+            ],
+        };
+        let m = GbdtModel {
+            objective: Objective::L2,
+            base_scores: vec![0.0],
+            trees: vec![vec![t]],
+            n_features: 2,
+            name: "m".into(),
+        };
+        let s = ReuseStats::from_model(&m);
+        assert!((s.reuse_factor() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bare_leaf_model() {
+        let m = GbdtModel {
+            objective: Objective::L2,
+            base_scores: vec![0.0],
+            trees: vec![vec![Tree::leaf(0.5)]],
+            n_features: 2,
+            name: "m".into(),
+        };
+        let s = ReuseStats::from_model(&m);
+        assert_eq!(s.n_features_used, 0);
+        assert_eq!(s.n_global_values(), 1);
+        assert_eq!(s.n_leaves, 1);
+    }
+}

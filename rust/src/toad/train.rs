@@ -1,0 +1,284 @@
+//! ToaD training entry points.
+//!
+//! [`train_toad`] runs a penalized boosting run and packages the model
+//! with its reuse statistics and encoded size. [`train_toad_with_budget`]
+//! implements the `toad_forestsize` option (paper §4.1): boosting
+//! continues only while the *encoded* model fits the byte budget, so a
+//! model can be trained directly for, say, a 32 KB Arduino.
+
+use super::penalty::ToadPenalty;
+use super::stats::ReuseStats;
+use crate::data::Dataset;
+use crate::gbdt::booster::{Booster, GbdtParams};
+use crate::gbdt::GbdtModel;
+use crate::layout::{encode, toad_format::size_breakdown, EncodeOptions, FeatureInfo};
+
+/// Hyperparameters of a ToaD run: the underlying booster's parameters
+/// plus the two paper knobs and an optional byte budget.
+#[derive(Clone, Copy, Debug)]
+pub struct ToadParams {
+    pub gbdt: GbdtParams,
+    /// Feature penalty ι (`toad_penalty_feature`).
+    pub iota: f64,
+    /// Threshold penalty ξ (`toad_penalty_threshold`).
+    pub xi: f64,
+    /// Linear (paper Eq. 2, the default) or escalating (footnote 3).
+    pub shape: super::penalty::PenaltyShape,
+    /// Optional `toad_forestsize`: stop boosting before the encoded
+    /// model would exceed this many bytes.
+    pub forestsize_bytes: Option<usize>,
+    pub encode: EncodeOptions,
+}
+
+impl ToadParams {
+    pub fn new(gbdt: GbdtParams, iota: f64, xi: f64) -> ToadParams {
+        ToadParams {
+            gbdt,
+            iota,
+            xi,
+            shape: super::penalty::PenaltyShape::Linear,
+            forestsize_bytes: None,
+            encode: EncodeOptions::default(),
+        }
+    }
+}
+
+/// A trained ToaD model: the ensemble, its packed encoding, and the
+/// reuse bookkeeping the paper's analyses report.
+#[derive(Clone, Debug)]
+pub struct ToadModel {
+    pub model: GbdtModel,
+    pub stats: ReuseStats,
+    /// Encoded blob in the ToaD layout.
+    pub blob: Vec<u8>,
+    /// |F_U| and Σ|T^f| as tracked by the training-time registries
+    /// (equal to `stats` counts; kept for cross-checking).
+    pub registry_features: usize,
+    pub registry_thresholds: usize,
+}
+
+impl ToadModel {
+    pub fn size_bytes(&self) -> usize {
+        self.blob.len()
+    }
+
+    pub fn reuse_factor(&self) -> f64 {
+        self.stats.reuse_factor()
+    }
+}
+
+/// Train with the reuse penalties (no byte budget).
+pub fn train_toad(data: &Dataset, params: &ToadParams) -> ToadModel {
+    let penalty =
+        ToadPenalty::with_shape(data.n_features(), params.iota, params.xi, params.shape);
+    let mut booster = Booster::new(data, params.gbdt, penalty);
+    booster.run();
+    finalize(data, params, booster)
+}
+
+/// Train under a byte budget: after each boosting round the model is
+/// size-checked in the ToaD layout; the run stops at the last round that
+/// still fits (the overshooting round is rolled back).
+pub fn train_toad_with_budget(data: &Dataset, params: &ToadParams) -> ToadModel {
+    let budget = params.forestsize_bytes.expect("budget training requires forestsize_bytes");
+    let finfo = FeatureInfo::from_dataset(data);
+    let penalty =
+        ToadPenalty::with_shape(data.n_features(), params.iota, params.xi, params.shape);
+    let mut booster = Booster::new(data, params.gbdt, penalty);
+
+    // Snapshot of the last model that fit the budget.
+    let mut last_fit: Option<GbdtModel> = None;
+    while booster.rounds_done() < params.gbdt.n_rounds {
+        let any_split = booster.boost_round();
+        let bd = size_breakdown(booster.model(), &finfo, &params.encode);
+        if bd.total_bytes() <= budget {
+            last_fit = Some(booster.model().clone());
+        } else {
+            break;
+        }
+        if !any_split {
+            break; // further rounds would add identical bare leaves
+        }
+    }
+    let model = last_fit.unwrap_or_else(|| {
+        // Even one round overshoots: fall back to the base-score-only
+        // model (no trees), the smallest expressible ensemble.
+        let mut m = booster.model().clone();
+        for trees in &mut m.trees {
+            trees.clear();
+        }
+        m
+    });
+    package(data, params, model, booster.penalty().clone())
+}
+
+fn finalize(data: &Dataset, params: &ToadParams, booster: Booster<ToadPenalty>) -> ToadModel {
+    let penalty = booster.penalty().clone();
+    let model = booster.into_model();
+    package(data, params, model, penalty)
+}
+
+fn package(
+    data: &Dataset,
+    params: &ToadParams,
+    model: GbdtModel,
+    penalty: ToadPenalty,
+) -> ToadModel {
+    let finfo = FeatureInfo::from_dataset(data);
+    let blob = encode(&model, &finfo, &params.encode);
+    let stats = ReuseStats::from_model(&model);
+    ToadModel {
+        stats,
+        blob,
+        registry_features: penalty.n_features_used(),
+        registry_thresholds: penalty.n_thresholds_used(),
+        model,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::data::train_test_split;
+
+    fn small(ds: PaperDataset, n: usize, seed: u64) -> (Dataset, Dataset) {
+        let full = ds.generate(seed);
+        let data = full.select(&(0..n.min(full.n_rows())).collect::<Vec<_>>());
+        train_test_split(&data, 0.2, seed)
+    }
+
+    #[test]
+    fn zero_penalties_reproduce_plain_training_exactly() {
+        // The "ToaD (layout only)" series of Figure 4 assumes ι=ξ=0
+        // training is *identical* to plain LightGBM-style training —
+        // same trees, same predictions (the penalty hook must be
+        // perfectly neutral, including its lazy-revalidation path).
+        for ds in [PaperDataset::BreastCancer, PaperDataset::Kin8nm] {
+            let (train_set, test_set) = small(ds, 500, 9);
+            let gbdt = GbdtParams::paper(12, 3);
+            let toad = train_toad(&train_set, &ToadParams::new(gbdt, 0.0, 0.0));
+            let plain = crate::gbdt::booster::train(&train_set, gbdt);
+            assert_eq!(toad.model.n_trees(), plain.n_trees());
+            for i in (0..test_set.n_rows()).step_by(13) {
+                let x = test_set.row(i);
+                assert_eq!(
+                    toad.model.predict_raw(&x),
+                    plain.predict_raw(&x),
+                    "{}: row {i} diverged",
+                    ds.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn escalating_shape_is_more_aggressive_at_small_penalty() {
+        // With tiny per-unit penalties the escalating shape's growing
+        // marginal costs must not use *more* distinct thresholds than
+        // the linear shape at the same (ι, ξ).
+        let (train_set, _) = small(PaperDataset::CovertypeBinary, 3000, 10);
+        let gbdt = GbdtParams::paper(32, 2);
+        let lin = train_toad(&train_set, &ToadParams::new(gbdt, 0.1, 0.05));
+        let mut esc_params = ToadParams::new(gbdt, 0.1, 0.05);
+        esc_params.shape = crate::toad::penalty::PenaltyShape::Escalating;
+        let esc = train_toad(&train_set, &esc_params);
+        assert!(
+            esc.stats.n_thresholds <= lin.stats.n_thresholds,
+            "escalating {} > linear {}",
+            esc.stats.n_thresholds,
+            lin.stats.n_thresholds
+        );
+    }
+
+    #[test]
+    fn registries_match_model_stats() {
+        let (train_set, _) = small(PaperDataset::BreastCancer, 569, 1);
+        let params = ToadParams::new(GbdtParams::paper(16, 2), 0.5, 0.1);
+        let m = train_toad(&train_set, &params);
+        assert_eq!(m.registry_features, m.stats.n_features_used);
+        assert_eq!(m.registry_thresholds, m.stats.n_thresholds);
+    }
+
+    #[test]
+    fn higher_feature_penalty_uses_fewer_features() {
+        let (train_set, _) = small(PaperDataset::BreastCancer, 569, 2);
+        let gbdt = GbdtParams::paper(32, 2);
+        let lo = train_toad(&train_set, &ToadParams::new(gbdt, 0.0, 0.0));
+        let hi = train_toad(&train_set, &ToadParams::new(gbdt, 50.0, 0.0));
+        assert!(
+            hi.stats.n_features_used <= lo.stats.n_features_used,
+            "ι should not increase features: {} vs {}",
+            hi.stats.n_features_used,
+            lo.stats.n_features_used
+        );
+        assert!(hi.stats.n_features_used >= 1 || hi.model.n_trees() == 0);
+    }
+
+    #[test]
+    fn higher_threshold_penalty_uses_fewer_thresholds() {
+        let (train_set, _) = small(PaperDataset::CaliforniaHousing, 3000, 3);
+        let gbdt = GbdtParams::paper(32, 2);
+        let lo = train_toad(&train_set, &ToadParams::new(gbdt, 0.0, 0.0));
+        let hi = train_toad(&train_set, &ToadParams::new(gbdt, 0.0, 100.0));
+        assert!(
+            hi.stats.n_thresholds < lo.stats.n_thresholds,
+            "ξ should reduce thresholds: {} vs {}",
+            hi.stats.n_thresholds,
+            lo.stats.n_thresholds
+        );
+    }
+
+    #[test]
+    fn penalties_shrink_encoded_size_at_similar_rounds() {
+        let (train_set, _) = small(PaperDataset::Mushroom, 3000, 4);
+        let gbdt = GbdtParams::paper(32, 3);
+        let plain = train_toad(&train_set, &ToadParams::new(gbdt, 0.0, 0.0));
+        let pen = train_toad(&train_set, &ToadParams::new(gbdt, 8.0, 4.0));
+        assert!(
+            pen.size_bytes() <= plain.size_bytes(),
+            "penalized {} > plain {}",
+            pen.size_bytes(),
+            plain.size_bytes()
+        );
+    }
+
+    #[test]
+    fn budget_training_respects_limit() {
+        let (train_set, _) = small(PaperDataset::BreastCancer, 569, 5);
+        for budget in [256usize, 512, 1024, 4096] {
+            let mut params = ToadParams::new(GbdtParams::paper(64, 2), 1.0, 0.5);
+            params.forestsize_bytes = Some(budget);
+            let m = train_toad_with_budget(&train_set, &params);
+            assert!(
+                m.size_bytes() <= budget,
+                "model {} bytes exceeds budget {budget}",
+                m.size_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn budget_training_uses_budget() {
+        // A generous budget must produce a bigger (better-fitting) model
+        // than a tiny one.
+        let (train_set, test_set) = small(PaperDataset::BreastCancer, 569, 6);
+        let mk = |budget| {
+            let mut params = ToadParams::new(GbdtParams::paper(64, 2), 0.5, 0.25);
+            params.forestsize_bytes = Some(budget);
+            train_toad_with_budget(&train_set, &params)
+        };
+        let tiny = mk(200);
+        let big = mk(8192);
+        assert!(big.size_bytes() > tiny.size_bytes());
+        assert!(big.model.score(&test_set) >= tiny.model.score(&test_set) - 0.02);
+    }
+
+    #[test]
+    fn reuse_factor_at_least_one_for_nonempty() {
+        let (train_set, _) = small(PaperDataset::KrVsKp, 1500, 7);
+        let params = ToadParams::new(GbdtParams::paper(16, 2), 0.0, 2.0);
+        let m = train_toad(&train_set, &params);
+        assert!(m.reuse_factor() >= 1.0 - 1e-9, "ReF {}", m.reuse_factor());
+    }
+}

@@ -1,0 +1,96 @@
+//! Integration: full coordinator stack — sweep candidates → planner →
+//! devices + XLA gateway → served predictions.
+
+use std::time::Duration;
+use toad::coordinator::batcher::{Backend, Batcher, BatcherConfig};
+use toad::coordinator::{DeploymentPlanner, DeviceKind, FleetServer, ModelCard, SimulatedDevice};
+use toad::data::synth::PaperDataset;
+use toad::data::train_test_split;
+use toad::gbdt::GbdtParams;
+use toad::runtime::tensorize;
+use toad::toad::{train_toad, ToadParams};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("MANIFEST.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping xla-gateway test: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn plan_deploy_and_serve_on_device() {
+    let data = PaperDataset::BreastCancer.generate(5);
+    let (train_set, test_set) = train_test_split(&data, 0.2, 5);
+
+    // Sweep a few configurations into a candidate pool.
+    let mut planner = DeploymentPlanner::new();
+    for (rounds, iota, xi) in [(4usize, 0.0, 0.0), (16, 1.0, 0.5), (64, 2.0, 1.0)] {
+        let params = ToadParams::new(GbdtParams::paper(rounds, 2), iota, xi);
+        let m = train_toad(&train_set, &params);
+        planner.add_candidate(ModelCard {
+            id: format!("bc_r{rounds}_i{iota}_x{xi}"),
+            score: m.model.score(&test_set),
+            size_bytes: m.size_bytes(),
+            blob: m.blob.clone(),
+        });
+    }
+
+    // Deploy the best fit onto a tiny node and serve.
+    let mut device = SimulatedDevice::new(0, DeviceKind::TinyNode); // 1 KB
+    let chosen = planner.deploy_to(&mut device).unwrap();
+    assert!(device.model_size().unwrap() <= 1024, "chosen {chosen} too big");
+
+    let mut server = FleetServer::new();
+    server.add_device("bc", device);
+    let mut correct = 0usize;
+    let n = test_set.n_rows();
+    for i in 0..n {
+        let out = server.predict("bc", test_set.row(i)).unwrap();
+        let pred = (out[0] > 0.0) as usize;
+        if pred == test_set.labels[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.85, "served accuracy {acc} too low for a 1 KB model");
+    let m = server.metrics("bc").unwrap();
+    assert_eq!(m.count(), n);
+    assert!(server.fleet_sim_busy_seconds() > 0.0, "device time accounted");
+}
+
+#[test]
+fn xla_gateway_serves_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let data = PaperDataset::CovertypeBinary.generate(6);
+    let data = data.select(&(0..4000).collect::<Vec<_>>());
+    let (train_set, test_set) = train_test_split(&data, 0.2, 6);
+    let params = ToadParams::new(GbdtParams::paper(32, 3), 1.0, 0.5);
+    let m = train_toad(&train_set, &params);
+    let tm = tensorize(&m.model, 256, 4, 64, 1).unwrap();
+
+    let batcher = Batcher::spawn(
+        tm,
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+        Backend::Xla { artifacts_dir: dir, features: 64 },
+    );
+    let mut server = FleetServer::new();
+    server.add_gateway("cov", batcher);
+
+    let n = 200usize;
+    let mut correct = 0usize;
+    for i in 0..n {
+        let out = server.predict("cov", test_set.row(i)).unwrap();
+        let pred = (out[0] > 0.0) as usize;
+        let want = m.model.predict_class(&test_set.row(i));
+        assert_eq!(pred, want, "gateway disagrees with source model at row {i}");
+        if pred == test_set.labels[i] {
+            correct += 1;
+        }
+    }
+    assert!(correct as f64 / n as f64 > 0.6);
+    let rec = server.metrics("cov").unwrap();
+    assert_eq!(rec.count(), n);
+}

@@ -1,0 +1,147 @@
+//! Integration: the XLA predict path must agree with native inference.
+//!
+//! Requires `make artifacts` to have run; tests skip (with a notice)
+//! when the artifact directory is absent so `cargo test` stays green in
+//! a fresh checkout.
+
+use toad::data::synth::PaperDataset;
+use toad::data::train_test_split;
+use toad::gbdt::{self, GbdtParams};
+use toad::runtime::{tensorize, PredictEngine, XlaRuntime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("MANIFEST.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime test: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn xla_predict_matches_native_binary() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(dir).unwrap();
+
+    let data = PaperDataset::BreastCancer.generate(31);
+    let (train_set, test_set) = train_test_split(&data, 0.2, 1);
+    let model = gbdt::booster::train(&train_set, GbdtParams::paper(24, 3));
+
+    let tm = tensorize(&model, 256, 4, 64, 1).unwrap();
+    let mut engine = PredictEngine::new(&rt, tm, 256, 64).unwrap();
+
+    let n = test_set.n_rows().min(256);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| test_set.row(i)).collect();
+    let got = engine.predict(&rows).unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        let want = model.predict_raw(row)[0];
+        let have = got[i][0];
+        assert!(
+            (want - have).abs() < 1e-3 * want.abs().max(1.0),
+            "row {i}: native {want} vs xla {have}"
+        );
+    }
+}
+
+#[test]
+fn xla_predict_matches_native_multiclass() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(dir).unwrap();
+
+    let data = PaperDataset::WineQuality.generate(32);
+    let data = data.select(&(0..1200).collect::<Vec<_>>());
+    let (train_set, test_set) = train_test_split(&data, 0.2, 2);
+    // Wine has 7 classes; the o8 artifact serves up to 8 outputs, so
+    // train a 7-output model and pad the output dimension... the
+    // artifact is exact in `o`, so train with an 8th empty class
+    // stream instead: we simply check the o8 artifact against a model
+    // whose task has been embedded into 8 outputs.
+    let model = gbdt::booster::train(&train_set, GbdtParams::paper(8, 3));
+    assert_eq!(model.n_outputs(), 7);
+    // Embed: add an empty 8th output stream (base −inf is unnecessary;
+    // argmax over 7 real streams is preserved with base 0 trees absent
+    // only if raw8 < max(raw0..6); use a very negative base).
+    let mut model8 = model.clone();
+    model8.trees.push(Vec::new());
+    model8.base_scores.push(-1e9);
+
+    let tm = tensorize(&model8, 256, 4, 64, 8).unwrap();
+    let mut engine = PredictEngine::new(&rt, tm, 256, 64).unwrap();
+
+    let n = test_set.n_rows().min(128);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| test_set.row(i)).collect();
+    let got = engine.predict(&rows).unwrap();
+    let mut agree = 0usize;
+    for (i, row) in rows.iter().enumerate() {
+        let want = model.predict_class(row);
+        let have = got[i]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if want == have {
+            agree += 1;
+        }
+    }
+    assert!(agree as f64 / n as f64 > 0.99, "class agreement {agree}/{n}");
+}
+
+#[test]
+fn small_batches_are_padded() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(dir).unwrap();
+    let data = PaperDataset::Kin8nm.generate(33).select(&(0..500).collect::<Vec<_>>());
+    let model = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
+    let tm = tensorize(&model, 256, 4, 64, 1).unwrap();
+    let mut engine = PredictEngine::new(&rt, tm, 32, 64).unwrap();
+
+    // 3-row batch through a 32-batch artifact.
+    let rows: Vec<Vec<f32>> = (0..3).map(|i| data.row(i)).collect();
+    let got = engine.predict(&rows).unwrap();
+    assert_eq!(got.len(), 3);
+    for (i, row) in rows.iter().enumerate() {
+        let want = model.predict_raw(row)[0];
+        assert!((want - got[i][0]).abs() < 1e-3 * want.abs().max(1.0));
+    }
+}
+
+#[test]
+fn xla_histogram_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(dir).unwrap();
+    let engine = toad::runtime::HistogramEngine::new(&rt, 4096, 64, 64).unwrap();
+
+    // Random binned data within the artifact's bin budget.
+    let data = PaperDataset::CovertypeBinary.generate(41);
+    let data = data.select(&(0..3000).collect::<Vec<_>>());
+    let binner = toad::data::Binner::fit(&data, 64);
+    let binned = binner.bin_dataset(&data);
+    let n = data.n_rows();
+    let grad: Vec<f64> = (0..n).map(|i| ((i % 13) as f64 - 6.0) / 3.0).collect();
+    let hess: Vec<f64> = (0..n).map(|i| 0.5 + ((i % 5) as f64) / 10.0).collect();
+
+    let got = engine.run(&binned.bins, &grad, &hess).unwrap();
+
+    // Native oracle.
+    let bins_per: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+    let mut native = toad::gbdt::histogram::HistogramSet::new(&bins_per);
+    let rows: Vec<u32> = (0..n as u32).collect();
+    native.build(&binned, &rows, &grad, &hess);
+
+    for f in 0..binner.n_features() {
+        for b in 0..binner.n_bins(f) {
+            let (g, h, _) = native.bin(f, b);
+            let [xg, xh] = got[engine.index(f, b)];
+            assert!(
+                (g - xg).abs() < 1e-2 * g.abs().max(1.0),
+                "feature {f} bin {b}: grad {g} vs xla {xg}"
+            );
+            assert!(
+                (h - xh).abs() < 1e-2 * h.abs().max(1.0),
+                "feature {f} bin {b}: hess {h} vs xla {xh}"
+            );
+        }
+    }
+}

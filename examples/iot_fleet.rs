@@ -5,16 +5,15 @@
 //! * deploys it to a fleet of simulated memory-constrained devices
 //!   (on-device bit-packed inference + MCU-model time accounting),
 //! * AND serves the same model through the gateway path: dynamic
-//!   batching into the AOT-compiled XLA predict artifact (Python only
-//!   ever ran at `make artifacts` time),
+//!   batching into the flattened native batch engine — or, with the
+//!   `xla` feature and `make artifacts`, into the AOT-compiled XLA
+//!   predict artifact,
 //! * streams sensor-like requests through both, reports accuracy,
 //!   latency percentiles, and throughput.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example iot_fleet
+//! cargo run --release --example iot_fleet
 //! ```
-//!
-//! Results from this run are recorded in EXPERIMENTS.md.
 
 use std::time::{Duration, Instant};
 use toad::coordinator::batcher::{Backend, Batcher, BatcherConfig};
@@ -22,7 +21,6 @@ use toad::coordinator::{DeviceKind, FleetServer, SimulatedDevice};
 use toad::data::synth::PaperDataset;
 use toad::data::train_test_split;
 use toad::gbdt::GbdtParams;
-use toad::runtime::tensorize;
 use toad::sweep::table::human_bytes;
 use toad::toad::{train_toad, ToadParams};
 
@@ -51,21 +49,15 @@ fn main() {
         server.add_device("cov", dev);
     }
 
-    // ---- gateway: XLA-batched inference (if artifacts are built) -----
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let have_xla = artifacts.join("MANIFEST.txt").exists();
-    if have_xla {
-        let tm = tensorize(&model.model, 256, 4, 64, 1).expect("model fits artifact shape");
-        let batcher = Batcher::spawn(
-            tm,
-            BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(1) },
-            Backend::Xla { artifacts_dir: artifacts, features: 64 },
-        );
-        server.add_gateway("cov", batcher);
-        println!("gateway: XLA predict artifact online (batch 32)");
-    } else {
-        println!("gateway: artifacts missing, on-device only (run `make artifacts`)");
-    }
+    // ---- gateway: batched inference ----------------------------------
+    // The XLA artifact backend takes over when it is compiled in and
+    // artifacts exist; the flattened native engine is the default.
+    let backend = gateway_backend(&model.model);
+    let batcher = Batcher::spawn(
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(1) },
+        backend,
+    );
+    server.add_gateway("cov", batcher);
 
     // ---- serve a sensor stream ---------------------------------------
     let n_requests = 2000usize;
@@ -90,7 +82,25 @@ fn main() {
         "simulated on-device compute: {:.1} ms across the fleet \
          (~{:.0} us/prediction on Cortex-M4 @48 MHz)",
         server.fleet_sim_busy_seconds() * 1e3,
-        server.fleet_sim_busy_seconds() * 1e6
-            / (n_requests as f64 * if have_xla { 0.8 } else { 1.0 })
+        server.fleet_sim_busy_seconds() * 1e6 / (n_requests as f64 * 0.8)
     );
+}
+
+#[cfg(feature = "xla")]
+fn gateway_backend(model: &toad::gbdt::GbdtModel) -> Backend {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("MANIFEST.txt").exists() {
+        let tm = toad::runtime::tensorize(model, 256, 4, 64, 1)
+            .expect("model fits artifact shape");
+        println!("gateway: XLA predict artifact online (batch 32)");
+        return Backend::Xla { artifacts_dir: artifacts, features: 64, tensors: tm };
+    }
+    println!("gateway: artifacts missing, using native flat engine (run `make artifacts`)");
+    Backend::Native(model.flatten())
+}
+
+#[cfg(not(feature = "xla"))]
+fn gateway_backend(model: &toad::gbdt::GbdtModel) -> Backend {
+    println!("gateway: native flat batch engine online (batch 32)");
+    Backend::Native(model.flatten())
 }

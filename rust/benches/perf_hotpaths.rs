@@ -1,17 +1,22 @@
-//! §Perf: micro/meso benchmarks of every hot path in the stack.
-//! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
+//! §Perf: micro/meso benchmarks of every hot path in the stack, with
+//! before/after pairs for the columnar histogram kernel and the blocked
+//! flat inference engine. Results feed EXPERIMENTS.md §Perf and are
+//! also written machine-readable to `BENCH_hotpaths.json` at the repo
+//! root (kernel → ns/op) so the perf trajectory is tracked across PRs.
 //!
-//! L3 native: histogram build, split scan, boosting round, native and
-//! bit-packed inference, ToaD encode/decode. Runtime: XLA batch predict
-//! throughput and gateway batching overhead (needs `make artifacts`).
+//! ```bash
+//! cargo bench --bench perf_hotpaths
+//! ```
 
-use std::time::{Duration, Instant};
+use std::time::Instant;
 use toad::data::synth::PaperDataset;
 use toad::data::Binner;
-use toad::gbdt::histogram::HistogramSet;
+use toad::gbdt::histogram::{HistogramPool, HistogramSet};
 use toad::gbdt::{self, GbdtParams};
+use toad::inference::FlatModel;
 use toad::layout::{encode, EncodeOptions, FeatureInfo, PackedModel};
 
+/// Wall-clock a closure; returns seconds per iteration and prints.
 fn time<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     // Warmup.
     f();
@@ -24,6 +29,38 @@ fn time<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
+/// `(key, ns/op)` records destined for BENCH_hotpaths.json.
+struct Records(Vec<(String, f64)>);
+
+impl Records {
+    fn push(&mut self, key: &str, secs_per_op: f64) {
+        self.0.push((key.to_string(), secs_per_op * 1e9));
+    }
+
+    fn lookup(&self, key: &str) -> f64 {
+        self.0.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(f64::NAN)
+    }
+
+    /// Hand-rolled JSON (the build is dependency-free by design).
+    fn to_json(&self, dataset: &str, speedups: &[(&str, f64)]) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
+        s.push_str("  \"unit\": \"ns_per_op\",\n");
+        s.push_str("  \"kernels\": {\n");
+        for (i, (k, v)) in self.0.iter().enumerate() {
+            let comma = if i + 1 == self.0.len() { "" } else { "," };
+            s.push_str(&format!("    \"{k}\": {v:.1}{comma}\n"));
+        }
+        s.push_str("  },\n  \"speedups\": {\n");
+        for (i, (k, v)) in speedups.iter().enumerate() {
+            let comma = if i + 1 == speedups.len() { "" } else { "," };
+            s.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+}
+
 fn main() {
     let data = PaperDataset::CovertypeBinary.generate(1);
     let data = data.select(&(0..16_384).collect::<Vec<_>>());
@@ -31,93 +68,196 @@ fn main() {
     let binned = binner.bin_dataset(&data);
     let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
     let n = data.n_rows();
+    let d = data.n_features();
     let grad: Vec<f64> = (0..n).map(|i| (i % 7) as f64 - 3.0).collect();
     let hess = vec![1.0f64; n];
     let rows: Vec<u32> = (0..n as u32).collect();
+    // A leaf-like subset (every other row) exercises the gathered path.
+    let half_rows: Vec<u32> = (0..n as u32).step_by(2).collect();
 
-    println!("== L3 hot paths (covtype_binary, {n} rows × {} features) ==", data.n_features());
+    let mut rec = Records(Vec::new());
 
-    // Histogram build: the training hot path.
+    println!("== L3 hot paths (covtype_binary, {n} rows x {d} features) ==");
+
+    // ---- histogram build: scalar baseline vs columnar kernel ---------
     let mut hist = HistogramSet::new(&bins);
-    let per = time("histogram build (16k rows, 54 feats)", 20, || {
-        hist.build(&binned, &rows, &grad, &hess);
+    let per = time("histogram build scalar (16k rows, before)", 20, || {
+        hist.build_scalar(&binned, &rows, &grad, &hess);
     });
-    let pts = (n * data.n_features()) as f64 / per;
-    println!("{:44} {:>12.1} M (row,feature)/s", "  -> throughput", pts / 1e6);
+    rec.push("histogram_build_scalar", per);
 
-    // One boosting round end to end.
-    time("boosting round (depth 3, 16k rows)", 5, || {
+    let mut pool = HistogramPool::new(&bins);
+    let per_fast = time("histogram build columnar+pool (after)", 20, || {
+        let h = pool.build(&binned, &rows, &grad, &hess);
+        pool.recycle(h);
+    });
+    rec.push("histogram_build_columnar", per_fast);
+    let pts = (n * d) as f64 / per_fast;
+    println!("{:44} {:>12.1} M (row,feature)/s", "  -> columnar throughput", pts / 1e6);
+
+    let per = time("histogram subset scalar (8k rows, before)", 20, || {
+        hist.build_scalar(&binned, &half_rows, &grad, &hess);
+    });
+    rec.push("histogram_subset_scalar", per);
+    let per = time("histogram subset gathered (after)", 20, || {
+        let h = pool.build(&binned, &half_rows, &grad, &hess);
+        pool.recycle(h);
+    });
+    rec.push("histogram_subset_gathered", per);
+
+    // ---- one boosting round end to end -------------------------------
+    let per = time("boosting round (depth 3, 16k rows)", 5, || {
         let _ = gbdt::booster::train(&data, GbdtParams::paper(1, 3));
     });
+    rec.push("boosting_round_d3", per);
 
-    // Inference paths.
+    // ---- inference: row-at-a-time pointer trees vs blocked flat ------
     let model = gbdt::booster::train(&data, GbdtParams::paper(64, 4));
     let finfo = FeatureInfo::from_dataset(&data);
     let blob = encode(&model, &finfo, &EncodeOptions::default());
-    println!(
-        "model: {} trees depth<=4, toad blob {} bytes",
-        model.n_trees(),
-        blob.len()
-    );
+    println!("model: {} trees depth<=4, toad blob {} bytes", model.n_trees(), blob.len());
     let packed = PackedModel::from_bytes(blob.clone());
+    let flat = FlatModel::from_model(&model);
     let test_rows: Vec<Vec<f32>> = (0..512).map(|i| data.row(i)).collect();
 
-    time("native predict (512 rows, 64 trees)", 20, || {
+    let per = time("native predict row-wise (512 rows, before)", 20, || {
         let mut acc = 0.0;
         for r in &test_rows {
             acc += model.predict_raw(r)[0];
         }
         std::hint::black_box(acc);
     });
-    time("bit-packed predict (512 rows)", 5, || {
+    rec.push("native_predict_rowwise_512", per);
+
+    let per_flat = time("flat predict_batch (512 rows, after)", 20, || {
+        std::hint::black_box(flat.predict_batch(&test_rows));
+    });
+    rec.push("native_predict_flat_batch_512", per_flat);
+    println!(
+        "{:44} {:>12.1} K rows/s",
+        "  -> flat batch throughput",
+        512.0 / per_flat / 1e3
+    );
+
+    let per = time("flat predict single-row (512 rows)", 20, || {
+        let mut acc = 0.0;
+        for r in &test_rows {
+            acc += flat.predict_raw(r)[0];
+        }
+        std::hint::black_box(acc);
+    });
+    rec.push("native_predict_flat_single_512", per);
+
+    let per = time("bit-packed predict (512 rows)", 5, || {
         let mut acc = 0.0;
         for r in &test_rows {
             acc += packed.predict_raw(r)[0];
         }
         std::hint::black_box(acc);
     });
+    rec.push("packed_predict_512", per);
 
-    // Layout codec.
-    time("toad encode", 50, || {
+    // ---- layout codec -------------------------------------------------
+    let per = time("toad encode", 50, || {
         std::hint::black_box(encode(&model, &finfo, &EncodeOptions::default()));
     });
-    time("toad decode", 50, || {
+    rec.push("toad_encode", per);
+    let per = time("toad decode", 50, || {
         std::hint::black_box(toad::layout::decode(&blob));
     });
+    rec.push("toad_decode", per);
 
-    // XLA runtime (optional).
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("MANIFEST.txt").exists() {
-        println!("\n== XLA runtime ==");
-        let rt = toad::runtime::XlaRuntime::open(&artifacts).unwrap();
-        let tm = toad::runtime::tensorize(&model, 256, 4, 64, 1).unwrap();
-        let t = Instant::now();
-        let mut engine = toad::runtime::PredictEngine::new(&rt, tm.clone(), 256, 64).unwrap();
-        println!("{:44} {:>12.3} ms", "compile predict artifact (one-off)", t.elapsed().as_secs_f64() * 1e3);
-        let batch: Vec<Vec<f32>> = test_rows.iter().take(256).cloned().collect();
-        let per = time("xla batch predict (256 rows/call)", 20, || {
-            std::hint::black_box(engine.predict(&batch).unwrap());
-        });
-        println!(
-            "{:44} {:>12.1} K rows/s",
-            "  -> throughput",
-            256.0 / per / 1e3
-        );
+    // ---- gateway overhead over the native batch engine ----------------
+    let batcher = toad::coordinator::Batcher::spawn(
+        toad::coordinator::BatcherConfig {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_micros(200),
+        },
+        toad::coordinator::batcher::Backend::Native(flat.clone()),
+    );
+    let per = time("gateway single-row predict (native)", 50, || {
+        std::hint::black_box(batcher.predict(test_rows[0].clone()));
+    });
+    rec.push("gateway_native_single_row", per);
+    drop(batcher);
 
-        // Gateway batching overhead: single-row latency through the
-        // batcher vs direct engine call.
-        let batcher = toad::coordinator::Batcher::spawn(
-            tm,
-            toad::coordinator::BatcherConfig {
-                max_batch: 32,
-                max_wait: Duration::from_micros(200),
-            },
-            toad::coordinator::batcher::Backend::Xla { artifacts_dir: artifacts, features: 64 },
-        );
-        time("gateway single-row predict (batch=1 flush)", 50, || {
-            std::hint::black_box(batcher.predict(test_rows[0].clone()));
-        });
-    } else {
-        println!("\n(xla section skipped: run `make artifacts`)");
+    // ---- XLA runtime (feature-gated, needs `make artifacts`) ----------
+    xla_section(&test_rows);
+
+    // ---- summary + JSON -----------------------------------------------
+    let hist_speedup =
+        rec.lookup("histogram_build_scalar") / rec.lookup("histogram_build_columnar");
+    let subset_speedup =
+        rec.lookup("histogram_subset_scalar") / rec.lookup("histogram_subset_gathered");
+    let predict_speedup =
+        rec.lookup("native_predict_rowwise_512") / rec.lookup("native_predict_flat_batch_512");
+    println!("\n== speedups vs scalar baselines ==");
+    println!("{:44} {:>11.2}x", "histogram build (dense)", hist_speedup);
+    println!("{:44} {:>11.2}x", "histogram build (subset/gathered)", subset_speedup);
+    println!("{:44} {:>11.2}x", "native batched predict", predict_speedup);
+
+    let json = rec.to_json(
+        &format!("covtype_binary_{n}x{d}"),
+        &[
+            ("histogram_build", hist_speedup),
+            ("histogram_subset", subset_speedup),
+            ("native_predict_batch", predict_speedup),
+        ],
+    );
+    // CARGO_MANIFEST_DIR is <repo>/rust; the trajectory file lives at
+    // the repo root.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpaths.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", out.display()),
     }
+}
+
+#[cfg(feature = "xla")]
+fn xla_section(test_rows: &[Vec<f32>]) {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("MANIFEST.txt").exists() {
+        println!("\n(xla section skipped: run `make artifacts`)");
+        return;
+    }
+    let data = PaperDataset::CovertypeBinary.generate(1);
+    let data = data.select(&(0..16_384).collect::<Vec<_>>());
+    let model = gbdt::booster::train(&data, GbdtParams::paper(64, 4));
+    println!("\n== XLA runtime ==");
+    let rt = toad::runtime::XlaRuntime::open(&artifacts).unwrap();
+    let tm = toad::runtime::tensorize(&model, 256, 4, 64, 1).unwrap();
+    let t = Instant::now();
+    let mut engine = toad::runtime::PredictEngine::new(&rt, tm.clone(), 256, 64).unwrap();
+    println!(
+        "{:44} {:>12.3} ms",
+        "compile predict artifact (one-off)",
+        t.elapsed().as_secs_f64() * 1e3
+    );
+    let batch: Vec<Vec<f32>> = test_rows.iter().take(256).cloned().collect();
+    let per = time("xla batch predict (256 rows/call)", 20, || {
+        std::hint::black_box(engine.predict(&batch).unwrap());
+    });
+    println!("{:44} {:>12.1} K rows/s", "  -> throughput", 256.0 / per / 1e3);
+
+    // Gateway batching overhead: single-row latency through the
+    // batcher vs direct engine call.
+    let batcher = toad::coordinator::Batcher::spawn(
+        toad::coordinator::BatcherConfig {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_micros(200),
+        },
+        toad::coordinator::batcher::Backend::Xla {
+            artifacts_dir: artifacts,
+            features: 64,
+            tensors: tm,
+        },
+    );
+    time("gateway single-row predict (batch=1 flush)", 50, || {
+        std::hint::black_box(batcher.predict(test_rows[0].clone()));
+    });
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_section(_test_rows: &[Vec<f32>]) {
+    println!("\n(xla section skipped: build with --features xla and run `make artifacts`)");
 }

@@ -1,12 +1,18 @@
-//! Dynamic batching over the XLA predict engine.
+//! Dynamic batching gateway over the batched inference engines.
 //!
-//! PJRT artifacts are compiled at a fixed batch size, so the gateway
-//! collects incoming rows until either the batch is full or a deadline
-//! expires, then runs one padded execution and fans the results back
-//! out. PJRT handles are not `Send`, so the engine lives entirely inside
-//! the worker thread; requests and responses cross via channels.
+//! The gateway collects incoming rows until either the batch is full or
+//! a deadline expires, then runs one batched execution and fans the
+//! results back out. Two backends exist:
+//!
+//! * [`Backend::Native`] — the flattened SoA engine
+//!   ([`crate::inference::FlatModel`]): the default, dependency-free
+//!   batched serving path (tree-outer/row-inner blocked kernel).
+//! * `Backend::Xla` (`xla` feature) — the AOT-compiled PJRT artifact.
+//!   Artifacts are compiled at a fixed batch size, and PJRT handles are
+//!   not `Send`, so the engine lives entirely inside the worker thread;
+//!   requests and responses cross via channels.
 
-use crate::runtime::tensorize::{eval_tensor_model, TensorModel};
+use crate::inference::FlatModel;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -39,20 +45,24 @@ pub struct Batcher {
     worker: Option<JoinHandle<()>>,
 }
 
-/// Which backend executes the batches.
+/// Which engine executes the batches.
 pub enum Backend {
+    /// Blocked batched prediction on the flattened native engine.
+    Native(FlatModel),
     /// XLA predict artifact from this directory (compiled in-thread).
-    Xla { artifacts_dir: std::path::PathBuf, features: usize },
-    /// Pure-Rust evaluation of the tensorized model (no artifacts
-    /// needed; used in tests and as a fallback).
-    Native,
+    #[cfg(feature = "xla")]
+    Xla {
+        artifacts_dir: std::path::PathBuf,
+        features: usize,
+        tensors: crate::runtime::TensorModel,
+    },
 }
 
 impl Batcher {
-    /// Spawn a batching worker for `tensors` with the given `backend`.
-    pub fn spawn(tensors: TensorModel, config: BatcherConfig, backend: Backend) -> Batcher {
+    /// Spawn a batching worker for the given `backend`.
+    pub fn spawn(config: BatcherConfig, backend: Backend) -> Batcher {
         let (tx, rx) = channel::<Request>();
-        let worker = std::thread::spawn(move || worker_loop(tensors, config, backend, rx));
+        let worker = std::thread::spawn(move || worker_loop(config, backend, rx));
         Batcher { tx: Some(tx), worker: Some(worker) }
     }
 
@@ -82,19 +92,18 @@ impl Drop for Batcher {
     }
 }
 
-fn worker_loop(
-    tensors: TensorModel,
-    config: BatcherConfig,
-    backend: Backend,
-    rx: Receiver<Request>,
-) {
-    // The XLA engine must be constructed inside the thread (not Send).
+fn worker_loop(config: BatcherConfig, backend: Backend, rx: Receiver<Request>) {
+    // The XLA engine must be constructed inside the thread (not Send);
+    // the native engine is just moved in.
     enum Engine {
+        Native(FlatModel),
+        #[cfg(feature = "xla")]
         Xla(crate::runtime::PredictEngine),
-        Native(TensorModel),
     }
-    let engine = match backend {
-        Backend::Xla { artifacts_dir, features } => {
+    let mut engine = match backend {
+        Backend::Native(flat) => Engine::Native(flat),
+        #[cfg(feature = "xla")]
+        Backend::Xla { artifacts_dir, features, tensors } => {
             let rt = crate::runtime::XlaRuntime::open(&artifacts_dir)
                 .expect("open artifacts for batcher");
             Engine::Xla(
@@ -102,10 +111,8 @@ fn worker_loop(
                     .expect("compile predict engine"),
             )
         }
-        Backend::Native => Engine::Native(tensors),
     };
 
-    let mut engine = engine;
     let mut pending: Vec<Request> = Vec::with_capacity(config.max_batch);
     let mut deadline: Option<Instant> = None;
     loop {
@@ -142,25 +149,21 @@ fn worker_loop(
     fn flush(engine: &mut Engine, pending: &mut Vec<Request>) {
         let rows: Vec<Vec<f32>> = pending.iter().map(|r| r.row.clone()).collect();
         let outputs: Vec<Vec<f64>> = match engine {
+            Engine::Native(flat) => {
+                // Clients may send short rows; the flat engine indexes
+                // up to n_features, so zero-pad at the gateway boundary
+                // (the XLA engine zero-pads internally).
+                let nf = flat.n_features();
+                let mut rows = rows;
+                for r in &mut rows {
+                    if r.len() < nf {
+                        r.resize(nf, 0.0);
+                    }
+                }
+                flat.predict_batch(&rows)
+            }
+            #[cfg(feature = "xla")]
             Engine::Xla(e) => e.predict(&rows).expect("xla predict"),
-            Engine::Native(tm) => rows
-                .iter()
-                .map(|r| {
-                    let mut x = r.clone();
-                    // Native path needs explicit feature padding to the
-                    // tensor model's expectation; features beyond the
-                    // row length read as 0 (tree features are in range).
-                    let max_f = tm
-                        .feat
-                        .iter()
-                        .map(|&f| f as usize + 1)
-                        .max()
-                        .unwrap_or(0)
-                        .max(x.len());
-                    x.resize(max_f, 0.0);
-                    eval_tensor_model(tm, &x)
-                })
-                .collect(),
         };
         for (req, out) in pending.drain(..).zip(outputs) {
             // A dropped receiver just means the client went away.
@@ -174,38 +177,35 @@ mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;
     use crate::gbdt::{self, GbdtParams};
-    use crate::runtime::tensorize;
 
-    fn tensors() -> (TensorModel, crate::data::Dataset, crate::gbdt::GbdtModel) {
+    fn fixtures() -> (FlatModel, crate::data::Dataset, crate::gbdt::GbdtModel) {
         let data = PaperDataset::BreastCancer.generate(71).select(&(0..300).collect::<Vec<_>>());
         let model = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
-        let tm = tensorize(&model, 32, 4, 64, 1).unwrap();
-        (tm, data, model)
+        let flat = model.flatten();
+        (flat, data, model)
     }
 
     #[test]
     fn native_batcher_matches_model() {
-        let (tm, data, model) = tensors();
+        let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            tm,
             BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
-            Backend::Native,
+            Backend::Native(flat),
         );
         for i in 0..20 {
             let row = data.row(i);
             let got = b.predict(row.clone());
             let want = model.predict_raw(&row)[0];
-            assert!((got[0] - want).abs() < 1e-4, "row {i}: {} vs {want}", got[0]);
+            assert_eq!(got[0], want, "row {i}: flat gateway must match the source model");
         }
     }
 
     #[test]
     fn partial_batches_flush_on_deadline() {
-        let (tm, data, _) = tensors();
+        let (flat, data, _) = fixtures();
         let b = Batcher::spawn(
-            tm,
             BatcherConfig { max_batch: 1000, max_wait: Duration::from_millis(5) },
-            Backend::Native,
+            Backend::Native(flat),
         );
         let start = Instant::now();
         let out = b.predict(data.row(0));
@@ -217,34 +217,64 @@ mod tests {
     fn request_response_mapping_is_stable() {
         // Submit distinct rows concurrently; every reply must match its
         // own row's prediction (no cross-wiring in the batcher).
-        let (tm, data, model) = tensors();
+        let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            tm,
             BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
-            Backend::Native,
+            Backend::Native(flat),
         );
         let rxs: Vec<_> = (0..16).map(|i| (i, b.submit(data.row(i)))).collect();
         for (i, rx) in rxs {
             let got = rx.recv().unwrap();
             let want = model.predict_raw(&data.row(i))[0];
-            assert!((got[0] - want).abs() < 1e-4, "row {i} cross-wired");
+            assert_eq!(got[0], want, "row {i} cross-wired");
         }
     }
 
     #[test]
     fn drop_drains_pending() {
-        let (tm, data, _) = tensors();
+        let (flat, data, _) = fixtures();
         let rx;
         {
             let b = Batcher::spawn(
-                tm,
                 BatcherConfig { max_batch: 1000, max_wait: Duration::from_secs(10) },
-                Backend::Native,
+                Backend::Native(flat),
             );
             rx = b.submit(data.row(0));
             // b dropped here with the request still pending
         }
         let out = rx.recv().expect("pending request must be served on shutdown");
         assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn short_rows_are_zero_padded_not_fatal() {
+        let (flat, data, model) = fixtures();
+        let b = Batcher::spawn(
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            Backend::Native(flat),
+        );
+        // A truncated (even empty) row must be served as if zero-padded,
+        // and must not kill the worker for subsequent requests.
+        let mut short = data.row(0);
+        short.truncate(3);
+        let mut padded = short.clone();
+        padded.resize(data.n_features(), 0.0);
+        assert_eq!(b.predict(short), model.predict_raw(&padded));
+        assert_eq!(b.predict(Vec::new()).len(), 1);
+        let row = data.row(1);
+        assert_eq!(b.predict(row.clone()), model.predict_raw(&row));
+    }
+
+    #[test]
+    fn multiclass_gateway_serves_all_outputs() {
+        let data = PaperDataset::WineQuality.generate(72).select(&(0..400).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(3, 2));
+        let b = Batcher::spawn(
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            Backend::Native(model.flatten()),
+        );
+        let got = b.predict(data.row(0));
+        assert_eq!(got.len(), 7);
+        assert_eq!(got, model.predict_raw(&data.row(0)));
     }
 }

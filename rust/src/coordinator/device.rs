@@ -8,7 +8,7 @@
 
 use crate::layout::PackedModel;
 use crate::mcu::McuSpec;
-use thiserror::Error;
+use std::fmt;
 
 /// Device profiles used in the experiments.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,15 +43,26 @@ impl DeviceKind {
     }
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum DeviceError {
-    #[error("model of {model} bytes exceeds device budget of {budget} bytes")]
     OverBudget { model: usize, budget: usize },
-    #[error("corrupt model blob: {0}")]
     CorruptBlob(String),
-    #[error("no model deployed")]
     NoModel,
 }
+
+impl fmt::Display for DeviceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeviceError::OverBudget { model, budget } => {
+                write!(f, "model of {model} bytes exceeds device budget of {budget} bytes")
+            }
+            DeviceError::CorruptBlob(why) => write!(f, "corrupt model blob: {why}"),
+            DeviceError::NoModel => write!(f, "no model deployed"),
+        }
+    }
+}
+
+impl std::error::Error for DeviceError {}
 
 /// One simulated sensor node.
 pub struct SimulatedDevice {

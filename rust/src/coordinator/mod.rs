@@ -10,8 +10,10 @@
 //! * [`planner`] — picks, from a sweep's model candidates, the best
 //!   scorer that fits a device's memory budget (paper §4.2: "best model
 //!   with memory ≤ limit").
-//! * [`batcher`] — dynamic batching worker feeding the XLA predict
-//!   engine (gateway-side inference for fleets too small to deploy on).
+//! * [`batcher`] — dynamic batching worker feeding a batched engine:
+//!   the native flattened model by default, or the XLA predict engine
+//!   with the `xla` feature (gateway-side inference for fleets too
+//!   small to deploy on).
 //! * [`router`] — routes requests to deployments by model key.
 //! * [`metrics`] — latency/throughput recording.
 //! * [`server`] — ties devices + gateway batching into one front door.

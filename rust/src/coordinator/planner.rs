@@ -7,7 +7,7 @@
 //! the best scorer that fits each device.
 
 use super::device::SimulatedDevice;
-use thiserror::Error;
+use std::fmt;
 
 /// A candidate model produced by a training sweep.
 #[derive(Clone, Debug)]
@@ -20,15 +20,29 @@ pub struct ModelCard {
     pub blob: Vec<u8>,
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum PlanError {
-    #[error("no candidate fits the budget of {budget} bytes (smallest is {smallest})")]
     NothingFits { budget: usize, smallest: usize },
-    #[error("no candidates registered")]
     Empty,
-    #[error("deploying `{id}` failed: {reason}")]
     DeployFailed { id: String, reason: String },
 }
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::NothingFits { budget, smallest } => write!(
+                f,
+                "no candidate fits the budget of {budget} bytes (smallest is {smallest})"
+            ),
+            PlanError::Empty => write!(f, "no candidates registered"),
+            PlanError::DeployFailed { id, reason } => {
+                write!(f, "deploying `{id}` failed: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 /// Picks deployments from a candidate pool.
 #[derive(Default)]

@@ -9,7 +9,8 @@ use super::batcher::Batcher;
 use super::device::SimulatedDevice;
 use super::metrics::LatencyRecorder;
 use super::router::{Router, TargetId};
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::error::Result;
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -94,7 +95,6 @@ mod tests {
     use crate::data::synth::PaperDataset;
     use crate::gbdt::{self, GbdtParams};
     use crate::layout::{encode, EncodeOptions, FeatureInfo};
-    use crate::runtime::tensorize;
 
     #[test]
     fn device_and_gateway_routes_agree() {
@@ -102,7 +102,6 @@ mod tests {
         let model = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
         let finfo = FeatureInfo::from_dataset(&data);
         let blob = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() });
-        let tm = tensorize(&model, 32, 4, 64, 1).unwrap();
 
         let mut server = FleetServer::new();
         let mut dev = SimulatedDevice::new(0, DeviceKind::UnoR4);
@@ -111,9 +110,8 @@ mod tests {
         server.add_gateway(
             "bc",
             Batcher::spawn(
-                tm,
                 BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
-                Backend::Native,
+                Backend::Native(model.flatten()),
             ),
         );
 

@@ -12,15 +12,15 @@ use std::path::Path;
 
 /// Read a dataset from CSV. The column named `target` (any position)
 /// becomes the label/target; `task` tells how to interpret it.
-pub fn read_csv(path: &Path, name: &str, task: Task) -> anyhow::Result<Dataset> {
+pub fn read_csv(path: &Path, name: &str, task: Task) -> crate::error::Result<Dataset> {
     let file = std::fs::File::open(path)?;
     let mut lines = BufReader::new(file).lines();
-    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty csv"))??;
+    let header = lines.next().ok_or_else(|| crate::anyhow!("empty csv"))??;
     let cols: Vec<&str> = header.split(',').map(|s| s.trim()).collect();
     let target_idx = cols
         .iter()
         .position(|&c| c == "target")
-        .ok_or_else(|| anyhow::anyhow!("no `target` column in {path:?}"))?;
+        .ok_or_else(|| crate::anyhow!("no `target` column in {path:?}"))?;
     let n_features = cols.len() - 1;
 
     let mut features: Vec<Vec<f32>> = vec![Vec::new(); n_features];
@@ -34,7 +34,7 @@ pub fn read_csv(path: &Path, name: &str, task: Task) -> anyhow::Result<Dataset> 
         }
         let fields: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
         if fields.len() != cols.len() {
-            anyhow::bail!("line {}: {} fields, expected {}", lineno + 2, fields.len(), cols.len());
+            crate::bail!("line {}: {} fields, expected {}", lineno + 2, fields.len(), cols.len());
         }
         let mut fi = 0usize;
         for (c, field) in fields.iter().enumerate() {
@@ -50,12 +50,12 @@ pub fn read_csv(path: &Path, name: &str, task: Task) -> anyhow::Result<Dataset> 
         }
     }
     let ds = Dataset { name: name.to_string(), features, targets, labels, task };
-    ds.validate().map_err(|e| anyhow::anyhow!(e))?;
+    ds.validate().map_err(|e| crate::anyhow!(e))?;
     Ok(ds)
 }
 
 /// Write a dataset as CSV (feature columns `f0..f{d-1}` plus `target`).
-pub fn write_csv(data: &Dataset, path: &Path) -> anyhow::Result<()> {
+pub fn write_csv(data: &Dataset, path: &Path) -> crate::error::Result<()> {
     let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
     let header: Vec<String> =
         (0..data.n_features()).map(|f| format!("f{f}")).chain(["target".to_string()]).collect();

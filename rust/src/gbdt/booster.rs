@@ -7,6 +7,7 @@
 //! drives rounds and measures the encoded model size after each one.
 
 use super::grower::{grow_tree, resolve_thresholds, GrowerParams};
+use super::histogram::HistogramPool;
 use super::loss::Objective;
 use super::model::GbdtModel;
 use super::splitter::{NoPenalty, SplitParams, SplitPenalty};
@@ -78,7 +79,9 @@ pub struct Booster<P: SplitPenalty> {
     objective: Objective,
     binner: Binner,
     binned: BinnedDataset,
-    bins_per_feature: Vec<usize>,
+    /// Reused per-leaf histogram buffers + gather scratch, shared across
+    /// every tree of every round.
+    pool: HistogramPool,
     targets: Vec<f64>,
     labels: Vec<usize>,
     /// Current raw scores, `[output][row]`.
@@ -115,7 +118,7 @@ impl<P: SplitPenalty> Booster<P> {
             objective,
             binner,
             binned,
-            bins_per_feature,
+            pool: HistogramPool::new(&bins_per_feature),
             targets: train.targets.clone(),
             labels: train.labels.clone(),
             raw,
@@ -165,7 +168,7 @@ impl<P: SplitPenalty> Booster<P> {
             let rows: Vec<u32> = (0..n as u32).collect();
             let grown = grow_tree(
                 &self.binned,
-                &self.bins_per_feature,
+                &mut self.pool,
                 rows,
                 &self.grad[k],
                 &self.hess[k],
@@ -202,7 +205,7 @@ impl<P: SplitPenalty> Booster<P> {
             let rows: Vec<u32> = (0..n as u32).collect();
             let grown = grow_tree(
                 &self.binned,
-                &self.bins_per_feature,
+                &mut self.pool,
                 rows,
                 &self.grad[k],
                 &self.hess[k],

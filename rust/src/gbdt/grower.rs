@@ -12,7 +12,7 @@
 //! and re-queued. The loop only ever *applies* a candidate whose version
 //! is current, so the applied split is always the true argmax.
 
-use super::histogram::HistogramSet;
+use super::histogram::{HistogramPool, HistogramSet};
 use super::splitter::{best_split, leaf_weight, SplitInfo, SplitParams, SplitPenalty};
 use super::tree::{Node, Tree};
 use crate::data::BinnedDataset;
@@ -92,10 +92,14 @@ pub struct GrownTree {
 ///
 /// `rows` selects the training rows this tree sees (all rows, or a
 /// subsample). `penalty` carries reuse registries across trees: applied
-/// splits are reported via [`SplitPenalty::on_split`].
+/// splits are reported via [`SplitPenalty::on_split`]. `pool` supplies
+/// per-leaf histogram buffers (checked out on split, recycled when the
+/// tree is done) and the shared gather scratch; the booster keeps one
+/// pool alive across all rounds so steady-state growth allocates
+/// nothing on the histogram path.
 pub fn grow_tree(
     binned: &BinnedDataset,
-    bins_per_feature: &[usize],
+    pool: &mut HistogramPool,
     rows: Vec<u32>,
     grad: &[f64],
     hess: &[f64],
@@ -112,8 +116,7 @@ pub fn grow_tree(
         return GrownTree { tree, leaf_rows: vec![(0, rows)] };
     }
 
-    let mut hist = HistogramSet::new(bins_per_feature);
-    hist.build(binned, &rows, grad, hess);
+    let hist = pool.build(binned, &rows, grad, hess);
     let totals = (gt, ht, rows.len() as u32);
 
     let mut leaves: Vec<LeafState> = Vec::new();
@@ -201,7 +204,9 @@ pub fn grow_tree(
             right: right_idx,
         };
 
-        // Child histograms: build the smaller, subtract for the larger.
+        // Child histograms: build the smaller from the pool, then turn
+        // the parent's buffer into the larger sibling in place (no third
+        // buffer, no copy).
         let child_depth = depth + 1;
         let parent_hist = std::mem::replace(
             &mut leaves[leaf_id].hist,
@@ -212,10 +217,9 @@ pub fn grow_tree(
         } else {
             (right_rows, left_rows, false)
         };
-        let mut small_hist = HistogramSet::new(bins_per_feature);
-        small_hist.build(binned, &small_rows, grad, hess);
-        let mut large_hist = HistogramSet::new(bins_per_feature);
-        large_hist.subtract_into(&parent_hist, &small_hist);
+        let small_hist = pool.build(binned, &small_rows, grad, hess);
+        let mut large_hist = parent_hist;
+        large_hist.subtract_assign(&small_hist);
 
         let (l_totals, r_totals) = (
             (split.left_grad, split.left_hess, split.left_count),
@@ -254,11 +258,15 @@ pub fn grow_tree(
         }
     }
 
-    let leaf_rows = leaves
-        .into_iter()
-        .filter(|l| !l.consumed)
-        .map(|l| (l.node_idx, l.rows))
-        .collect();
+    // Hand every live histogram buffer back to the pool (consumed
+    // leaves hold empty placeholders, which `recycle` drops).
+    let mut leaf_rows = Vec::new();
+    for l in leaves {
+        pool.recycle(l.hist);
+        if !l.consumed {
+            leaf_rows.push((l.node_idx, l.rows));
+        }
+    }
     GrownTree { tree, leaf_rows }
 }
 
@@ -306,8 +314,17 @@ mod tests {
         let binner = Binner::fit(ds, 64);
         let binned = binner.bin_dataset(ds);
         let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let mut pool = HistogramPool::new(&bins);
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-        let grown = grow_tree(&binned, &bins, rows, grad, hess, params, &mut NoPenalty);
+        let grown = grow_tree(&binned, &mut pool, rows, grad, hess, params, &mut NoPenalty);
+        // Every checked-out leaf histogram must be back on the free list
+        // afterwards (the bare-leaf early return never checks one out).
+        assert!(
+            pool.free_count() == grown.leaf_rows.len() || grown.tree.n_nodes() == 1,
+            "pool leak: {} free for {} leaves",
+            pool.free_count(),
+            grown.leaf_rows.len()
+        );
         // Invariant: leaf_rows partitions the training rows.
         let mut all: Vec<u32> =
             grown.leaf_rows.iter().flat_map(|(_, r)| r.iter().copied()).collect();
@@ -413,6 +430,7 @@ mod tests {
         let binner = Binner::fit(&ds, 32);
         let binned = binner.bin_dataset(&ds);
         let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let mut pool = HistogramPool::new(&bins);
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
         let mut rec = Recorder { splits: vec![] };
         let params = GrowerParams {
@@ -421,7 +439,7 @@ mod tests {
             max_leaves: 8,
             learning_rate: 1.0,
         };
-        let grown = grow_tree(&binned, &bins, rows, &grad, &hess, &params, &mut rec);
+        let grown = grow_tree(&binned, &mut pool, rows, &grad, &hess, &params, &mut rec);
         assert_eq!(rec.splits.len(), grown.tree.n_internal());
         assert_eq!(grown.leaf_rows.len(), grown.tree.n_leaves());
     }

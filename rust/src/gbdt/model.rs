@@ -2,7 +2,7 @@
 
 use super::loss::Objective;
 use super::tree::Tree;
-use crate::data::{BinnedDataset, Dataset, Task};
+use crate::data::{BinnedDataset, Dataset};
 
 /// A trained gradient-boosted ensemble.
 ///
@@ -62,21 +62,22 @@ impl GbdtModel {
         self.objective.predict_class(&raw)
     }
 
+    /// Flatten into the SoA serving engine
+    /// ([`crate::inference::FlatModel`]): branchless complete-tree
+    /// descent + blocked batch prediction, bit-identical raw scores.
+    pub fn flatten(&self) -> crate::inference::FlatModel {
+        crate::inference::FlatModel::from_model(self)
+    }
+
     /// Evaluate the task metric on a dataset: accuracy for
     /// classification, R² for regression (paper §4.1).
+    ///
+    /// Routed through the flattened batch engine — sweeps score whole
+    /// grids of models, so dataset-scale evaluation takes the blocked
+    /// path rather than walking pointer trees row by row. Predictions
+    /// are bit-identical to the pointer traversal.
     pub fn score(&self, data: &Dataset) -> f64 {
-        match data.task {
-            Task::Regression => {
-                let preds: Vec<f64> =
-                    (0..data.n_rows()).map(|i| self.predict_value(&data.row(i))).collect();
-                crate::metrics::r2_score(&data.targets, &preds)
-            }
-            _ => {
-                let preds: Vec<usize> =
-                    (0..data.n_rows()).map(|i| self.predict_class(&data.row(i))).collect();
-                crate::metrics::accuracy(&data.labels, &preds)
-            }
-        }
+        crate::inference::Predictor::score(&self.flatten(), data)
     }
 
     /// Raw-score prediction over binned data (training-path shortcut:

@@ -110,11 +110,15 @@ pub fn best_split(
         if n_bins < 2 {
             continue; // constant feature
         }
+        // One contiguous `[g, h, c]` triple slice per feature: the scan
+        // walks it linearly instead of re-deriving the flat offset (and
+        // re-checking bounds) per bin.
+        let tri = hist.feature_bins(f);
         let (mut gl, mut hl, mut cl) = (0.0f64, 0.0f64, 0u32);
         // Boundary b separates bins [0..=b] from (b..): the last bin can
         // never be a left side on its own, hence `n_bins - 1` boundaries.
-        for b in 0..(n_bins - 1) {
-            let (bg, bh, bc) = hist.bin(f, b);
+        for (b, bin) in tri.chunks_exact(3).take(n_bins - 1).enumerate() {
+            let (bg, bh, bc) = (bin[0], bin[1], bin[2] as u32);
             gl += bg;
             hl += bh;
             cl += bc;

@@ -1,0 +1,485 @@
+//! `FlatModel` — the flattened, cache-conscious native inference engine.
+//!
+//! [`crate::gbdt::GbdtModel`] stores trees as vectors of enum nodes:
+//! every step of a descent chases a pointer into a 48-byte `Node` and
+//! branches on the variant. That is fine for debugging and for the
+//! layouts, but it is the wrong shape for a serving hot path. This
+//! module rebuilds a trained ensemble into structure-of-arrays form
+//! (PACSET-style cache-conscious serialization):
+//!
+//! * **Complete-tree fast path** — trees that are (nearly) complete are
+//!   stored as pointer-less heap arrays: contiguous `u16` feature ids
+//!   and `f32` thresholds for the `2^d − 1` internal slots, `f64`
+//!   values for the `2^d` leaves. The descent is the branchless
+//!   `i ← 2i + 2 − (x[f] ≤ t)` of the paper's §3.2.1 — no child
+//!   indices, no leaf test, no unpredictable branch. The predicate is
+//!   the exact `x ≤ t` the pointer trees use, so NaN inputs route right
+//!   identically. Early leaves are replicated by [`Tree::to_complete`];
+//!   pass-through slots get a `+∞` threshold so ordered values route
+//!   left (a NaN falls right into a replica of the same leaf value).
+//! * **General node path** — deep, sparse trees (where completing would
+//!   blow up memory) are flattened into parallel `feat`/`thr`/
+//!   `children`/`leaf` arrays with siblings adjacent, so one `u32`
+//!   child index serves both directions (`left + (x[f] > t)`).
+//! * **Blocked batch API** — [`FlatModel::predict_batch`] iterates
+//!   tree-outer / row-inner over [`BLOCK_ROWS`]-row blocks: each tree's
+//!   arrays are pulled into cache once and amortized over the whole
+//!   block instead of being re-fetched per row (Daghero et al.'s batch
+//!   regime for edge inference).
+//!
+//! Predictions are bit-identical to `GbdtModel::predict_raw`: the same
+//! comparisons route the same way and leaf contributions are summed in
+//! the same order.
+
+use crate::gbdt::loss::Objective;
+use crate::gbdt::tree::{Node, Tree};
+use crate::gbdt::GbdtModel;
+
+/// Rows per block of the batched predict loop. 64 rows × 54 features of
+/// f32 is ~13.5 KB — a block of inputs and its accumulators stay L1/L2
+/// resident while an entire tree is streamed over them.
+pub const BLOCK_ROWS: usize = 64;
+
+/// Sentinel feature id marking a leaf slot in the general node arrays.
+const LEAF: u16 = u16::MAX;
+
+/// Upper depth bound for the complete-tree layout (2^d slots).
+const MAX_COMPLETE_DEPTH: usize = 10;
+
+/// Where one tree lives inside the model's arrays.
+#[derive(Clone, Copy, Debug)]
+enum TreeRef {
+    /// Complete heap layout: `2^depth − 1` internal slots at `ioff`
+    /// (in `cfeat`/`cthr`), `2^depth` leaf slots at `loff` (in `cleaf`).
+    Complete { ioff: u32, loff: u32, depth: u8 },
+    /// General layout: node-local indices based at `off` in
+    /// `feat`/`thr`/`children`.
+    Nodes { off: u32 },
+}
+
+/// A trained ensemble flattened for serving. Build one with
+/// [`FlatModel::from_model`] (or [`GbdtModel::flatten`]) and keep it for
+/// the model's serving lifetime — construction walks every node once.
+#[derive(Clone, Debug)]
+pub struct FlatModel {
+    objective: Objective,
+    base_scores: Vec<f64>,
+    n_features: usize,
+    /// `trees[output][round]`, same order as the source model.
+    trees: Vec<Vec<TreeRef>>,
+    // Complete-layout storage.
+    cfeat: Vec<u16>,
+    cthr: Vec<f32>,
+    cleaf: Vec<f64>,
+    // General node storage (siblings adjacent; `children[i]` is the
+    // node-local left-child index, or the `leaf` index when
+    // `feat[i] == LEAF`).
+    feat: Vec<u16>,
+    thr: Vec<f32>,
+    children: Vec<u32>,
+    leaf: Vec<f64>,
+}
+
+/// Flatten `tree` into the general node arrays (siblings adjacent) and
+/// return its base offset.
+fn flatten_nodes(
+    tree: &Tree,
+    feat: &mut Vec<u16>,
+    thr: &mut Vec<f32>,
+    children: &mut Vec<u32>,
+    leaf: &mut Vec<f64>,
+) -> u32 {
+    let start = feat.len();
+    let n = tree.nodes.len();
+    feat.resize(start + n, LEAF);
+    thr.resize(start + n, 0.0);
+    children.resize(start + n, 0);
+    // Local slot 0 is the root; each internal node claims the next two
+    // slots for its children so `right == left + 1` by construction.
+    let mut next_local = 1usize;
+    let mut stack = vec![(0usize, 0usize)]; // (source node, local slot)
+    while let Some((ti, li)) = stack.pop() {
+        match &tree.nodes[ti] {
+            Node::Leaf { value } => {
+                feat[start + li] = LEAF;
+                children[start + li] = leaf.len() as u32;
+                leaf.push(*value);
+            }
+            Node::Internal { feature, threshold, left, right, .. } => {
+                feat[start + li] = *feature as u16;
+                thr[start + li] = *threshold;
+                let cl = next_local;
+                next_local += 2;
+                children[start + li] = cl as u32;
+                stack.push((*right, cl + 1));
+                stack.push((*left, cl));
+            }
+        }
+    }
+    debug_assert_eq!(next_local, n, "every node must land in exactly one slot");
+    start as u32
+}
+
+impl FlatModel {
+    /// Flatten a trained model. Chooses per tree between the complete
+    /// fast path (bounded depth, ≤ 4× node blow-up from leaf
+    /// replication) and the general node layout.
+    pub fn from_model(model: &GbdtModel) -> FlatModel {
+        assert!(
+            model.n_features < LEAF as usize,
+            "feature ids must fit u16 below the leaf sentinel"
+        );
+        let mut flat = FlatModel {
+            objective: model.objective,
+            base_scores: model.base_scores.clone(),
+            n_features: model.n_features,
+            trees: Vec::with_capacity(model.trees.len()),
+            cfeat: Vec::new(),
+            cthr: Vec::new(),
+            cleaf: Vec::new(),
+            feat: Vec::new(),
+            thr: Vec::new(),
+            children: Vec::new(),
+            leaf: Vec::new(),
+        };
+        for trees in &model.trees {
+            let mut refs = Vec::with_capacity(trees.len());
+            for tree in trees {
+                let depth = tree.depth();
+                let complete_ok =
+                    depth <= MAX_COMPLETE_DEPTH && (1usize << depth) <= 4 * tree.n_nodes();
+                if complete_ok {
+                    let (internal, leaves) = tree.to_complete();
+                    let ioff = flat.cfeat.len() as u32;
+                    let loff = flat.cleaf.len() as u32;
+                    for slot in &internal {
+                        match slot {
+                            Some((f, _, t)) => {
+                                flat.cfeat.push(*f as u16);
+                                flat.cthr.push(*t);
+                            }
+                            None => {
+                                // Pass-through under an early leaf:
+                                // x[0] <= +∞ routes left (NaN routes
+                                // right into a replica of the same
+                                // value), matching `Tree::to_complete`'s
+                                // replication.
+                                flat.cfeat.push(0);
+                                flat.cthr.push(f32::INFINITY);
+                            }
+                        }
+                    }
+                    flat.cleaf.extend_from_slice(&leaves);
+                    refs.push(TreeRef::Complete { ioff, loff, depth: depth as u8 });
+                } else {
+                    let off = flatten_nodes(
+                        tree,
+                        &mut flat.feat,
+                        &mut flat.thr,
+                        &mut flat.children,
+                        &mut flat.leaf,
+                    );
+                    refs.push(TreeRef::Nodes { off });
+                }
+            }
+            flat.trees.push(refs);
+        }
+        flat
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.iter().map(|t| t.len()).sum()
+    }
+
+    /// How many trees took the complete fast path (introspection/tests).
+    pub fn n_complete_trees(&self) -> usize {
+        self.trees
+            .iter()
+            .flatten()
+            .filter(|t| matches!(t, TreeRef::Complete { .. }))
+            .count()
+    }
+
+    #[inline]
+    fn eval_nodes(&self, off: usize, x: &[f32]) -> f64 {
+        let mut i = off;
+        loop {
+            let f = self.feat[i];
+            if f == LEAF {
+                return self.leaf[self.children[i] as usize];
+            }
+            // `!(x <= t)` (not `x > t`): identical for ordered values,
+            // and routes NaN right exactly like `Tree::predict_row`.
+            let right = !(x[f as usize] <= self.thr[i]) as usize;
+            i = off + self.children[i] as usize + right;
+        }
+    }
+
+    #[inline]
+    fn eval_complete(&self, ioff: usize, loff: usize, depth: usize, x: &[f32]) -> f64 {
+        let n_internal = (1usize << depth) - 1;
+        let feat = &self.cfeat[ioff..ioff + n_internal];
+        let thr = &self.cthr[ioff..ioff + n_internal];
+        let mut i = 0usize;
+        while i < n_internal {
+            i = 2 * i + 2 - (x[feat[i] as usize] <= thr[i]) as usize;
+        }
+        self.cleaf[loff + i - n_internal]
+    }
+
+    #[inline]
+    fn eval_tree(&self, tref: TreeRef, x: &[f32]) -> f64 {
+        match tref {
+            TreeRef::Complete { ioff, loff, depth } => {
+                self.eval_complete(ioff as usize, loff as usize, depth as usize, x)
+            }
+            TreeRef::Nodes { off } => self.eval_nodes(off as usize, x),
+        }
+    }
+
+    /// Raw scores for one dense row (one value per output stream).
+    /// Bit-identical to `GbdtModel::predict_raw`.
+    pub fn predict_raw(&self, x: &[f32]) -> Vec<f64> {
+        let mut out = self.base_scores.clone();
+        for (k, trees) in self.trees.iter().enumerate() {
+            for &tref in trees {
+                out[k] += self.eval_tree(tref, x);
+            }
+        }
+        out
+    }
+
+    /// Batched raw scores: tree-outer / row-inner over 64-row blocks.
+    ///
+    /// Returns one `Vec<f64>` of raw scores per input row, in order —
+    /// numerically identical to calling [`FlatModel::predict_raw`] per
+    /// row (same comparison routing, same summation order), just with
+    /// each tree's arrays fetched once per block instead of once per
+    /// row.
+    pub fn predict_batch(&self, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        let mut out: Vec<Vec<f64>> = rows.iter().map(|_| self.base_scores.clone()).collect();
+        for start in (0..rows.len()).step_by(BLOCK_ROWS) {
+            let end = (start + BLOCK_ROWS).min(rows.len());
+            let block = &rows[start..end];
+            for (k, trees) in self.trees.iter().enumerate() {
+                for &tref in trees {
+                    match tref {
+                        TreeRef::Complete { ioff, loff, depth } => {
+                            let (ioff, loff, depth) =
+                                (ioff as usize, loff as usize, depth as usize);
+                            let n_internal = (1usize << depth) - 1;
+                            let feat = &self.cfeat[ioff..ioff + n_internal];
+                            let thr = &self.cthr[ioff..ioff + n_internal];
+                            let leaf = &self.cleaf[loff..loff + (1usize << depth)];
+                            for (r, x) in block.iter().enumerate() {
+                                let mut i = 0usize;
+                                while i < n_internal {
+                                    i = 2 * i + 2 - (x[feat[i] as usize] <= thr[i]) as usize;
+                                }
+                                out[start + r][k] += leaf[i - n_internal];
+                            }
+                        }
+                        TreeRef::Nodes { off } => {
+                            let off = off as usize;
+                            for (r, x) in block.iter().enumerate() {
+                                out[start + r][k] += self.eval_nodes(off, x);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl From<&GbdtModel> for FlatModel {
+    fn from(model: &GbdtModel) -> FlatModel {
+        FlatModel::from_model(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::gbdt::{self, GbdtParams};
+    use crate::prng::Pcg64;
+    use crate::testutil::prop::run_prop;
+
+    fn wrap(trees: Vec<Tree>, n_features: usize) -> GbdtModel {
+        GbdtModel {
+            objective: Objective::L2,
+            base_scores: vec![0.25],
+            trees: vec![trees],
+            n_features,
+            name: "flat-test".into(),
+        }
+    }
+
+    /// x0 <= 0.5 ? (x1 <= 2.0 ? 1.0 : 2.0) : 3.0
+    fn sample_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 3, threshold: 0.5, left: 1, right: 2 },
+                Node::Internal { feature: 1, bin: 7, threshold: 2.0, left: 3, right: 4 },
+                Node::Leaf { value: 3.0 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 2.0 },
+            ],
+        }
+    }
+
+    /// A left-leaning chain deeper than the complete-layout cutoff, so
+    /// it must take the general node path.
+    fn chain_tree(depth: usize) -> Tree {
+        let mut nodes = Vec::new();
+        for d in 0..depth {
+            let idx = nodes.len();
+            nodes.push(Node::Internal {
+                feature: 0,
+                bin: d as u16,
+                threshold: -(d as f32) * 0.1,
+                left: idx + 2,
+                right: idx + 1,
+            });
+            nodes.push(Node::Leaf { value: d as f64 });
+        }
+        nodes.push(Node::Leaf { value: -7.0 });
+        Tree { nodes }
+    }
+
+    #[test]
+    fn matches_pointer_trees_on_handmade_model() {
+        let model = wrap(vec![sample_tree(), Tree::leaf(0.5), chain_tree(14)], 2);
+        let flat = FlatModel::from_model(&model);
+        assert_eq!(flat.n_trees(), 3);
+        assert_eq!(flat.n_complete_trees(), 2); // the chain is too deep
+        for x in [
+            [0.4f32, 1.0],
+            [0.4, 3.0],
+            [0.6, 0.0],
+            [0.5, 2.0],
+            [-0.35, 9.0],
+            [-2.0, -2.0],
+        ] {
+            let want = model.predict_raw(&x);
+            assert_eq!(flat.predict_raw(&x), want);
+            assert_eq!(flat.predict_batch(&[x.to_vec()])[0], want);
+        }
+    }
+
+    #[test]
+    fn batch_equals_single_row_exactly() {
+        let data = PaperDataset::BreastCancer.generate(31).select(&(0..300).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(12, 3));
+        let flat = FlatModel::from_model(&model);
+        let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i)).collect();
+        let batch = flat.predict_batch(&rows);
+        assert_eq!(batch.len(), rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let single = flat.predict_raw(row);
+            let pointer = model.predict_raw(row);
+            assert_eq!(batch[i], single, "row {i}: batch vs single");
+            assert_eq!(batch[i], pointer, "row {i}: flat vs pointer");
+        }
+    }
+
+    #[test]
+    fn prop_flat_matches_pointer_on_random_trees() {
+        run_prop("flat engine == pointer trees", 80, |g| {
+            let d = g.usize_in(1, 8);
+            let n_trees = g.usize_in(1, 6);
+            let mut rng = Pcg64::new(g.case_seed ^ 0x77);
+            let trees: Vec<Tree> =
+                (0..n_trees).map(|_| random_tree(&mut rng, d, g.usize_in(0, 6))).collect();
+            let model = wrap(trees, d);
+            let flat = FlatModel::from_model(&model);
+            let rows: Vec<Vec<f32>> = (0..g.usize_in(1, 70))
+                .map(|_| (0..d).map(|_| g.f64_in(-1.5, 1.5) as f32).collect())
+                .collect();
+            let batch = flat.predict_batch(&rows);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(batch[i], model.predict_raw(row), "row {i}");
+            }
+        });
+    }
+
+    /// Random tree with arbitrary (non-adjacent-sibling) node order, so
+    /// flattening actually has to re-lay things out.
+    fn random_tree(rng: &mut Pcg64, d: usize, max_depth: usize) -> Tree {
+        fn grow(
+            rng: &mut Pcg64,
+            d: usize,
+            depth: usize,
+            max_depth: usize,
+            nodes: &mut Vec<Node>,
+        ) -> usize {
+            let idx = nodes.len();
+            if depth >= max_depth || rng.gen_bool(0.3) {
+                nodes.push(Node::Leaf { value: rng.gen_uniform(-2.0, 2.0) });
+                return idx;
+            }
+            nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+            let feature = rng.gen_range(d);
+            let bin = rng.gen_range(32) as u16;
+            let threshold = rng.gen_uniform(-1.0, 1.0) as f32;
+            let left = grow(rng, d, depth + 1, max_depth, nodes);
+            let right = grow(rng, d, depth + 1, max_depth, nodes);
+            nodes[idx] = Node::Internal { feature, bin, threshold, left, right };
+            idx
+        }
+        let mut nodes = Vec::new();
+        grow(rng, d, 0, max_depth, &mut nodes);
+        Tree { nodes }
+    }
+
+    #[test]
+    fn nan_inputs_route_like_pointer_trees() {
+        // `x <= t` is false for NaN, so pointer trees send NaN right;
+        // the flat engine must agree on both of its layouts.
+        let model = wrap(vec![sample_tree(), chain_tree(14)], 2);
+        let flat = FlatModel::from_model(&model);
+        for x in [
+            [f32::NAN, 1.0],
+            [0.4, f32::NAN],
+            [f32::NAN, f32::NAN],
+        ] {
+            let want = model.predict_raw(&x);
+            assert_eq!(flat.predict_raw(&x), want);
+            assert_eq!(flat.predict_batch(&[x.to_vec()])[0], want);
+        }
+    }
+
+    #[test]
+    fn multiclass_outputs_preserved() {
+        let data = PaperDataset::WineQuality.generate(32).select(&(0..600).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(4, 2));
+        let flat = FlatModel::from_model(&model);
+        assert_eq!(flat.n_outputs(), 7);
+        for i in (0..data.n_rows()).step_by(53) {
+            let row = data.row(i);
+            assert_eq!(flat.predict_raw(&row), model.predict_raw(&row));
+        }
+    }
+
+    #[test]
+    fn empty_model_returns_base_scores() {
+        let model = wrap(Vec::new(), 3);
+        let flat = FlatModel::from_model(&model);
+        assert_eq!(flat.predict_raw(&[0.0, 0.0, 0.0]), vec![0.25]);
+        assert_eq!(flat.predict_batch(&[]).len(), 0);
+    }
+}

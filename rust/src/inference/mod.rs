@@ -3,26 +3,40 @@
 //! Three prediction paths exist in the system, all agreeing numerically
 //! (integration-tested):
 //!
-//! 1. decoded pointer trees ([`crate::gbdt::GbdtModel`]) — fastest on a
-//!    host CPU,
+//! 1. the flattened SoA engine ([`FlatModel`]) — the fastest native
+//!    path: branchless complete-tree descent plus a blocked
+//!    tree-outer/row-inner batch API; bit-identical to the decoded
+//!    pointer trees ([`crate::gbdt::GbdtModel`]),
 //! 2. direct bit-packed traversal ([`crate::layout::PackedModel`]) —
 //!    what a microcontroller with the blob in flash executes,
-//! 3. the XLA runtime ([`crate::runtime::PredictEngine`]) — the batched
-//!    serving path.
+//! 3. the XLA runtime ([`crate::runtime`], `xla` feature) — the
+//!    accelerator-offload serving path.
 //!
-//! [`Predictor`] abstracts over the single-row paths so the coordinator
-//! and benches can swap engines.
+//! [`Predictor`] abstracts over the native paths so the coordinator and
+//! benches can swap engines; `predict_raw_batch` has a row-loop default
+//! so single-row engines participate in batch serving, while
+//! [`FlatModel`] overrides it with the blocked kernel.
+
+pub mod flat;
+
+pub use flat::FlatModel;
 
 use crate::data::{Dataset, Task};
 use crate::gbdt::loss::Objective;
 use crate::gbdt::GbdtModel;
 use crate::layout::PackedModel;
 
-/// A single-row raw-score predictor.
+/// A raw-score predictor.
 pub trait Predictor {
     fn predict_raw(&self, x: &[f32]) -> Vec<f64>;
     fn n_outputs(&self) -> usize;
     fn objective(&self) -> Objective;
+
+    /// Raw scores for a batch of rows. Default: one row at a time;
+    /// engines with a real batch kernel (e.g. [`FlatModel`]) override.
+    fn predict_raw_batch(&self, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| self.predict_raw(r)).collect()
+    }
 
     /// Task-level prediction: class index (classification) packed as
     /// `f64`, or the regression value.
@@ -35,22 +49,29 @@ pub trait Predictor {
     }
 
     /// Dataset score: accuracy (classification) or R² (regression).
+    /// Runs through the batch path in bounded chunks: engines with a
+    /// blocked kernel score at batch speed, while peak memory stays at
+    /// one chunk of materialized rows rather than the whole dataset.
     fn score(&self, data: &Dataset) -> f64 {
+        const CHUNK: usize = 4 * flat::BLOCK_ROWS;
+        let n = data.n_rows();
+        let obj = self.objective();
+        let mut reg_preds: Vec<f64> = Vec::new();
+        let mut cls_preds: Vec<usize> = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + CHUNK).min(n);
+            let rows: Vec<Vec<f32>> = (start..end).map(|i| data.row(i)).collect();
+            let raw = self.predict_raw_batch(&rows);
+            match data.task {
+                Task::Regression => reg_preds.extend(raw.iter().map(|r| r[0])),
+                _ => cls_preds.extend(raw.iter().map(|r| obj.predict_class(r))),
+            }
+            start = end;
+        }
         match data.task {
-            Task::Regression => {
-                let preds: Vec<f64> =
-                    (0..data.n_rows()).map(|i| self.predict_raw(&data.row(i))[0]).collect();
-                crate::metrics::r2_score(&data.targets, &preds)
-            }
-            _ => {
-                let preds: Vec<usize> = (0..data.n_rows())
-                    .map(|i| {
-                        let raw = self.predict_raw(&data.row(i));
-                        self.objective().predict_class(&raw)
-                    })
-                    .collect();
-                crate::metrics::accuracy(&data.labels, &preds)
-            }
+            Task::Regression => crate::metrics::r2_score(&data.targets, &reg_preds),
+            _ => crate::metrics::accuracy(&data.labels, &cls_preds),
         }
     }
 }
@@ -79,9 +100,25 @@ impl Predictor for PackedModel {
     }
 }
 
-/// Batch helper over any predictor.
+impl Predictor for FlatModel {
+    fn predict_raw(&self, x: &[f32]) -> Vec<f64> {
+        FlatModel::predict_raw(self, x)
+    }
+    fn predict_raw_batch(&self, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        self.predict_batch(rows)
+    }
+    fn n_outputs(&self) -> usize {
+        FlatModel::n_outputs(self)
+    }
+    fn objective(&self) -> Objective {
+        FlatModel::objective(self)
+    }
+}
+
+/// Batch helper over any predictor (delegates to the engine's batch
+/// kernel when it has one).
 pub fn predict_batch(p: &dyn Predictor, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
-    rows.iter().map(|r| p.predict_raw(r)).collect()
+    p.predict_raw_batch(rows)
 }
 
 #[cfg(test)]
@@ -98,16 +135,21 @@ mod tests {
         let finfo = FeatureInfo::from_dataset(&data);
         let blob = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() });
         let packed = PackedModel::from_bytes(blob);
+        let flat = FlatModel::from_model(&model);
 
         let s1 = Predictor::score(&model, &data);
         let s2 = Predictor::score(&packed, &data);
+        let s3 = Predictor::score(&flat, &data);
         assert!((s1 - s2).abs() < 1e-9, "decoded {s1} vs packed {s2}");
+        assert!((s1 - s3).abs() < 1e-12, "decoded {s1} vs flat {s3}");
 
         let rows: Vec<Vec<f32>> = (0..8).map(|i| data.row(i)).collect();
         let a = predict_batch(&model, &rows);
         let b = predict_batch(&packed, &rows);
-        for (x, y) in a.iter().zip(&b) {
+        let c = predict_batch(&flat, &rows);
+        for ((x, y), z) in a.iter().zip(&b).zip(&c) {
             assert!((x[0] - y[0]).abs() < 1e-5);
+            assert_eq!(x[0], z[0], "flat batch must match pointer exactly");
         }
     }
 
@@ -122,5 +164,8 @@ mod tests {
         let mc = gbdt::booster::train(&cls, GbdtParams::paper(5, 2));
         let c = mc.predict_task(&cls.row(0));
         assert!(c == 0.0 || c == 1.0);
+
+        let flat = FlatModel::from_model(&mc);
+        assert_eq!(flat.predict_task(&cls.row(0)), c);
     }
 }

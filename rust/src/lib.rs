@@ -13,12 +13,15 @@
 //!   training (`toad_forestsize`),
 //! * the ToaD bit-wise memory layout ([`layout`]): pointer-less
 //!   complete-tree arrays referencing global threshold/leaf tables,
-//! * native inference engines ([`inference`]) including a direct
-//!   bit-packed interpreter (what an MCU would execute),
+//! * native inference engines ([`inference`]): the flattened SoA batch
+//!   engine (`FlatModel`, branchless complete-tree descent + blocked
+//!   `predict_batch`) and a direct bit-packed interpreter (what an MCU
+//!   would execute),
 //! * every baseline the paper evaluates ([`baselines`]): CEGB, CCP,
 //!   random forests, and Guo et al. ordering-based ensemble pruning,
-//! * an XLA/PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) for batched serving,
+//! * an XLA/PJRT runtime ([`runtime`], behind the `xla` cargo feature)
+//!   that loads AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`)
+//!   for batched serving,
 //! * an IoT fleet coordinator ([`coordinator`]): simulated
 //!   memory-constrained devices, a deployment planner, request router and
 //!   dynamic batcher,
@@ -35,6 +38,7 @@ pub mod bitio;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod export;
 pub mod gbdt;
 pub mod inference;

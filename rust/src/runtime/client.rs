@@ -10,7 +10,7 @@
 //! histogram histogram_s4096_f64_b64.hlo.txt s=4096 f=64 b=64
 //! ```
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -98,7 +98,7 @@ impl XlaRuntime {
             .devices()
             .into_iter()
             .next()
-            .ok_or_else(|| anyhow::anyhow!("no PJRT devices"))?;
+            .ok_or_else(|| crate::anyhow!("no PJRT devices"))?;
         self.client
             .buffer_from_host_literal(Some(&device), lit)
             .context("buffer_from_host_literal")

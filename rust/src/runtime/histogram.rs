@@ -13,7 +13,7 @@
 //! serve as the drop-in once a real TPU PJRT plugin is available.
 
 use super::client::XlaRuntime;
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// A compiled histogram executable.
 pub struct HistogramEngine {
@@ -49,16 +49,16 @@ impl HistogramEngine {
         hess: &[f64],
     ) -> Result<Vec<[f64; 2]>> {
         let n = grad.len();
-        anyhow::ensure!(n <= self.s, "rows {n} exceed artifact size {}", self.s);
-        anyhow::ensure!(bins.len() <= self.f, "features {} exceed {}", bins.len(), self.f);
-        anyhow::ensure!(hess.len() == n);
+        crate::ensure!(n <= self.s, "rows {n} exceed artifact size {}", self.s);
+        crate::ensure!(bins.len() <= self.f, "features {} exceed {}", bins.len(), self.f);
+        crate::ensure!(hess.len() == n);
 
         // Pack row-major padded int32 bins + f32 stats.
         let mut bins_i32 = vec![0i32; self.s * self.f];
         for (f, col) in bins.iter().enumerate() {
-            anyhow::ensure!(col.len() == n, "ragged bins");
+            crate::ensure!(col.len() == n, "ragged bins");
             for (i, &v) in col.iter().enumerate() {
-                anyhow::ensure!((v as usize) < self.b, "bin {v} out of range {}", self.b);
+                crate::ensure!((v as usize) < self.b, "bin {v} out of range {}", self.b);
                 bins_i32[i * self.f + f] = v as i32;
             }
         }
@@ -76,7 +76,7 @@ impl HistogramEngine {
         let out = self.exe.execute::<xla::Literal>(&[bins_lit, grad_lit, hess_lit])?;
         let lit = out[0][0].to_literal_sync()?.to_tuple1()?;
         let vals: Vec<f32> = lit.to_vec()?;
-        anyhow::ensure!(vals.len() == self.f * self.b * 2);
+        crate::ensure!(vals.len() == self.f * self.b * 2);
         Ok(vals
             .chunks_exact(2)
             .map(|c| [c[0] as f64, c[1] as f64])

@@ -6,18 +6,32 @@
 //! PJRT CPU client and serves batched predictions from device-resident
 //! model tensors.
 //!
-//! * [`client`] — artifact discovery (MANIFEST.txt), HLO loading,
-//!   compilation.
 //! * [`tensorize`] — [`crate::gbdt::GbdtModel`] → fixed-shape complete
-//!   tree tensors (padding trees to the artifact depth/count).
-//! * [`predict`] — the batched predict engine used by the coordinator.
+//!   tree tensors (padding trees to the artifact depth/count). Pure
+//!   Rust, always available; also the oracle for parity tests.
+//! * `client` — artifact discovery (MANIFEST.txt), HLO loading,
+//!   compilation (**`xla` feature only**).
+//! * `histogram` / `predict` — the XLA histogram and batched predict
+//!   engines (**`xla` feature only**).
+//!
+//! The default build has no external dependencies; everything that
+//! needs the PJRT bindings is gated behind the `xla` cargo feature (see
+//! `Cargo.toml` for how to supply the bindings crate). Batched native
+//! serving without artifacts is covered by
+//! [`crate::inference::FlatModel`].
 
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
 pub mod histogram;
+#[cfg(feature = "xla")]
 pub mod predict;
 pub mod tensorize;
 
+#[cfg(feature = "xla")]
 pub use client::{ArtifactSpec, XlaRuntime};
+#[cfg(feature = "xla")]
 pub use histogram::HistogramEngine;
+#[cfg(feature = "xla")]
 pub use predict::PredictEngine;
 pub use tensorize::{tensorize, TensorModel};

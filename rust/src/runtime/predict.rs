@@ -3,7 +3,7 @@
 
 use super::client::XlaRuntime;
 use super::tensorize::TensorModel;
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// A compiled predict executable bound to one model's tensors.
 ///
@@ -116,7 +116,7 @@ impl PredictEngine {
     /// fewer than `n_features` features; zero-padded). Returns one
     /// `Vec<f64>` of length `n_outputs` per input row.
     pub fn predict(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
-        anyhow::ensure!(
+        crate::ensure!(
             rows.len() <= self.runtime_batch,
             "batch {} exceeds compiled size {}",
             rows.len(),
@@ -126,7 +126,7 @@ impl PredictEngine {
         // refresh the input literal in place.
         self.x_host.iter_mut().for_each(|v| *v = 0.0);
         for (r, row) in rows.iter().enumerate() {
-            anyhow::ensure!(row.len() <= self.n_features, "row has too many features");
+            crate::ensure!(row.len() <= self.n_features, "row has too many features");
             self.x_host[r * self.n_features..r * self.n_features + row.len()]
                 .copy_from_slice(row);
         }
@@ -142,7 +142,7 @@ impl PredictEngine {
         let lit = out[0][0].to_literal_sync()?;
         let result = lit.to_tuple1()?;
         let vals: Vec<f32> = result.to_vec()?;
-        anyhow::ensure!(vals.len() == self.runtime_batch * self.n_outputs);
+        crate::ensure!(vals.len() == self.runtime_batch * self.n_outputs);
         Ok(rows
             .iter()
             .enumerate()

@@ -9,8 +9,9 @@
 //! * the feature dimension only requires `model.n_features ≤ F`
 //!   (inputs are zero-padded by the predict engine).
 
+use crate::bail;
+use crate::error::Result;
 use crate::gbdt::GbdtModel;
-use anyhow::{bail, Result};
 
 /// Row-major tensors mirroring the artifact's parameter order.
 #[derive(Clone, Debug)]

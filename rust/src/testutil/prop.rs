@@ -19,6 +19,7 @@
 //! the printed seed; a failing property panics with the case seed so the
 //! exact case can be replayed by passing it to [`replay_prop`].
 
+use crate::data::{Dataset, Task};
 use crate::prng::Pcg64;
 
 /// Generator handle passed to properties; wraps a seeded PRNG with
@@ -78,6 +79,39 @@ impl Gen {
     /// Access the underlying PRNG for custom draws.
     pub fn rng(&mut self) -> &mut Pcg64 {
         &mut self.rng
+    }
+
+    /// Random dense regression dataset: `[min_rows, max_rows]` rows over
+    /// `[1, max_features]` features, with a target mixing linear and
+    /// nonlinear structure plus noise so grown trees have real splits.
+    /// Used by the cross-engine parity properties.
+    pub fn regression_dataset(
+        &mut self,
+        min_rows: usize,
+        max_rows: usize,
+        max_features: usize,
+    ) -> Dataset {
+        let n = self.usize_in(min_rows, max_rows);
+        let d = self.usize_in(1, max_features);
+        let features: Vec<Vec<f32>> = (0..d)
+            .map(|_| (0..n).map(|_| self.f64_in(-2.0, 2.0) as f32).collect())
+            .collect();
+        let w: Vec<f64> = (0..d).map(|_| self.normal()).collect();
+        let noise = self.f64_in(0.0, 0.3);
+        let targets: Vec<f64> = (0..n)
+            .map(|i| {
+                let lin: f64 =
+                    (0..d).map(|f| w[f] * features[f][i] as f64).sum();
+                lin + (features[0][i] as f64 * 2.5).sin() + noise * self.normal()
+            })
+            .collect();
+        Dataset {
+            name: "prop-regression".into(),
+            features,
+            targets,
+            labels: vec![],
+            task: Task::Regression,
+        }
     }
 }
 

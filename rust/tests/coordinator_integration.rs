@@ -1,5 +1,5 @@
 //! Integration: full coordinator stack — sweep candidates → planner →
-//! devices + XLA gateway → served predictions.
+//! devices + gateway batchers → served predictions.
 
 use std::time::Duration;
 use toad::coordinator::batcher::{Backend, Batcher, BatcherConfig};
@@ -7,18 +7,7 @@ use toad::coordinator::{DeploymentPlanner, DeviceKind, FleetServer, ModelCard, S
 use toad::data::synth::PaperDataset;
 use toad::data::train_test_split;
 use toad::gbdt::GbdtParams;
-use toad::runtime::tensorize;
 use toad::toad::{train_toad, ToadParams};
-
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("MANIFEST.txt").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping xla-gateway test: no artifacts (run `make artifacts`)");
-        None
-    }
-}
 
 #[test]
 fn plan_deploy_and_serve_on_device() {
@@ -61,20 +50,19 @@ fn plan_deploy_and_serve_on_device() {
     assert!(server.fleet_sim_busy_seconds() > 0.0, "device time accounted");
 }
 
+/// The dependency-free batched serving path: a gateway backed by the
+/// flattened native engine must agree with the source model exactly.
 #[test]
-fn xla_gateway_serves_batches() {
-    let Some(dir) = artifacts_dir() else { return };
+fn native_gateway_serves_batches() {
     let data = PaperDataset::CovertypeBinary.generate(6);
     let data = data.select(&(0..4000).collect::<Vec<_>>());
     let (train_set, test_set) = train_test_split(&data, 0.2, 6);
     let params = ToadParams::new(GbdtParams::paper(32, 3), 1.0, 0.5);
     let m = train_toad(&train_set, &params);
-    let tm = tensorize(&m.model, 256, 4, 64, 1).unwrap();
 
     let batcher = Batcher::spawn(
-        tm,
         BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
-        Backend::Xla { artifacts_dir: dir, features: 64 },
+        Backend::Native(m.model.flatten()),
     );
     let mut server = FleetServer::new();
     server.add_gateway("cov", batcher);
@@ -93,4 +81,53 @@ fn xla_gateway_serves_batches() {
     assert!(correct as f64 / n as f64 > 0.6);
     let rec = server.metrics("cov").unwrap();
     assert_eq!(rec.count(), n);
+}
+
+#[cfg(feature = "xla")]
+mod xla_gateway {
+    use super::*;
+    use toad::runtime::tensorize;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("MANIFEST.txt").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping xla-gateway test: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn xla_gateway_serves_batches() {
+        let Some(dir) = artifacts_dir() else { return };
+        let data = PaperDataset::CovertypeBinary.generate(6);
+        let data = data.select(&(0..4000).collect::<Vec<_>>());
+        let (train_set, test_set) = train_test_split(&data, 0.2, 6);
+        let params = ToadParams::new(GbdtParams::paper(32, 3), 1.0, 0.5);
+        let m = train_toad(&train_set, &params);
+        let tm = tensorize(&m.model, 256, 4, 64, 1).unwrap();
+
+        let batcher = Batcher::spawn(
+            BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+            Backend::Xla { artifacts_dir: dir, features: 64, tensors: tm },
+        );
+        let mut server = FleetServer::new();
+        server.add_gateway("cov", batcher);
+
+        let n = 200usize;
+        let mut correct = 0usize;
+        for i in 0..n {
+            let out = server.predict("cov", test_set.row(i)).unwrap();
+            let pred = (out[0] > 0.0) as usize;
+            let want = m.model.predict_class(&test_set.row(i));
+            assert_eq!(pred, want, "gateway disagrees with source model at row {i}");
+            if pred == test_set.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / n as f64 > 0.6);
+        let rec = server.metrics("cov").unwrap();
+        assert_eq!(rec.count(), n);
+    }
 }

@@ -1,0 +1,93 @@
+//! Cross-engine parity: the three native prediction paths must agree on
+//! randomly grown models.
+//!
+//! * `FlatModel::predict_batch` vs `Tree::predict_row` (through
+//!   `GbdtModel::predict_raw`): **bit-identical** — the flat engine
+//!   performs the same comparisons and sums leaf contributions in the
+//!   same order, so the bound here is 1e-9 with exactness expected.
+//! * `PackedModel::predict_raw` vs the pointer trees: the packed layout
+//!   stores leaf values as f32 (paper §3.2.2), so each tree contributes
+//!   one f32 rounding; the bound scales with the ensemble size (1e-4 is
+//!   generous for ≤ 64 small trees).
+
+use toad::gbdt::{booster, GbdtParams};
+use toad::inference::FlatModel;
+use toad::layout::{encode, EncodeOptions, FeatureInfo, PackedModel};
+use toad::testutil::prop::run_prop;
+
+#[test]
+fn engines_agree_on_randomly_grown_models() {
+    run_prop("flat/pointer/packed engine parity", 15, |g| {
+        let data = g.regression_dataset(60, 250, 6);
+        let rounds = g.usize_in(1, 8);
+        let depth = g.usize_in(1, 5);
+        let params = GbdtParams {
+            min_data_in_leaf: g.usize_in(1, 10) as u32,
+            ..GbdtParams::paper(rounds, depth)
+        };
+        let model = booster::train(&data, params);
+
+        let flat = FlatModel::from_model(&model);
+        let finfo = FeatureInfo::from_dataset(&data);
+        let blob = encode(
+            &model,
+            &finfo,
+            &EncodeOptions { allow_f16: false, leaf_mantissa_bits: None },
+        );
+        let packed = PackedModel::from_bytes(blob);
+
+        let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i)).collect();
+        let batch = flat.predict_batch(&rows);
+        assert_eq!(batch.len(), rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let pointer = model.predict_raw(row);
+            let single = flat.predict_raw(row);
+            let packed_out = packed.predict_raw(row);
+            assert!(
+                (batch[i][0] - pointer[0]).abs() < 1e-9,
+                "row {i}: flat batch {} vs pointer {}",
+                batch[i][0],
+                pointer[0]
+            );
+            assert_eq!(
+                batch[i], single,
+                "row {i}: blocked batch and single-row flat paths diverged"
+            );
+            assert!(
+                (packed_out[0] - pointer[0]).abs() < 1e-4,
+                "row {i}: packed {} vs pointer {} (beyond f32 leaf rounding)",
+                packed_out[0],
+                pointer[0]
+            );
+        }
+    });
+}
+
+/// Off-dataset probes (values the binner never saw) must route the same
+/// way through all engines too.
+#[test]
+fn engines_agree_on_off_data_probes() {
+    run_prop("engine parity off-data", 10, |g| {
+        let data = g.regression_dataset(80, 160, 4);
+        let model = booster::train(&data, GbdtParams::paper(4, 3));
+        let flat = FlatModel::from_model(&model);
+        let finfo = FeatureInfo::from_dataset(&data);
+        let blob = encode(
+            &model,
+            &finfo,
+            &EncodeOptions { allow_f16: false, leaf_mantissa_bits: None },
+        );
+        let packed = PackedModel::from_bytes(blob);
+
+        let d = data.n_features();
+        let probes: Vec<Vec<f32>> = (0..32)
+            .map(|_| (0..d).map(|_| g.f64_in(-3.0, 3.0) as f32).collect())
+            .collect();
+        let batch = flat.predict_batch(&probes);
+        for (i, probe) in probes.iter().enumerate() {
+            let pointer = model.predict_raw(probe);
+            assert!((batch[i][0] - pointer[0]).abs() < 1e-9, "probe {i}");
+            assert!((packed.predict_raw(probe)[0] - pointer[0]).abs() < 1e-4, "probe {i}");
+        }
+    });
+}

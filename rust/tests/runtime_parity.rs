@@ -1,8 +1,11 @@
 //! Integration: the XLA predict path must agree with native inference.
 //!
-//! Requires `make artifacts` to have run; tests skip (with a notice)
-//! when the artifact directory is absent so `cargo test` stays green in
-//! a fresh checkout.
+//! Compiled only with the `xla` cargo feature (the PJRT bindings are an
+//! optional external dependency; see Cargo.toml). Additionally requires
+//! `make artifacts` to have run; tests skip (with a notice) when the
+//! artifact directory is absent so `cargo test` stays green in a fresh
+//! checkout.
+#![cfg(feature = "xla")]
 
 use toad::data::synth::PaperDataset;
 use toad::data::train_test_split;

@@ -5,9 +5,10 @@
 //! * deploys it to a fleet of simulated memory-constrained devices
 //!   (on-device bit-packed inference + MCU-model time accounting),
 //! * AND serves the same model through the gateway path: dynamic
-//!   batching into the flattened native batch engine — or, with the
-//!   `xla` feature and `make artifacts`, into the AOT-compiled XLA
-//!   predict artifact,
+//!   batching into the quantized-threshold flat batch engine (u16
+//!   threshold ranks, pre-binned rows, interleaved multi-row descent)
+//!   — or, with the `xla` feature and `make artifacts`, into the
+//!   AOT-compiled XLA predict artifact,
 //! * streams sensor-like requests through both, reports accuracy,
 //!   latency percentiles, and throughput.
 //!
@@ -95,12 +96,12 @@ fn gateway_backend(model: &toad::gbdt::GbdtModel) -> Backend {
         println!("gateway: XLA predict artifact online (batch 32)");
         return Backend::Xla { artifacts_dir: artifacts, features: 64, tensors: tm };
     }
-    println!("gateway: artifacts missing, using native flat engine (run `make artifacts`)");
-    Backend::Native(model.flatten())
+    println!("gateway: artifacts missing, using quantized flat engine (run `make artifacts`)");
+    Backend::Quantized(model.quantize())
 }
 
 #[cfg(not(feature = "xla"))]
 fn gateway_backend(model: &toad::gbdt::GbdtModel) -> Backend {
-    println!("gateway: native flat batch engine online (batch 32)");
-    Backend::Native(model.flatten())
+    println!("gateway: quantized flat batch engine online (batch 32)");
+    Backend::Quantized(model.quantize())
 }

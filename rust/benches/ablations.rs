@@ -52,7 +52,7 @@ fn main() {
     push("toad layout, +f16 thresholds", plain.model.score(&te), bd.total_bytes(), ptr);
 
     let shared = EncodeOptions { leaf_mantissa_bits: Some(8), ..Default::default() };
-    let blob = encode(&plain.model, &finfo, &shared);
+    let blob = encode(&plain.model, &finfo, &shared).unwrap();
     let dec = toad::layout::decode(&blob);
     push("toad layout, +leaf sharing (8-bit mantissa)", dec.score(&te), blob.len(), ptr);
 

@@ -13,7 +13,7 @@ use toad::data::synth::PaperDataset;
 use toad::data::Binner;
 use toad::gbdt::histogram::{HistogramPool, HistogramSet};
 use toad::gbdt::{self, GbdtParams};
-use toad::inference::FlatModel;
+use toad::inference::{FlatModel, QuantizedFlatModel};
 use toad::layout::{encode, EncodeOptions, FeatureInfo, PackedModel};
 
 /// Wall-clock a closure; returns seconds per iteration and prints.
@@ -114,10 +114,16 @@ fn main() {
     // ---- inference: row-at-a-time pointer trees vs blocked flat ------
     let model = gbdt::booster::train(&data, GbdtParams::paper(64, 4));
     let finfo = FeatureInfo::from_dataset(&data);
-    let blob = encode(&model, &finfo, &EncodeOptions::default());
+    let blob = encode(&model, &finfo, &EncodeOptions::default()).expect("model fits layout fields");
     println!("model: {} trees depth<=4, toad blob {} bytes", model.n_trees(), blob.len());
     let packed = PackedModel::from_bytes(blob.clone());
     let flat = FlatModel::from_model(&model);
+    let quant = QuantizedFlatModel::from_model(&model);
+    println!(
+        "quantized engine: {} distinct thresholds -> u16 ranks ({} complete trees)",
+        quant.n_thresholds(),
+        quant.n_complete_trees()
+    );
     let test_rows: Vec<Vec<f32>> = (0..512).map(|i| data.row(i)).collect();
 
     let per = time("native predict row-wise (512 rows, before)", 20, || {
@@ -148,6 +154,25 @@ fn main() {
     });
     rec.push("native_predict_flat_single_512", per);
 
+    let per_quant = time("quantized predict_batch (512 rows, after)", 20, || {
+        std::hint::black_box(quant.predict_batch(&test_rows));
+    });
+    rec.push("quantized_batch", per_quant);
+    println!(
+        "{:44} {:>12.1} K rows/s",
+        "  -> quantized batch throughput",
+        512.0 / per_quant / 1e3
+    );
+
+    let per = time("quantized predict single-row (512 rows)", 20, || {
+        let mut acc = 0.0;
+        for r in &test_rows {
+            acc += quant.predict_raw(r)[0];
+        }
+        std::hint::black_box(acc);
+    });
+    rec.push("quantized_single_512", per);
+
     let per = time("bit-packed predict (512 rows)", 5, || {
         let mut acc = 0.0;
         for r in &test_rows {
@@ -159,7 +184,7 @@ fn main() {
 
     // ---- layout codec -------------------------------------------------
     let per = time("toad encode", 50, || {
-        std::hint::black_box(encode(&model, &finfo, &EncodeOptions::default()));
+        std::hint::black_box(encode(&model, &finfo, &EncodeOptions::default()).unwrap());
     });
     rec.push("toad_encode", per);
     let per = time("toad decode", 50, || {
@@ -191,10 +216,16 @@ fn main() {
         rec.lookup("histogram_subset_scalar") / rec.lookup("histogram_subset_gathered");
     let predict_speedup =
         rec.lookup("native_predict_rowwise_512") / rec.lookup("native_predict_flat_batch_512");
+    let quant_speedup =
+        rec.lookup("native_predict_rowwise_512") / rec.lookup("quantized_batch");
+    let quant_vs_flat =
+        rec.lookup("native_predict_flat_batch_512") / rec.lookup("quantized_batch");
     println!("\n== speedups vs scalar baselines ==");
     println!("{:44} {:>11.2}x", "histogram build (dense)", hist_speedup);
     println!("{:44} {:>11.2}x", "histogram build (subset/gathered)", subset_speedup);
     println!("{:44} {:>11.2}x", "native batched predict", predict_speedup);
+    println!("{:44} {:>11.2}x", "quantized batched predict", quant_speedup);
+    println!("{:44} {:>11.2}x", "quantized vs flat batch", quant_vs_flat);
 
     let json = rec.to_json(
         &format!("covtype_binary_{n}x{d}"),
@@ -202,6 +233,8 @@ fn main() {
             ("histogram_build", hist_speedup),
             ("histogram_subset", subset_speedup),
             ("native_predict_batch", predict_speedup),
+            ("quantized_predict_batch", quant_speedup),
+            ("quantized_vs_flat_batch", quant_vs_flat),
         ],
     );
     // CARGO_MANIFEST_DIR is <repo>/rust; the trajectory file lives at

@@ -52,12 +52,19 @@ impl BitWriter {
     }
 
     /// Write the low `width` bits of `value` (LSB first). `width` may be 0
-    /// (no-op), at most 64. Bits of `value` above `width` must be zero.
+    /// (no-op), at most 64.
+    ///
+    /// Bits of `value` at or above `width` are **masked off
+    /// deterministically**: the stored field is `value mod 2^width` in
+    /// every build profile, so debug and release builds produce the
+    /// same bytes. Passing an oversized value is almost certainly a
+    /// caller bug — range-validate at the encoding layer (as
+    /// [`crate::layout::toad_format::encode`] does for every fixed
+    /// header field) rather than relying on the truncation.
     pub fn write(&mut self, value: u64, width: u32) {
         debug_assert!(width <= 64);
-        debug_assert!(width == 64 || value < (1u64 << width), "value {value} exceeds width {width}");
         let mut remaining = width;
-        let mut v = value;
+        let mut v = value & mask64(width);
         while remaining > 0 {
             if self.bit_pos == 0 {
                 self.buf.push(0);
@@ -325,6 +332,27 @@ mod tests {
             for &(v, width) in &fields {
                 assert_eq!(r.read(width), v);
             }
+        }
+    }
+
+    #[test]
+    fn oversized_values_mask_deterministically() {
+        // An out-of-width value must store `value mod 2^width` — the
+        // same bytes in debug and release — never silently corrupt
+        // neighbouring fields.
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write(0xFFFF, 4); // oversized: only the low 4 bits land
+        w.write(0xAB, 8);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.read(4), 0xF);
+        assert_eq!(r.read(8), 0xAB, "oversized write must not spill into later fields");
+        assert_eq!(w_len_bits(3 + 4 + 8), bytes.len());
+
+        fn w_len_bits(bits: usize) -> usize {
+            (bits + 7) / 8
         }
     }
 

@@ -2,17 +2,22 @@
 //!
 //! The gateway collects incoming rows until either the batch is full or
 //! a deadline expires, then runs one batched execution and fans the
-//! results back out. Two backends exist:
+//! results back out. Three backends exist:
 //!
 //! * [`Backend::Native`] — the flattened SoA engine
 //!   ([`crate::inference::FlatModel`]): the default, dependency-free
 //!   batched serving path (tree-outer/row-inner blocked kernel).
+//! * [`Backend::Quantized`] — the quantized-threshold flat engine
+//!   ([`crate::inference::QuantizedFlatModel`]): rows are pre-binned
+//!   per block and descents run on `u16` compares with interleaved
+//!   lanes; bit-identical outputs to `Native`, smaller per-node
+//!   streams — the pick for memory-bound batch serving.
 //! * `Backend::Xla` (`xla` feature) — the AOT-compiled PJRT artifact.
 //!   Artifacts are compiled at a fixed batch size, and PJRT handles are
 //!   not `Send`, so the engine lives entirely inside the worker thread;
 //!   requests and responses cross via channels.
 
-use crate::inference::FlatModel;
+use crate::inference::{FlatModel, QuantizedFlatModel};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -49,6 +54,9 @@ pub struct Batcher {
 pub enum Backend {
     /// Blocked batched prediction on the flattened native engine.
     Native(FlatModel),
+    /// Blocked batched prediction on the quantized-threshold engine
+    /// (pre-binned rows, u16 compares, interleaved lanes).
+    Quantized(QuantizedFlatModel),
     /// XLA predict artifact from this directory (compiled in-thread).
     #[cfg(feature = "xla")]
     Xla {
@@ -97,11 +105,13 @@ fn worker_loop(config: BatcherConfig, backend: Backend, rx: Receiver<Request>) {
     // the native engine is just moved in.
     enum Engine {
         Native(FlatModel),
+        Quantized(QuantizedFlatModel),
         #[cfg(feature = "xla")]
         Xla(crate::runtime::PredictEngine),
     }
     let mut engine = match backend {
         Backend::Native(flat) => Engine::Native(flat),
+        Backend::Quantized(quant) => Engine::Quantized(quant),
         #[cfg(feature = "xla")]
         Backend::Xla { artifacts_dir, features, tensors } => {
             let rt = crate::runtime::XlaRuntime::open(&artifacts_dir)
@@ -146,22 +156,26 @@ fn worker_loop(config: BatcherConfig, backend: Backend, rx: Receiver<Request>) {
         }
     }
 
-    fn flush(engine: &mut Engine, pending: &mut Vec<Request>) {
-        let rows: Vec<Vec<f32>> = pending.iter().map(|r| r.row.clone()).collect();
-        let outputs: Vec<Vec<f64>> = match engine {
-            Engine::Native(flat) => {
-                // Clients may send short rows; the flat engine indexes
-                // up to n_features, so zero-pad at the gateway boundary
-                // (the XLA engine zero-pads internally).
-                let nf = flat.n_features();
-                let mut rows = rows;
-                for r in &mut rows {
-                    if r.len() < nf {
-                        r.resize(nf, 0.0);
-                    }
-                }
-                flat.predict_batch(&rows)
+    /// Clients may send short rows; the native engines index up to
+    /// `n_features`, so zero-pad at the gateway boundary (the XLA
+    /// engine zero-pads internally).
+    fn pad(mut rows: Vec<Vec<f32>>, nf: usize) -> Vec<Vec<f32>> {
+        for r in &mut rows {
+            if r.len() < nf {
+                r.resize(nf, 0.0);
             }
+        }
+        rows
+    }
+
+    fn flush(engine: &mut Engine, pending: &mut Vec<Request>) {
+        // Take the rows out instead of cloning — `pending` is drained
+        // right after, and only the reply channel is needed then.
+        let rows: Vec<Vec<f32>> =
+            pending.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
+        let outputs: Vec<Vec<f64>> = match engine {
+            Engine::Native(flat) => flat.predict_batch(&pad(rows, flat.n_features())),
+            Engine::Quantized(quant) => quant.predict_batch(&pad(rows, quant.n_features())),
             #[cfg(feature = "xla")]
             Engine::Xla(e) => e.predict(&rows).expect("xla predict"),
         };
@@ -198,6 +212,27 @@ mod tests {
             let want = model.predict_raw(&row)[0];
             assert_eq!(got[0], want, "row {i}: flat gateway must match the source model");
         }
+    }
+
+    #[test]
+    fn quantized_batcher_matches_model_including_short_rows() {
+        let (_, data, model) = fixtures();
+        let b = Batcher::spawn(
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            Backend::Quantized(model.quantize()),
+        );
+        for i in 0..20 {
+            let row = data.row(i);
+            let got = b.predict(row.clone());
+            let want = model.predict_raw(&row)[0];
+            assert_eq!(got[0], want, "row {i}: quantized gateway must match the source model");
+        }
+        // Short rows are zero-padded at the gateway, same as Native.
+        let mut short = data.row(0);
+        short.truncate(3);
+        let mut padded = short.clone();
+        padded.resize(data.n_features(), 0.0);
+        assert_eq!(b.predict(short), model.predict_raw(&padded));
     }
 
     #[test]

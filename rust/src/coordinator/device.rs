@@ -143,7 +143,7 @@ mod tests {
         let data = PaperDataset::BreastCancer.generate(61).select(&(0..300).collect::<Vec<_>>());
         let m = gbdt::booster::train(&data, GbdtParams::paper(rounds, depth));
         let finfo = FeatureInfo::from_dataset(&data);
-        (encode(&m, &finfo, &EncodeOptions::default()), data.row(0))
+        (encode(&m, &finfo, &EncodeOptions::default()).unwrap(), data.row(0))
     }
 
     #[test]

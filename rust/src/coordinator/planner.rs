@@ -170,7 +170,7 @@ mod tests {
         let mut p = DeploymentPlanner::new();
         for (id, rounds, score) in [("small", 4usize, 0.9), ("large", 64, 0.95)] {
             let m = gbdt::booster::train(&data, GbdtParams::paper(rounds, 2));
-            let blob = encode(&m, &finfo, &EncodeOptions::default());
+            let blob = encode(&m, &finfo, &EncodeOptions::default()).unwrap();
             p.add_candidate(ModelCard { id: id.into(), score, size_bytes: blob.len(), blob });
         }
         let small_size = p.candidates()[0].size_bytes;

@@ -101,7 +101,8 @@ mod tests {
         let data = PaperDataset::BreastCancer.generate(81).select(&(0..300).collect::<Vec<_>>());
         let model = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
         let finfo = FeatureInfo::from_dataset(&data);
-        let blob = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() });
+        let blob = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() })
+            .unwrap();
 
         let mut server = FleetServer::new();
         let mut dev = SimulatedDevice::new(0, DeviceKind::UnoR4);

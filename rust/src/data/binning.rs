@@ -26,16 +26,22 @@ impl Binner {
     /// `max_bins - 1` boundaries are placed at (approximately) equal-mass
     /// quantiles, always *between* two distinct values so that binning is
     /// exact on training data.
+    ///
+    /// NaN values (e.g. from a dirty CSV) are treated as *missing*: they
+    /// contribute nothing to boundary placement, and [`Binner::bin_value`]
+    /// routes them to the top bin — the same "right at every split"
+    /// direction the inference engines give NaN (where `x ≤ t` is
+    /// false) — so dirty rows degrade gracefully instead of panicking.
     pub fn fit(data: &Dataset, max_bins: usize) -> Binner {
         assert!(max_bins >= 2, "need at least 2 bins");
-        let n = data.n_rows();
         let boundaries = data
             .features
             .iter()
             .map(|col| {
-                // Sort a copy; NaNs are not supported by the generators.
-                let mut v: Vec<f32> = col.clone();
-                v.sort_by(|a, b| a.partial_cmp(b).expect("NaN feature value"));
+                // Sort a copy, ignoring NaNs (missing values).
+                let mut v: Vec<f32> = col.iter().copied().filter(|x| !x.is_nan()).collect();
+                let n = v.len();
+                v.sort_by(f32::total_cmp);
                 let mut distinct: Vec<(f32, usize)> = Vec::new();
                 for &x in &v {
                     match distinct.last_mut() {
@@ -89,9 +95,18 @@ impl Binner {
     }
 
     /// Bin a single value of feature `f` (binary search over boundaries).
+    ///
+    /// NaN maps to the top bin: every split sends bins `≤ b` left, so
+    /// the top bin routes right at every boundary — exactly how the
+    /// inference engines route NaN (`x ≤ t` is false). Training-time
+    /// binned routing and float-threshold inference therefore agree on
+    /// dirty rows too.
     #[inline]
     pub fn bin_value(&self, f: usize, x: f32) -> u16 {
         let b = &self.boundaries[f];
+        if x.is_nan() {
+            return b.len() as u16;
+        }
         // partition_point: first boundary >= x fails `x <= bound` check…
         // we want the count of boundaries strictly below x, i.e. the
         // number of `bound < x`.
@@ -241,6 +256,70 @@ mod tests {
                     assert!(x > thr, "x={x} bin={bin} thr={thr} k={k}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn nan_values_do_not_panic_and_bin_to_top() {
+        // A dirty column (NaN mixed in) must fit without panicking,
+        // place the same boundaries as the clean column, and send NaN
+        // to the top bin (right at every split, like the engines).
+        let clean = vec![0.0f32, 1.0, 2.0, 3.0, 1.0, 2.0];
+        let mut dirty = clean.clone();
+        dirty[2] = f32::NAN;
+        dirty.push(f32::NAN);
+        let bc = Binner::fit(&ds(vec![clean.clone()]), 16);
+        let bd = Binner::fit(&ds(vec![dirty]), 16);
+        // The remaining distinct values {0,1,2,3} still all appear.
+        assert_eq!(bc.boundaries[0], bd.boundaries[0]);
+        let top = bd.boundaries[0].len() as u16;
+        assert_eq!(bd.bin_value(0, f32::NAN), top);
+        // NaN routes right of every boundary, like `x <= t == false`.
+        for k in 0..bd.boundaries[0].len() {
+            assert!(bd.bin_value(0, f32::NAN) > k as u16);
+        }
+    }
+
+    #[test]
+    fn training_survives_nan_features() {
+        // End-to-end: a dirty CSV-like dataset must train without
+        // panicking, and binned routing must match float routing on the
+        // NaN rows (both send NaN right at every split).
+        use crate::gbdt::{self, GbdtParams};
+        let mut rng = Pcg64::new(26);
+        let n = 400;
+        let mut cols: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..n).map(|_| rng.gen_f32() * 4.0 - 2.0).collect())
+            .collect();
+        let targets: Vec<f64> =
+            (0..n).map(|i| (cols[0][i] * 1.5 - cols[2][i]) as f64).collect();
+        for i in (0..n).step_by(17) {
+            cols[i % 3][i] = f32::NAN; // sprinkle missing values
+        }
+        let data = Dataset {
+            name: "dirty".into(),
+            features: cols,
+            targets,
+            labels: vec![],
+            task: Task::Regression,
+        };
+        let mut b = gbdt::booster::Booster::new(
+            &data,
+            GbdtParams::paper(8, 3),
+            crate::gbdt::splitter::NoPenalty,
+        );
+        b.run();
+        // Route through the *training* binner: binned descent and
+        // float-threshold descent must agree even on NaN rows.
+        let binned = b.binner().bin_dataset(&data);
+        let model = b.into_model();
+        assert!(model.n_trees() > 0);
+        for i in 0..n {
+            assert_eq!(
+                model.predict_raw_binned(&binned, i),
+                model.predict_raw(&data.row(i)),
+                "row {i}: binned and float routing diverged"
+            );
         }
     }
 

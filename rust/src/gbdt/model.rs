@@ -69,15 +69,25 @@ impl GbdtModel {
         crate::inference::FlatModel::from_model(self)
     }
 
+    /// Quantize into the rank-threshold serving engine
+    /// ([`crate::inference::QuantizedFlatModel`]): `u16` threshold
+    /// ranks, pre-binned rows, multi-row interleaved descent —
+    /// bit-identical raw scores.
+    pub fn quantize(&self) -> crate::inference::QuantizedFlatModel {
+        crate::inference::QuantizedFlatModel::from_model(self)
+    }
+
     /// Evaluate the task metric on a dataset: accuracy for
     /// classification, R² for regression (paper §4.1).
     ///
-    /// Routed through the flattened batch engine — sweeps score whole
-    /// grids of models, so dataset-scale evaluation takes the blocked
-    /// path rather than walking pointer trees row by row. Predictions
-    /// are bit-identical to the pointer traversal.
+    /// Routed through the quantized flat batch engine — sweeps score
+    /// whole grids of models, so dataset-scale evaluation takes the
+    /// blocked multi-row path rather than walking pointer trees row by
+    /// row. Predictions are bit-identical to the pointer traversal (and
+    /// to [`GbdtModel::flatten`]'s engine), so metric values are
+    /// unchanged by the routing.
     pub fn score(&self, data: &Dataset) -> f64 {
-        crate::inference::Predictor::score(&self.flatten(), data)
+        crate::inference::Predictor::score(&self.quantize(), data)
     }
 
     /// Raw-score prediction over binned data (training-path shortcut:

@@ -46,9 +46,21 @@ const LEAF: u16 = u16::MAX;
 /// Upper depth bound for the complete-tree layout (2^d slots).
 const MAX_COMPLETE_DEPTH: usize = 10;
 
-/// Where one tree lives inside the model's arrays.
+/// Layout policy shared by the flat and quantized engines: a tree takes
+/// the complete fast path when its depth is bounded and leaf
+/// replication blows up the node count at most 4×. Keeping this in one
+/// place guarantees both engines route every tree through equivalent
+/// layouts (an invariant the parity tests rely on).
+#[inline]
+pub(crate) fn complete_layout_ok(depth: usize, n_nodes: usize) -> bool {
+    depth <= MAX_COMPLETE_DEPTH && (1usize << depth) <= 4 * n_nodes
+}
+
+/// Where one tree lives inside the model's arrays. Shared with the
+/// quantized engine ([`crate::inference::QuantizedFlatModel`]), which
+/// uses the same two layouts over rank-quantized threshold arrays.
 #[derive(Clone, Copy, Debug)]
-enum TreeRef {
+pub(crate) enum TreeRef {
     /// Complete heap layout: `2^depth − 1` internal slots at `ioff`
     /// (in `cfeat`/`cthr`), `2^depth` leaf slots at `loff` (in `cleaf`).
     Complete { ioff: u32, loff: u32, depth: u8 },
@@ -146,9 +158,7 @@ impl FlatModel {
             let mut refs = Vec::with_capacity(trees.len());
             for tree in trees {
                 let depth = tree.depth();
-                let complete_ok =
-                    depth <= MAX_COMPLETE_DEPTH && (1usize << depth) <= 4 * tree.n_nodes();
-                if complete_ok {
+                if complete_layout_ok(depth, tree.n_nodes()) {
                     let (internal, leaves) = tree.to_complete();
                     let ioff = flat.cfeat.len() as u32;
                     let loff = flat.cleaf.len() as u32;

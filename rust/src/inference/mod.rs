@@ -1,25 +1,33 @@
 //! Native inference engines and the unified predictor interface.
 //!
-//! Three prediction paths exist in the system, all agreeing numerically
+//! Four prediction paths exist in the system, all agreeing numerically
 //! (integration-tested):
 //!
-//! 1. the flattened SoA engine ([`FlatModel`]) — the fastest native
-//!    path: branchless complete-tree descent plus a blocked
-//!    tree-outer/row-inner batch API; bit-identical to the decoded
-//!    pointer trees ([`crate::gbdt::GbdtModel`]),
-//! 2. direct bit-packed traversal ([`crate::layout::PackedModel`]) —
+//! 1. the flattened SoA engine ([`FlatModel`]) — branchless
+//!    complete-tree descent plus a blocked tree-outer/row-inner batch
+//!    API; bit-identical to the decoded pointer trees
+//!    ([`crate::gbdt::GbdtModel`]),
+//! 2. the quantized-threshold flat engine ([`QuantizedFlatModel`]) —
+//!    the same layouts with `u16` threshold *ranks* instead of `f32`
+//!    values: rows are pre-binned once per block and descents run on
+//!    integer compares with 8 rows interleaved per tree walk; also
+//!    bit-identical, and the default dataset-scoring path,
+//! 3. direct bit-packed traversal ([`crate::layout::PackedModel`]) —
 //!    what a microcontroller with the blob in flash executes,
-//! 3. the XLA runtime ([`crate::runtime`], `xla` feature) — the
+//! 4. the XLA runtime ([`crate::runtime`], `xla` feature) — the
 //!    accelerator-offload serving path.
 //!
 //! [`Predictor`] abstracts over the native paths so the coordinator and
 //! benches can swap engines; `predict_raw_batch` has a row-loop default
 //! so single-row engines participate in batch serving, while
-//! [`FlatModel`] overrides it with the blocked kernel.
+//! [`FlatModel`] and [`QuantizedFlatModel`] override it with their
+//! blocked kernels.
 
 pub mod flat;
+pub mod quantized;
 
 pub use flat::FlatModel;
+pub use quantized::QuantizedFlatModel;
 
 use crate::data::{Dataset, Task};
 use crate::gbdt::loss::Objective;
@@ -115,6 +123,21 @@ impl Predictor for FlatModel {
     }
 }
 
+impl Predictor for QuantizedFlatModel {
+    fn predict_raw(&self, x: &[f32]) -> Vec<f64> {
+        QuantizedFlatModel::predict_raw(self, x)
+    }
+    fn predict_raw_batch(&self, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        self.predict_batch(rows)
+    }
+    fn n_outputs(&self) -> usize {
+        QuantizedFlatModel::n_outputs(self)
+    }
+    fn objective(&self) -> Objective {
+        QuantizedFlatModel::objective(self)
+    }
+}
+
 /// Batch helper over any predictor (delegates to the engine's batch
 /// kernel when it has one).
 pub fn predict_batch(p: &dyn Predictor, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
@@ -133,23 +156,29 @@ mod tests {
         let data = PaperDataset::BreastCancer.generate(41).select(&(0..400).collect::<Vec<_>>());
         let model = gbdt::booster::train(&data, GbdtParams::paper(10, 3));
         let finfo = FeatureInfo::from_dataset(&data);
-        let blob = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() });
+        let blob = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() })
+            .unwrap();
         let packed = PackedModel::from_bytes(blob);
         let flat = FlatModel::from_model(&model);
+        let quant = QuantizedFlatModel::from_model(&model);
 
         let s1 = Predictor::score(&model, &data);
         let s2 = Predictor::score(&packed, &data);
         let s3 = Predictor::score(&flat, &data);
+        let s4 = Predictor::score(&quant, &data);
         assert!((s1 - s2).abs() < 1e-9, "decoded {s1} vs packed {s2}");
         assert!((s1 - s3).abs() < 1e-12, "decoded {s1} vs flat {s3}");
+        assert_eq!(s3, s4, "flat {s3} vs quantized {s4}");
 
         let rows: Vec<Vec<f32>> = (0..8).map(|i| data.row(i)).collect();
         let a = predict_batch(&model, &rows);
         let b = predict_batch(&packed, &rows);
         let c = predict_batch(&flat, &rows);
-        for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+        let q = predict_batch(&quant, &rows);
+        for (((x, y), z), w) in a.iter().zip(&b).zip(&c).zip(&q) {
             assert!((x[0] - y[0]).abs() < 1e-5);
             assert_eq!(x[0], z[0], "flat batch must match pointer exactly");
+            assert_eq!(z, w, "quantized batch must match flat exactly");
         }
     }
 
@@ -167,5 +196,7 @@ mod tests {
 
         let flat = FlatModel::from_model(&mc);
         assert_eq!(flat.predict_task(&cls.row(0)), c);
+        let quant = QuantizedFlatModel::from_model(&mc);
+        assert_eq!(quant.predict_task(&cls.row(0)), c);
     }
 }

@@ -1,0 +1,620 @@
+//! `QuantizedFlatModel` — the quantized-threshold flat engine.
+//!
+//! [`crate::inference::FlatModel`] already gives the branchless
+//! complete-tree descent over structure-of-arrays storage; this engine
+//! applies the paper's threshold-quantization idea (§3.2.1, the same
+//! observation the ToaD layout's per-feature threshold tables rest on)
+//! to the *serving* hot path:
+//!
+//! * **u16 thresholds.** Every split threshold is replaced by its rank
+//!   in the per-feature sorted table of distinct thresholds the model
+//!   uses — the serving-side analogue of the boundary-index encoding in
+//!   [`crate::layout::feature_info`]. The `thr` array shrinks from
+//!   `f32` to `u16` (half the node bytes of the descent's hottest
+//!   stream), and comparisons become integer compares.
+//! * **Pre-binned rows.** An incoming row is binned once per
+//!   prediction: `xb[f] = #{thresholds of f strictly below x[f]}`. For
+//!   a threshold with rank `k` the predicate `x ≤ t` is then *exactly*
+//!   `xb[f] ≤ k` — for every real `x`, not just training values — so
+//!   routing (and therefore raw scores) stays bit-identical to
+//!   [`FlatModel`] and the pointer trees. A NaN input maps to the
+//!   dedicated bin [`NAN_BIN`], which compares greater than every real
+//!   rank and so routes right, exactly like `!(x ≤ t)` on floats.
+//! * **Multi-row interleaved descent.** A complete tree's descent runs
+//!   a fixed `depth` iterations, so [`QuantizedFlatModel::predict_batch`]
+//!   walks [`LANES`] rows per tree in lockstep: one level of all lanes,
+//!   then the next. The lane chains are independent, which lets the
+//!   compiler keep eight descents in flight (and vectorize the compare
+//!   + index arithmetic) instead of serializing on one row's
+//!   load→compare→index dependency chain.
+//!
+//! Compared to [`FlatModel`], each block pays one extra binning pass
+//! (a binary search per used feature) and then descends on u16
+//! compares; the win grows with ensemble size, since binning is
+//! amortized over every tree while the per-node stream is half as wide
+//! — the memory-bound MCU-batch regime the paper targets.
+//!
+//! [`FlatModel`]: crate::inference::FlatModel
+
+use super::flat::{complete_layout_ok, TreeRef};
+use crate::gbdt::loss::Objective;
+use crate::gbdt::tree::{Node, Tree};
+use crate::gbdt::GbdtModel;
+
+/// Rows per block of the batched predict loop (shared with the flat
+/// engine so the two batch kernels are directly comparable).
+pub use super::flat::BLOCK_ROWS;
+
+/// Rows walked in lockstep per tree in [`QuantizedFlatModel::predict_batch`].
+pub const LANES: usize = 8;
+
+/// Sentinel feature id marking a leaf slot in the general node arrays.
+const LEAF: u16 = u16::MAX;
+
+/// Bin assigned to NaN inputs: compares greater than every stored rank,
+/// so NaN routes right at every real split — identical to `!(x ≤ t)` on
+/// floats in the other engines.
+const NAN_BIN: u16 = u16::MAX;
+
+/// Threshold rank stored in pass-through complete-tree slots. Every bin
+/// (including [`NAN_BIN`]) satisfies `xb ≤ PASS`, so pass-through slots
+/// route left unconditionally; the leaves below are replicas of the
+/// same value, so this agrees with [`FlatModel`]'s `+∞` slots (which
+/// send NaN right — into a replica of the same value).
+const PASS: u16 = u16::MAX;
+
+/// A trained ensemble with rank-quantized thresholds. Build one with
+/// [`QuantizedFlatModel::from_model`] (or [`GbdtModel::quantize`]) and
+/// keep it for the model's serving lifetime.
+#[derive(Clone, Debug)]
+pub struct QuantizedFlatModel {
+    objective: Objective,
+    base_scores: Vec<f64>,
+    n_features: usize,
+    /// `bounds[f]` is the ascending table of distinct thresholds the
+    /// model uses on input feature `f`; node thresholds are stored as
+    /// ranks into this table.
+    bounds: Vec<Vec<f32>>,
+    /// `trees[output][round]`, same order as the source model.
+    trees: Vec<Vec<TreeRef>>,
+    // Complete-layout storage (u16 threshold ranks).
+    cfeat: Vec<u16>,
+    cthr: Vec<u16>,
+    cleaf: Vec<f64>,
+    // General node storage (siblings adjacent, as in the flat engine).
+    feat: Vec<u16>,
+    thr: Vec<u16>,
+    children: Vec<u32>,
+    leaf: Vec<f64>,
+}
+
+/// Rank of threshold `t` in the ascending table `bounds` (which must
+/// contain it — the table is built from the same splits).
+#[inline]
+fn rank_of(bounds: &[f32], t: f32) -> u16 {
+    let r = bounds.partition_point(|&v| v < t);
+    debug_assert!(r < bounds.len() && bounds[r] == t, "threshold {t} missing from table");
+    r as u16
+}
+
+/// Flatten `tree` into the general node arrays with rank-quantized
+/// thresholds; returns its base offset. Mirrors the flat engine's
+/// layout (siblings adjacent, `right == left + 1`).
+fn flatten_nodes(
+    tree: &Tree,
+    bounds: &[Vec<f32>],
+    feat: &mut Vec<u16>,
+    thr: &mut Vec<u16>,
+    children: &mut Vec<u32>,
+    leaf: &mut Vec<f64>,
+) -> u32 {
+    let start = feat.len();
+    let n = tree.nodes.len();
+    feat.resize(start + n, LEAF);
+    thr.resize(start + n, 0);
+    children.resize(start + n, 0);
+    let mut next_local = 1usize;
+    let mut stack = vec![(0usize, 0usize)]; // (source node, local slot)
+    while let Some((ti, li)) = stack.pop() {
+        match &tree.nodes[ti] {
+            Node::Leaf { value } => {
+                feat[start + li] = LEAF;
+                children[start + li] = leaf.len() as u32;
+                leaf.push(*value);
+            }
+            Node::Internal { feature, threshold, left, right, .. } => {
+                feat[start + li] = *feature as u16;
+                thr[start + li] = rank_of(&bounds[*feature], *threshold);
+                let cl = next_local;
+                next_local += 2;
+                children[start + li] = cl as u32;
+                stack.push((*right, cl + 1));
+                stack.push((*left, cl));
+            }
+        }
+    }
+    debug_assert_eq!(next_local, n, "every node must land in exactly one slot");
+    start as u32
+}
+
+impl QuantizedFlatModel {
+    /// Quantize a trained model. Chooses per tree between the complete
+    /// fast path and the general node layout with the same policy as
+    /// [`FlatModel`](crate::inference::FlatModel), so the two engines
+    /// route every tree through equivalent layouts.
+    pub fn from_model(model: &GbdtModel) -> QuantizedFlatModel {
+        assert!(
+            model.n_features < LEAF as usize,
+            "feature ids must fit u16 below the leaf sentinel"
+        );
+        // Pass 1: per-feature tables of distinct thresholds.
+        let mut bounds: Vec<Vec<f32>> = vec![Vec::new(); model.n_features];
+        for tree in model.trees.iter().flatten() {
+            for (f, _, t) in tree.splits() {
+                debug_assert!(!t.is_nan(), "split thresholds are never NaN");
+                bounds[f].push(t);
+            }
+        }
+        for b in &mut bounds {
+            b.sort_by(f32::total_cmp);
+            b.dedup();
+            assert!(
+                b.len() <= u16::MAX as usize,
+                "per-feature threshold count {} exceeds u16 ranks",
+                b.len()
+            );
+        }
+
+        // Pass 2: flatten trees with rank-quantized thresholds.
+        let mut trees = Vec::with_capacity(model.trees.len());
+        let mut cfeat = Vec::new();
+        let mut cthr = Vec::new();
+        let mut cleaf = Vec::new();
+        let mut feat = Vec::new();
+        let mut thr = Vec::new();
+        let mut children = Vec::new();
+        let mut leaf = Vec::new();
+        for stream in &model.trees {
+            let mut refs = Vec::with_capacity(stream.len());
+            for tree in stream {
+                let depth = tree.depth();
+                if complete_layout_ok(depth, tree.n_nodes()) {
+                    let (internal, leaves) = tree.to_complete();
+                    let ioff = cfeat.len() as u32;
+                    let loff = cleaf.len() as u32;
+                    for slot in &internal {
+                        match slot {
+                            Some((f, _, t)) => {
+                                cfeat.push(*f as u16);
+                                cthr.push(rank_of(&bounds[*f], *t));
+                            }
+                            None => {
+                                cfeat.push(0);
+                                cthr.push(PASS);
+                            }
+                        }
+                    }
+                    cleaf.extend_from_slice(&leaves);
+                    refs.push(TreeRef::Complete { ioff, loff, depth: depth as u8 });
+                } else {
+                    let off = flatten_nodes(
+                        tree,
+                        &bounds,
+                        &mut feat,
+                        &mut thr,
+                        &mut children,
+                        &mut leaf,
+                    );
+                    refs.push(TreeRef::Nodes { off });
+                }
+            }
+            trees.push(refs);
+        }
+        QuantizedFlatModel {
+            objective: model.objective,
+            base_scores: model.base_scores.clone(),
+            n_features: model.n_features,
+            bounds,
+            trees,
+            cfeat,
+            cthr,
+            cleaf,
+            feat,
+            thr,
+            children,
+            leaf,
+        }
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.iter().map(|t| t.len()).sum()
+    }
+
+    /// Total distinct thresholds across all per-feature tables.
+    pub fn n_thresholds(&self) -> usize {
+        self.bounds.iter().map(|b| b.len()).sum()
+    }
+
+    /// How many trees took the complete fast path (introspection/tests).
+    pub fn n_complete_trees(&self) -> usize {
+        self.trees
+            .iter()
+            .flatten()
+            .filter(|t| matches!(t, TreeRef::Complete { .. }))
+            .count()
+    }
+
+    /// Bin one dense row against the per-feature threshold tables.
+    /// `out[f] ≤ k ⇔ x[f] ≤ bounds[f][k]` for every real `x[f]`; NaN
+    /// maps to [`NAN_BIN`].
+    #[inline]
+    fn bin_row(&self, x: &[f32], out: &mut [u16]) {
+        for f in 0..self.n_features {
+            let v = x[f];
+            out[f] = if v.is_nan() {
+                NAN_BIN
+            } else {
+                self.bounds[f].partition_point(|&b| b < v) as u16
+            };
+        }
+    }
+
+    #[inline]
+    fn eval_nodes(&self, off: usize, xb: &[u16]) -> f64 {
+        let mut i = off;
+        loop {
+            let f = self.feat[i];
+            if f == LEAF {
+                return self.leaf[self.children[i] as usize];
+            }
+            let right = (xb[f as usize] > self.thr[i]) as usize;
+            i = off + self.children[i] as usize + right;
+        }
+    }
+
+    #[inline]
+    fn eval_complete(&self, ioff: usize, loff: usize, depth: usize, xb: &[u16]) -> f64 {
+        let n_internal = (1usize << depth) - 1;
+        let feat = &self.cfeat[ioff..ioff + n_internal];
+        let thr = &self.cthr[ioff..ioff + n_internal];
+        let mut i = 0usize;
+        while i < n_internal {
+            i = 2 * i + 2 - (xb[feat[i] as usize] <= thr[i]) as usize;
+        }
+        self.cleaf[loff + i - n_internal]
+    }
+
+    #[inline]
+    fn eval_tree(&self, tref: TreeRef, xb: &[u16]) -> f64 {
+        match tref {
+            TreeRef::Complete { ioff, loff, depth } => {
+                self.eval_complete(ioff as usize, loff as usize, depth as usize, xb)
+            }
+            TreeRef::Nodes { off } => self.eval_nodes(off as usize, xb),
+        }
+    }
+
+    /// Raw scores for one dense row (one value per output stream).
+    /// Bit-identical to `GbdtModel::predict_raw` and
+    /// `FlatModel::predict_raw`.
+    pub fn predict_raw(&self, x: &[f32]) -> Vec<f64> {
+        let mut xb = vec![0u16; self.n_features];
+        self.bin_row(x, &mut xb);
+        let mut out = self.base_scores.clone();
+        for (k, trees) in self.trees.iter().enumerate() {
+            for &tref in trees {
+                out[k] += self.eval_tree(tref, &xb);
+            }
+        }
+        out
+    }
+
+    /// Batched raw scores: rows are binned once per [`BLOCK_ROWS`]-row
+    /// block, then each tree walks the block with [`LANES`] rows in
+    /// lockstep — numerically identical to per-row
+    /// [`QuantizedFlatModel::predict_raw`] (same routing, same
+    /// summation order).
+    pub fn predict_batch(&self, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        let nf = self.n_features;
+        let mut out: Vec<Vec<f64>> = rows.iter().map(|_| self.base_scores.clone()).collect();
+        let mut binned = vec![0u16; BLOCK_ROWS * nf];
+        for start in (0..rows.len()).step_by(BLOCK_ROWS) {
+            let end = (start + BLOCK_ROWS).min(rows.len());
+            let block = &rows[start..end];
+            for (r, x) in block.iter().enumerate() {
+                self.bin_row(x, &mut binned[r * nf..(r + 1) * nf]);
+            }
+            for (k, trees) in self.trees.iter().enumerate() {
+                for &tref in trees {
+                    match tref {
+                        TreeRef::Complete { ioff, loff, depth } => {
+                            let (ioff, loff, depth) =
+                                (ioff as usize, loff as usize, depth as usize);
+                            let n_internal = (1usize << depth) - 1;
+                            let feat = &self.cfeat[ioff..ioff + n_internal];
+                            let thr = &self.cthr[ioff..ioff + n_internal];
+                            let leaf = &self.cleaf[loff..loff + (1usize << depth)];
+                            // Interleaved lanes: a complete tree's
+                            // descent is exactly `depth` steps, so all
+                            // lanes advance one level per iteration
+                            // with no per-lane branching.
+                            let mut r = 0usize;
+                            while r + LANES <= block.len() {
+                                let mut idx = [0usize; LANES];
+                                for _ in 0..depth {
+                                    for (l, i) in idx.iter_mut().enumerate() {
+                                        let xb = binned[(r + l) * nf + feat[*i] as usize];
+                                        *i = 2 * *i + 2 - (xb <= thr[*i]) as usize;
+                                    }
+                                }
+                                for (l, &i) in idx.iter().enumerate() {
+                                    out[start + r + l][k] += leaf[i - n_internal];
+                                }
+                                r += LANES;
+                            }
+                            // Scalar tail (< LANES rows).
+                            for t in r..block.len() {
+                                let xb = &binned[t * nf..(t + 1) * nf];
+                                let mut i = 0usize;
+                                while i < n_internal {
+                                    i = 2 * i + 2 - (xb[feat[i] as usize] <= thr[i]) as usize;
+                                }
+                                out[start + t][k] += leaf[i - n_internal];
+                            }
+                        }
+                        TreeRef::Nodes { off } => {
+                            let off = off as usize;
+                            for r in 0..block.len() {
+                                let xb = &binned[r * nf..(r + 1) * nf];
+                                out[start + r][k] += self.eval_nodes(off, xb);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl From<&GbdtModel> for QuantizedFlatModel {
+    fn from(model: &GbdtModel) -> QuantizedFlatModel {
+        QuantizedFlatModel::from_model(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::gbdt::{self, GbdtParams};
+    use crate::inference::FlatModel;
+    use crate::prng::Pcg64;
+    use crate::testutil::prop::run_prop;
+
+    fn wrap(trees: Vec<Tree>, n_features: usize) -> GbdtModel {
+        GbdtModel {
+            objective: Objective::L2,
+            base_scores: vec![0.25],
+            trees: vec![trees],
+            n_features,
+            name: "quant-test".into(),
+        }
+    }
+
+    /// x0 <= 0.5 ? (x1 <= 2.0 ? 1.0 : 2.0) : 3.0
+    fn sample_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 3, threshold: 0.5, left: 1, right: 2 },
+                Node::Internal { feature: 1, bin: 7, threshold: 2.0, left: 3, right: 4 },
+                Node::Leaf { value: 3.0 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 2.0 },
+            ],
+        }
+    }
+
+    /// A left-leaning chain deeper than the complete-layout cutoff, so
+    /// it must take the general node path.
+    fn chain_tree(depth: usize) -> Tree {
+        let mut nodes = Vec::new();
+        for d in 0..depth {
+            let idx = nodes.len();
+            nodes.push(Node::Internal {
+                feature: 0,
+                bin: d as u16,
+                threshold: -(d as f32) * 0.1,
+                left: idx + 2,
+                right: idx + 1,
+            });
+            nodes.push(Node::Leaf { value: d as f64 });
+        }
+        nodes.push(Node::Leaf { value: -7.0 });
+        Tree { nodes }
+    }
+
+    #[test]
+    fn matches_pointer_and_flat_on_handmade_model() {
+        let model = wrap(vec![sample_tree(), Tree::leaf(0.5), chain_tree(14)], 2);
+        let quant = QuantizedFlatModel::from_model(&model);
+        let flat = FlatModel::from_model(&model);
+        assert_eq!(quant.n_trees(), 3);
+        assert_eq!(quant.n_complete_trees(), 2); // the chain is too deep
+        assert_eq!(quant.n_thresholds(), 1 + 14 + 1); // f0: {0.5}∪chain(14), f1: {2.0}
+        for x in [
+            [0.4f32, 1.0],
+            [0.4, 3.0],
+            [0.6, 0.0],
+            [0.5, 2.0], // boundary: exact threshold value routes left
+            [-0.35, 9.0],
+            [-2.0, -2.0],
+        ] {
+            let want = model.predict_raw(&x);
+            assert_eq!(quant.predict_raw(&x), want);
+            assert_eq!(quant.predict_raw(&x), flat.predict_raw(&x));
+            assert_eq!(quant.predict_batch(&[x.to_vec()])[0], want);
+        }
+    }
+
+    #[test]
+    fn nan_inputs_route_like_pointer_trees() {
+        // NaN bins to NAN_BIN, which exceeds every real rank: routes
+        // right at every split, exactly like `x <= t` being false.
+        let model = wrap(vec![sample_tree(), chain_tree(14)], 2);
+        let quant = QuantizedFlatModel::from_model(&model);
+        for x in [[f32::NAN, 1.0], [0.4, f32::NAN], [f32::NAN, f32::NAN]] {
+            let want = model.predict_raw(&x);
+            assert_eq!(quant.predict_raw(&x), want);
+            assert_eq!(quant.predict_batch(&[x.to_vec()])[0], want);
+        }
+    }
+
+    #[test]
+    fn batch_interleave_and_tail_equal_single_row_exactly() {
+        let data = PaperDataset::BreastCancer.generate(33).select(&(0..300).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(12, 3));
+        let quant = QuantizedFlatModel::from_model(&model);
+        let flat = FlatModel::from_model(&model);
+        // 70 rows: a full 64-row block (8 lane groups) plus a 6-row
+        // block that exercises the scalar tail.
+        let rows: Vec<Vec<f32>> = (0..70).map(|i| data.row(i)).collect();
+        let batch = quant.predict_batch(&rows);
+        let fbatch = flat.predict_batch(&rows);
+        assert_eq!(batch.len(), rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(batch[i], quant.predict_raw(row), "row {i}: batch vs single");
+            assert_eq!(batch[i], fbatch[i], "row {i}: quantized vs flat");
+            assert_eq!(batch[i], model.predict_raw(row), "row {i}: quantized vs pointer");
+        }
+    }
+
+    /// Random tree whose (feature, threshold) pairs are drawn from a
+    /// shared per-feature table, mimicking trained models (where many
+    /// nodes reuse the same boundary values).
+    fn random_tree(rng: &mut Pcg64, tables: &[Vec<f32>], max_depth: usize) -> Tree {
+        fn grow(
+            rng: &mut Pcg64,
+            tables: &[Vec<f32>],
+            depth: usize,
+            max_depth: usize,
+            nodes: &mut Vec<Node>,
+        ) -> usize {
+            let idx = nodes.len();
+            if depth >= max_depth || rng.gen_bool(0.3) {
+                nodes.push(Node::Leaf { value: rng.gen_uniform(-2.0, 2.0) });
+                return idx;
+            }
+            nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+            let feature = rng.gen_range(tables.len());
+            let bin = rng.gen_range(tables[feature].len());
+            let threshold = tables[feature][bin];
+            let left = grow(rng, tables, depth + 1, max_depth, nodes);
+            let right = grow(rng, tables, depth + 1, max_depth, nodes);
+            nodes[idx] =
+                Node::Internal { feature, bin: bin as u16, threshold, left, right };
+            idx
+        }
+        let mut nodes = Vec::new();
+        grow(rng, tables, 0, max_depth, &mut nodes);
+        Tree { nodes }
+    }
+
+    #[test]
+    fn prop_quantized_matches_flat_and_pointer_on_random_trees() {
+        run_prop("quantized engine == flat == pointer", 60, |g| {
+            let d = g.usize_in(1, 6);
+            let mut rng = Pcg64::new(g.case_seed ^ 0x51);
+            let tables: Vec<Vec<f32>> = (0..d)
+                .map(|_| {
+                    let mut t: Vec<f32> = (0..1 + rng.gen_range(12))
+                        .map(|_| rng.gen_uniform(-1.0, 1.0) as f32)
+                        .collect();
+                    t.sort_by(f32::total_cmp);
+                    t.dedup();
+                    t
+                })
+                .collect();
+            let n_trees = g.usize_in(1, 6);
+            let trees: Vec<Tree> = (0..n_trees)
+                .map(|_| random_tree(&mut rng, &tables, g.usize_in(0, 6)))
+                .collect();
+            let model = wrap(trees, d);
+            let quant = QuantizedFlatModel::from_model(&model);
+            let flat = FlatModel::from_model(&model);
+            let rows: Vec<Vec<f32>> = (0..g.usize_in(1, 70))
+                .map(|_| {
+                    (0..d)
+                        .map(|_| {
+                            if g.bool(0.05) {
+                                f32::NAN
+                            } else {
+                                g.f64_in(-1.5, 1.5) as f32
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let batch = quant.predict_batch(&rows);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(batch[i], model.predict_raw(row), "row {i} vs pointer");
+                assert_eq!(batch[i], flat.predict_raw(row), "row {i} vs flat");
+            }
+        });
+    }
+
+    #[test]
+    fn threshold_boundary_values_route_exactly() {
+        // The rank predicate must agree with the float predicate *at*
+        // the threshold values themselves (x == t routes left) and at
+        // the adjacent representable floats.
+        let t = 0.37f32;
+        let tree = Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 0, threshold: t, left: 1, right: 2 },
+                Node::Leaf { value: -1.0 },
+                Node::Leaf { value: 1.0 },
+            ],
+        };
+        let model = wrap(vec![tree], 1);
+        let quant = QuantizedFlatModel::from_model(&model);
+        let below = f32::from_bits(t.to_bits() - 1);
+        let above = f32::from_bits(t.to_bits() + 1);
+        for x in [below, t, above, f32::NEG_INFINITY, f32::INFINITY] {
+            assert_eq!(quant.predict_raw(&[x]), model.predict_raw(&[x]), "x={x}");
+        }
+    }
+
+    #[test]
+    fn multiclass_outputs_preserved() {
+        let data = PaperDataset::WineQuality.generate(34).select(&(0..600).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(4, 2));
+        let quant = QuantizedFlatModel::from_model(&model);
+        assert_eq!(quant.n_outputs(), 7);
+        for i in (0..data.n_rows()).step_by(53) {
+            let row = data.row(i);
+            assert_eq!(quant.predict_raw(&row), model.predict_raw(&row));
+        }
+    }
+
+    #[test]
+    fn empty_model_returns_base_scores() {
+        let model = wrap(Vec::new(), 3);
+        let quant = QuantizedFlatModel::from_model(&model);
+        assert_eq!(quant.predict_raw(&[0.0, 0.0, 0.0]), vec![0.25]);
+        assert_eq!(quant.predict_batch(&[]).len(), 0);
+        assert_eq!(quant.n_thresholds(), 0);
+    }
+}

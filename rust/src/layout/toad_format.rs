@@ -26,6 +26,7 @@
 
 use super::feature_info::{select_encoding, FeatureInfo, ThresholdEncoding};
 use crate::bitio::{bits_for, BitReader, BitWriter};
+use crate::error::Result;
 use crate::gbdt::loss::Objective;
 use crate::gbdt::tree::{Node, Tree};
 use crate::gbdt::GbdtModel;
@@ -192,9 +193,68 @@ fn breakdown_from_plan(model: &GbdtModel, p: &EncodePlan) -> SizeBreakdown {
     SizeBreakdown { header_bits, map_bits, thresholds_bits, leaf_values_bits, trees_bits }
 }
 
+/// Check every fixed-width header field against its width *before* any
+/// bits are packed. [`crate::bitio::BitWriter::write`] masks oversized
+/// values deterministically, so without this gate a depth-16 model
+/// would encode as depth 0 and decode into garbage — silently, in both
+/// debug and release builds.
+fn validate_header_widths(model: &GbdtModel, p: &EncodePlan) -> Result<()> {
+    fn fits(value: usize, width: u32) -> bool {
+        (value as u64) < (1u64 << width)
+    }
+    crate::ensure!(
+        fits(model.n_outputs(), W_OUTPUTS),
+        "n_outputs {} exceeds the {W_OUTPUTS}-bit header field (max {})",
+        model.n_outputs(),
+        (1u64 << W_OUTPUTS) - 1
+    );
+    crate::ensure!(
+        fits(model.n_rounds(), W_ROUNDS),
+        "n_rounds {} exceeds the {W_ROUNDS}-bit header field (max {})",
+        model.n_rounds(),
+        (1u64 << W_ROUNDS) - 1
+    );
+    crate::ensure!(
+        fits(p.max_depth, W_DEPTH),
+        "max tree depth {} exceeds the {W_DEPTH}-bit header field (max {})",
+        p.max_depth,
+        (1u64 << W_DEPTH) - 1
+    );
+    crate::ensure!(
+        fits(model.n_features, W_D),
+        "n_features {} exceeds the {W_D}-bit header field (max {})",
+        model.n_features,
+        (1u64 << W_D) - 1
+    );
+    crate::ensure!(
+        fits(p.features.len(), W_FU),
+        "|F_U| = {} exceeds the {W_FU}-bit header field (max {})",
+        p.features.len(),
+        (1u64 << W_FU) - 1
+    );
+    crate::ensure!(
+        fits(p.max_t, W_MAXT),
+        "max_f |T^f| = {} exceeds the {W_MAXT}-bit header field (max {})",
+        p.max_t,
+        (1u64 << W_MAXT) - 1
+    );
+    crate::ensure!(
+        fits(p.leaf_values.len(), W_NLEAF),
+        "{} global leaf values exceed the {W_NLEAF}-bit header field (max {})",
+        p.leaf_values.len(),
+        (1u64 << W_NLEAF) - 1
+    );
+    Ok(())
+}
+
 /// Encode a trained model into the ToaD bit-wise layout.
-pub fn encode(model: &GbdtModel, finfo: &[FeatureInfo], opts: &EncodeOptions) -> Vec<u8> {
+///
+/// Errors when any fixed header field is out of its width (e.g. a tree
+/// deeper than 15 against the 4-bit depth field) — the blob would
+/// otherwise be silently corrupt.
+pub fn encode(model: &GbdtModel, finfo: &[FeatureInfo], opts: &EncodeOptions) -> Result<Vec<u8>> {
     let p = plan(model, finfo, opts);
+    validate_header_widths(model, &p)?;
     let mut w = BitWriter::new();
 
     // -- 1. metadata --
@@ -276,7 +336,7 @@ pub fn encode(model: &GbdtModel, finfo: &[FeatureInfo], opts: &EncodeOptions) ->
         }
     }
 
-    w.into_bytes()
+    Ok(w.into_bytes())
 }
 
 fn write_threshold(w: &mut BitWriter, v: f32, enc: ThresholdEncoding) {
@@ -746,7 +806,7 @@ mod tests {
         let (model, test) = trained(PaperDataset::BreastCancer, 12, 3);
         let finfo = FeatureInfo::from_dataset(&test);
         let opts = EncodeOptions { allow_f16: false, ..Default::default() };
-        let bytes = encode(&model, &finfo, &opts);
+        let bytes = encode(&model, &finfo, &opts).unwrap();
         let decoded = decode(&bytes);
         for i in 0..test.n_rows() {
             let x = test.row(i);
@@ -767,8 +827,11 @@ mod tests {
         ] {
             let (model, test) = trained(ds, rounds, depth);
             let finfo = FeatureInfo::from_dataset(&test);
-            for opts in [EncodeOptions { allow_f16: false, ..Default::default() }, EncodeOptions { allow_f16: true, ..Default::default() }] {
-                let bytes = encode(&model, &finfo, &opts);
+            for opts in [
+                EncodeOptions { allow_f16: false, ..Default::default() },
+                EncodeOptions { allow_f16: true, ..Default::default() },
+            ] {
+                let bytes = encode(&model, &finfo, &opts).unwrap();
                 let bd = size_breakdown(&model, &finfo, &opts);
                 assert_eq!(bd.total_bytes(), bytes.len(), "{:?}", ds);
             }
@@ -779,7 +842,7 @@ mod tests {
     fn packed_model_matches_decoded() {
         let (model, test) = trained(PaperDataset::Mushroom, 10, 3);
         let finfo = FeatureInfo::from_dataset(&test);
-        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        let bytes = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
         let decoded = decode(&bytes);
         let packed = PackedModel::from_bytes(bytes);
         for i in (0..test.n_rows()).step_by(7) {
@@ -797,7 +860,7 @@ mod tests {
         // kr-vs-kp is all-boolean: every threshold must be 1-bit.
         let (model, test) = trained(PaperDataset::KrVsKp, 8, 2);
         let finfo = FeatureInfo::from_dataset(&test);
-        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        let bytes = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
         let decoded = decode(&bytes);
         // Accuracy preserved through 1-bit thresholds.
         let a = model.score(&test);
@@ -818,8 +881,10 @@ mod tests {
     fn f16_thresholds_keep_score() {
         let (model, test) = trained(PaperDataset::CaliforniaHousing, 16, 3);
         let finfo = FeatureInfo::from_dataset(&test);
-        let exact = decode(&encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() }));
-        let lossy = decode(&encode(&model, &finfo, &EncodeOptions { allow_f16: true, ..Default::default() }));
+        let no_f16 = EncodeOptions { allow_f16: false, ..Default::default() };
+        let with_f16 = EncodeOptions { allow_f16: true, ..Default::default() };
+        let exact = decode(&encode(&model, &finfo, &no_f16).unwrap());
+        let lossy = decode(&encode(&model, &finfo, &with_f16).unwrap());
         let a = exact.score(&test);
         let b = lossy.score(&test);
         assert!((a - b).abs() < 0.02, "f16 thresholds moved R² too much: {a} vs {b}");
@@ -829,7 +894,8 @@ mod tests {
     fn multiclass_roundtrip() {
         let (model, test) = trained(PaperDataset::WineQuality, 6, 2);
         let finfo = FeatureInfo::from_dataset(&test);
-        let bytes = encode(&model, &finfo, &EncodeOptions { allow_f16: false, ..Default::default() });
+        let opts = EncodeOptions { allow_f16: false, ..Default::default() };
+        let bytes = encode(&model, &finfo, &opts).unwrap();
         let decoded = decode(&bytes);
         assert_eq!(decoded.n_outputs(), 7);
         for i in (0..test.n_rows()).step_by(11) {
@@ -843,7 +909,7 @@ mod tests {
         let data = PaperDataset::Kin8nm.generate(3).select(&(0..200).collect::<Vec<_>>());
         let model = gbdt::booster::train(&data, GbdtParams::paper(3, 0));
         let finfo = FeatureInfo::from_dataset(&data);
-        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        let bytes = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
         let decoded = decode(&bytes);
         let x = data.row(0);
         assert!((model.predict_value(&x) - decoded.predict_value(&x)).abs() < 1e-6);
@@ -862,7 +928,7 @@ mod tests {
         ] {
             let (model, test) = trained(ds, rounds, depth);
             let finfo = FeatureInfo::from_dataset(&test);
-            let bytes = encode(&model, &finfo, &EncodeOptions::default());
+            let bytes = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
             let bits = validate_blob(&bytes).unwrap_or_else(|e| panic!("{:?}: {e}", ds));
             assert!(bits <= bytes.len() * 8);
             assert!(bits + 8 > bytes.len() * 8, "no trailing garbage allowed");
@@ -882,7 +948,7 @@ mod tests {
         // Truncating a valid blob must be caught.
         let (model, test) = trained(PaperDataset::BreastCancer, 8, 2);
         let finfo = FeatureInfo::from_dataset(&test);
-        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        let bytes = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
         for cut in [1usize, bytes.len() / 4, bytes.len() / 2, bytes.len() - 1] {
             assert!(
                 validate_blob(&bytes[..cut]).is_err(),
@@ -908,11 +974,11 @@ mod tests {
             bd_full.leaf_values_bits
         );
         // Quality barely moves.
-        let a = decode(&encode(&model, &finfo, &full)).score(&test);
-        let b = decode(&encode(&model, &finfo, &shared)).score(&test);
+        let a = decode(&encode(&model, &finfo, &full).unwrap()).score(&test);
+        let b = decode(&encode(&model, &finfo, &shared).unwrap()).score(&test);
         assert!((a - b).abs() < 0.02, "leaf sharing moved R² too far: {a} vs {b}");
         // Size model still exact under the option.
-        let bytes = encode(&model, &finfo, &shared);
+        let bytes = encode(&model, &finfo, &shared).unwrap();
         assert_eq!(bd_shared.total_bytes(), bytes.len());
     }
 
@@ -921,18 +987,78 @@ mod tests {
         let (model, test) = trained(PaperDataset::BreastCancer, 16, 2);
         let finfo = FeatureInfo::from_dataset(&test);
         let extreme = EncodeOptions { leaf_mantissa_bits: Some(0), ..Default::default() };
-        let bytes = encode(&model, &finfo, &extreme);
+        let bytes = encode(&model, &finfo, &extreme).unwrap();
         let decoded = decode(&bytes);
         // Still a functioning (if coarse) model.
         let s = decoded.score(&test);
         assert!(s > 0.7, "0-mantissa leaves should still classify: {s}");
     }
 
+    /// A left-leaning chain of `depth` internal nodes (depth = chain
+    /// length), with distinct thresholds on feature 0.
+    fn chain_tree(depth: usize) -> Tree {
+        let mut nodes = Vec::new();
+        for d in 0..depth {
+            let idx = nodes.len();
+            nodes.push(Node::Internal {
+                feature: 0,
+                bin: d as u16,
+                threshold: d as f32 + 0.5,
+                left: idx + 2,
+                right: idx + 1,
+            });
+            nodes.push(Node::Leaf { value: d as f64 });
+        }
+        nodes.push(Node::Leaf { value: -1.0 });
+        Tree { nodes }
+    }
+
+    fn wrap(trees: Vec<Vec<Tree>>, n_features: usize) -> GbdtModel {
+        let n_outputs = trees.len();
+        GbdtModel {
+            objective: if n_outputs == 1 {
+                Objective::L2
+            } else {
+                Objective::Softmax { n_classes: n_outputs }
+            },
+            base_scores: vec![0.0; n_outputs],
+            trees,
+            n_features,
+            name: "width-test".into(),
+        }
+    }
+
+    #[test]
+    fn too_deep_model_errors_instead_of_truncating() {
+        // W_DEPTH = 4 stores depths 0..=15. A depth-16 tree used to
+        // pack `16 & 0xF == 0` — a silently corrupt blob. It must now
+        // be a hard error, in debug and release alike.
+        let finfo = [FeatureInfo::generic_float()];
+        let ok = wrap(vec![vec![chain_tree(15)]], 1);
+        let bad = wrap(vec![vec![chain_tree(16)]], 1);
+        let opts = EncodeOptions { allow_f16: false, ..Default::default() };
+        encode(&ok, &finfo, &opts).expect("depth 15 is the last encodable depth");
+        let err = encode(&bad, &finfo, &opts).unwrap_err().to_string();
+        assert!(err.contains("depth"), "error must name the offending field: {err}");
+        assert!(err.contains("16"), "error must include the offending value: {err}");
+    }
+
+    #[test]
+    fn too_many_outputs_error_instead_of_truncating() {
+        // W_OUTPUTS = 8: 256 output streams cannot be encoded.
+        let streams: Vec<Vec<Tree>> = (0..256).map(|k| vec![Tree::leaf(k as f64)]).collect();
+        let model = wrap(streams, 1);
+        let err = encode(&model, &[FeatureInfo::generic_float()], &EncodeOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("n_outputs"), "error must name the field: {err}");
+    }
+
     #[test]
     fn trace_row_counts_nodes() {
         let (model, test) = trained(PaperDataset::BreastCancer, 4, 2);
         let finfo = FeatureInfo::from_dataset(&test);
-        let bytes = encode(&model, &finfo, &EncodeOptions::default());
+        let bytes = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
         let packed = PackedModel::from_bytes(bytes);
         let (nodes, bits) = packed.trace_row(&test.row(0));
         // 4 trees × (≤2 internal + 1 leaf) visits.

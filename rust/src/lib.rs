@@ -15,8 +15,10 @@
 //!   complete-tree arrays referencing global threshold/leaf tables,
 //! * native inference engines ([`inference`]): the flattened SoA batch
 //!   engine (`FlatModel`, branchless complete-tree descent + blocked
-//!   `predict_batch`) and a direct bit-packed interpreter (what an MCU
-//!   would execute),
+//!   `predict_batch`), its quantized-threshold sibling
+//!   (`QuantizedFlatModel`, u16 threshold ranks over pre-binned rows
+//!   with multi-row interleaved descent) and a direct bit-packed
+//!   interpreter (what an MCU would execute),
 //! * every baseline the paper evaluates ([`baselines`]): CEGB, CCP,
 //!   random forests, and Guo et al. ordering-based ensemble pruning,
 //! * an XLA/PJRT runtime ([`runtime`], behind the `xla` cargo feature)

@@ -119,7 +119,7 @@ mod tests {
         // Paper Table 2 config: four trees of depth four.
         let model = gbdt::booster::train(&data, GbdtParams::paper(4, 4));
         let finfo = FeatureInfo::from_dataset(&data);
-        let blob = encode(&model, &finfo, &EncodeOptions::default());
+        let blob = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
         (PackedModel::from_bytes(blob), data.row(0))
     }
 

@@ -359,7 +359,8 @@ pub fn table2_rows(seed: u64, row_cap: usize) -> (Vec<Table2Row>, PackedModel, D
     params.forestsize_bytes = Some(512);
     let m = crate::toad::train_toad_with_budget(&tr, &params);
     let finfo = FeatureInfo::from_dataset(&tr);
-    let blob = encode(&m.model, &finfo, &EncodeOptions::default());
+    let blob = encode(&m.model, &finfo, &EncodeOptions::default())
+        .expect("table 2 models fit the layout's header fields");
     let packed = PackedModel::from_bytes(blob);
     let probe = te.row(0);
     let rows = [ESP32_S3, NANO_33_BLE]

@@ -125,7 +125,11 @@ fn package(
     penalty: ToadPenalty,
 ) -> ToadModel {
     let finfo = FeatureInfo::from_dataset(data);
-    let blob = encode(&model, &finfo, &params.encode);
+    // Training is bounded by `params.gbdt.max_depth`, so a width
+    // overflow here means the caller configured an un-encodable model —
+    // surface the encoder's message rather than a corrupt blob.
+    let blob = encode(&model, &finfo, &params.encode)
+        .expect("trained model exceeds a ToaD layout header field");
     let stats = ReuseStats::from_model(&model);
     ToadModel {
         stats,

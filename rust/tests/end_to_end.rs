@@ -20,7 +20,7 @@ fn full_pipeline_on_every_dataset() {
 
         // Encode → decode → scores must survive the layout round trip.
         let finfo = FeatureInfo::from_dataset(&train_set);
-        let blob = layout::encode(&toad_model.model, &finfo, &EncodeOptions::default());
+        let blob = layout::encode(&toad_model.model, &finfo, &EncodeOptions::default()).unwrap();
         assert_eq!(blob.len(), toad_model.size_bytes(), "{}", ds.name());
 
         let decoded = layout::decode(&blob);

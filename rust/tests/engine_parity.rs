@@ -1,23 +1,30 @@
-//! Cross-engine parity: the three native prediction paths must agree on
+//! Cross-engine parity: the four native prediction paths must agree on
 //! randomly grown models.
 //!
 //! * `FlatModel::predict_batch` vs `Tree::predict_row` (through
 //!   `GbdtModel::predict_raw`): **bit-identical** — the flat engine
 //!   performs the same comparisons and sums leaf contributions in the
 //!   same order, so the bound here is 1e-9 with exactness expected.
+//! * `QuantizedFlatModel` vs `FlatModel`: **bit-identical** — the rank
+//!   predicate `bin(x) ≤ rank(t)` is exactly equivalent to `x ≤ t` for
+//!   every real input, and NaN maps to a sentinel bin that routes right
+//!   exactly like `!(x ≤ t)` on floats.
 //! * `PackedModel::predict_raw` vs the pointer trees: the packed layout
 //!   stores leaf values as f32 (paper §3.2.2), so each tree contributes
 //!   one f32 rounding; the bound scales with the ensemble size (1e-4 is
 //!   generous for ≤ 64 small trees).
+//!
+//! Every property also injects NaN feature values: all engines must
+//! route NaN right at every split (the `x ≤ t` predicate is false).
 
 use toad::gbdt::{booster, GbdtParams};
-use toad::inference::FlatModel;
+use toad::inference::{FlatModel, QuantizedFlatModel};
 use toad::layout::{encode, EncodeOptions, FeatureInfo, PackedModel};
 use toad::testutil::prop::run_prop;
 
 #[test]
 fn engines_agree_on_randomly_grown_models() {
-    run_prop("flat/pointer/packed engine parity", 15, |g| {
+    run_prop("flat/quantized/pointer/packed engine parity", 15, |g| {
         let data = g.regression_dataset(60, 250, 6);
         let rounds = g.usize_in(1, 8);
         let depth = g.usize_in(1, 5);
@@ -28,16 +35,26 @@ fn engines_agree_on_randomly_grown_models() {
         let model = booster::train(&data, params);
 
         let flat = FlatModel::from_model(&model);
+        let quant = QuantizedFlatModel::from_model(&model);
         let finfo = FeatureInfo::from_dataset(&data);
         let blob = encode(
             &model,
             &finfo,
             &EncodeOptions { allow_f16: false, leaf_mantissa_bits: None },
-        );
+        )
+        .expect("grown models fit the layout's header fields");
         let packed = PackedModel::from_bytes(blob);
 
-        let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i)).collect();
+        // Training rows plus a few NaN-corrupted copies.
+        let mut rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i)).collect();
+        for _ in 0..8 {
+            let mut r = data.row(g.usize(data.n_rows()));
+            let f = g.usize(r.len());
+            r[f] = f32::NAN;
+            rows.push(r);
+        }
         let batch = flat.predict_batch(&rows);
+        let qbatch = quant.predict_batch(&rows);
         assert_eq!(batch.len(), rows.len());
         for (i, row) in rows.iter().enumerate() {
             let pointer = model.predict_raw(row);
@@ -53,6 +70,15 @@ fn engines_agree_on_randomly_grown_models() {
                 batch[i], single,
                 "row {i}: blocked batch and single-row flat paths diverged"
             );
+            assert_eq!(
+                qbatch[i], batch[i],
+                "row {i}: quantized batch must be bit-identical to flat"
+            );
+            assert_eq!(
+                quant.predict_raw(row),
+                single,
+                "row {i}: quantized single-row must be bit-identical to flat"
+            );
             assert!(
                 (packed_out[0] - pointer[0]).abs() < 1e-4,
                 "row {i}: packed {} vs pointer {} (beyond f32 leaf rounding)",
@@ -63,30 +89,44 @@ fn engines_agree_on_randomly_grown_models() {
     });
 }
 
-/// Off-dataset probes (values the binner never saw) must route the same
-/// way through all engines too.
+/// Off-dataset probes (values the binner never saw, plus NaN-corrupted
+/// ones) must route the same way through all engines too.
 #[test]
 fn engines_agree_on_off_data_probes() {
     run_prop("engine parity off-data", 10, |g| {
         let data = g.regression_dataset(80, 160, 4);
         let model = booster::train(&data, GbdtParams::paper(4, 3));
         let flat = FlatModel::from_model(&model);
+        let quant = QuantizedFlatModel::from_model(&model);
         let finfo = FeatureInfo::from_dataset(&data);
         let blob = encode(
             &model,
             &finfo,
             &EncodeOptions { allow_f16: false, leaf_mantissa_bits: None },
-        );
+        )
+        .expect("grown models fit the layout's header fields");
         let packed = PackedModel::from_bytes(blob);
 
         let d = data.n_features();
         let probes: Vec<Vec<f32>> = (0..32)
-            .map(|_| (0..d).map(|_| g.f64_in(-3.0, 3.0) as f32).collect())
+            .map(|_| {
+                (0..d)
+                    .map(|_| {
+                        if g.bool(0.1) {
+                            f32::NAN
+                        } else {
+                            g.f64_in(-3.0, 3.0) as f32
+                        }
+                    })
+                    .collect()
+            })
             .collect();
         let batch = flat.predict_batch(&probes);
+        let qbatch = quant.predict_batch(&probes);
         for (i, probe) in probes.iter().enumerate() {
             let pointer = model.predict_raw(probe);
             assert!((batch[i][0] - pointer[0]).abs() < 1e-9, "probe {i}");
+            assert_eq!(qbatch[i], batch[i], "probe {i}: quantized vs flat");
             assert!((packed.predict_raw(probe)[0] - pointer[0]).abs() < 1e-4, "probe {i}");
         }
     });

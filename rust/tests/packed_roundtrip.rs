@@ -1,0 +1,210 @@
+//! Boundary-width round-trips for the ToaD layout.
+//!
+//! The layout squeezes every field to a minimal bit width, so the
+//! interesting inputs are the ones that land exactly on a width
+//! boundary: depth-15 trees (the 4-bit depth field's maximum),
+//! single-leaf trees (zero-width references), features with exactly 256
+//! thresholds (ranks fill 8 bits; floored integer thresholds fill the
+//! u8 value width), and NaN probe rows (which must route right at every
+//! split in every engine). Each case goes encode → validate → decode →
+//! predict and through [`PackedModel`]'s direct bit-level execution.
+
+use toad::gbdt::loss::Objective;
+use toad::gbdt::tree::{Node, Tree};
+use toad::gbdt::GbdtModel;
+use toad::layout::{decode, encode, toad_format, EncodeOptions, FeatureInfo, PackedModel};
+use toad::prng::Pcg64;
+use toad::testutil::prop::run_prop;
+
+fn wrap(trees: Vec<Tree>, n_features: usize) -> GbdtModel {
+    GbdtModel {
+        objective: Objective::L2,
+        base_scores: vec![0.5],
+        trees: vec![trees],
+        n_features,
+        name: "roundtrip-test".into(),
+    }
+}
+
+/// Exact-threshold encode options (no lossy f16).
+fn exact() -> EncodeOptions {
+    EncodeOptions { allow_f16: false, ..Default::default() }
+}
+
+/// Assert pointer / decoded / packed predictions agree exactly on
+/// `probes` (leaf values in these tests are integers, exactly
+/// representable in the layout's f32 leaf table).
+fn assert_roundtrip_parity(model: &GbdtModel, finfo: &[FeatureInfo], probes: &[Vec<f32>]) {
+    let blob = encode(model, finfo, &exact()).expect("model fits every layout field");
+    toad_format::validate_blob(&blob).expect("encoded blob must validate");
+    let decoded = decode(&blob);
+    let packed = PackedModel::from_bytes(blob);
+    for (i, x) in probes.iter().enumerate() {
+        let want = model.predict_raw(x);
+        assert_eq!(decoded.predict_raw(x), want, "probe {i}: decoded vs pointer");
+        assert_eq!(packed.predict_raw(x), want, "probe {i}: packed vs pointer");
+    }
+}
+
+/// A left-leaning chain of `len` internal nodes (tree depth == `len`),
+/// with distinct integer-representable thresholds and integer leaves.
+fn chain_tree(len: usize) -> Tree {
+    let mut nodes = Vec::new();
+    for d in 0..len {
+        let idx = nodes.len();
+        nodes.push(Node::Internal {
+            feature: 0,
+            bin: d as u16,
+            threshold: d as f32 + 0.5,
+            left: idx + 2,
+            right: idx + 1,
+        });
+        nodes.push(Node::Leaf { value: d as f64 + 1.0 });
+    }
+    nodes.push(Node::Leaf { value: -1.0 });
+    Tree { nodes }
+}
+
+#[test]
+fn depth_15_tree_roundtrips_at_the_depth_field_maximum() {
+    // Depth 15 is the largest value the 4-bit depth field can hold;
+    // its complete form has 2^15 leaf slots, all replicated from 16
+    // real leaves.
+    let model = wrap(vec![chain_tree(15)], 1);
+    let finfo = [FeatureInfo::generic_float()];
+    let probes: Vec<Vec<f32>> = (0..=16)
+        .map(|i| vec![i as f32])
+        .chain([vec![-5.0], vec![7.25], vec![f32::NAN]])
+        .collect();
+    assert_roundtrip_parity(&model, &finfo, &probes);
+}
+
+#[test]
+fn single_leaf_trees_roundtrip_with_zero_width_references() {
+    // Bare-leaf ensembles have no used features, no thresholds, and
+    // (with one distinct value) zero-bit leaf references.
+    let same = wrap(vec![Tree::leaf(2.0); 3], 2);
+    let mixed = wrap(vec![Tree::leaf(2.0), Tree::leaf(-3.0), Tree::leaf(2.0)], 2);
+    let probes = vec![vec![0.0, 0.0], vec![f32::NAN, f32::NAN]];
+    assert_roundtrip_parity(&same, &[FeatureInfo::generic_float(); 2], &probes);
+    assert_roundtrip_parity(&mixed, &[FeatureInfo::generic_float(); 2], &probes);
+}
+
+/// 256 stumps, each splitting feature 0 at a distinct threshold
+/// `i + 0.5` — the per-feature threshold table holds exactly 256
+/// entries, so ranks fill all 8 bits and `count − 1 == 255` fills the
+/// map's count field.
+fn stumps_256() -> GbdtModel {
+    let trees: Vec<Tree> = (0..256)
+        .map(|i| Tree {
+            nodes: vec![
+                Node::Internal {
+                    feature: 0,
+                    bin: i as u16,
+                    threshold: i as f32 + 0.5,
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf { value: i as f64 + 1.0 },
+                Node::Leaf { value: -(i as f64 + 1.0) },
+            ],
+        })
+        .collect();
+    wrap(trees, 1)
+}
+
+#[test]
+fn exactly_256_thresholds_roundtrip_as_floats() {
+    let model = stumps_256();
+    let finfo = [FeatureInfo::generic_float()];
+    let probes: Vec<Vec<f32>> = [-1.0f32, 0.7, 100.2, 255.4, 255.6, 300.0, f32::NAN]
+        .iter()
+        .map(|&x| vec![x])
+        .collect();
+    assert_roundtrip_parity(&model, &finfo, &probes);
+}
+
+#[test]
+fn exactly_256_thresholds_roundtrip_as_u8_integers() {
+    // With an integer-valued feature the thresholds floor to 0..=255,
+    // exactly filling the 8-bit unsigned width (`max_floor == 255 <
+    // 2^8`) — the boundary the width-selection logic must not
+    // overshoot. Floored thresholds are routing-equivalent only on
+    // integer inputs, so probes are integers (plus NaN).
+    let model = stumps_256();
+    let finfo = [FeatureInfo { is_integer: true, min: 0.0, max: 400.0 }];
+    let probes: Vec<Vec<f32>> = [0.0f32, 1.0, 128.0, 255.0, 256.0, 400.0, f32::NAN]
+        .iter()
+        .map(|&x| vec![x])
+        .collect();
+    assert_roundtrip_parity(&model, &finfo, &probes);
+}
+
+/// Random tree drawing (feature, bin, threshold) from shared
+/// per-feature tables so the encoder's bin → value map is consistent.
+fn random_tree(rng: &mut Pcg64, tables: &[Vec<f32>], max_depth: usize) -> Tree {
+    fn grow(
+        rng: &mut Pcg64,
+        tables: &[Vec<f32>],
+        depth: usize,
+        max_depth: usize,
+        nodes: &mut Vec<Node>,
+    ) -> usize {
+        let idx = nodes.len();
+        if depth >= max_depth || rng.gen_bool(0.3) {
+            // Integer leaves: exactly representable as f32, so the
+            // round trip is bit-exact.
+            nodes.push(Node::Leaf { value: rng.gen_range(64) as f64 - 32.0 });
+            return idx;
+        }
+        nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+        let feature = rng.gen_range(tables.len());
+        let bin = rng.gen_range(tables[feature].len());
+        let threshold = tables[feature][bin];
+        let left = grow(rng, tables, depth + 1, max_depth, nodes);
+        let right = grow(rng, tables, depth + 1, max_depth, nodes);
+        nodes[idx] = Node::Internal { feature, bin: bin as u16, threshold, left, right };
+        idx
+    }
+    let mut nodes = Vec::new();
+    grow(rng, tables, 0, max_depth, &mut nodes);
+    Tree { nodes }
+}
+
+#[test]
+fn prop_random_models_roundtrip_with_nan_probes() {
+    run_prop("packed layout roundtrip", 40, |g| {
+        let d = g.usize_in(1, 5);
+        let mut rng = Pcg64::new(g.case_seed ^ 0xA5);
+        let tables: Vec<Vec<f32>> = (0..d)
+            .map(|_| {
+                let mut t: Vec<f32> = (0..1 + rng.gen_range(10))
+                    .map(|_| rng.gen_uniform(-2.0, 2.0) as f32)
+                    .collect();
+                t.sort_by(f32::total_cmp);
+                t.dedup();
+                t
+            })
+            .collect();
+        let n_trees = g.usize_in(1, 5);
+        let trees: Vec<Tree> = (0..n_trees)
+            .map(|_| random_tree(&mut rng, &tables, g.usize_in(0, 5)))
+            .collect();
+        let model = wrap(trees, d);
+        let finfo = vec![FeatureInfo::generic_float(); d];
+        let probes: Vec<Vec<f32>> = (0..24)
+            .map(|_| {
+                (0..d)
+                    .map(|_| {
+                        if g.bool(0.1) {
+                            f32::NAN
+                        } else {
+                            g.f64_in(-2.5, 2.5) as f32
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        assert_roundtrip_parity(&model, &finfo, &probes);
+    });
+}

@@ -65,7 +65,13 @@ fn main() {
     let data = PaperDataset::CovertypeBinary.generate(1);
     let data = data.select(&(0..16_384).collect::<Vec<_>>());
     let binner = Binner::fit(&data, 255);
-    let binned = binner.bin_dataset(&data);
+    let binned = binner.bin_matrix(&data);
+    println!(
+        "bin arena: {} ({} KB for {} cells)",
+        if binned.is_u8() { "u8" } else { "u16" },
+        binned.arena_bytes() / 1024,
+        binned.n_rows() * binned.n_features(),
+    );
     let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
     let n = data.n_rows();
     let d = data.n_features();
@@ -104,6 +110,15 @@ fn main() {
         pool.recycle(h);
     });
     rec.push("histogram_subset_gathered", per);
+
+    // ---- feature-sharded parallel build -------------------------------
+    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    let mut sharded_pool = HistogramPool::with_shards(&bins, shards);
+    let per = time(&format!("histogram build sharded x{shards} (16k rows)"), 20, || {
+        let h = sharded_pool.build(&binned, &rows, &grad, &hess);
+        sharded_pool.recycle(h);
+    });
+    rec.push("histogram_sharded", per);
 
     // ---- one boosting round end to end -------------------------------
     let per = time("boosting round (depth 3, 16k rows)", 5, || {
@@ -173,6 +188,19 @@ fn main() {
     });
     rec.push("quantized_single_512", per);
 
+    // Columnar batch: feeds the dataset's own feature columns (no
+    // per-row gather, one binning pass per column).
+    let test_cols: Vec<&[f32]> = data.features.iter().map(|c| &c[..512]).collect();
+    let per_columnar = time("quantized predict_batch_columns (512 rows)", 20, || {
+        std::hint::black_box(quant.predict_batch_columns(&test_cols, 512));
+    });
+    rec.push("columnar_batch", per_columnar);
+    println!(
+        "{:44} {:>12.1} K rows/s",
+        "  -> columnar batch throughput",
+        512.0 / per_columnar / 1e3
+    );
+
     let per = time("bit-packed predict (512 rows)", 5, || {
         let mut acc = 0.0;
         for r in &test_rows {
@@ -214,27 +242,35 @@ fn main() {
         rec.lookup("histogram_build_scalar") / rec.lookup("histogram_build_columnar");
     let subset_speedup =
         rec.lookup("histogram_subset_scalar") / rec.lookup("histogram_subset_gathered");
+    let sharded_speedup =
+        rec.lookup("histogram_build_scalar") / rec.lookup("histogram_sharded");
     let predict_speedup =
         rec.lookup("native_predict_rowwise_512") / rec.lookup("native_predict_flat_batch_512");
     let quant_speedup =
         rec.lookup("native_predict_rowwise_512") / rec.lookup("quantized_batch");
     let quant_vs_flat =
         rec.lookup("native_predict_flat_batch_512") / rec.lookup("quantized_batch");
+    let columnar_vs_row =
+        rec.lookup("quantized_batch") / rec.lookup("columnar_batch");
     println!("\n== speedups vs scalar baselines ==");
     println!("{:44} {:>11.2}x", "histogram build (dense)", hist_speedup);
     println!("{:44} {:>11.2}x", "histogram build (subset/gathered)", subset_speedup);
+    println!("{:44} {:>11.2}x", "histogram build (sharded)", sharded_speedup);
     println!("{:44} {:>11.2}x", "native batched predict", predict_speedup);
     println!("{:44} {:>11.2}x", "quantized batched predict", quant_speedup);
     println!("{:44} {:>11.2}x", "quantized vs flat batch", quant_vs_flat);
+    println!("{:44} {:>11.2}x", "columnar vs row-major batch", columnar_vs_row);
 
     let json = rec.to_json(
         &format!("covtype_binary_{n}x{d}"),
         &[
             ("histogram_build", hist_speedup),
             ("histogram_subset", subset_speedup),
+            ("histogram_sharded", sharded_speedup),
             ("native_predict_batch", predict_speedup),
             ("quantized_predict_batch", quant_speedup),
             ("quantized_vs_flat_batch", quant_vs_flat),
+            ("columnar_vs_row_batch", columnar_vs_row),
         ],
     );
     // CARGO_MANIFEST_DIR is <repo>/rust; the trajectory file lives at

@@ -16,7 +16,7 @@
 //! the raw scores are updated, which is the faithful way to apply CCP
 //! inside a boosting loop.
 
-use crate::data::{BinnedDataset, Dataset};
+use crate::data::{BinMatrix, Dataset};
 use crate::gbdt::booster::{Booster, GbdtParams};
 use crate::gbdt::splitter::{leaf_weight, NoPenalty};
 use crate::gbdt::tree::{Node, Tree};
@@ -34,7 +34,7 @@ struct NodeStats {
 /// are refitted as `−G/(H+λ) · leaf_scale`.
 pub fn prune_tree(
     tree: &Tree,
-    binned: &BinnedDataset,
+    binned: &BinMatrix,
     grad: &[f64],
     hess: &[f64],
     lambda: f64,
@@ -46,7 +46,7 @@ pub fn prune_tree(
     }
     // Route every row to accumulate (G, H) per node.
     let mut stats = vec![NodeStats::default(); tree.nodes.len()];
-    for i in 0..binned.n_rows {
+    for i in 0..binned.n_rows() {
         let mut idx = 0usize;
         loop {
             stats[idx].g += grad[i];
@@ -54,7 +54,7 @@ pub fn prune_tree(
             match &tree.nodes[idx] {
                 Node::Leaf { .. } => break,
                 Node::Internal { feature, bin, left, right, .. } => {
-                    idx = if binned.bins[*feature][i] <= *bin { *left } else { *right };
+                    idx = if binned.bin(*feature, i) <= *bin { *left } else { *right };
                 }
             }
         }

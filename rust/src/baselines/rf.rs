@@ -8,7 +8,7 @@
 //! nodes", paper Appendix D), and prediction averages leaf
 //! distributions.
 
-use crate::data::{Binner, BinnedDataset, Dataset};
+use crate::data::{BinMatrix, Binner, Dataset};
 use crate::prng::Pcg64;
 
 /// Random-forest hyperparameters.
@@ -119,7 +119,7 @@ pub fn train_rf(data: &Dataset, params: RfParams) -> RfModel {
     assert!(data.task.is_classification(), "RF baseline is classification-only");
     let n_classes = data.task.n_classes();
     let binner = Binner::fit(data, params.max_bins);
-    let binned = binner.bin_dataset(data);
+    let binned = binner.bin_matrix(data);
     let n = data.n_rows();
     let d = data.n_features();
     let n_feat = if params.n_feature_sample == 0 {
@@ -163,7 +163,7 @@ fn gini(counts: &[u32], total: u32) -> f64 {
 
 #[allow(clippy::too_many_arguments)]
 fn grow(
-    binned: &BinnedDataset,
+    binned: &BinMatrix,
     binner: &Binner,
     labels: &[usize],
     rows: Vec<u32>,
@@ -202,7 +202,7 @@ fn grow(
         // Class counts per bin.
         let mut hist = vec![0u32; n_bins * n_classes];
         for &i in &rows {
-            let b = binned.bins[f][i as usize] as usize;
+            let b = binned.bin(f, i as usize) as usize;
             hist[b * n_classes + labels[i as usize]] += 1;
         }
         let mut left = vec![0u32; n_classes];
@@ -237,7 +237,7 @@ fn grow(
     let threshold = binner.threshold_value(f, b as usize);
     let (mut lrows, mut rrows) = (Vec::new(), Vec::new());
     for &i in &rows {
-        if binned.bins[f][i as usize] <= b {
+        if binned.bin(f, i as usize) <= b {
             lrows.push(i);
         } else {
             rrows.push(i);

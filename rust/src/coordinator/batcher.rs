@@ -8,10 +8,13 @@
 //!   ([`crate::inference::FlatModel`]): the default, dependency-free
 //!   batched serving path (tree-outer/row-inner blocked kernel).
 //! * [`Backend::Quantized`] — the quantized-threshold flat engine
-//!   ([`crate::inference::QuantizedFlatModel`]): rows are pre-binned
-//!   per block and descents run on `u16` compares with interleaved
-//!   lanes; bit-identical outputs to `Native`, smaller per-node
-//!   streams — the pick for memory-bound batch serving.
+//!   ([`crate::inference::QuantizedFlatModel`]): the worker assembles
+//!   the pending queue directly into a columnar block (one `Vec` per
+//!   feature, short rows zero-padded as they are appended) and calls
+//!   the zero-gather `predict_batch_columns` kernel — each feature
+//!   column is binned once and descents run on `u16` compares with
+//!   interleaved lanes; bit-identical outputs to `Native`, smaller
+//!   per-node streams — the pick for memory-bound batch serving.
 //! * `Backend::Xla` (`xla` feature) — the AOT-compiled PJRT artifact.
 //!   Artifacts are compiled at a fixed batch size, and PJRT handles are
 //!   not `Send`, so the engine lives entirely inside the worker thread;
@@ -75,6 +78,15 @@ impl Batcher {
     }
 
     /// Submit a row; the returned receiver yields the raw scores.
+    ///
+    /// Ownership contract: `row` is moved into the gateway — the caller
+    /// keeps nothing and the batcher never clones it. At flush time the
+    /// `Native` backend takes each row out of its request to build the
+    /// row batch, while the `Quantized` backend reads the rows straight
+    /// into the columnar block (zero-padding short rows on the fly) and
+    /// drops them when the queue drains. Rows longer than the model's
+    /// feature count are truncated; both backends index only
+    /// `0..n_features`.
     pub fn submit(&self, row: Vec<f32>) -> Receiver<Vec<f64>> {
         let (reply_tx, reply_rx) = channel();
         self.tx
@@ -169,15 +181,38 @@ fn worker_loop(config: BatcherConfig, backend: Backend, rx: Receiver<Request>) {
     }
 
     fn flush(engine: &mut Engine, pending: &mut Vec<Request>) {
-        // Take the rows out instead of cloning — `pending` is drained
-        // right after, and only the reply channel is needed then.
-        let rows: Vec<Vec<f32>> =
-            pending.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
         let outputs: Vec<Vec<f64>> = match engine {
-            Engine::Native(flat) => flat.predict_batch(&pad(rows, flat.n_features())),
-            Engine::Quantized(quant) => quant.predict_batch(&pad(rows, quant.n_features())),
+            Engine::Native(flat) => {
+                // Take the rows out instead of cloning — `pending` is
+                // drained right after, and only the reply channel is
+                // needed then.
+                let rows: Vec<Vec<f32>> =
+                    pending.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
+                flat.predict_batch(&pad(rows, flat.n_features()))
+            }
+            Engine::Quantized(quant) => {
+                // Assemble the pending queue directly into the columnar
+                // block the engine's zero-gather kernel consumes: one
+                // Vec per feature, short rows zero-padded on the fly —
+                // no per-request row clone or zero-pad pass.
+                let nf = quant.n_features();
+                let n = pending.len();
+                let mut cols: Vec<Vec<f32>> =
+                    (0..nf).map(|_| Vec::with_capacity(n)).collect();
+                for req in pending.iter() {
+                    for (f, col) in cols.iter_mut().enumerate() {
+                        col.push(req.row.get(f).copied().unwrap_or(0.0));
+                    }
+                }
+                let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+                quant.predict_batch_columns(&col_refs, n)
+            }
             #[cfg(feature = "xla")]
-            Engine::Xla(e) => e.predict(&rows).expect("xla predict"),
+            Engine::Xla(e) => {
+                let rows: Vec<Vec<f32>> =
+                    pending.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
+                e.predict(&rows).expect("xla predict")
+            }
         };
         for (req, out) in pending.drain(..).zip(outputs) {
             // A dropped receiver just means the client went away.
@@ -233,6 +268,28 @@ mod tests {
         let mut padded = short.clone();
         padded.resize(data.n_features(), 0.0);
         assert_eq!(b.predict(short), model.predict_raw(&padded));
+    }
+
+    #[test]
+    fn quantized_gateway_serves_partially_filled_final_block() {
+        // 70 pending rows flush as one columnar batch: a full 64-row
+        // descent block plus a 6-row final block (queue length not a
+        // multiple of the engine's block size). Every reply must match
+        // its own row.
+        let (_, data, model) = fixtures();
+        let b = Batcher::spawn(
+            BatcherConfig { max_batch: 70, max_wait: Duration::from_secs(5) },
+            Backend::Quantized(model.quantize()),
+        );
+        let rxs: Vec<_> = (0..70).map(|i| (i, b.submit(data.row(i)))).collect();
+        for (i, rx) in rxs {
+            let got = rx.recv().unwrap();
+            assert_eq!(
+                got,
+                model.predict_raw(&data.row(i)),
+                "row {i}: partial-final-block reply mismatch"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! `BinMatrix` — the single bin-code arena shared by training and serving.
+//!
+//! Before this module the repo carried three independent bin
+//! representations: `Vec<Vec<u16>>` columns for histogram training, a
+//! transient per-block re-binning buffer inside the quantized engine's
+//! batch loop, and per-row `Vec<f32>` gathers in the coordinator
+//! batcher. PACSET (Madhyastha et al., 2020) and LIMITS (Sliwa et al.,
+//! 2020) both argue the train-time and deploy-time layouts should be
+//! co-designed; this type is that co-design:
+//!
+//! * **One contiguous arena.** All bin codes live in a single
+//!   column-major buffer (`arena[f * n_rows + i]` is feature `f` of row
+//!   `i`), so a feature column is one contiguous slice — the shape the
+//!   histogram kernels stream.
+//! * **Adaptive width.** Storage is `u8` when *every* feature has at
+//!   most [`U8_MAX_BINS`] bins (the common case: the trainer's default
+//!   `max_bins = 255`), halving the training set's bin footprint and
+//!   doubling the codes per cache line; otherwise `u16`. Consumers
+//!   dispatch once per build via [`BinMatrix::columns`] and run
+//!   monomorphized kernels — no per-access branching.
+//! * **On-demand row-major mirror.** Inference descends trees row by
+//!   row (random feature order), the opposite access pattern, so
+//!   [`BinMatrix::to_row_major`] materializes a `u16` row-major mirror
+//!   when an engine wants to bin once and descend many times (see
+//!   `QuantizedFlatModel::predict_batch_columns`).
+//!
+//! [`crate::data::Binner`] is the sole fit/transform entry point that
+//! produces training matrices (`Binner::bin_matrix` /
+//! `Binner::bin_columns`); the quantized engine builds its own over the
+//! model's threshold tables. Both go through [`BinMatrix::from_fn`].
+
+/// Largest per-feature bin count representable in the `u8` arena.
+pub const U8_MAX_BINS: usize = 256;
+
+/// Borrowed view of the whole column-major arena, dispatched once per
+/// kernel so the accumulation loops monomorphize over the code width.
+/// Feature `f` occupies `arena[f * n_rows..(f + 1) * n_rows]`.
+#[derive(Clone, Copy, Debug)]
+pub enum BinColumns<'a> {
+    U8(&'a [u8]),
+    U16(&'a [u16]),
+}
+
+#[derive(Clone, Debug)]
+enum Store {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+}
+
+/// A dataset mapped to bin codes: one contiguous column-major arena
+/// with adaptive u8/u16 element width. See the module docs.
+#[derive(Clone, Debug)]
+pub struct BinMatrix {
+    n_rows: usize,
+    /// `bins_per_feature[f]` bounds the codes of feature `f`
+    /// (`bin(f, i) < bins_per_feature[f]`).
+    bins_per_feature: Vec<usize>,
+    store: Store,
+}
+
+impl BinMatrix {
+    /// Build a matrix by evaluating `fill(feature, row)` for every cell,
+    /// feature-major (so per-feature state in `fill` stays hot). Picks
+    /// the `u8` arena exactly when every feature has ≤ [`U8_MAX_BINS`]
+    /// bins. Every produced code must be `< bins_per_feature[feature]`.
+    pub fn from_fn(
+        n_rows: usize,
+        bins_per_feature: &[usize],
+        mut fill: impl FnMut(usize, usize) -> u16,
+    ) -> BinMatrix {
+        let nf = bins_per_feature.len();
+        let store = if bins_per_feature.iter().all(|&b| b <= U8_MAX_BINS) {
+            let mut arena = Vec::with_capacity(n_rows * nf);
+            for f in 0..nf {
+                for i in 0..n_rows {
+                    let code = fill(f, i);
+                    debug_assert!(
+                        (code as usize) < bins_per_feature[f],
+                        "bin code {code} out of range for feature {f} ({} bins)",
+                        bins_per_feature[f]
+                    );
+                    arena.push(code as u8);
+                }
+            }
+            Store::U8(arena)
+        } else {
+            let mut arena = Vec::with_capacity(n_rows * nf);
+            for f in 0..nf {
+                for i in 0..n_rows {
+                    let code = fill(f, i);
+                    debug_assert!(
+                        (code as usize) < bins_per_feature[f],
+                        "bin code {code} out of range for feature {f} ({} bins)",
+                        bins_per_feature[f]
+                    );
+                    arena.push(code);
+                }
+            }
+            Store::U16(arena)
+        };
+        BinMatrix { n_rows, bins_per_feature: bins_per_feature.to_vec(), store }
+    }
+
+    /// Adopt ready-made `u16` columns (tests, hand-built fixtures). Bin
+    /// counts are inferred as `max code + 1` per feature, so storage
+    /// width adapts exactly as for [`BinMatrix::from_fn`].
+    pub fn from_u16_columns(cols: Vec<Vec<u16>>) -> BinMatrix {
+        let n_rows = cols.first().map_or(0, |c| c.len());
+        for (f, c) in cols.iter().enumerate() {
+            assert_eq!(c.len(), n_rows, "column {f} length mismatch");
+        }
+        let bins_per_feature: Vec<usize> = cols
+            .iter()
+            .map(|c| c.iter().copied().max().map_or(1, |m| m as usize + 1))
+            .collect();
+        BinMatrix::from_fn(n_rows, &bins_per_feature, |f, i| cols[f][i])
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.bins_per_feature.len()
+    }
+
+    /// Number of bins of feature `f` (codes are `0..n_bins(f)`).
+    pub fn n_bins(&self, f: usize) -> usize {
+        self.bins_per_feature[f]
+    }
+
+    pub fn bins_per_feature(&self) -> &[usize] {
+        &self.bins_per_feature
+    }
+
+    /// Whether the arena stores `u8` codes (every feature fits).
+    pub fn is_u8(&self) -> bool {
+        matches!(self.store, Store::U8(_))
+    }
+
+    /// Arena bytes (introspection: the u8 arena halves this).
+    pub fn arena_bytes(&self) -> usize {
+        match &self.store {
+            Store::U8(a) => a.len(),
+            Store::U16(a) => 2 * a.len(),
+        }
+    }
+
+    /// Random-access lookup (baselines, per-row routing). Hot kernels
+    /// should dispatch once via [`BinMatrix::columns`] instead.
+    #[inline]
+    pub fn bin(&self, f: usize, i: usize) -> u16 {
+        debug_assert!(i < self.n_rows);
+        let idx = f * self.n_rows + i;
+        match &self.store {
+            Store::U8(a) => a[idx] as u16,
+            Store::U16(a) => a[idx],
+        }
+    }
+
+    /// The whole column-major arena, width-dispatched.
+    #[inline]
+    pub fn columns(&self) -> BinColumns<'_> {
+        match &self.store {
+            Store::U8(a) => BinColumns::U8(a),
+            Store::U16(a) => BinColumns::U16(a),
+        }
+    }
+
+    /// Materialize the row-major `u16` mirror (`out[i * n_features + f]`)
+    /// — the orientation tree descent wants. Built on demand; the
+    /// column arena stays the source of truth.
+    pub fn to_row_major(&self) -> Vec<u16> {
+        let nf = self.n_features();
+        let mut out = vec![0u16; self.n_rows * nf];
+        match &self.store {
+            Store::U8(a) => transpose_into(a, self.n_rows, nf, &mut out),
+            Store::U16(a) => transpose_into(a, self.n_rows, nf, &mut out),
+        }
+        out
+    }
+
+    /// Widen back to plain `u16` columns (XLA tensor staging, tests).
+    pub fn to_u16_columns(&self) -> Vec<Vec<u16>> {
+        (0..self.n_features())
+            .map(|f| (0..self.n_rows).map(|i| self.bin(f, i)).collect())
+            .collect()
+    }
+}
+
+fn transpose_into<T: Copy>(arena: &[T], n_rows: usize, nf: usize, out: &mut [u16])
+where
+    u16: From<T>,
+{
+    for f in 0..nf {
+        let col = &arena[f * n_rows..(f + 1) * n_rows];
+        for (i, &v) in col.iter().enumerate() {
+            out[i * nf + f] = u16::from(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u8_arena_selected_when_every_feature_fits() {
+        let bm = BinMatrix::from_fn(4, &[256, 3], |f, i| ((f * 4 + i) % 3) as u16);
+        assert!(bm.is_u8());
+        assert_eq!(bm.arena_bytes(), 8);
+        assert_eq!(bm.n_rows(), 4);
+        assert_eq!(bm.n_features(), 2);
+        assert_eq!(bm.n_bins(0), 256);
+    }
+
+    #[test]
+    fn u16_arena_selected_when_any_feature_overflows_u8() {
+        let bm = BinMatrix::from_fn(4, &[257, 3], |_, i| (i % 3) as u16);
+        assert!(!bm.is_u8());
+        assert_eq!(bm.arena_bytes(), 16);
+    }
+
+    #[test]
+    fn bin_and_columns_agree_with_fill_order() {
+        let bm = BinMatrix::from_fn(3, &[3, 13], |f, i| (10 * f + i) as u16);
+        assert_eq!(bm.bin(0, 2), 2);
+        assert_eq!(bm.bin(1, 0), 10);
+        match bm.columns() {
+            BinColumns::U8(a) => assert_eq!(a, &[0, 1, 2, 10, 11, 12]),
+            BinColumns::U16(_) => panic!("13 bins must pick the u8 arena"),
+        }
+    }
+
+    #[test]
+    fn row_major_mirror_transposes() {
+        let bm = BinMatrix::from_u16_columns(vec![vec![0, 1, 2], vec![5, 4, 3]]);
+        assert_eq!(bm.to_row_major(), vec![0, 5, 1, 4, 2, 3]);
+        assert_eq!(bm.to_u16_columns(), vec![vec![0, 1, 2], vec![5, 4, 3]]);
+    }
+
+    #[test]
+    fn from_u16_columns_infers_bin_counts() {
+        let bm = BinMatrix::from_u16_columns(vec![vec![0, 300], vec![1, 0]]);
+        assert_eq!(bm.bins_per_feature(), &[301, 2]);
+        assert!(!bm.is_u8(), "301 bins must force the u16 arena");
+        assert_eq!(bm.bin(0, 1), 300);
+    }
+
+    #[test]
+    fn empty_matrix_is_well_formed() {
+        let bm = BinMatrix::from_u16_columns(vec![]);
+        assert_eq!(bm.n_rows(), 0);
+        assert_eq!(bm.n_features(), 0);
+        assert!(bm.to_row_major().is_empty());
+    }
+}

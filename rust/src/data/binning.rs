@@ -9,6 +9,7 @@
 //! *value* is what ends up in the global threshold array of the memory
 //! layout (§3.2.2).
 
+use super::binmatrix::BinMatrix;
 use super::dataset::Dataset;
 
 /// Per-feature binning rule learned from training data.
@@ -113,16 +114,19 @@ impl Binner {
         b.partition_point(|&bound| bound < x) as u16
     }
 
-    /// Bin an entire dataset (column-major, same orientation as input).
-    pub fn bin_dataset(&self, data: &Dataset) -> BinnedDataset {
-        assert_eq!(data.n_features(), self.n_features());
-        let bins = data
-            .features
-            .iter()
-            .enumerate()
-            .map(|(f, col)| col.iter().map(|&x| self.bin_value(f, x)).collect())
-            .collect();
-        BinnedDataset { bins, n_rows: data.n_rows() }
+    /// Bulk transform: bin raw feature columns into the shared
+    /// [`BinMatrix`] arena (`u8` codes when every feature has ≤ 256
+    /// bins, `u16` otherwise). `cols[f]` must hold feature `f` for all
+    /// `n_rows` rows; this is the one transform entry point — training,
+    /// baselines, and benches all consume the matrix it produces.
+    pub fn bin_columns<C: AsRef<[f32]>>(&self, cols: &[C], n_rows: usize) -> BinMatrix {
+        bin_columns_over_tables(&self.boundaries, cols, n_rows)
+    }
+
+    /// Bin an entire dataset (column-major arena, same orientation as
+    /// the input's feature columns).
+    pub fn bin_matrix(&self, data: &Dataset) -> BinMatrix {
+        self.bin_columns(&data.features, data.n_rows())
     }
 
     /// The threshold *value* represented by boundary index `b` of feature
@@ -131,6 +135,31 @@ impl Binner {
     pub fn threshold_value(&self, f: usize, b: usize) -> f32 {
         self.boundaries[f][b]
     }
+}
+
+/// Bin raw feature columns against ascending per-feature boundary
+/// tables into a [`BinMatrix`]: `code = #{boundaries < x}`, NaN to the
+/// top bin `tables[f].len()` (right at every split, like `x ≤ t` being
+/// false). This is THE binning rule — [`Binner::bin_columns`] applies
+/// it to quantile boundaries and the quantized engine's columnar
+/// pre-binning applies it to the model's distinct-threshold tables, so
+/// the two can never drift apart.
+pub fn bin_columns_over_tables<C: AsRef<[f32]>>(
+    tables: &[Vec<f32>],
+    cols: &[C],
+    n_rows: usize,
+) -> BinMatrix {
+    assert_eq!(cols.len(), tables.len(), "need one column per table");
+    let bins_per_feature: Vec<usize> = tables.iter().map(|t| t.len() + 1).collect();
+    BinMatrix::from_fn(n_rows, &bins_per_feature, |f, i| {
+        let x = cols[f].as_ref()[i];
+        let t = &tables[f];
+        if x.is_nan() {
+            t.len() as u16
+        } else {
+            t.partition_point(|&b| b < x) as u16
+        }
+    })
 }
 
 #[inline]
@@ -142,20 +171,6 @@ fn midpoint(a: f32, b: f32) -> f32 {
         a
     } else {
         m
-    }
-}
-
-/// A dataset mapped to bin indices, column-major like [`Dataset`].
-#[derive(Clone, Debug)]
-pub struct BinnedDataset {
-    /// `bins[f][i]` is the bin of row `i` on feature `f`.
-    pub bins: Vec<Vec<u16>>,
-    pub n_rows: usize,
-}
-
-impl BinnedDataset {
-    pub fn n_features(&self) -> usize {
-        self.bins.len()
     }
 }
 
@@ -224,10 +239,10 @@ mod tests {
         let col: Vec<f32> = (0..8_000).map(|_| rng.gen_f32()).collect();
         let d = ds(vec![col.clone()]);
         let b = Binner::fit(&d, 16);
-        let binned = b.bin_dataset(&d);
+        let binned = b.bin_matrix(&d);
         let mut counts = vec![0usize; b.n_bins(0)];
-        for &x in &binned.bins[0] {
-            counts[x as usize] += 1;
+        for i in 0..binned.n_rows() {
+            counts[binned.bin(0, i) as usize] += 1;
         }
         let expect = 8_000 / 16;
         for (i, &c) in counts.iter().enumerate() {
@@ -311,7 +326,7 @@ mod tests {
         b.run();
         // Route through the *training* binner: binned descent and
         // float-threshold descent must agree even on NaN rows.
-        let binned = b.binner().bin_dataset(&data);
+        let binned = b.binner().bin_matrix(&data);
         let model = b.into_model();
         assert!(model.n_trees() > 0);
         for i in 0..n {
@@ -320,6 +335,69 @@ mod tests {
                 model.predict_raw(&data.row(i)),
                 "row {i}: binned and float routing diverged"
             );
+        }
+    }
+
+    /// The production lookup is a `partition_point` binary search; pin
+    /// it against the naive linear scan (count boundaries strictly
+    /// below `x`, NaN to the top bin) on random and NaN probes — both
+    /// on-data and off-data values, including exact boundary hits.
+    #[test]
+    fn prop_bin_value_matches_linear_scan() {
+        use crate::testutil::prop::run_prop;
+        run_prop("bin_value binary search == linear scan", 60, |g| {
+            let n = g.usize_in(2, 300);
+            let col: Vec<f32> = (0..n)
+                .map(|_| if g.bool(0.03) { f32::NAN } else { g.f64_in(-5.0, 5.0) as f32 })
+                .collect();
+            let d = ds(vec![col.clone()]);
+            let b = Binner::fit(&d, g.usize_in(2, 64));
+            let scan = |x: f32| -> u16 {
+                let bounds = &b.boundaries[0];
+                if x.is_nan() {
+                    return bounds.len() as u16;
+                }
+                let mut c = 0u16;
+                for &t in bounds {
+                    if t < x {
+                        c += 1;
+                    }
+                }
+                c
+            };
+            for &x in &col {
+                assert_eq!(b.bin_value(0, x), scan(x), "training value {x}");
+            }
+            for &x in &b.boundaries[0] {
+                assert_eq!(b.bin_value(0, x), scan(x), "boundary value {x}");
+            }
+            for _ in 0..40 {
+                let x = if g.bool(0.1) { f32::NAN } else { g.f64_in(-6.0, 6.0) as f32 };
+                assert_eq!(b.bin_value(0, x), scan(x), "probe {x}");
+            }
+        });
+    }
+
+    /// `bin_columns` must agree cell-for-cell with per-value
+    /// `bin_value`, in both arena widths.
+    #[test]
+    fn bin_columns_matches_bin_value_in_both_widths() {
+        let mut rng = Pcg64::new(27);
+        for max_bins in [16usize, 300] {
+            let n = 500;
+            let cols: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..n).map(|_| rng.gen_f32() * 8.0 - 4.0).collect())
+                .collect();
+            let d = ds(cols.clone());
+            let b = Binner::fit(&d, max_bins);
+            let bm = b.bin_matrix(&d);
+            assert_eq!(bm.is_u8(), b.max_bin_count() <= 256);
+            for f in 0..3 {
+                assert_eq!(bm.n_bins(f), b.n_bins(f));
+                for i in 0..n {
+                    assert_eq!(bm.bin(f, i), b.bin_value(f, cols[f][i]), "f={f} i={i}");
+                }
+            }
         }
     }
 

@@ -109,6 +109,20 @@ mod tests {
     }
 
     #[test]
+    fn target_only_csv_reports_rows() {
+        // A CSV with only the `target` column parses to a feature-less
+        // dataset; `Dataset::n_rows` must fall back to the target count
+        // rather than reporting 0 rows.
+        let path = std::env::temp_dir().join("toad_test_target_only.csv");
+        std::fs::write(&path, "target\n1.5\n2.5\n3.5\n").unwrap();
+        let d = read_csv(&path, "t", Task::Regression).unwrap();
+        assert_eq!(d.n_features(), 0);
+        assert_eq!(d.n_rows(), 3);
+        assert_eq!(d.targets, vec![1.5, 2.5, 3.5]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn rejects_missing_target() {
         let path = std::env::temp_dir().join("toad_test_bad.csv");
         std::fs::write(&path, "a,b\n1,2\n").unwrap();

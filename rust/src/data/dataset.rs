@@ -51,8 +51,13 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Row count. With no feature columns (degenerate but reachable —
+    /// e.g. a CSV holding only the `target` column) the count falls
+    /// back to the target/label length instead of reporting 0 rows.
     pub fn n_rows(&self) -> usize {
-        self.features.first().map_or(0, |c| c.len())
+        self.features
+            .first()
+            .map_or_else(|| self.targets.len().max(self.labels.len()), |c| c.len())
     }
 
     pub fn n_features(&self) -> usize {
@@ -160,6 +165,33 @@ mod tests {
         let mut d = toy();
         d.features[1].pop();
         assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn n_rows_falls_back_to_targets_or_labels_without_features() {
+        // Regression shape: feature-less dataset must still report its
+        // row count (previously 0, which made validate() pass vacuously
+        // and downstream loops silently skip every row).
+        let d = Dataset {
+            name: "no-features".into(),
+            features: vec![],
+            targets: vec![1.0, 2.0, 3.0],
+            labels: vec![],
+            task: Task::Regression,
+        };
+        assert_eq!(d.n_rows(), 3);
+        d.validate().unwrap();
+
+        let c = Dataset {
+            name: "no-features-cls".into(),
+            features: vec![],
+            targets: vec![],
+            labels: vec![0, 1],
+            task: Task::Binary,
+        };
+        assert_eq!(c.n_rows(), 2);
+        c.validate().unwrap();
+        assert!(c.row(0).is_empty());
     }
 
     #[test]

@@ -8,12 +8,14 @@
 //! (trainers, sweeps, benches) consumes the same [`Dataset`] type, so
 //! real CSV data can be dropped in via [`csv`].
 
+pub mod binmatrix;
 pub mod binning;
 pub mod csv;
 pub mod dataset;
 pub mod splits;
 pub mod synth;
 
-pub use binning::{BinnedDataset, Binner};
+pub use binmatrix::{BinColumns, BinMatrix};
+pub use binning::Binner;
 pub use dataset::{Dataset, Task};
 pub use splits::{kfold, train_test_split, train_valid_test_split};

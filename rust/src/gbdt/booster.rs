@@ -12,7 +12,7 @@ use super::loss::Objective;
 use super::model::GbdtModel;
 use super::splitter::{NoPenalty, SplitParams, SplitPenalty};
 use super::tree::{Node, Tree};
-use crate::data::{Binner, BinnedDataset, Dataset};
+use crate::data::{BinMatrix, Binner, Dataset};
 
 /// Hyperparameters of a boosting run. Field names follow the paper's
 /// grid (§4): `n_rounds` = "maximum number of iterations", `max_depth` =
@@ -29,6 +29,13 @@ pub struct GbdtParams {
     pub min_data_in_leaf: u32,
     pub min_hess_in_leaf: f64,
     pub max_bins: usize,
+    /// Worker threads for the feature-sharded histogram build
+    /// (`HistogramSet::build_sharded`); 1 = sequential. Bit-identical
+    /// models for any value — this is purely a wall-clock knob for
+    /// wide datasets. Leaves smaller than
+    /// `histogram::SHARD_MIN_ROWS` rows always build sequentially, so
+    /// deep-tree tail leaves never pay thread-spawn overhead.
+    pub histogram_shards: usize,
 }
 
 impl Default for GbdtParams {
@@ -43,6 +50,7 @@ impl Default for GbdtParams {
             min_data_in_leaf: 20,
             min_hess_in_leaf: 1e-3,
             max_bins: 255,
+            histogram_shards: 1,
         }
     }
 }
@@ -78,7 +86,7 @@ pub struct Booster<P: SplitPenalty> {
     params: GbdtParams,
     objective: Objective,
     binner: Binner,
-    binned: BinnedDataset,
+    binned: BinMatrix,
     /// Reused per-leaf histogram buffers + gather scratch, shared across
     /// every tree of every round.
     pool: HistogramPool,
@@ -99,7 +107,7 @@ impl<P: SplitPenalty> Booster<P> {
         train.validate().expect("invalid training dataset");
         let objective = Objective::for_task(train.task);
         let binner = Binner::fit(train, params.max_bins);
-        let binned = binner.bin_dataset(train);
+        let binned = binner.bin_matrix(train);
         let bins_per_feature: Vec<usize> =
             (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
         let n = train.n_rows();
@@ -118,7 +126,7 @@ impl<P: SplitPenalty> Booster<P> {
             objective,
             binner,
             binned,
-            pool: HistogramPool::new(&bins_per_feature),
+            pool: HistogramPool::with_shards(&bins_per_feature, params.histogram_shards),
             targets: train.targets.clone(),
             labels: train.labels.clone(),
             raw,
@@ -152,7 +160,7 @@ impl<P: SplitPenalty> Booster<P> {
     /// Used by the CCP baseline.
     pub fn boost_round_map(
         &mut self,
-        mut map: impl FnMut(&BinnedDataset, &[f64], &[f64], Tree) -> Tree,
+        mut map: impl FnMut(&BinMatrix, &[f64], &[f64], Tree) -> Tree,
     ) -> bool {
         self.objective.grad_hess(
             &self.raw,
@@ -162,7 +170,7 @@ impl<P: SplitPenalty> Booster<P> {
             &mut self.hess,
         );
         let grower = self.params.grower();
-        let n = self.binned.n_rows;
+        let n = self.binned.n_rows();
         let mut any_split = false;
         for k in 0..self.objective.n_outputs() {
             let rows: Vec<u32> = (0..n as u32).collect();
@@ -199,7 +207,7 @@ impl<P: SplitPenalty> Booster<P> {
             &mut self.hess,
         );
         let grower = self.params.grower();
-        let n = self.binned.n_rows;
+        let n = self.binned.n_rows();
         let mut any_split = false;
         for k in 0..self.objective.n_outputs() {
             let rows: Vec<u32> = (0..n as u32).collect();
@@ -402,6 +410,22 @@ mod tests {
         for i in (0..data.n_rows()).step_by(37) {
             let x = data.row(i);
             assert_eq!(one.predict_raw(&x), inc.predict_raw(&x));
+        }
+    }
+
+    #[test]
+    fn sharded_histogram_training_is_bit_identical() {
+        // `histogram_shards` is a wall-clock knob only: the sharded
+        // build is bit-identical to the sequential one, so the grown
+        // model must match exactly, tree for tree.
+        let data = small(PaperDataset::BreastCancer, 300);
+        let p = GbdtParams::paper(6, 3);
+        let base = train(&data, p);
+        let sharded = train(&data, GbdtParams { histogram_shards: 3, ..p });
+        assert_eq!(base.n_trees(), sharded.n_trees());
+        for i in (0..data.n_rows()).step_by(29) {
+            let x = data.row(i);
+            assert_eq!(base.predict_raw(&x), sharded.predict_raw(&x), "row {i}");
         }
     }
 

@@ -15,7 +15,7 @@
 use super::histogram::{HistogramPool, HistogramSet};
 use super::splitter::{best_split, leaf_weight, SplitInfo, SplitParams, SplitPenalty};
 use super::tree::{Node, Tree};
-use crate::data::BinnedDataset;
+use crate::data::{BinColumns, BinMatrix};
 use std::collections::BinaryHeap;
 
 /// Parameters controlling the growth of a single tree.
@@ -98,7 +98,7 @@ pub struct GrownTree {
 /// pool alive across all rounds so steady-state growth allocates
 /// nothing on the histogram path.
 pub fn grow_tree(
-    binned: &BinnedDataset,
+    binned: &BinMatrix,
     pool: &mut HistogramPool,
     rows: Vec<u32>,
     grad: &[f64],
@@ -168,16 +168,19 @@ pub fn grow_tree(
         };
         penalty.on_split(split.feature, split.bin);
 
-        // Partition rows by the split predicate.
-        let col = &binned.bins[split.feature];
+        // Partition rows by the split predicate (u8/u16 monomorphized
+        // over the arena's code width).
         let parent_rows = std::mem::take(&mut leaves[leaf_id].rows);
         let mut left_rows = Vec::with_capacity(split.left_count as usize);
         let mut right_rows = Vec::with_capacity(split.right_count as usize);
-        for &i in &parent_rows {
-            if col[i as usize] <= split.bin {
-                left_rows.push(i);
-            } else {
-                right_rows.push(i);
+        let n = binned.n_rows();
+        let (cs, ce) = (split.feature * n, (split.feature + 1) * n);
+        match binned.columns() {
+            BinColumns::U8(a) => {
+                partition_rows(&a[cs..ce], split.bin, &parent_rows, &mut left_rows, &mut right_rows)
+            }
+            BinColumns::U16(a) => {
+                partition_rows(&a[cs..ce], split.bin, &parent_rows, &mut left_rows, &mut right_rows)
             }
         }
         debug_assert_eq!(left_rows.len() as u32, split.left_count);
@@ -270,6 +273,26 @@ pub fn grow_tree(
     GrownTree { tree, leaf_rows }
 }
 
+/// Route each of `rows` left (`code ≤ bin`) or right, reading one
+/// contiguous feature column of the arena.
+fn partition_rows<T: Copy>(
+    col: &[T],
+    bin: u16,
+    rows: &[u32],
+    left: &mut Vec<u32>,
+    right: &mut Vec<u32>,
+) where
+    u16: From<T>,
+{
+    for &i in rows {
+        if u16::from(col[i as usize]) <= bin {
+            left.push(i);
+        } else {
+            right.push(i);
+        }
+    }
+}
+
 /// Patch the float threshold values into a grown tree using the binner's
 /// boundary table (`thresholds(feature, bin)`).
 pub fn resolve_thresholds(tree: &mut Tree, thresholds: impl Fn(usize, u16) -> f32) {
@@ -312,7 +335,7 @@ mod tests {
         params: &GrowerParams,
     ) -> (Tree, Binner) {
         let binner = Binner::fit(ds, 64);
-        let binned = binner.bin_dataset(ds);
+        let binned = binner.bin_matrix(ds);
         let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
         let mut pool = HistogramPool::new(&bins);
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
@@ -428,7 +451,7 @@ mod tests {
         }
         let (ds, grad, hess) = stump_data(400, 5);
         let binner = Binner::fit(&ds, 32);
-        let binned = binner.bin_dataset(&ds);
+        let binned = binner.bin_matrix(&ds);
         let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
         let mut pool = HistogramPool::new(&bins);
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();

@@ -34,8 +34,38 @@
 //! [`HistogramPool`] owns the gather scratch and a free list of
 //! histogram buffers so the grower checks out per-leaf histograms
 //! instead of allocating `3 × total_bins` doubles per node.
+//!
+//! # The BinMatrix arena (§Perf iteration 5)
+//!
+//! Bin codes come from the shared [`BinMatrix`] arena: one contiguous
+//! column-major buffer with adaptive `u8`/`u16` element width. Every
+//! kernel here is generic over the code width and dispatched once per
+//! build via [`BinMatrix::columns`], so the common `max_bins ≤ 256`
+//! case streams half the bytes per (row, feature) update with zero
+//! per-access branching.
+//!
+//! # The feature-sharded parallel build
+//!
+//! [`HistogramSet::build_sharded`] partitions features into contiguous
+//! ranges (split evenly by feature count — per-feature accumulation
+//! cost is one update per row regardless of bin count) and accumulates
+//! each range on its own `std::thread::scope` worker. Per-feature histogram regions are
+//! disjoint slices of the flat triple array, so shards write without
+//! locks or a merge step; the gradient/hessian gather is done once up
+//! front and shared read-only. Accumulation order per feature is
+//! identical to [`HistogramSet::build`]/[`HistogramSet::build_scalar`],
+//! so the result is bit-identical for any shard count (property-tested
+//! in `tests/histogram_parity.rs`).
 
-use crate::data::BinnedDataset;
+use crate::data::{BinColumns, BinMatrix};
+
+/// Row-count threshold below which [`HistogramPool::build`] ignores the
+/// configured shard count and stays sequential: a scoped spawn/join
+/// cycle costs tens of microseconds, which dwarfs accumulation over the
+/// small row sets of leaves near the bottom of a tree. Explicit
+/// [`HistogramSet::build_sharded`] calls are not gated (parity tests
+/// exercise the threaded path on tiny inputs deliberately).
+pub const SHARD_MIN_ROWS: usize = 4096;
 
 /// Flat histogram over all features of a dataset.
 ///
@@ -55,7 +85,7 @@ pub struct HistogramSet {
 ///
 /// The single slice reborrow keeps this to one bounds check per update;
 /// the caller guarantees `b` is a multiple of 3 derived from an in-range
-/// bin (the [`BinnedDataset`] invariant: `bins[f][i] < n_bins(f)`).
+/// bin (the [`BinMatrix`] invariant: `bin(f, i) < n_bins(f)`).
 #[inline(always)]
 fn bump(data: &mut [f64], b: usize, g: f64, h: f64) {
     let t = &mut data[b..b + 3];
@@ -65,18 +95,21 @@ fn bump(data: &mut [f64], b: usize, g: f64, h: f64) {
 }
 
 /// Dense accumulation: every row of `col` contributes, statistics are
-/// read sequentially. 4-way unrolled.
-fn accumulate_dense(data: &mut [f64], off: usize, col: &[u16], grad: &[f64], hess: &[f64]) {
+/// read sequentially. 4-way unrolled; monomorphized per bin-code width.
+fn accumulate_dense<T: Copy>(data: &mut [f64], off: usize, col: &[T], grad: &[f64], hess: &[f64])
+where
+    usize: From<T>,
+{
     debug_assert_eq!(col.len(), grad.len());
     debug_assert_eq!(col.len(), hess.len());
     let n = col.len();
     let base = 3 * off;
     let mut i = 0usize;
     while i + 4 <= n {
-        let b0 = base + 3 * col[i] as usize;
-        let b1 = base + 3 * col[i + 1] as usize;
-        let b2 = base + 3 * col[i + 2] as usize;
-        let b3 = base + 3 * col[i + 3] as usize;
+        let b0 = base + 3 * usize::from(col[i]);
+        let b1 = base + 3 * usize::from(col[i + 1]);
+        let b2 = base + 3 * usize::from(col[i + 2]);
+        let b3 = base + 3 * usize::from(col[i + 3]);
         bump(data, b0, grad[i], hess[i]);
         bump(data, b1, grad[i + 1], hess[i + 1]);
         bump(data, b2, grad[i + 2], hess[i + 2]);
@@ -84,32 +117,35 @@ fn accumulate_dense(data: &mut [f64], off: usize, col: &[u16], grad: &[f64], hes
         i += 4;
     }
     while i < n {
-        bump(data, base + 3 * col[i] as usize, grad[i], hess[i]);
+        bump(data, base + 3 * usize::from(col[i]), grad[i], hess[i]);
         i += 1;
     }
 }
 
 /// Subset accumulation over gathered statistics: `og[j]`/`oh[j]` are the
 /// grad/hess of row `rows[j]`, read sequentially; only the bin lookup
-/// `col[rows[j]]` stays a random access. 4-way unrolled.
-fn accumulate_gathered(
+/// `col[rows[j]]` stays a random access. 4-way unrolled; monomorphized
+/// per bin-code width.
+fn accumulate_gathered<T: Copy>(
     data: &mut [f64],
     off: usize,
-    col: &[u16],
+    col: &[T],
     rows: &[u32],
     og: &[f64],
     oh: &[f64],
-) {
+) where
+    usize: From<T>,
+{
     debug_assert_eq!(rows.len(), og.len());
     debug_assert_eq!(rows.len(), oh.len());
     let n = rows.len();
     let base = 3 * off;
     let mut j = 0usize;
     while j + 4 <= n {
-        let b0 = base + 3 * col[rows[j] as usize] as usize;
-        let b1 = base + 3 * col[rows[j + 1] as usize] as usize;
-        let b2 = base + 3 * col[rows[j + 2] as usize] as usize;
-        let b3 = base + 3 * col[rows[j + 3] as usize] as usize;
+        let b0 = base + 3 * usize::from(col[rows[j] as usize]);
+        let b1 = base + 3 * usize::from(col[rows[j + 1] as usize]);
+        let b2 = base + 3 * usize::from(col[rows[j + 2] as usize]);
+        let b3 = base + 3 * usize::from(col[rows[j + 3] as usize]);
         bump(data, b0, og[j], oh[j]);
         bump(data, b1, og[j + 1], oh[j + 1]);
         bump(data, b2, og[j + 2], oh[j + 2]);
@@ -117,8 +153,39 @@ fn accumulate_gathered(
         j += 4;
     }
     while j < n {
-        bump(data, base + 3 * col[rows[j] as usize] as usize, og[j], oh[j]);
+        bump(data, base + 3 * usize::from(col[rows[j] as usize]), og[j], oh[j]);
         j += 1;
+    }
+}
+
+/// One shard's share of a sharded build: accumulate the features of
+/// `range` into `chunk`, whose triples start at `offsets[range.start]`
+/// in the full set. Runs on a scoped worker thread.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_shard<T: Copy>(
+    chunk: &mut [f64],
+    offsets: &[usize],
+    range: std::ops::Range<usize>,
+    arena: &[T],
+    n_rows: usize,
+    dense: bool,
+    rows: &[u32],
+    grad: &[f64],
+    hess: &[f64],
+    og: &[f64],
+    oh: &[f64],
+) where
+    usize: From<T>,
+{
+    let base = offsets[range.start];
+    for f in range {
+        let off = offsets[f] - base;
+        let col = &arena[f * n_rows..(f + 1) * n_rows];
+        if dense {
+            accumulate_dense(chunk, off, col, grad, hess);
+        } else {
+            accumulate_gathered(chunk, off, col, rows, og, oh);
+        }
     }
 }
 
@@ -155,7 +222,7 @@ impl HistogramSet {
     /// round. Standalone entry point that allocates its own gather
     /// scratch — the training loop goes through [`HistogramPool::build`]
     /// which reuses scratch across leaves.
-    pub fn build(&mut self, binned: &BinnedDataset, rows: &[u32], grad: &[f64], hess: &[f64]) {
+    pub fn build(&mut self, binned: &BinMatrix, rows: &[u32], grad: &[f64], hess: &[f64]) {
         let mut og = Vec::new();
         let mut oh = Vec::new();
         self.build_with_scratch(binned, rows, grad, hess, &mut og, &mut oh);
@@ -164,7 +231,7 @@ impl HistogramSet {
     /// [`HistogramSet::build`] with caller-provided gather scratch.
     pub(crate) fn build_with_scratch(
         &mut self,
-        binned: &BinnedDataset,
+        binned: &BinMatrix,
         rows: &[u32],
         grad: &[f64],
         hess: &[f64],
@@ -172,12 +239,14 @@ impl HistogramSet {
         oh: &mut Vec<f64>,
     ) {
         self.reset();
-        if rows.len() == binned.n_rows {
+        let n = binned.n_rows();
+        if rows.len() == n {
             // Row sets hold distinct indices, so full length ⇒ the whole
             // dataset: iteration order is free (sums commute up to fp
             // rounding) and the indirection drops out.
-            for f in 0..self.n_features() {
-                accumulate_dense(&mut self.data, self.offsets[f], &binned.bins[f], grad, hess);
+            match binned.columns() {
+                BinColumns::U8(a) => self.dense_cols(a, n, grad, hess),
+                BinColumns::U16(a) => self.dense_cols(a, n, grad, hess),
             }
             return;
         }
@@ -192,34 +261,169 @@ impl HistogramSet {
             og.push(grad[i as usize]);
             oh.push(hess[i as usize]);
         }
+        match binned.columns() {
+            BinColumns::U8(a) => self.gathered_cols(a, n, rows, og, oh),
+            BinColumns::U16(a) => self.gathered_cols(a, n, rows, og, oh),
+        }
+    }
+
+    fn dense_cols<T: Copy>(&mut self, arena: &[T], n: usize, grad: &[f64], hess: &[f64])
+    where
+        usize: From<T>,
+    {
         for f in 0..self.n_features() {
-            accumulate_gathered(&mut self.data, self.offsets[f], &binned.bins[f], rows, og, oh);
+            let col = &arena[f * n..(f + 1) * n];
+            accumulate_dense(&mut self.data, self.offsets[f], col, grad, hess);
+        }
+    }
+
+    fn gathered_cols<T: Copy>(
+        &mut self,
+        arena: &[T],
+        n: usize,
+        rows: &[u32],
+        og: &[f64],
+        oh: &[f64],
+    ) where
+        usize: From<T>,
+    {
+        for f in 0..self.n_features() {
+            let col = &arena[f * n..(f + 1) * n];
+            accumulate_gathered(&mut self.data, self.offsets[f], col, rows, og, oh);
         }
     }
 
     /// The original one-update-per-(row, feature) scalar loop, kept as
-    /// the parity oracle for the columnar kernel and as the "before"
-    /// baseline in `benches/perf_hotpaths.rs`.
-    pub fn build_scalar(
+    /// the parity oracle for the columnar and sharded kernels and as
+    /// the "before" baseline in `benches/perf_hotpaths.rs`.
+    pub fn build_scalar(&mut self, binned: &BinMatrix, rows: &[u32], grad: &[f64], hess: &[f64]) {
+        self.reset();
+        let n = binned.n_rows();
+        match binned.columns() {
+            BinColumns::U8(a) => self.scalar_cols(a, n, rows, grad, hess),
+            BinColumns::U16(a) => self.scalar_cols(a, n, rows, grad, hess),
+        }
+    }
+
+    fn scalar_cols<T: Copy>(
         &mut self,
-        binned: &BinnedDataset,
+        arena: &[T],
+        n: usize,
         rows: &[u32],
         grad: &[f64],
         hess: &[f64],
-    ) {
-        self.reset();
+    ) where
+        usize: From<T>,
+    {
         for f in 0..self.n_features() {
             let off = self.offsets[f];
-            let col = &binned.bins[f];
+            let col = &arena[f * n..(f + 1) * n];
             let data = &mut self.data;
             for &i in rows {
                 let i = i as usize;
-                let b = 3 * (off + col[i] as usize);
+                let b = 3 * (off + usize::from(col[i]));
                 data[b] += grad[i];
                 data[b + 1] += hess[i];
                 data[b + 2] += 1.0;
             }
         }
+    }
+
+    /// Feature-sharded parallel build over up to `n_shards` scoped
+    /// worker threads (`std::thread::scope`, zero dependencies).
+    ///
+    /// Features are partitioned into contiguous ranges of (nearly)
+    /// equal feature count; each shard owns the disjoint slice of the
+    /// flat triple array covering its features, so there is no locking
+    /// and no merge step. The gradient/hessian gather happens once up front and is
+    /// shared read-only by every shard. Within each feature the
+    /// accumulation order matches [`HistogramSet::build`] and
+    /// [`HistogramSet::build_scalar`] exactly, so results are
+    /// bit-identical for every shard count. `n_shards ≤ 1` (or a
+    /// single-feature set) degrades to the sequential columnar build.
+    pub fn build_sharded(
+        &mut self,
+        binned: &BinMatrix,
+        rows: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+        n_shards: usize,
+    ) {
+        let mut og = Vec::new();
+        let mut oh = Vec::new();
+        self.build_sharded_with_scratch(binned, rows, grad, hess, n_shards, &mut og, &mut oh);
+    }
+
+    /// [`HistogramSet::build_sharded`] with caller-provided gather
+    /// scratch (the [`HistogramPool`] path).
+    pub(crate) fn build_sharded_with_scratch(
+        &mut self,
+        binned: &BinMatrix,
+        rows: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+        n_shards: usize,
+        og: &mut Vec<f64>,
+        oh: &mut Vec<f64>,
+    ) {
+        let nf = self.n_features();
+        let k = n_shards.clamp(1, nf.max(1));
+        if k <= 1 {
+            self.build_with_scratch(binned, rows, grad, hess, og, oh);
+            return;
+        }
+        self.reset();
+        let n = binned.n_rows();
+        let dense = rows.len() == n;
+        if !dense {
+            og.clear();
+            oh.clear();
+            og.reserve(rows.len());
+            oh.reserve(rows.len());
+            for &i in rows {
+                og.push(grad[i as usize]);
+                oh.push(hess[i as usize]);
+            }
+        }
+        let og: &[f64] = og;
+        let oh: &[f64] = oh;
+        let HistogramSet { offsets, data } = self;
+        let offsets: &[usize] = offsets;
+
+        // Contiguous feature ranges of (nearly) equal feature count —
+        // NOT bin count: one histogram update costs the same for every
+        // feature (one bump per row; a feature's bin count only sets
+        // its buffer size), so an even feature split is what balances
+        // shard wall-clock. Every shard gets at least one feature
+        // (`k ≤ nf`).
+        let mut shards: Vec<(std::ops::Range<usize>, &mut [f64])> = Vec::with_capacity(k);
+        let mut rest: &mut [f64] = data;
+        let mut fstart = 0usize;
+        for s in 0..k {
+            let fend = if s + 1 == k { nf } else { fstart + (nf - fstart) / (k - s) };
+            let len = 3 * (offsets[fend] - offsets[fstart]);
+            // Move `rest` out before splitting so the halves keep the
+            // long lifetime (a plain reborrow would pin them to this
+            // iteration).
+            let taken = std::mem::take(&mut rest);
+            let (head, tail) = taken.split_at_mut(len);
+            shards.push((fstart..fend, head));
+            rest = tail;
+            fstart = fend;
+        }
+
+        std::thread::scope(|scope| {
+            for (range, chunk) in shards {
+                scope.spawn(move || match binned.columns() {
+                    BinColumns::U8(a) => accumulate_shard(
+                        chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
+                    ),
+                    BinColumns::U16(a) => accumulate_shard(
+                        chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
+                    ),
+                });
+            }
+        });
     }
 
     /// `self = parent − sibling`, the histogram-subtraction trick.
@@ -284,16 +488,35 @@ pub struct HistogramPool {
     free: Vec<HistogramSet>,
     og: Vec<f64>,
     oh: Vec<f64>,
+    /// Worker threads for [`HistogramSet::build_sharded`]; 1 = the
+    /// sequential columnar kernel.
+    shards: usize,
 }
 
 impl HistogramPool {
     pub fn new(bins_per_feature: &[usize]) -> HistogramPool {
+        HistogramPool::with_shards(bins_per_feature, 1)
+    }
+
+    /// Pool whose [`HistogramPool::build`] runs the feature-sharded
+    /// parallel kernel on `shards` scoped threads (bit-identical to the
+    /// sequential build for any count; `≤ 1` stays sequential).
+    pub fn with_shards(bins_per_feature: &[usize], shards: usize) -> HistogramPool {
         HistogramPool {
             bins_per_feature: bins_per_feature.to_vec(),
             free: Vec::new(),
             og: Vec::new(),
             oh: Vec::new(),
+            shards: shards.max(1),
         }
+    }
+
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     pub fn bins_per_feature(&self) -> &[usize] {
@@ -312,15 +535,19 @@ impl HistogramPool {
     }
 
     /// Checkout + build in one step, reusing the pool's gather scratch.
+    /// Runs sharded when the pool was configured with more than one
+    /// shard (see [`HistogramPool::with_shards`]) and the leaf is big
+    /// enough to amortize thread spawn ([`SHARD_MIN_ROWS`]).
     pub fn build(
         &mut self,
-        binned: &BinnedDataset,
+        binned: &BinMatrix,
         rows: &[u32],
         grad: &[f64],
         hess: &[f64],
     ) -> HistogramSet {
+        let shards = if rows.len() >= SHARD_MIN_ROWS { self.shards } else { 1 };
         let mut h = self.checkout();
-        h.build_with_scratch(binned, rows, grad, hess, &mut self.og, &mut self.oh);
+        h.build_sharded_with_scratch(binned, rows, grad, hess, shards, &mut self.og, &mut self.oh);
         h
     }
 
@@ -341,12 +568,9 @@ mod tests {
     use crate::prng::Pcg64;
     use crate::testutil::prop::run_prop;
 
-    fn toy_binned() -> BinnedDataset {
+    fn toy_binned() -> BinMatrix {
         // 2 features, 6 rows.
-        BinnedDataset {
-            bins: vec![vec![0, 1, 2, 0, 1, 2], vec![1, 1, 0, 0, 1, 1]],
-            n_rows: 6,
-        }
+        BinMatrix::from_u16_columns(vec![vec![0, 1, 2, 0, 1, 2], vec![1, 1, 0, 0, 1, 1]])
     }
 
     #[test]
@@ -396,20 +620,21 @@ mod tests {
         }
     }
 
-    /// The columnar kernel (dense + gathered paths, unroll remainders)
-    /// must agree with the scalar oracle on random inputs.
+    /// The columnar kernel (dense + gathered paths, unroll remainders,
+    /// both u8 and u16 arenas) must agree with the scalar oracle on
+    /// random inputs.
     #[test]
     fn prop_columnar_matches_scalar() {
         run_prop("columnar histogram == scalar histogram", 60, |g| {
             let n = g.usize_in(1, 300);
             let d = g.usize_in(1, 6);
-            let bins_per: Vec<usize> = (0..d).map(|_| g.usize_in(2, 16)).collect();
-            let binned = BinnedDataset {
-                bins: (0..d)
-                    .map(|f| (0..n).map(|_| g.usize(bins_per[f]) as u16).collect())
-                    .collect(),
-                n_rows: n,
-            };
+            // Occasionally force a wide feature so the u16 arena (and
+            // its monomorphized kernels) are exercised too.
+            let bins_per: Vec<usize> = (0..d)
+                .map(|_| if g.bool(0.15) { g.usize_in(260, 400) } else { g.usize_in(2, 16) })
+                .collect();
+            let binned =
+                BinMatrix::from_fn(n, &bins_per, |f, _| g.usize(bins_per[f]) as u16);
             let grad: Vec<f64> = (0..n).map(|_| g.normal()).collect();
             let hess: Vec<f64> = (0..n).map(|_| g.f64_in(0.01, 2.0)).collect();
             // Random subset (sometimes everything → dense path).
@@ -441,12 +666,8 @@ mod tests {
             let n = g.usize_in(10, 200);
             let d = g.usize_in(1, 6);
             let bins_per: Vec<usize> = (0..d).map(|_| g.usize_in(2, 16)).collect();
-            let binned = BinnedDataset {
-                bins: (0..d)
-                    .map(|f| (0..n).map(|_| g.usize(bins_per[f]) as u16).collect())
-                    .collect(),
-                n_rows: n,
-            };
+            let binned =
+                BinMatrix::from_fn(n, &bins_per, |f, _| g.usize(bins_per[f]) as u16);
             let grad: Vec<f64> = (0..n).map(|_| g.normal()).collect();
             let hess: Vec<f64> = (0..n).map(|_| g.f64_in(0.01, 2.0)).collect();
             // random partition of rows
@@ -520,5 +741,36 @@ mod tests {
         pool.recycle(HistogramSet::new(&[]));
         pool.recycle(HistogramSet::new(&[5]));
         assert_eq!(pool.free_count(), 1);
+    }
+
+    #[test]
+    fn sharded_build_is_bit_identical_on_toy() {
+        let binned = toy_binned();
+        let grad = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let hess = vec![0.5; 6];
+        let rows: Vec<u32> = (0..6).collect();
+        let mut want = HistogramSet::new(&[3, 2]);
+        want.build(&binned, &rows, &grad, &hess);
+        // More shards than features clamps; 1 degrades to sequential.
+        for k in [1usize, 2, 5] {
+            let mut got = HistogramSet::new(&[3, 2]);
+            got.build_sharded(&binned, &rows, &grad, &hess, k);
+            let mut pool = HistogramPool::with_shards(&[3, 2], k);
+            assert_eq!(pool.shards(), k.max(1));
+            let pooled = pool.build(&binned, &rows, &grad, &hess);
+            for f in 0..2 {
+                for b in 0..want.n_bins(f) {
+                    let (g0, h0, c0) = want.bin(f, b);
+                    let (g1, h1, c1) = got.bin(f, b);
+                    let (g2, h2, c2) = pooled.bin(f, b);
+                    assert_eq!(c0, c1);
+                    assert_eq!(c0, c2);
+                    assert_eq!(g0.to_bits(), g1.to_bits(), "k={k} f={f} b={b}");
+                    assert_eq!(h0.to_bits(), h1.to_bits());
+                    assert_eq!(g0.to_bits(), g2.to_bits());
+                    assert_eq!(h0.to_bits(), h2.to_bits());
+                }
+            }
+        }
     }
 }

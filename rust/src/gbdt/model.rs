@@ -2,7 +2,7 @@
 
 use super::loss::Objective;
 use super::tree::Tree;
-use crate::data::{BinnedDataset, Dataset};
+use crate::data::{BinMatrix, Dataset};
 
 /// A trained gradient-boosted ensemble.
 ///
@@ -93,7 +93,7 @@ impl GbdtModel {
     /// Raw-score prediction over binned data (training-path shortcut:
     /// routing by bin index is exact on rows binned with the same
     /// binner).
-    pub fn predict_raw_binned(&self, binned: &BinnedDataset, i: usize) -> Vec<f64> {
+    pub fn predict_raw_binned(&self, binned: &BinMatrix, i: usize) -> Vec<f64> {
         let mut out = self.base_scores.clone();
         for (k, trees) in self.trees.iter().enumerate() {
             for t in trees {
@@ -106,14 +106,14 @@ impl GbdtModel {
 
 /// Traverse a tree using bin indices instead of float thresholds.
 #[inline]
-pub fn predict_binned(tree: &Tree, binned: &BinnedDataset, i: usize) -> f64 {
+pub fn predict_binned(tree: &Tree, binned: &BinMatrix, i: usize) -> f64 {
     use super::tree::Node;
     let mut idx = 0usize;
     loop {
         match &tree.nodes[idx] {
             Node::Leaf { value } => return *value,
             Node::Internal { feature, bin, left, right, .. } => {
-                idx = if binned.bins[*feature][i] <= *bin { *left } else { *right };
+                idx = if binned.bin(*feature, i) <= *bin { *left } else { *right };
             }
         }
     }
@@ -164,7 +164,7 @@ mod tests {
     #[test]
     fn binned_prediction_matches() {
         let m = two_tree_model();
-        let binned = BinnedDataset { bins: vec![vec![0, 1]], n_rows: 2 };
+        let binned = BinMatrix::from_u16_columns(vec![vec![0, 1]]);
         // bin 0 <= 0 -> left; bin 1 > 0 -> right
         assert_eq!(m.predict_raw_binned(&binned, 0), vec![9.5]);
         assert_eq!(m.predict_raw_binned(&binned, 1), vec![11.5]);

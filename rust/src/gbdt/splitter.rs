@@ -159,17 +159,14 @@ pub fn best_split(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::BinnedDataset;
+    use crate::data::BinMatrix;
 
     /// Build a histogram where feature 0 perfectly separates gradients.
     fn separable_hist() -> (HistogramSet, (f64, f64, u32)) {
-        let binned = BinnedDataset {
-            bins: vec![
-                vec![0, 0, 0, 1, 1, 1], // perfect separation at boundary 0
-                vec![0, 1, 0, 1, 0, 1], // uninformative
-            ],
-            n_rows: 6,
-        };
+        let binned = BinMatrix::from_u16_columns(vec![
+            vec![0, 0, 0, 1, 1, 1], // perfect separation at boundary 0
+            vec![0, 1, 0, 1, 0, 1], // uninformative
+        ]);
         let grad = vec![-1.0, -1.0, -1.0, 1.0, 1.0, 1.0];
         let hess = vec![1.0; 6];
         let mut h = HistogramSet::new(&[2, 2]);

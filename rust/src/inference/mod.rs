@@ -21,7 +21,11 @@
 //! benches can swap engines; `predict_raw_batch` has a row-loop default
 //! so single-row engines participate in batch serving, while
 //! [`FlatModel`] and [`QuantizedFlatModel`] override it with their
-//! blocked kernels.
+//! blocked kernels. `predict_raw_columns` is the column-major entry
+//! point (the orientation datasets and the gateway batcher already
+//! hold): the default gathers rows, and [`QuantizedFlatModel`]
+//! overrides it with a zero-gather kernel that bins each column once
+//! into the shared `BinMatrix` arena.
 
 pub mod flat;
 pub mod quantized;
@@ -46,6 +50,18 @@ pub trait Predictor {
         rows.iter().map(|r| self.predict_raw(r)).collect()
     }
 
+    /// Raw scores for a column-major batch: `cols[f][i]` is feature `f`
+    /// of row `i` — the orientation [`Dataset`] already stores. The
+    /// default gathers rows and delegates to
+    /// [`Predictor::predict_raw_batch`]; engines with a native columnar
+    /// kernel ([`QuantizedFlatModel`]) override to skip the gather
+    /// entirely.
+    fn predict_raw_columns(&self, cols: &[&[f32]], n_rows: usize) -> Vec<Vec<f64>> {
+        let rows: Vec<Vec<f32>> =
+            (0..n_rows).map(|i| cols.iter().map(|c| c[i]).collect()).collect();
+        self.predict_raw_batch(&rows)
+    }
+
     /// Task-level prediction: class index (classification) packed as
     /// `f64`, or the regression value.
     fn predict_task(&self, x: &[f32]) -> f64 {
@@ -57,9 +73,10 @@ pub trait Predictor {
     }
 
     /// Dataset score: accuracy (classification) or R² (regression).
-    /// Runs through the batch path in bounded chunks: engines with a
-    /// blocked kernel score at batch speed, while peak memory stays at
-    /// one chunk of materialized rows rather than the whole dataset.
+    /// Feeds the dataset's feature columns straight into the columnar
+    /// batch path in bounded chunks — engines with a columnar kernel
+    /// never materialize a row, and peak memory stays at one chunk of
+    /// outputs rather than the whole dataset.
     fn score(&self, data: &Dataset) -> f64 {
         const CHUNK: usize = 4 * flat::BLOCK_ROWS;
         let n = data.n_rows();
@@ -69,8 +86,9 @@ pub trait Predictor {
         let mut start = 0usize;
         while start < n {
             let end = (start + CHUNK).min(n);
-            let rows: Vec<Vec<f32>> = (start..end).map(|i| data.row(i)).collect();
-            let raw = self.predict_raw_batch(&rows);
+            let cols: Vec<&[f32]> =
+                data.features.iter().map(|c| &c[start..end]).collect();
+            let raw = self.predict_raw_columns(&cols, end - start);
             match data.task {
                 Task::Regression => reg_preds.extend(raw.iter().map(|r| r[0])),
                 _ => cls_preds.extend(raw.iter().map(|r| obj.predict_class(r))),
@@ -130,6 +148,9 @@ impl Predictor for QuantizedFlatModel {
     fn predict_raw_batch(&self, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
         self.predict_batch(rows)
     }
+    fn predict_raw_columns(&self, cols: &[&[f32]], n_rows: usize) -> Vec<Vec<f64>> {
+        self.predict_batch_columns(cols, n_rows)
+    }
     fn n_outputs(&self) -> usize {
         QuantizedFlatModel::n_outputs(self)
     }
@@ -180,6 +201,14 @@ mod tests {
             assert_eq!(x[0], z[0], "flat batch must match pointer exactly");
             assert_eq!(z, w, "quantized batch must match flat exactly");
         }
+
+        // Columnar entry point: zero-gather override and the row-gather
+        // default must both reproduce the row batch exactly.
+        let cols: Vec<&[f32]> = data.features.iter().map(|c| &c[..8]).collect();
+        let qc = quant.predict_raw_columns(&cols, 8);
+        let fc = flat.predict_raw_columns(&cols, 8);
+        assert_eq!(qc, q, "columnar quantized must match row batch exactly");
+        assert_eq!(fc, c, "default columnar path must match row batch exactly");
     }
 
     #[test]

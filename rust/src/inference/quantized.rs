@@ -28,6 +28,13 @@
 //!   + index arithmetic) instead of serializing on one row's
 //!   load→compare→index dependency chain.
 //!
+//! * **Zero-gather columnar batches.** Column-major callers (the
+//!   dataset scorer, the coordinator batcher) skip the per-row gather
+//!   entirely: [`QuantizedFlatModel::predict_batch_columns`] bins each
+//!   feature column once into the shared [`crate::data::BinMatrix`]
+//!   arena and descends over its row-major mirror with the exact same
+//!   blocked kernel — bin once, descend many.
+//!
 //! Compared to [`FlatModel`], each block pays one extra binning pass
 //! (a binary search per used feature) and then descends on u16
 //! compares; the win grows with ensemble size, since binning is
@@ -47,6 +54,13 @@ pub use super::flat::BLOCK_ROWS;
 
 /// Rows walked in lockstep per tree in [`QuantizedFlatModel::predict_batch`].
 pub const LANES: usize = 8;
+
+/// Rows binned per chunk of the columnar batch path: bounds the
+/// transient bin arena + row-major mirror to chunk-sized buffers on
+/// arbitrarily large batches. A multiple of [`BLOCK_ROWS`], so the
+/// descent's block partition (and therefore every output bit) is
+/// identical to an unchunked pass.
+const COLUMNAR_CHUNK_ROWS: usize = 64 * BLOCK_ROWS;
 
 /// Sentinel feature id marking a leaf slot in the general node arrays.
 const LEAF: u16 = u16::MAX;
@@ -321,6 +335,63 @@ impl QuantizedFlatModel {
         out
     }
 
+    /// Walk every tree over one row-major binned block, adding leaf
+    /// contributions into the block's output rows. `xb` holds
+    /// `out.len() × nf` codes (`xb[r * nf + f]`). This is the one
+    /// descent kernel behind both [`QuantizedFlatModel::predict_batch`]
+    /// and [`QuantizedFlatModel::predict_batch_columns`], so the two
+    /// entry points are bit-identical by construction.
+    fn descend_block(&self, xb: &[u16], nf: usize, out: &mut [Vec<f64>]) {
+        let n_rows = out.len();
+        debug_assert_eq!(xb.len(), n_rows * nf);
+        for (k, trees) in self.trees.iter().enumerate() {
+            for &tref in trees {
+                match tref {
+                    TreeRef::Complete { ioff, loff, depth } => {
+                        let (ioff, loff, depth) = (ioff as usize, loff as usize, depth as usize);
+                        let n_internal = (1usize << depth) - 1;
+                        let feat = &self.cfeat[ioff..ioff + n_internal];
+                        let thr = &self.cthr[ioff..ioff + n_internal];
+                        let leaf = &self.cleaf[loff..loff + (1usize << depth)];
+                        // Interleaved lanes: a complete tree's descent
+                        // is exactly `depth` steps, so all lanes
+                        // advance one level per iteration with no
+                        // per-lane branching.
+                        let mut r = 0usize;
+                        while r + LANES <= n_rows {
+                            let mut idx = [0usize; LANES];
+                            for _ in 0..depth {
+                                for (l, i) in idx.iter_mut().enumerate() {
+                                    let code = xb[(r + l) * nf + feat[*i] as usize];
+                                    *i = 2 * *i + 2 - (code <= thr[*i]) as usize;
+                                }
+                            }
+                            for (l, &i) in idx.iter().enumerate() {
+                                out[r + l][k] += leaf[i - n_internal];
+                            }
+                            r += LANES;
+                        }
+                        // Scalar tail (< LANES rows).
+                        for t in r..n_rows {
+                            let row = &xb[t * nf..(t + 1) * nf];
+                            let mut i = 0usize;
+                            while i < n_internal {
+                                i = 2 * i + 2 - (row[feat[i] as usize] <= thr[i]) as usize;
+                            }
+                            out[t][k] += leaf[i - n_internal];
+                        }
+                    }
+                    TreeRef::Nodes { off } => {
+                        let off = off as usize;
+                        for (r, o) in out.iter_mut().enumerate() {
+                            o[k] += self.eval_nodes(off, &xb[r * nf..(r + 1) * nf]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Batched raw scores: rows are binned once per [`BLOCK_ROWS`]-row
     /// block, then each tree walks the block with [`LANES`] rows in
     /// lockstep — numerically identical to per-row
@@ -336,53 +407,52 @@ impl QuantizedFlatModel {
             for (r, x) in block.iter().enumerate() {
                 self.bin_row(x, &mut binned[r * nf..(r + 1) * nf]);
             }
-            for (k, trees) in self.trees.iter().enumerate() {
-                for &tref in trees {
-                    match tref {
-                        TreeRef::Complete { ioff, loff, depth } => {
-                            let (ioff, loff, depth) =
-                                (ioff as usize, loff as usize, depth as usize);
-                            let n_internal = (1usize << depth) - 1;
-                            let feat = &self.cfeat[ioff..ioff + n_internal];
-                            let thr = &self.cthr[ioff..ioff + n_internal];
-                            let leaf = &self.cleaf[loff..loff + (1usize << depth)];
-                            // Interleaved lanes: a complete tree's
-                            // descent is exactly `depth` steps, so all
-                            // lanes advance one level per iteration
-                            // with no per-lane branching.
-                            let mut r = 0usize;
-                            while r + LANES <= block.len() {
-                                let mut idx = [0usize; LANES];
-                                for _ in 0..depth {
-                                    for (l, i) in idx.iter_mut().enumerate() {
-                                        let xb = binned[(r + l) * nf + feat[*i] as usize];
-                                        *i = 2 * *i + 2 - (xb <= thr[*i]) as usize;
-                                    }
-                                }
-                                for (l, &i) in idx.iter().enumerate() {
-                                    out[start + r + l][k] += leaf[i - n_internal];
-                                }
-                                r += LANES;
-                            }
-                            // Scalar tail (< LANES rows).
-                            for t in r..block.len() {
-                                let xb = &binned[t * nf..(t + 1) * nf];
-                                let mut i = 0usize;
-                                while i < n_internal {
-                                    i = 2 * i + 2 - (xb[feat[i] as usize] <= thr[i]) as usize;
-                                }
-                                out[start + t][k] += leaf[i - n_internal];
-                            }
-                        }
-                        TreeRef::Nodes { off } => {
-                            let off = off as usize;
-                            for r in 0..block.len() {
-                                let xb = &binned[r * nf..(r + 1) * nf];
-                                out[start + r][k] += self.eval_nodes(off, xb);
-                            }
-                        }
-                    }
-                }
+            self.descend_block(&binned[..block.len() * nf], nf, &mut out[start..end]);
+        }
+        out
+    }
+
+    /// Columnar batched raw scores: `cols[f][i]` is feature `f` of row
+    /// `i` — the orientation [`crate::data::Dataset`] already stores,
+    /// so dataset-scale scoring needs **no per-row gather at all**.
+    /// Each column is binned exactly once (one threshold table hot in
+    /// cache per column) into a [`crate::data::BinMatrix`] via the one
+    /// shared binning rule
+    /// ([`crate::data::binning::bin_columns_over_tables`]
+    /// over the model's distinct-threshold tables — NaN's top bin
+    /// exceeds every stored rank, so it routes right exactly like
+    /// [`NAN_BIN`] on the row path); descent then runs over the
+    /// row-major mirror through the same blocked interleaved kernel as
+    /// [`QuantizedFlatModel::predict_batch`]. Outputs are bit-identical
+    /// to `predict_batch`/`predict_raw` on the same rows
+    /// (property-tested in `tests/engine_parity.rs`, NaN included).
+    /// Columns beyond the model's feature count are ignored, mirroring
+    /// the row path (which reads only `x[0..n_features]`).
+    pub fn predict_batch_columns(&self, cols: &[&[f32]], n_rows: usize) -> Vec<Vec<f64>> {
+        let nf = self.n_features;
+        assert!(
+            cols.len() >= nf,
+            "need one column per model feature: got {}, model has {nf}",
+            cols.len()
+        );
+        let cols = &cols[..nf];
+        for (f, c) in cols.iter().enumerate() {
+            assert_eq!(c.len(), n_rows, "column {f} has {} rows, expected {n_rows}", c.len());
+        }
+        let mut out: Vec<Vec<f64>> = (0..n_rows).map(|_| self.base_scores.clone()).collect();
+        // Chunked so the transient arena + mirror stay bounded on huge
+        // batches; chunk starts are multiples of BLOCK_ROWS, so the
+        // block partition matches an unchunked pass exactly.
+        for cstart in (0..n_rows).step_by(COLUMNAR_CHUNK_ROWS) {
+            let cend = (cstart + COLUMNAR_CHUNK_ROWS).min(n_rows);
+            let chunk: Vec<&[f32]> = cols.iter().map(|c| &c[cstart..cend]).collect();
+            let binned =
+                crate::data::binning::bin_columns_over_tables(&self.bounds, &chunk, cend - cstart);
+            let xb = binned.to_row_major();
+            for start in (0..cend - cstart).step_by(BLOCK_ROWS) {
+                let end = (start + BLOCK_ROWS).min(cend - cstart);
+                let rows = &mut out[cstart + start..cstart + end];
+                self.descend_block(&xb[start * nf..end * nf], nf, rows);
             }
         }
         out
@@ -573,6 +643,59 @@ mod tests {
                 assert_eq!(batch[i], flat.predict_raw(row), "row {i} vs flat");
             }
         });
+    }
+
+    /// Transpose row-major test rows into feature columns.
+    fn to_cols(rows: &[Vec<f32>], nf: usize) -> Vec<Vec<f32>> {
+        (0..nf).map(|f| rows.iter().map(|r| r[f]).collect()).collect()
+    }
+
+    #[test]
+    fn columnar_batch_equals_row_batch_including_partial_block() {
+        let data = PaperDataset::BreastCancer.generate(35).select(&(0..300).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(12, 3));
+        let quant = QuantizedFlatModel::from_model(&model);
+        // 70 rows: one full 64-row block plus a 6-row partial block
+        // that exercises the scalar lane tail.
+        let rows: Vec<Vec<f32>> = (0..70).map(|i| data.row(i)).collect();
+        let cols = to_cols(&rows, data.n_features());
+        let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let from_cols = quant.predict_batch_columns(&col_refs, rows.len());
+        let from_rows = quant.predict_batch(&rows);
+        assert_eq!(from_cols.len(), rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(from_cols[i], from_rows[i], "row {i}: columnar vs row batch");
+            assert_eq!(from_cols[i], model.predict_raw(row), "row {i}: columnar vs pointer");
+        }
+        // Zero rows is a valid (empty) columnar batch.
+        let empty_refs: Vec<&[f32]> = vec![&[]; cols.len()];
+        assert!(quant.predict_batch_columns(&empty_refs, 0).is_empty());
+        // Trailing columns beyond n_features are ignored, like the row
+        // path ignores trailing row entries (datasets wider than the
+        // model still score).
+        let junk: Vec<f32> = vec![9.9; rows.len()];
+        let mut wide_refs = col_refs.clone();
+        wide_refs.push(&junk);
+        let wide = quant.predict_batch_columns(&wide_refs, rows.len());
+        assert_eq!(wide, from_cols, "extra columns must not change outputs");
+    }
+
+    #[test]
+    fn columnar_batch_handles_nan_rows() {
+        let model = wrap(vec![sample_tree(), chain_tree(14)], 2);
+        let quant = QuantizedFlatModel::from_model(&model);
+        let rows = vec![
+            vec![f32::NAN, 1.0],
+            vec![0.4, f32::NAN],
+            vec![f32::NAN, f32::NAN],
+            vec![0.4, 1.0],
+        ];
+        let cols = to_cols(&rows, 2);
+        let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let got = quant.predict_batch_columns(&col_refs, rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(got[i], model.predict_raw(row), "NaN row {i}");
+        }
     }
 
     #[test]

@@ -17,8 +17,9 @@
 //!   engine (`FlatModel`, branchless complete-tree descent + blocked
 //!   `predict_batch`), its quantized-threshold sibling
 //!   (`QuantizedFlatModel`, u16 threshold ranks over pre-binned rows
-//!   with multi-row interleaved descent) and a direct bit-packed
-//!   interpreter (what an MCU would execute),
+//!   with multi-row interleaved descent, plus a zero-gather columnar
+//!   batch path over the shared `data::BinMatrix` bin arena) and a
+//!   direct bit-packed interpreter (what an MCU would execute),
 //! * every baseline the paper evaluates ([`baselines`]): CEGB, CCP,
 //!   random forests, and Guo et al. ordering-based ensemble pruning,
 //! * an XLA/PJRT runtime ([`runtime`], behind the `xla` cargo feature)

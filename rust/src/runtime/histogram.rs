@@ -40,8 +40,9 @@ impl HistogramEngine {
     /// Compute `(F, B, 2)` histograms for up to `s` rows.
     ///
     /// `bins[f][i]` is the bin of row `i` on feature `f` (column-major,
-    /// like [`crate::data::BinnedDataset`]); bins must be `< b`, rows
-    /// beyond `grad.len()` are padding.
+    /// like [`crate::data::BinMatrix`] — use `BinMatrix::to_u16_columns`
+    /// to stage a matrix for this tensor interface); bins must be
+    /// `< b`, rows beyond `grad.len()` are padding.
     pub fn run(
         &self,
         bins: &[Vec<u16>],

@@ -9,6 +9,11 @@
 //!   predicate `bin(x) ≤ rank(t)` is exactly equivalent to `x ≤ t` for
 //!   every real input, and NaN maps to a sentinel bin that routes right
 //!   exactly like `!(x ≤ t)` on floats.
+//! * `QuantizedFlatModel::predict_batch_columns` vs the row-major
+//!   paths: **bit-identical** — the columnar path bins each feature
+//!   column once into the shared `BinMatrix` arena and then runs the
+//!   same blocked descent kernel, so routing and summation order are
+//!   the same by construction (NaN columns included).
 //! * `PackedModel::predict_raw` vs the pointer trees: the packed layout
 //!   stores leaf values as f32 (paper §3.2.2), so each tree contributes
 //!   one f32 rounding; the bound scales with the ensemble size (1e-4 is
@@ -55,7 +60,14 @@ fn engines_agree_on_randomly_grown_models() {
         }
         let batch = flat.predict_batch(&rows);
         let qbatch = quant.predict_batch(&rows);
+        // Columnar batch over the transposed rows must match bit for bit.
+        let cols: Vec<Vec<f32>> = (0..data.n_features())
+            .map(|f| rows.iter().map(|r| r[f]).collect())
+            .collect();
+        let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let cbatch = quant.predict_batch_columns(&col_refs, rows.len());
         assert_eq!(batch.len(), rows.len());
+        assert_eq!(cbatch.len(), rows.len());
         for (i, row) in rows.iter().enumerate() {
             let pointer = model.predict_raw(row);
             let single = flat.predict_raw(row);
@@ -73,6 +85,10 @@ fn engines_agree_on_randomly_grown_models() {
             assert_eq!(
                 qbatch[i], batch[i],
                 "row {i}: quantized batch must be bit-identical to flat"
+            );
+            assert_eq!(
+                cbatch[i], qbatch[i],
+                "row {i}: columnar batch must be bit-identical to the row batch"
             );
             assert_eq!(
                 quant.predict_raw(row),
@@ -123,10 +139,15 @@ fn engines_agree_on_off_data_probes() {
             .collect();
         let batch = flat.predict_batch(&probes);
         let qbatch = quant.predict_batch(&probes);
+        let cols: Vec<Vec<f32>> =
+            (0..d).map(|f| probes.iter().map(|r| r[f]).collect()).collect();
+        let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let cbatch = quant.predict_batch_columns(&col_refs, probes.len());
         for (i, probe) in probes.iter().enumerate() {
             let pointer = model.predict_raw(probe);
             assert!((batch[i][0] - pointer[0]).abs() < 1e-9, "probe {i}");
             assert_eq!(qbatch[i], batch[i], "probe {i}: quantized vs flat");
+            assert_eq!(cbatch[i], qbatch[i], "probe {i}: columnar vs row batch");
             assert!((packed.predict_raw(probe)[0] - pointer[0]).abs() < 1e-4, "probe {i}");
         }
     });

@@ -1,0 +1,106 @@
+//! Sharded histogram-build parity: the feature-sharded parallel kernel
+//! must be **bit-identical** to the scalar oracle for every shard
+//! count. Within each feature the accumulation order is the same row
+//! order in every kernel, so the f64 sums must match exactly — not
+//! just to a tolerance.
+//!
+//! Shard counts cover the degenerate (1 = sequential), typical (2, 3)
+//! and oversubscribed (7 > most feature counts, forcing the clamp)
+//! cases; row sets cover the whole dataset (dense fast path), random
+//! subsets (gathered path), single rows, and the empty leaf.
+
+use toad::data::BinMatrix;
+use toad::gbdt::histogram::{HistogramPool, HistogramSet};
+use toad::testutil::prop::run_prop;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+fn assert_bit_identical(want: &HistogramSet, got: &HistogramSet, ctx: &str) {
+    for f in 0..want.n_features() {
+        for b in 0..want.n_bins(f) {
+            let (g0, h0, c0) = want.bin(f, b);
+            let (g1, h1, c1) = got.bin(f, b);
+            assert_eq!(c0, c1, "{ctx}: count mismatch f={f} b={b}");
+            assert_eq!(g0.to_bits(), g1.to_bits(), "{ctx}: grad bits f={f} b={b} {g0} vs {g1}");
+            assert_eq!(h0.to_bits(), h1.to_bits(), "{ctx}: hess bits f={f} b={b} {h0} vs {h1}");
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_build_matches_scalar() {
+    run_prop("sharded histogram == scalar histogram", 40, |g| {
+        let n = g.usize_in(1, 400);
+        let d = g.usize_in(1, 9);
+        // Occasionally force a wide feature so the u16 arena path is
+        // sharded too, not only the common u8 one.
+        let bins_per: Vec<usize> = (0..d)
+            .map(|_| if g.bool(0.15) { g.usize_in(260, 400) } else { g.usize_in(1, 16) })
+            .collect();
+        let binned = BinMatrix::from_fn(n, &bins_per, |f, _| g.usize(bins_per[f]) as u16);
+        let grad: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let hess: Vec<f64> = (0..n).map(|_| g.f64_in(0.01, 2.0)).collect();
+
+        let all: Vec<u32> = (0..n as u32).collect();
+        let subset: Vec<u32> = all.iter().copied().filter(|_| g.bool(0.5)).collect();
+        let single: Vec<u32> = vec![g.usize(n) as u32];
+        let empty: Vec<u32> = Vec::new(); // an empty leaf's row set
+
+        for rows in [&all, &subset, &single, &empty] {
+            let mut scalar = HistogramSet::new(&bins_per);
+            scalar.build_scalar(&binned, rows, &grad, &hess);
+            for k in SHARD_COUNTS {
+                let ctx = format!("d={d} n={n} rows={} shards={k}", rows.len());
+                let mut sharded = HistogramSet::new(&bins_per);
+                sharded.build_sharded(&binned, rows, &grad, &hess, k);
+                assert_bit_identical(&scalar, &sharded, &ctx);
+                // The pooled path (shared gather scratch, recycled
+                // buffers) must agree too.
+                let mut pool = HistogramPool::with_shards(&bins_per, k);
+                let pooled = pool.build(&binned, rows, &grad, &hess);
+                assert_bit_identical(&scalar, &pooled, &format!("{ctx} (pool)"));
+                pool.recycle(pooled);
+                let reused = pool.build(&binned, rows, &grad, &hess);
+                assert_bit_identical(&scalar, &reused, &format!("{ctx} (recycled)"));
+            }
+        }
+    });
+}
+
+#[test]
+fn sharded_single_feature_clamps_and_matches() {
+    // One feature cannot be split across shards: every k clamps to the
+    // sequential build and must still be exact.
+    let bins_per = [5usize];
+    let binned = BinMatrix::from_u16_columns(vec![vec![0, 4, 2, 2, 1, 3, 0, 4, 1, 2]]);
+    let grad: Vec<f64> = (0..10).map(|i| (i as f64) * 0.37 - 1.5).collect();
+    let hess: Vec<f64> = (0..10).map(|i| 0.1 + (i as f64) * 0.01).collect();
+    let rows: Vec<u32> = (0..10).collect();
+    let mut scalar = HistogramSet::new(&bins_per);
+    scalar.build_scalar(&binned, &rows, &grad, &hess);
+    for k in SHARD_COUNTS {
+        let mut sharded = HistogramSet::new(&bins_per);
+        sharded.build_sharded(&binned, &rows, &grad, &hess, k);
+        assert_bit_identical(&scalar, &sharded, &format!("single feature, k={k}"));
+    }
+}
+
+#[test]
+fn sharded_empty_row_set_yields_zero_histogram() {
+    let bins_per = [3usize, 2, 300];
+    let binned = BinMatrix::from_fn(6, &bins_per, |f, i| ((i + f) % bins_per[f]) as u16);
+    assert!(!binned.is_u8(), "300-bin feature must force the u16 arena");
+    let grad = vec![1.0; 6];
+    let hess = vec![1.0; 6];
+    for k in SHARD_COUNTS {
+        let mut h = HistogramSet::new(&bins_per);
+        // Dirty the buffer first so the zeroing is actually exercised.
+        h.build(&binned, &[0, 1, 2], &grad, &hess);
+        h.build_sharded(&binned, &[], &grad, &hess, k);
+        for f in 0..3 {
+            for b in 0..h.n_bins(f) {
+                assert_eq!(h.bin(f, b), (0.0, 0.0, 0), "k={k} f={f} b={b}");
+            }
+        }
+    }
+}

@@ -120,12 +120,12 @@ fn xla_histogram_matches_native() {
     let data = PaperDataset::CovertypeBinary.generate(41);
     let data = data.select(&(0..3000).collect::<Vec<_>>());
     let binner = toad::data::Binner::fit(&data, 64);
-    let binned = binner.bin_dataset(&data);
+    let binned = binner.bin_matrix(&data);
     let n = data.n_rows();
     let grad: Vec<f64> = (0..n).map(|i| ((i % 13) as f64 - 6.0) / 3.0).collect();
     let hess: Vec<f64> = (0..n).map(|i| 0.5 + ((i % 5) as f64) / 10.0).collect();
 
-    let got = engine.run(&binned.bins, &grad, &hess).unwrap();
+    let got = engine.run(&binned.to_u16_columns(), &grad, &hess).unwrap();
 
     // Native oracle.
     let bins_per: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();

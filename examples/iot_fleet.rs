@@ -1,24 +1,30 @@
 //! End-to-end driver: the full three-layer system on a realistic
-//! workload.
+//! workload, including a mid-traffic hot-swap.
 //!
-//! * trains a compact ToaD model on the Covertype-binary stand-in,
-//! * deploys it to a fleet of simulated memory-constrained devices
-//!   (on-device bit-packed inference + MCU-model time accounting),
-//! * AND serves the same model through the gateway path: dynamic
-//!   batching into the quantized-threshold flat batch engine (u16
-//!   threshold ranks, pre-binned rows, interleaved multi-row descent)
-//!   — or, with the `xla` feature and `make artifacts`, into the
-//!   AOT-compiled XLA predict artifact,
-//! * streams sensor-like requests through both, reports accuracy,
-//!   latency percentiles, and throughput.
+//! * trains a grid of compact ToaD candidates on the Covertype-binary
+//!   stand-in (the paper's Fig. 4 protocol),
+//! * deploys the best budget-fitting candidate to a fleet of simulated
+//!   memory-constrained devices (on-device bit-packed inference + MCU
+//!   time accounting),
+//! * serves the same key through a **registry-backed gateway**:
+//!   dynamic batching with bounded-queue admission control into the
+//!   quantized-threshold columnar engine,
+//! * hammers `FleetServer::submit` from several threads while a
+//!   planner `replan` publishes a better candidate into the registry —
+//!   the serving version swaps live, with no dropped or torn replies,
+//! * reports accuracy, latency percentiles, throughput, and how many
+//!   requests each registry version served.
 //!
 //! ```bash
 //! cargo run --release --example iot_fleet
 //! ```
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
-use toad::coordinator::batcher::{Backend, Batcher, BatcherConfig};
-use toad::coordinator::{DeviceKind, FleetServer, SimulatedDevice};
+use toad::coordinator::batcher::SubmitError;
+use toad::coordinator::{
+    BatcherConfig, DeploymentPlanner, DeviceKind, FleetServer, ModelCard, SimulatedDevice,
+};
 use toad::data::synth::PaperDataset;
 use toad::data::train_test_split;
 use toad::gbdt::GbdtParams;
@@ -26,82 +32,165 @@ use toad::sweep::table::human_bytes;
 use toad::toad::{train_toad, ToadParams};
 
 fn main() {
-    // ---- train the compact model -------------------------------------
+    // ---- sweep a small candidate grid --------------------------------
     let ds = PaperDataset::CovertypeBinary;
     let data = ds.generate(7).select(&(0..12_000).collect::<Vec<_>>());
     let (train_set, test_set) = train_test_split(&data, 0.2, 7);
-    let params = ToadParams::new(GbdtParams::paper(64, 3), 2.0, 1.0);
-    let model = train_toad(&train_set, &params);
-    println!(
-        "model: {} trees, {} ({:.1}x vs pointer layout), accuracy {:.4}",
-        model.model.n_trees(),
-        human_bytes(model.size_bytes()),
-        toad::layout::baseline::pointer_f32_bytes(&model.model) as f64
-            / model.size_bytes() as f64,
-        model.model.score(&test_set)
-    );
 
+    let mut planner = DeploymentPlanner::new();
+    for (rounds, iota, xi) in [(16usize, 2.0, 1.0), (64, 2.0, 1.0)] {
+        let params = ToadParams::new(GbdtParams::paper(rounds, 3), iota, xi);
+        let m = train_toad(&train_set, &params);
+        let card = ModelCard {
+            id: format!("cov_r{rounds}"),
+            score: m.model.score(&test_set),
+            size_bytes: m.size_bytes(),
+            blob: m.blob.clone(),
+        };
+        println!(
+            "candidate {}: {} trees, {}, accuracy {:.4}",
+            card.id,
+            m.model.n_trees(),
+            human_bytes(card.size_bytes),
+            card.score
+        );
+        planner.add_candidate(card);
+    }
+
+    // ---- fleet: four devices running the best packed fit locally -----
     let mut server = FleetServer::new();
-
-    // ---- fleet: four devices running the packed model locally --------
     for id in 0..4 {
         let mut dev = SimulatedDevice::new(id, DeviceKind::UnoR4);
-        dev.deploy(model.blob.clone()).expect("fits 32 KB budget");
+        let chosen = planner.deploy_to(&mut dev).expect("a candidate fits 32 KB");
+        if id == 0 {
+            println!("device fleet runs `{chosen}` ({:?})", DeviceKind::UnoR4);
+        }
         server.add_device("cov", dev);
     }
 
-    // ---- gateway: batched inference ----------------------------------
-    // The XLA artifact backend takes over when it is compiled in and
-    // artifacts exist; the flattened native engine is the default.
-    let backend = gateway_backend(&model.model);
-    let batcher = Batcher::spawn(
-        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(1) },
-        backend,
+    // ---- gateway: registry-backed batched inference ------------------
+    server.add_registry_gateway(
+        "cov",
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 4096,
+        },
     );
-    server.add_gateway("cov", batcher);
+    // Initial publish: a budget that admits only the smallest
+    // candidate (as if the gateway host were memory-constrained at
+    // launch), so the later replan has a strictly better fit to find.
+    let small_budget = planner.candidates().iter().map(|c| c.size_bytes).min().unwrap();
+    let d1 = planner
+        .replan(server.registry(), "cov", small_budget)
+        .expect("smallest candidate fits")
+        .expect("first publish");
+    println!(
+        "gateway serves `{}` as v{} (budget {})",
+        d1.card.id,
+        d1.version,
+        human_bytes(small_budget)
+    );
 
-    // ---- serve a sensor stream ---------------------------------------
+    // Warm-up round: one request per replica (4 devices + the
+    // gateway), so the launch version provably serves before the swap
+    // regardless of how slowly the serving threads spin up.
+    for i in 0..5 {
+        server.predict("cov", test_set.row(i)).expect("warm-up request");
+    }
+
+    // ---- serve a sensor stream from several threads ------------------
     let n_requests = 2000usize;
     let n_test = test_set.n_rows();
+    let n_threads = 4usize;
+    let correct = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    let swapped = AtomicBool::new(false);
     let start = Instant::now();
-    let mut correct = 0usize;
-    for r in 0..n_requests {
-        let i = r % n_test;
-        let out = server.predict("cov", test_set.row(i)).unwrap();
-        if (out[0] > 0.0) as usize == test_set.labels[i] {
-            correct += 1;
+
+    std::thread::scope(|s| {
+        for t in 0..n_threads {
+            let server = &server;
+            let test_set = &test_set;
+            let correct = &correct;
+            let shed = &shed;
+            s.spawn(move || {
+                let per_thread = n_requests / n_threads;
+                for r in 0..per_thread {
+                    let i = (t * per_thread + r) % n_test;
+                    let ticket = match server.submit("cov", test_set.row(i)) {
+                        Ok(tk) => tk,
+                        Err(SubmitError::Overloaded { .. }) => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        Err(e) => panic!("submit failed: {e}"),
+                    };
+                    let reply = ticket.wait().expect("published key serves");
+                    if (reply.scores[0] > 0.0) as usize == test_set.labels[i] {
+                        correct.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
         }
-    }
+
+        // Mid-traffic: the budget rises (say the gateway host grew) and
+        // the planner publishes the better candidate — a live hot-swap
+        // while the threads above keep submitting.
+        let server = &server;
+        let planner = &planner;
+        let swapped = &swapped;
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let dep = planner
+                .replan(server.registry(), "cov", usize::MAX)
+                .expect("candidates exist")
+                .unwrap_or_else(|| {
+                    // Scores tied (rare): roll the best candidate out
+                    // anyway so the demo always shows a live swap.
+                    let best = planner.best_under(usize::MAX).expect("candidates");
+                    let model = toad::layout::decode(&best.blob);
+                    server.registry().publish("cov", best.clone(), model.quantize())
+                });
+            swapped.store(true, Ordering::Relaxed);
+            println!("hot-swap: `{}` published as v{} mid-traffic", dep.card.id, dep.version);
+        });
+    });
     let wall = start.elapsed();
 
     // ---- report -------------------------------------------------------
-    let m = server.metrics("cov").unwrap();
-    println!("\nserved {n_requests} requests in {:.2?}", wall);
-    println!("accuracy over stream: {:.4}", correct as f64 / n_requests as f64);
-    println!("latency/throughput:   {}", m.summary(wall));
-    println!(
-        "simulated on-device compute: {:.1} ms across the fleet \
-         (~{:.0} us/prediction on Cortex-M4 @48 MHz)",
-        server.fleet_sim_busy_seconds() * 1e3,
-        server.fleet_sim_busy_seconds() * 1e6 / (n_requests as f64 * 0.8)
-    );
-}
-
-#[cfg(feature = "xla")]
-fn gateway_backend(model: &toad::gbdt::GbdtModel) -> Backend {
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("MANIFEST.txt").exists() {
-        let tm = toad::runtime::tensorize(model, 256, 4, 64, 1)
-            .expect("model fits artifact shape");
-        println!("gateway: XLA predict artifact online (batch 32)");
-        return Backend::Xla { artifacts_dir: artifacts, features: 64, tensors: tm };
+    let served = server.metrics("cov").unwrap();
+    let n_served = served.count();
+    println!("\nserved {n_served} requests in {wall:.2?} from {n_threads} threads");
+    let n_shed = shed.load(Ordering::Relaxed);
+    if n_shed > 0 {
+        println!("backpressure shed {n_shed} requests at the bounded queue");
     }
-    println!("gateway: artifacts missing, using quantized flat engine (run `make artifacts`)");
-    Backend::Quantized(model.quantize())
-}
-
-#[cfg(not(feature = "xla"))]
-fn gateway_backend(model: &toad::gbdt::GbdtModel) -> Backend {
-    println!("gateway: quantized flat batch engine online (batch 32)");
-    Backend::Quantized(model.quantize())
+    println!(
+        "accuracy over stream: {:.4}",
+        correct.load(Ordering::Relaxed) as f64 / n_served.max(1) as f64
+    );
+    println!("latency/throughput:   {}", served.summary(wall));
+    let counts = served.version_counts();
+    println!("requests per serving version (v0 = static device fleet):");
+    for (v, c) in &counts {
+        println!("  v{v}: {c}");
+    }
+    assert!(swapped.load(Ordering::Relaxed), "replan must have published an upgrade");
+    assert!(
+        counts.iter().any(|&(v, _)| v == d1.version),
+        "the launch version must have served the pre-swap traffic"
+    );
+    // The teeth of the demo: traffic continues for ~100ms+ after the
+    // 30ms replan, so the *new* version must actually have served
+    // requests — this fails if the gateway ever caches its first
+    // resolved deployment instead of re-resolving per flush.
+    assert!(
+        counts.iter().any(|&(v, _)| v > d1.version),
+        "the hot-swapped version must have served mid-stream traffic"
+    );
+    println!(
+        "simulated on-device compute: {:.1} ms across the fleet",
+        server.fleet_sim_busy_seconds() * 1e3
+    );
 }

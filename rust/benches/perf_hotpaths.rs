@@ -111,8 +111,8 @@ fn main() {
     });
     rec.push("histogram_subset_gathered", per);
 
-    // ---- feature-sharded parallel build -------------------------------
-    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    // ---- feature-sharded parallel build (auto-selected count) ---------
+    let shards = toad::gbdt::histogram::auto_shards(bins.len());
     let mut sharded_pool = HistogramPool::with_shards(&bins, shards);
     let per = time(&format!("histogram build sharded x{shards} (16k rows)"), 20, || {
         let h = sharded_pool.build(&binned, &rows, &grad, &hess);
@@ -225,14 +225,69 @@ fn main() {
         toad::coordinator::BatcherConfig {
             max_batch: 32,
             max_wait: std::time::Duration::from_micros(200),
+            queue_depth: 4096,
         },
         toad::coordinator::batcher::Backend::Native(flat.clone()),
     );
-    let per = time("gateway single-row predict (native)", 50, || {
-        std::hint::black_box(batcher.predict(test_rows[0].clone()));
+    let per_gateway = time("gateway single-row predict (native)", 50, || {
+        std::hint::black_box(batcher.predict(test_rows[0].clone()).unwrap());
     });
-    rec.push("gateway_native_single_row", per);
+    rec.push("gateway_native_single_row", per_gateway);
     drop(batcher);
+
+    // ---- registry hot-swap + concurrent serving ----------------------
+    use toad::coordinator::{BatcherConfig, FleetServer, ModelCard, ModelRegistry};
+    let registry = ModelRegistry::new();
+    let card = ModelCard {
+        id: "bench".into(),
+        score: 0.9,
+        size_bytes: blob.len(),
+        blob: blob.clone(),
+    };
+    let engine = model.quantize();
+    let per = time("registry publish+resolve (swap)", 200, || {
+        registry.publish("cov", card.clone(), engine.clone());
+        std::hint::black_box(registry.current("cov").unwrap().version);
+    });
+    rec.push("registry_swap", per);
+
+    let mut server = FleetServer::new();
+    server.add_registry_gateway(
+        "cov",
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: std::time::Duration::from_micros(200),
+            queue_depth: 65_536,
+        },
+    );
+    server.registry().publish("cov", card.clone(), engine.clone());
+    let threads = 4usize;
+    let reqs_per_thread = 256usize;
+    let per_burst = time(&format!("server submit x{threads} threads (per req)"), 10, || {
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let server = &server;
+                let rows = &test_rows;
+                s.spawn(move || {
+                    let tickets: Vec<_> = (0..reqs_per_thread)
+                        .map(|i| {
+                            server.submit("cov", rows[(t + i) % rows.len()].clone()).unwrap()
+                        })
+                        .collect();
+                    for tk in tickets {
+                        std::hint::black_box(tk.wait().unwrap());
+                    }
+                });
+            }
+        });
+    });
+    let per_req = per_burst / (threads * reqs_per_thread) as f64;
+    rec.push("server_submit_concurrent", per_req);
+    println!(
+        "{:44} {:>12.1} K req/s",
+        "  -> concurrent server throughput",
+        1.0 / per_req / 1e3
+    );
 
     // ---- XLA runtime (feature-gated, needs `make artifacts`) ----------
     xla_section(&test_rows);
@@ -252,6 +307,8 @@ fn main() {
         rec.lookup("native_predict_flat_batch_512") / rec.lookup("quantized_batch");
     let columnar_vs_row =
         rec.lookup("quantized_batch") / rec.lookup("columnar_batch");
+    let concurrent_vs_serial =
+        rec.lookup("gateway_native_single_row") / rec.lookup("server_submit_concurrent");
     println!("\n== speedups vs scalar baselines ==");
     println!("{:44} {:>11.2}x", "histogram build (dense)", hist_speedup);
     println!("{:44} {:>11.2}x", "histogram build (subset/gathered)", subset_speedup);
@@ -260,6 +317,7 @@ fn main() {
     println!("{:44} {:>11.2}x", "quantized batched predict", quant_speedup);
     println!("{:44} {:>11.2}x", "quantized vs flat batch", quant_vs_flat);
     println!("{:44} {:>11.2}x", "columnar vs row-major batch", columnar_vs_row);
+    println!("{:44} {:>11.2}x", "concurrent server vs serial gateway", concurrent_vs_serial);
 
     let json = rec.to_json(
         &format!("covtype_binary_{n}x{d}"),
@@ -271,6 +329,7 @@ fn main() {
             ("quantized_predict_batch", quant_speedup),
             ("quantized_vs_flat_batch", quant_vs_flat),
             ("columnar_vs_row_batch", columnar_vs_row),
+            ("server_concurrent_vs_serial", concurrent_vs_serial),
         ],
     );
     // CARGO_MANIFEST_DIR is <repo>/rust; the trajectory file lives at
@@ -314,6 +373,7 @@ fn xla_section(test_rows: &[Vec<f32>]) {
         toad::coordinator::BatcherConfig {
             max_batch: 32,
             max_wait: std::time::Duration::from_micros(200),
+            queue_depth: 4096,
         },
         toad::coordinator::batcher::Backend::Xla {
             artifacts_dir: artifacts,
@@ -322,7 +382,7 @@ fn xla_section(test_rows: &[Vec<f32>]) {
         },
     );
     time("gateway single-row predict (batch=1 flush)", 50, || {
-        std::hint::black_box(batcher.predict(test_rows[0].clone()));
+        std::hint::black_box(batcher.predict(test_rows[0].clone()).unwrap());
     });
 }
 

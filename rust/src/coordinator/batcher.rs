@@ -1,27 +1,43 @@
 //! Dynamic batching gateway over the batched inference engines.
 //!
-//! The gateway collects incoming rows until either the batch is full or
-//! a deadline expires, then runs one batched execution and fans the
-//! results back out. Three backends exist:
+//! The gateway holds incoming rows in a **bounded** queue until either
+//! a full batch accumulates or a deadline expires, then runs one
+//! batched execution and fans the results back out. Admission control
+//! is explicit: when the queue is at [`BatcherConfig::queue_depth`],
+//! [`Batcher::submit`] returns [`SubmitError::Overloaded`] immediately
+//! instead of growing an unbounded channel — callers shed load at the
+//! front door rather than buffering latency.
+//!
+//! `submit` takes `&self` and the handle is `Send + Sync`: any number
+//! of serving threads push into one gateway concurrently.
+//!
+//! Four backends exist:
 //!
 //! * [`Backend::Native`] — the flattened SoA engine
-//!   ([`crate::inference::FlatModel`]): the default, dependency-free
-//!   batched serving path (tree-outer/row-inner blocked kernel).
+//!   ([`crate::inference::FlatModel`]): the dependency-free batched
+//!   serving path (tree-outer/row-inner blocked kernel).
 //! * [`Backend::Quantized`] — the quantized-threshold flat engine
 //!   ([`crate::inference::QuantizedFlatModel`]): the worker assembles
-//!   the pending queue directly into a columnar block (one `Vec` per
-//!   feature, short rows zero-padded as they are appended) and calls
-//!   the zero-gather `predict_batch_columns` kernel — each feature
-//!   column is binned once and descents run on `u16` compares with
-//!   interleaved lanes; bit-identical outputs to `Native`, smaller
-//!   per-node streams — the pick for memory-bound batch serving.
+//!   the pending queue directly into a columnar block and calls the
+//!   zero-gather `predict_batch_columns` kernel; bit-identical outputs
+//!   to `Native` — the pick for memory-bound batch serving.
+//! * [`Backend::Registry`] — hot-swappable serving: each flush resolves
+//!   the *current* deployment for its key from a shared
+//!   [`ModelRegistry`](super::registry::ModelRegistry) and runs the
+//!   columnar kernel on it. A [`registry publish`](
+//!   super::registry::ModelRegistry::publish) between flushes swaps the
+//!   engine without pausing the worker; a batch in flight finishes on
+//!   the `Arc` it cloned. Replies carry the serving version.
 //! * `Backend::Xla` (`xla` feature) — the AOT-compiled PJRT artifact.
 //!   Artifacts are compiled at a fixed batch size, and PJRT handles are
-//!   not `Send`, so the engine lives entirely inside the worker thread;
-//!   requests and responses cross via channels.
+//!   not `Send`, so the engine lives entirely inside the worker thread.
 
+use super::registry::ModelRegistry;
 use crate::inference::{FlatModel, QuantizedFlatModel};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -33,23 +49,87 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Flush a partial batch after this long.
     pub max_wait: Duration,
+    /// Admission bound: requests queued but not yet flushed. A submit
+    /// beyond this returns [`SubmitError::Overloaded`] immediately.
+    pub queue_depth: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) }
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), queue_depth: 1024 }
     }
+}
+
+/// Why a submit was refused at the front door.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is full — shed load or retry after a flush.
+    Overloaded {
+        /// The configured [`BatcherConfig::queue_depth`].
+        depth: usize,
+    },
+    /// The gateway is shutting down and accepts no new work.
+    Shutdown,
+    /// No deployment target is registered for this model key.
+    NoRoute,
+    /// The routed target exists but has no model deployed on it.
+    NoModel,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Overloaded { depth } => {
+                write!(f, "gateway overloaded: bounded queue of {depth} requests is full")
+            }
+            SubmitError::Shutdown => write!(f, "gateway is shutting down"),
+            SubmitError::NoRoute => write!(f, "no deployment target for this model"),
+            SubmitError::NoModel => write!(f, "routed target has no model deployed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A served prediction: raw scores plus the registry version that
+/// produced them (0 for static, non-registry backends).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchReply {
+    pub scores: Vec<f64>,
+    pub version: u64,
 }
 
 /// One in-flight request.
 struct Request {
     row: Vec<f32>,
-    reply: Sender<Vec<f64>>,
+    reply: Sender<BatchReply>,
 }
 
-/// Handle to a batching worker.
+/// The bounded pending queue shared by submitters and the worker.
+struct QueueState {
+    pending: VecDeque<Request>,
+    /// When the oldest pending request arrived (drives the deadline).
+    first_at: Option<Instant>,
+    closed: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    /// Signals the worker: new request, or shutdown.
+    wake: Condvar,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, QueueState> {
+        self.queue.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Handle to a batching worker. `Send + Sync`: clone-free concurrent
+/// submission from any number of threads.
 pub struct Batcher {
-    tx: Option<Sender<Request>>,
+    shared: Arc<Shared>,
+    config: BatcherConfig,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -58,8 +138,10 @@ pub enum Backend {
     /// Blocked batched prediction on the flattened native engine.
     Native(FlatModel),
     /// Blocked batched prediction on the quantized-threshold engine
-    /// (pre-binned rows, u16 compares, interleaved lanes).
+    /// (pre-binned columns, u16 compares, interleaved lanes).
     Quantized(QuantizedFlatModel),
+    /// Hot-swappable: resolve `key` in the registry at every flush.
+    Registry { registry: Arc<ModelRegistry>, key: String },
     /// XLA predict artifact from this directory (compiled in-thread).
     #[cfg(feature = "xla")]
     Xla {
@@ -72,58 +154,105 @@ pub enum Backend {
 impl Batcher {
     /// Spawn a batching worker for the given `backend`.
     pub fn spawn(config: BatcherConfig, backend: Backend) -> Batcher {
-        let (tx, rx) = channel::<Request>();
-        let worker = std::thread::spawn(move || worker_loop(config, backend, rx));
-        Batcher { tx: Some(tx), worker: Some(worker) }
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                pending: VecDeque::with_capacity(config.max_batch),
+                first_at: None,
+                closed: false,
+            }),
+            wake: Condvar::new(),
+        });
+        let worker_shared = Arc::clone(&shared);
+        let worker = std::thread::spawn(move || {
+            // If the worker dies — normal shutdown or an engine panic —
+            // close the queue and drop any pending reply senders, so
+            // blocked clients see a disconnect instead of hanging and
+            // new submits are refused with `Shutdown`.
+            struct CloseOnExit(Arc<Shared>);
+            impl Drop for CloseOnExit {
+                fn drop(&mut self) {
+                    let mut q = self.0.lock();
+                    q.closed = true;
+                    q.pending.clear();
+                }
+            }
+            let _guard = CloseOnExit(Arc::clone(&worker_shared));
+            worker_loop(config, backend, worker_shared);
+        });
+        Batcher { shared, config, worker: Some(worker) }
     }
 
-    /// Submit a row; the returned receiver yields the raw scores.
+    /// Submit a row; the returned receiver yields the scores and the
+    /// serving version. Refuses immediately with
+    /// [`SubmitError::Overloaded`] when the bounded queue is full.
     ///
     /// Ownership contract: `row` is moved into the gateway — the caller
-    /// keeps nothing and the batcher never clones it. At flush time the
-    /// `Native` backend takes each row out of its request to build the
-    /// row batch, while the `Quantized` backend reads the rows straight
-    /// into the columnar block (zero-padding short rows on the fly) and
-    /// drops them when the queue drains. Rows longer than the model's
-    /// feature count are truncated; both backends index only
-    /// `0..n_features`.
-    pub fn submit(&self, row: Vec<f32>) -> Receiver<Vec<f64>> {
+    /// keeps nothing and the batcher never clones it. Short rows are
+    /// zero-padded at flush time; rows longer than the model's feature
+    /// count are truncated (both backends index only `0..n_features`).
+    pub fn submit(&self, row: Vec<f32>) -> Result<Receiver<BatchReply>, SubmitError> {
         let (reply_tx, reply_rx) = channel();
-        self.tx
-            .as_ref()
-            .expect("batcher running")
-            .send(Request { row, reply: reply_tx })
-            .expect("worker alive");
-        reply_rx
+        let mut q = self.shared.lock();
+        if q.closed {
+            return Err(SubmitError::Shutdown);
+        }
+        if q.pending.len() >= self.config.queue_depth {
+            return Err(SubmitError::Overloaded { depth: self.config.queue_depth });
+        }
+        if q.pending.is_empty() {
+            q.first_at = Some(Instant::now());
+        }
+        q.pending.push_back(Request { row, reply: reply_tx });
+        drop(q);
+        self.shared.wake.notify_one();
+        Ok(reply_rx)
     }
 
-    /// Convenience: submit and wait.
-    pub fn predict(&self, row: Vec<f32>) -> Vec<f64> {
-        self.submit(row).recv().expect("worker reply")
+    /// Convenience: submit and wait for the scores.
+    pub fn predict(&self, row: Vec<f32>) -> Result<Vec<f64>, SubmitError> {
+        let rx = self.submit(row)?;
+        // A dropped reply sender on a *live* gateway means the registry
+        // had no deployment for the key (retired or never published) —
+        // a publish recovers it, so report `NoModel`, not `Shutdown`.
+        rx.recv().map(|r| r.scores).map_err(|_| {
+            if self.shared.lock().closed {
+                SubmitError::Shutdown
+            } else {
+                SubmitError::NoModel
+            }
+        })
+    }
+
+    /// Number of requests currently queued (for tests/monitoring).
+    pub fn queued(&self) -> usize {
+        self.shared.lock().pending.len()
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        drop(self.tx.take()); // closes the channel; worker drains + exits
+        self.shared.lock().closed = true;
+        self.shared.wake.notify_all(); // worker drains + exits
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(config: BatcherConfig, backend: Backend, rx: Receiver<Request>) {
+fn worker_loop(config: BatcherConfig, backend: Backend, shared: Arc<Shared>) {
     // The XLA engine must be constructed inside the thread (not Send);
-    // the native engine is just moved in.
+    // the native engines are just moved in.
     enum Engine {
         Native(FlatModel),
         Quantized(QuantizedFlatModel),
+        Registry { registry: Arc<ModelRegistry>, key: String },
         #[cfg(feature = "xla")]
         Xla(crate::runtime::PredictEngine),
     }
     let mut engine = match backend {
         Backend::Native(flat) => Engine::Native(flat),
         Backend::Quantized(quant) => Engine::Quantized(quant),
+        Backend::Registry { registry, key } => Engine::Registry { registry, key },
         #[cfg(feature = "xla")]
         Backend::Xla { artifacts_dir, features, tensors } => {
             let rt = crate::runtime::XlaRuntime::open(&artifacts_dir)
@@ -135,36 +264,50 @@ fn worker_loop(config: BatcherConfig, backend: Backend, rx: Receiver<Request>) {
         }
     };
 
-    let mut pending: Vec<Request> = Vec::with_capacity(config.max_batch);
-    let mut deadline: Option<Instant> = None;
+    // A batch is due at `max_batch` — or already when the bounded
+    // queue is full: with `queue_depth < max_batch` the size trigger
+    // could otherwise never fire, and a full queue would shed load for
+    // a whole `max_wait` while the engine sat idle. (`.max(1)` guards
+    // degenerate zero configs from busy-spinning on empty batches.)
+    let flush_at = config.max_batch.min(config.queue_depth).max(1);
     loop {
-        let timeout = match deadline {
-            Some(d) => d.saturating_duration_since(Instant::now()),
-            None => Duration::from_millis(50),
-        };
-        match rx.recv_timeout(timeout) {
-            Ok(req) => {
-                if pending.is_empty() {
-                    deadline = Some(Instant::now() + config.max_wait);
+        // Phase 1: wait until a batch is due — full, past its deadline,
+        // or the gateway is closing (then drain what remains).
+        let mut batch: Vec<Request> = {
+            let mut q = shared.lock();
+            loop {
+                if q.closed || q.pending.len() >= flush_at {
+                    break;
                 }
-                pending.push(req);
-                if pending.len() >= config.max_batch {
-                    flush(&mut engine, &mut pending);
-                    deadline = None;
+                match q.first_at {
+                    Some(t0) => {
+                        let deadline = t0 + config.max_wait;
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        q = match shared.wake.wait_timeout(q, deadline - now) {
+                            Ok((g, _)) => g,
+                            Err(e) => e.into_inner().0,
+                        };
+                    }
+                    None => {
+                        q = shared.wake.wait(q).unwrap_or_else(|e| e.into_inner());
+                    }
                 }
             }
-            Err(RecvTimeoutError::Timeout) => {
-                if !pending.is_empty() && deadline.is_some_and(|d| Instant::now() >= d) {
-                    flush(&mut engine, &mut pending);
-                    deadline = None;
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                if !pending.is_empty() {
-                    flush(&mut engine, &mut pending);
-                }
+            if q.closed && q.pending.is_empty() {
                 return;
             }
+            let take = q.pending.len().min(config.max_batch.max(1));
+            let batch: Vec<Request> = q.pending.drain(..take).collect();
+            // Requests left behind restart the deadline clock — they
+            // still flush within `max_wait` of this drain.
+            q.first_at = if q.pending.is_empty() { None } else { Some(Instant::now()) };
+            batch
+        };
+        if !batch.is_empty() {
+            flush(&mut engine, &mut batch);
         }
     }
 
@@ -180,43 +323,59 @@ fn worker_loop(config: BatcherConfig, backend: Backend, rx: Receiver<Request>) {
         rows
     }
 
-    fn flush(engine: &mut Engine, pending: &mut Vec<Request>) {
+    /// Assemble the pending queue directly into the columnar block the
+    /// quantized engine's zero-gather kernel consumes: one Vec per
+    /// feature, short rows zero-padded on the fly — no per-request row
+    /// clone or zero-pad pass.
+    fn flush_columnar(quant: &QuantizedFlatModel, batch: &[Request]) -> Vec<Vec<f64>> {
+        let nf = quant.n_features();
+        let n = batch.len();
+        let mut cols: Vec<Vec<f32>> = (0..nf).map(|_| Vec::with_capacity(n)).collect();
+        for req in batch.iter() {
+            for (f, col) in cols.iter_mut().enumerate() {
+                col.push(req.row.get(f).copied().unwrap_or(0.0));
+            }
+        }
+        let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        quant.predict_batch_columns(&col_refs, n)
+    }
+
+    fn flush(engine: &mut Engine, batch: &mut Vec<Request>) {
+        let mut version = 0u64;
         let outputs: Vec<Vec<f64>> = match engine {
             Engine::Native(flat) => {
-                // Take the rows out instead of cloning — `pending` is
+                // Take the rows out instead of cloning — `batch` is
                 // drained right after, and only the reply channel is
                 // needed then.
                 let rows: Vec<Vec<f32>> =
-                    pending.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
+                    batch.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
                 flat.predict_batch(&pad(rows, flat.n_features()))
             }
-            Engine::Quantized(quant) => {
-                // Assemble the pending queue directly into the columnar
-                // block the engine's zero-gather kernel consumes: one
-                // Vec per feature, short rows zero-padded on the fly —
-                // no per-request row clone or zero-pad pass.
-                let nf = quant.n_features();
-                let n = pending.len();
-                let mut cols: Vec<Vec<f32>> =
-                    (0..nf).map(|_| Vec::with_capacity(n)).collect();
-                for req in pending.iter() {
-                    for (f, col) in cols.iter_mut().enumerate() {
-                        col.push(req.row.get(f).copied().unwrap_or(0.0));
-                    }
-                }
-                let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
-                quant.predict_batch_columns(&col_refs, n)
+            Engine::Quantized(quant) => flush_columnar(quant, batch),
+            Engine::Registry { registry, key } => {
+                // Resolve the live deployment once per flush: the whole
+                // batch is served by one version, and a publish landing
+                // mid-flush swaps the *next* batch, not this one.
+                let Some(dep) = registry.current(key) else {
+                    // No deployment: drop the reply senders, so every
+                    // waiting client sees a disconnect ("model retired
+                    // or never published") instead of hanging.
+                    batch.clear();
+                    return;
+                };
+                version = dep.version;
+                flush_columnar(&dep.engine, batch)
             }
             #[cfg(feature = "xla")]
             Engine::Xla(e) => {
                 let rows: Vec<Vec<f32>> =
-                    pending.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
+                    batch.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
                 e.predict(&rows).expect("xla predict")
             }
         };
-        for (req, out) in pending.drain(..).zip(outputs) {
+        for (req, scores) in batch.drain(..).zip(outputs) {
             // A dropped receiver just means the client went away.
-            let _ = req.reply.send(out);
+            let _ = req.reply.send(BatchReply { scores, version });
         }
     }
 }
@@ -224,6 +383,7 @@ fn worker_loop(config: BatcherConfig, backend: Backend, rx: Receiver<Request>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::planner::ModelCard;
     use crate::data::synth::PaperDataset;
     use crate::gbdt::{self, GbdtParams};
 
@@ -238,12 +398,12 @@ mod tests {
     fn native_batcher_matches_model() {
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1), queue_depth: 64 },
             Backend::Native(flat),
         );
         for i in 0..20 {
             let row = data.row(i);
-            let got = b.predict(row.clone());
+            let got = b.predict(row.clone()).unwrap();
             let want = model.predict_raw(&row)[0];
             assert_eq!(got[0], want, "row {i}: flat gateway must match the source model");
         }
@@ -253,12 +413,12 @@ mod tests {
     fn quantized_batcher_matches_model_including_short_rows() {
         let (_, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1), queue_depth: 64 },
             Backend::Quantized(model.quantize()),
         );
         for i in 0..20 {
             let row = data.row(i);
-            let got = b.predict(row.clone());
+            let got = b.predict(row.clone()).unwrap();
             let want = model.predict_raw(&row)[0];
             assert_eq!(got[0], want, "row {i}: quantized gateway must match the source model");
         }
@@ -267,7 +427,7 @@ mod tests {
         short.truncate(3);
         let mut padded = short.clone();
         padded.resize(data.n_features(), 0.0);
-        assert_eq!(b.predict(short), model.predict_raw(&padded));
+        assert_eq!(b.predict(short).unwrap(), model.predict_raw(&padded));
     }
 
     #[test]
@@ -278,17 +438,18 @@ mod tests {
         // its own row.
         let (_, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 70, max_wait: Duration::from_secs(5) },
+            BatcherConfig { max_batch: 70, max_wait: Duration::from_secs(5), queue_depth: 128 },
             Backend::Quantized(model.quantize()),
         );
-        let rxs: Vec<_> = (0..70).map(|i| (i, b.submit(data.row(i)))).collect();
+        let rxs: Vec<_> = (0..70).map(|i| (i, b.submit(data.row(i)).unwrap())).collect();
         for (i, rx) in rxs {
             let got = rx.recv().unwrap();
             assert_eq!(
-                got,
+                got.scores,
                 model.predict_raw(&data.row(i)),
                 "row {i}: partial-final-block reply mismatch"
             );
+            assert_eq!(got.version, 0, "static backend reports version 0");
         }
     }
 
@@ -296,11 +457,15 @@ mod tests {
     fn partial_batches_flush_on_deadline() {
         let (flat, data, _) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 1000, max_wait: Duration::from_millis(5) },
+            BatcherConfig {
+                max_batch: 1000,
+                max_wait: Duration::from_millis(5),
+                queue_depth: 2000,
+            },
             Backend::Native(flat),
         );
         let start = Instant::now();
-        let out = b.predict(data.row(0));
+        let out = b.predict(data.row(0)).unwrap();
         assert_eq!(out.len(), 1);
         assert!(start.elapsed() < Duration::from_millis(500), "deadline flush too slow");
     }
@@ -311,15 +476,95 @@ mod tests {
         // own row's prediction (no cross-wiring in the batcher).
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
             Backend::Native(flat),
         );
-        let rxs: Vec<_> = (0..16).map(|i| (i, b.submit(data.row(i)))).collect();
+        let rxs: Vec<_> = (0..16).map(|i| (i, b.submit(data.row(i)).unwrap())).collect();
         for (i, rx) in rxs {
             let got = rx.recv().unwrap();
             let want = model.predict_raw(&data.row(i))[0];
-            assert_eq!(got[0], want, "row {i} cross-wired");
+            assert_eq!(got.scores[0], want, "row {i} cross-wired");
         }
+    }
+
+    #[test]
+    fn overloaded_queue_rejects_then_recovers() {
+        // A tiny bound and a tight submit loop: the submitter enqueues
+        // in nanoseconds while every flush runs a real batch, so the
+        // queue refills during each flush and the bound must trip.
+        // Everything that *was* admitted must still be served.
+        let (flat, data, _) = fixtures();
+        let b = Batcher::spawn(
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(30), queue_depth: 2 },
+            Backend::Native(flat),
+        );
+        let mut rxs = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..50_000 {
+            match b.submit(data.row(i % 300)) {
+                Ok(rx) => rxs.push(rx),
+                Err(err) => {
+                    assert_eq!(err, SubmitError::Overloaded { depth: 2 });
+                    shed += 1;
+                    if shed > 8 {
+                        break; // backpressure observed repeatedly
+                    }
+                }
+            }
+        }
+        assert!(shed > 0, "bounded queue never pushed back under a tight submit loop");
+        assert!(b.queued() <= 2, "queue must never exceed its bound");
+        // Shutdown drains the queue: every admitted request is served.
+        drop(b);
+        for rx in rxs {
+            assert_eq!(rx.recv().expect("admitted request served").scores.len(), 1);
+        }
+    }
+
+    #[test]
+    fn full_queue_flushes_without_waiting_for_deadline() {
+        // queue_depth < max_batch: a *full* queue must flush
+        // immediately instead of idling out the 30 s deadline while
+        // shedding all further traffic. (A queue below the bound still
+        // waits for the deadline — that is the batching contract.)
+        let (flat, data, model) = fixtures();
+        let b = Batcher::spawn(
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(30), queue_depth: 4 },
+            Backend::Native(flat),
+        );
+        let rxs: Vec<_> = (0..4).map(|i| (i, b.submit(data.row(i)).unwrap())).collect();
+        let start = Instant::now();
+        for (i, rx) in rxs {
+            let got = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("full queue must flush long before the deadline");
+            assert_eq!(got.scores[0], model.predict_raw(&data.row(i))[0], "row {i}");
+        }
+        assert!(start.elapsed() < Duration::from_secs(10), "flush waited for the deadline");
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_gateway() {
+        let (flat, data, model) = fixtures();
+        let b = Batcher::spawn(
+            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(1), queue_depth: 256 },
+            Backend::Native(flat),
+        );
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let b = &b;
+                let data = &data;
+                let model = &model;
+                s.spawn(move || {
+                    for i in 0..25 {
+                        let row = data.row((t * 25 + i) % data.n_rows());
+                        let want = model.predict_raw(&row)[0];
+                        let got = b.predict(row).unwrap();
+                        assert_eq!(got[0], want, "thread {t} req {i}");
+                    }
+                });
+            }
+        });
     }
 
     #[test]
@@ -328,21 +573,25 @@ mod tests {
         let rx;
         {
             let b = Batcher::spawn(
-                BatcherConfig { max_batch: 1000, max_wait: Duration::from_secs(10) },
+                BatcherConfig {
+                    max_batch: 1000,
+                    max_wait: Duration::from_secs(10),
+                    queue_depth: 2000,
+                },
                 Backend::Native(flat),
             );
-            rx = b.submit(data.row(0));
+            rx = b.submit(data.row(0)).unwrap();
             // b dropped here with the request still pending
         }
         let out = rx.recv().expect("pending request must be served on shutdown");
-        assert_eq!(out.len(), 1);
+        assert_eq!(out.scores.len(), 1);
     }
 
     #[test]
     fn short_rows_are_zero_padded_not_fatal() {
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
             Backend::Native(flat),
         );
         // A truncated (even empty) row must be served as if zero-padded,
@@ -351,10 +600,10 @@ mod tests {
         short.truncate(3);
         let mut padded = short.clone();
         padded.resize(data.n_features(), 0.0);
-        assert_eq!(b.predict(short), model.predict_raw(&padded));
-        assert_eq!(b.predict(Vec::new()).len(), 1);
+        assert_eq!(b.predict(short).unwrap(), model.predict_raw(&padded));
+        assert_eq!(b.predict(Vec::new()).unwrap().len(), 1);
         let row = data.row(1);
-        assert_eq!(b.predict(row.clone()), model.predict_raw(&row));
+        assert_eq!(b.predict(row.clone()).unwrap(), model.predict_raw(&row));
     }
 
     #[test]
@@ -362,11 +611,41 @@ mod tests {
         let data = PaperDataset::WineQuality.generate(72).select(&(0..400).collect::<Vec<_>>());
         let model = gbdt::booster::train(&data, GbdtParams::paper(3, 2));
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
             Backend::Native(model.flatten()),
         );
-        let got = b.predict(data.row(0));
+        let got = b.predict(data.row(0)).unwrap();
         assert_eq!(got.len(), 7);
         assert_eq!(got, model.predict_raw(&data.row(0)));
+    }
+
+    #[test]
+    fn registry_backend_swaps_between_flushes() {
+        let (_, data, model_a) = fixtures();
+        let small = data.select(&(0..200).collect::<Vec<_>>());
+        let model_b = gbdt::booster::train(&small, GbdtParams::paper(4, 2));
+        let registry = Arc::new(ModelRegistry::new());
+        let b = Batcher::spawn(
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
+            Backend::Registry { registry: Arc::clone(&registry), key: "m".into() },
+        );
+
+        // Nothing published yet: the reply channel disconnects and the
+        // live gateway reports the recoverable `NoModel`, not Shutdown.
+        assert_eq!(b.predict(data.row(0)).unwrap_err(), SubmitError::NoModel);
+
+        let card = |id: &str| ModelCard { id: id.into(), score: 0.9, size_bytes: 1, blob: vec![] };
+        let d1 = registry.publish("m", card("a"), model_a.quantize());
+        let r1 = b.submit(data.row(0)).unwrap().recv().unwrap();
+        assert_eq!(r1.version, d1.version);
+        assert_eq!(r1.scores, model_a.predict_raw(&data.row(0)));
+
+        let d2 = registry.publish("m", card("b"), model_b.quantize());
+        let r2 = b.submit(data.row(0)).unwrap().recv().unwrap();
+        assert_eq!(r2.version, d2.version, "publish must swap the serving version");
+        assert_eq!(r2.scores, model_b.predict_raw(&data.row(0)));
+
+        registry.retire("m");
+        assert_eq!(b.predict(data.row(0)).unwrap_err(), SubmitError::NoModel);
     }
 }

@@ -1,12 +1,152 @@
 //! Latency and throughput recording for the serving path.
+//!
+//! [`LatencyRecorder`] is a thread-safe fixed-bucket histogram: many
+//! serving threads record into the same recorder through `&self`, and
+//! a metrics scrape reads percentiles in one O(buckets) pass — no
+//! per-request allocation, no unbounded sample vector, no re-sort per
+//! query (the old recorder cloned and sorted every sample on every
+//! `percentile_us` call, which was quadratic across a scrape).
+//! Recording is lock-free: relaxed atomic adds for the histogram, and
+//! an insert-only open-addressed atomic table for the per-version
+//! counters (a mutex-guarded overflow map exists only for the
+//! pathological case of more than [`VERSION_SLOTS`] distinct versions
+//! hitting one recorder).
+//!
+//! Buckets are log-scaled with 8 sub-buckets per power of two (values
+//! below 16 µs get exact one-µs buckets), so a reported percentile is
+//! within one bucket width — at most 1/8th — of the true sample value,
+//! over the full `u64` microsecond range in a fixed 496-slot table.
+//! Per-version counters track how many requests each registry version
+//! served, which is how the hot-swap example and stress test observe a
+//! live swap.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
+/// Values below this get exact one-microsecond buckets.
+const LINEAR_MAX: u64 = 16;
+/// Sub-buckets per power of two above `LINEAR_MAX` (3 bits).
+const SUB_BITS: u32 = 3;
+/// 16 exact buckets + 8 sub-buckets for each of the 60 octaves 2^4..2^63.
+const N_BUCKETS: usize = LINEAR_MAX as usize + 60 * (1 << SUB_BITS);
+
+/// Bucket index for a latency in microseconds.
+fn bucket_index(us: u64) -> usize {
+    if us < LINEAR_MAX {
+        return us as usize;
+    }
+    let msb = 63 - us.leading_zeros() as u64; // >= 4
+    let sub = (us >> (msb - SUB_BITS as u64)) & ((1 << SUB_BITS) - 1);
+    (LINEAR_MAX + (msb - 4) * (1 << SUB_BITS) + sub) as usize
+}
+
+/// Lower bound (µs) of a bucket — the value a percentile query reports.
+fn bucket_floor(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < LINEAR_MAX {
+        return idx;
+    }
+    let octave = (idx - LINEAR_MAX) >> SUB_BITS;
+    let sub = (idx - LINEAR_MAX) & ((1 << SUB_BITS) - 1);
+    let msb = octave + 4;
+    ((1 << SUB_BITS) + sub) << (msb - SUB_BITS as u64)
+}
+
+/// Fast-path slots for per-version counters; registries hand out few
+/// distinct versions per recorder lifetime, so collisions are rare.
+const VERSION_SLOTS: usize = 64;
+
+/// Insert-only open-addressed `(version, count)` table on atomics —
+/// recording a version is a probe plus a relaxed add, no lock. Slots
+/// store `version + 1` (0 = empty) so version 0 is representable.
+#[derive(Debug)]
+struct VersionCounters {
+    slots: Box<[(AtomicU64, AtomicU64)]>,
+    /// Cold path: only reached when every slot holds some *other*
+    /// version (> [`VERSION_SLOTS`] distinct versions on one recorder).
+    /// A version that failed to claim a slot lands here consistently —
+    /// slots are never freed, so its probes keep failing the same way.
+    overflow: Mutex<HashMap<u64, u64>>,
+}
+
+impl VersionCounters {
+    fn new() -> Self {
+        let slots: Vec<(AtomicU64, AtomicU64)> =
+            (0..VERSION_SLOTS).map(|_| (AtomicU64::new(0), AtomicU64::new(0))).collect();
+        VersionCounters { slots: slots.into_boxed_slice(), overflow: Mutex::new(HashMap::new()) }
+    }
+
+    fn record(&self, version: u64) {
+        let tag = version.wrapping_add(1);
+        let start = version as usize % VERSION_SLOTS;
+        for off in 0..VERSION_SLOTS {
+            let (v, c) = &self.slots[(start + off) % VERSION_SLOTS];
+            let cur = v.load(Ordering::Acquire);
+            if cur == tag {
+                c.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            if cur == 0 {
+                match v.compare_exchange(0, tag, Ordering::AcqRel, Ordering::Acquire) {
+                    // Won the slot, or lost it to a concurrent recorder
+                    // of the *same* version — count there either way.
+                    Ok(_) => {
+                        c.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    Err(found) if found == tag => {
+                        c.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    Err(_) => continue, // another version claimed it
+                }
+            }
+        }
+        let mut of = self.overflow.lock().unwrap_or_else(|e| e.into_inner());
+        *of.entry(version).or_insert(0) += 1;
+    }
+
+    fn snapshot(&self) -> Vec<(u64, u64)> {
+        let of = self.overflow.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out: Vec<(u64, u64)> = of.iter().map(|(&v, &c)| (v, c)).collect();
+        for (v, c) in self.slots.iter() {
+            let tag = v.load(Ordering::Acquire);
+            if tag != 0 {
+                out.push((tag - 1, c.load(Ordering::Relaxed)));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
 /// Records request latencies and computes percentiles/throughput.
-#[derive(Default, Clone, Debug)]
+/// All methods take `&self`; recording takes no lock.
+#[derive(Debug)]
 pub struct LatencyRecorder {
-    /// Latencies in microseconds.
-    samples_us: Vec<u64>,
+    buckets: Box<[AtomicU64; N_BUCKETS]>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    /// Requests served per registry version (version 0 = a static,
+    /// non-registry deployment).
+    version_counts: VersionCounters,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        // `AtomicU64` is not Copy; build the array through a Vec.
+        let buckets: Vec<AtomicU64> = (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let buckets: Box<[AtomicU64; N_BUCKETS]> =
+            buckets.into_boxed_slice().try_into().expect("bucket count is fixed");
+        LatencyRecorder {
+            buckets,
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            version_counts: VersionCounters::new(),
+        }
+    }
 }
 
 impl LatencyRecorder {
@@ -14,31 +154,65 @@ impl LatencyRecorder {
         Self::default()
     }
 
-    pub fn record(&mut self, latency: Duration) {
-        self.samples_us.push(latency.as_micros() as u64);
+    /// Record a latency against a static (version-0) deployment.
+    pub fn record(&self, latency: Duration) {
+        self.record_version(latency, 0);
+    }
+
+    /// Record a latency for a request served by `version`.
+    pub fn record_version(&self, latency: Duration, version: u64) {
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.version_counts.record(version);
     }
 
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.count.load(Ordering::Relaxed) as usize
     }
 
-    /// Percentile in microseconds (nearest-rank).
+    /// `(version, requests served)` pairs, sorted by version.
+    pub fn version_counts(&self) -> Vec<(u64, u64)> {
+        self.version_counts.snapshot()
+    }
+
+    /// Percentile in microseconds (nearest-rank over the histogram).
+    ///
+    /// The reported value is the floor of the bucket holding the
+    /// nearest-rank sample, so it matches the exact nearest-rank answer
+    /// to within one bucket width (≤ 1/8th of the value; exact below
+    /// 16 µs).
     pub fn percentile_us(&self, p: f64) -> u64 {
         assert!((0.0..=100.0).contains(&p));
-        if self.samples_us.is_empty() {
+        let n = self.count.load(Ordering::Relaxed);
+        if n == 0 {
             return 0;
         }
-        let mut s = self.samples_us.clone();
-        s.sort_unstable();
-        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
-        s[rank]
+        let rank = ((p / 100.0) * (n as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen > rank {
+                return bucket_floor(i);
+            }
+        }
+        // Racing recorders can grow `count` after we read it; the last
+        // non-empty bucket is still the right answer.
+        bucket_floor(
+            self.buckets
+                .iter()
+                .rposition(|b| b.load(Ordering::Relaxed) > 0)
+                .unwrap_or(0),
+        )
     }
 
     pub fn mean_us(&self) -> f64 {
-        if self.samples_us.is_empty() {
+        let n = self.count.load(Ordering::Relaxed);
+        if n == 0 {
             return 0.0;
         }
-        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
     }
 
     /// Requests/second given the wall-clock span of the run.
@@ -67,18 +241,95 @@ impl LatencyRecorder {
 mod tests {
     use super::*;
 
+    /// The old recorder's exact nearest-rank percentile, as the oracle.
+    fn nearest_rank(samples: &[u64], p: f64) -> u64 {
+        let mut s = samples.to_vec();
+        s.sort_unstable();
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank]
+    }
+
+    /// Width (µs) of the bucket holding `us`.
+    fn bucket_width(us: u64) -> u64 {
+        let idx = bucket_index(us);
+        if idx + 1 >= N_BUCKETS {
+            // Top bucket: its upper bound (2^64) is not representable,
+            // but its width is — [15·2^60, 2^64) spans 2^60.
+            return 1 << 60;
+        }
+        bucket_floor(idx + 1).saturating_sub(bucket_floor(idx)).max(1)
+    }
+
+    #[test]
+    fn bucket_roundtrip_is_monotone_and_tight() {
+        let mut probes: Vec<u64> = (0..200).collect();
+        for shift in 4..63 {
+            for delta in [0u64, 1, 3] {
+                probes.push((1u64 << shift) + delta);
+                probes.push((1u64 << shift).wrapping_sub(delta + 1).max(1));
+            }
+        }
+        probes.push(u64::MAX);
+        for &v in &probes {
+            let idx = bucket_index(v);
+            assert!(idx < N_BUCKETS, "index {idx} out of range for {v}");
+            let floor = bucket_floor(idx);
+            assert!(floor <= v, "floor {floor} above sample {v}");
+            assert!(v - floor < bucket_width(v), "sample {v} outside its bucket");
+            // Monotone: the next bucket starts above this sample (the
+            // top bucket has no successor to compare against).
+            assert!(idx + 1 == N_BUCKETS || bucket_floor(idx + 1) > v);
+        }
+    }
+
     #[test]
     fn percentiles() {
-        let mut r = LatencyRecorder::new();
+        let r = LatencyRecorder::new();
         for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
             r.record(Duration::from_micros(us));
         }
         assert_eq!(r.count(), 10);
-        assert_eq!(r.percentile_us(0.0), 100);
-        assert_eq!(r.percentile_us(100.0), 1000);
+        // Values this small sit in 1/8th-wide buckets: p0/p100 within
+        // one bucket width of the exact answers.
+        assert!(r.percentile_us(0.0) <= 100 && r.percentile_us(0.0) > 100 - bucket_width(100));
+        assert!(r.percentile_us(100.0) <= 1000);
+        assert!(r.percentile_us(100.0) > 1000 - bucket_width(1000));
         let p50 = r.percentile_us(50.0);
-        assert!((500..=600).contains(&p50));
-        assert!((r.mean_us() - 550.0).abs() < 1e-9);
+        assert!((400..=600).contains(&p50), "p50 {p50}");
+        assert!((r.mean_us() - 550.0).abs() < 1e-9, "mean stays exact");
+    }
+
+    /// Satellite regression: the histogram percentile must match the
+    /// old sort-every-call nearest-rank semantics to within one bucket
+    /// width, across distributions and percentiles.
+    #[test]
+    fn percentile_matches_nearest_rank_within_one_bucket() {
+        let mut rng = crate::prng::Pcg64::new(9);
+        let mut samples: Vec<u64> = Vec::new();
+        // Mixed distribution: tight cluster, long tail, exact-bucket
+        // small values.
+        for i in 0..400 {
+            let v = match i % 4 {
+                0 => rng.next_u64() % 16,                  // exact buckets
+                1 => 80 + rng.next_u64() % 40,             // tight cluster
+                2 => 1_000 + rng.next_u64() % 9_000,       // medium
+                _ => 100_000 + rng.next_u64() % 3_000_000, // tail
+            };
+            samples.push(v);
+        }
+        let r = LatencyRecorder::new();
+        for &s in &samples {
+            r.record(Duration::from_micros(s));
+        }
+        for p in [0.0, 1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+            let want = nearest_rank(&samples, p);
+            let got = r.percentile_us(p);
+            assert!(
+                got <= want && want - got < bucket_width(want),
+                "p{p}: histogram {got} vs nearest-rank {want} (width {})",
+                bucket_width(want)
+            );
+        }
     }
 
     #[test]
@@ -87,14 +338,65 @@ mod tests {
         assert_eq!(r.percentile_us(50.0), 0);
         assert_eq!(r.mean_us(), 0.0);
         assert_eq!(r.throughput(Duration::from_secs(1)), 0.0);
+        assert!(r.version_counts().is_empty());
     }
 
     #[test]
     fn throughput() {
-        let mut r = LatencyRecorder::new();
+        let r = LatencyRecorder::new();
         for _ in 0..100 {
             r.record(Duration::from_micros(10));
         }
         assert!((r.throughput(Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_version_counters() {
+        let r = LatencyRecorder::new();
+        r.record(Duration::from_micros(5));
+        r.record_version(Duration::from_micros(6), 3);
+        r.record_version(Duration::from_micros(7), 3);
+        assert_eq!(r.version_counts(), vec![(0, 1), (3, 2)]);
+        assert_eq!(r.count(), 3);
+    }
+
+    #[test]
+    fn version_counters_survive_collisions_and_overflow() {
+        let r = LatencyRecorder::new();
+        // 3 × VERSION_SLOTS distinct versions: same-slot collisions
+        // probe onward, the table fills, and the rest take the
+        // overflow path; every count must still be exact.
+        let n_versions = 3 * VERSION_SLOTS as u64;
+        for v in 0..n_versions {
+            for _ in 0..=(v % 3) {
+                r.record_version(Duration::from_micros(10), v);
+            }
+        }
+        let vc = r.version_counts();
+        assert_eq!(vc.len(), n_versions as usize);
+        for &(v, c) in &vc {
+            assert_eq!(c, v % 3 + 1, "version {v} count");
+        }
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let r = LatencyRecorder::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let r = &r;
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        r.record_version(Duration::from_micros(10 + i % 90), t);
+                    }
+                });
+            }
+        });
+        assert_eq!(r.count(), 4000);
+        let vc = r.version_counts();
+        assert_eq!(vc.len(), 4);
+        assert!(vc.iter().all(|&(_, c)| c == 1000));
+        assert!(r.percentile_us(50.0) >= 10);
+        assert!(r.percentile_us(100.0) < 100 + bucket_width(100));
     }
 }

@@ -3,31 +3,43 @@
 //! The paper's deployment story (Figure 1) is a fleet of
 //! memory-constrained sensor nodes running compressed models locally and
 //! transmitting only relevant events. This module provides the
-//! server-side counterpart plus a device simulation:
+//! server-side counterpart plus a device simulation, built as a
+//! **concurrent serving tier**: many threads drive one
+//! [`FleetServer`] through `&self`, and a published registry version
+//! hot-swaps the serving engine without draining traffic.
 //!
 //! * [`device`] — simulated microcontrollers with byte budgets that run
 //!   the packed (bit-level) model, with MCU-model latency accounting.
+//! * [`registry`] — versioned model registry: immutable
+//!   [`DeployedModel`] artifacts behind atomic publish/retire;
+//!   in-flight batches finish on the version they started with.
 //! * [`planner`] — picks, from a sweep's model candidates, the best
-//!   scorer that fits a device's memory budget (paper §4.2: "best model
-//!   with memory ≤ limit").
-//! * [`batcher`] — dynamic batching worker feeding a batched engine:
-//!   the native flattened model by default, or the XLA predict engine
-//!   with the `xla` feature (gateway-side inference for fleets too
-//!   small to deploy on).
-//! * [`router`] — routes requests to deployments by model key.
-//! * [`metrics`] — latency/throughput recording.
-//! * [`server`] — ties devices + gateway batching into one front door.
+//!   scorer that fits a device's memory budget (paper §4.2), and
+//!   [`DeploymentPlanner::replan`] publishes live upgrades into the
+//!   registry.
+//! * [`batcher`] — dynamic batching worker with bounded-queue admission
+//!   control ([`SubmitError::Overloaded`] backpressure) feeding a
+//!   batched engine: native flat, quantized columnar, registry-resolved
+//!   (hot-swappable), or the XLA predict engine (`xla` feature).
+//! * [`router`] — routes requests to deployments by model key
+//!   (lock-free atomic round-robin over replicas).
+//! * [`metrics`] — thread-safe log-bucket latency histogram with
+//!   per-version counters.
+//! * [`server`] — ties devices + gateway batching into one `Send +
+//!   Sync` front door.
 
 pub mod batcher;
 pub mod device;
 pub mod metrics;
 pub mod planner;
+pub mod registry;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{BatchReply, Batcher, BatcherConfig, SubmitError};
 pub use device::{DeviceKind, SimulatedDevice};
 pub use metrics::LatencyRecorder;
 pub use planner::{DeploymentPlanner, ModelCard};
+pub use registry::{DeployedModel, ModelRegistry};
 pub use router::Router;
-pub use server::FleetServer;
+pub use server::{FleetServer, Ticket};

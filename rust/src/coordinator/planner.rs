@@ -7,7 +7,9 @@
 //! the best scorer that fits each device.
 
 use super::device::SimulatedDevice;
+use super::registry::{DeployedModel, ModelRegistry};
 use std::fmt;
+use std::sync::Arc;
 
 /// A candidate model produced by a training sweep.
 #[derive(Clone, Debug)]
@@ -94,6 +96,43 @@ impl DeploymentPlanner {
             reason: e.to_string(),
         })?;
         Ok(card.id.clone())
+    }
+
+    /// Close the Fig. 4 loop live: diff the candidate pool against the
+    /// registry's current deployment for `key` and publish an upgrade —
+    /// the best candidate under `budget` — when it beats what is
+    /// serving (higher score, or same score in fewer bytes).
+    ///
+    /// Returns the newly published deployment, or `None` when the
+    /// current deployment is already the best fit. Traffic through a
+    /// registry-backed gateway swaps to the new version at its next
+    /// flush; in-flight batches finish on the version they started
+    /// with.
+    ///
+    /// The engine is decoded from the candidate's packed blob — the
+    /// gateway serves exactly the artifact a device deployment would
+    /// execute, not a retrained lookalike.
+    pub fn replan(
+        &self,
+        registry: &ModelRegistry,
+        key: &str,
+        budget: usize,
+    ) -> Result<Option<Arc<DeployedModel>>, PlanError> {
+        let best = self.best_under(budget)?;
+        if let Some(cur) = registry.current(key) {
+            let better = best.score > cur.card.score
+                || (best.score == cur.card.score && best.size_bytes < cur.card.size_bytes);
+            if !better {
+                return Ok(None);
+            }
+        }
+        // Candidate blobs can be untrusted (flaky links, hand-built
+        // cards): a corrupt winner must surface as an error, not kill
+        // the serving thread that drove the replan.
+        let model = crate::layout::toad_format::try_decode(&best.blob).map_err(|e| {
+            PlanError::DeployFailed { id: best.id.clone(), reason: e }
+        })?;
+        Ok(Some(registry.publish(key, best.clone(), model.quantize())))
     }
 
     /// The quality-vs-memory Pareto frontier of the candidate pool
@@ -188,6 +227,51 @@ mod tests {
         let mut dev = super::super::device::SimulatedDevice::new(1, DeviceKind::UnoR4);
         let err = p.deploy_to(&mut dev).unwrap_err();
         assert!(matches!(err, PlanError::DeployFailed { .. }), "{err}");
+    }
+
+    #[test]
+    fn replan_publishes_only_upgrades() {
+        use crate::coordinator::registry::ModelRegistry;
+        use crate::data::synth::PaperDataset;
+        use crate::gbdt::{self, GbdtParams};
+        use crate::layout::{encode, EncodeOptions, FeatureInfo};
+        let data = PaperDataset::BreastCancer.generate(79).select(&(0..250).collect::<Vec<_>>());
+        let finfo = FeatureInfo::from_dataset(&data);
+        let mut p = DeploymentPlanner::new();
+        for (id, rounds, score) in [("small", 4usize, 0.90), ("large", 32, 0.95)] {
+            let m = gbdt::booster::train(&data, GbdtParams::paper(rounds, 2));
+            let blob = encode(&m, &finfo, &EncodeOptions::default()).unwrap();
+            p.add_candidate(ModelCard { id: id.into(), score, size_bytes: blob.len(), blob });
+        }
+        let reg = ModelRegistry::new();
+        let small_size = p.candidates()[0].size_bytes;
+
+        // Budget admits only `small`: the first replan publishes it.
+        let d1 = p.replan(&reg, "bc", small_size + 8).unwrap().unwrap();
+        assert_eq!(d1.card.id, "small");
+        assert_eq!(reg.version_of("bc"), Some(d1.version));
+        // Same budget again: what's serving is already the best fit.
+        assert!(p.replan(&reg, "bc", small_size + 8).unwrap().is_none());
+        // A bigger budget admits `large` (higher score): hot upgrade.
+        let d2 = p.replan(&reg, "bc", usize::MAX).unwrap().unwrap();
+        assert_eq!(d2.card.id, "large");
+        assert!(d2.version > d1.version, "upgrades must move the version forward");
+        // The published engine decodes from the blob and serves.
+        assert!(d2.engine.predict_raw(&data.row(0))[0].is_finite());
+        // Nothing fits → the planner error propagates, nothing changes.
+        assert!(matches!(p.replan(&reg, "bc", 1), Err(PlanError::NothingFits { .. })));
+        assert_eq!(reg.version_of("bc"), Some(d2.version));
+    }
+
+    #[test]
+    fn replan_corrupt_winner_errors_instead_of_panicking() {
+        use crate::coordinator::registry::ModelRegistry;
+        let mut p = DeploymentPlanner::new();
+        p.add_candidate(card("junk", 0.99, 64)); // zero-filled blob
+        let reg = ModelRegistry::new();
+        let err = p.replan(&reg, "bc", 1024).unwrap_err();
+        assert!(matches!(err, PlanError::DeployFailed { .. }), "{err}");
+        assert!(reg.current("bc").is_none(), "nothing may be published on failure");
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Versioned model registry: immutable deployment artifacts with
+//! atomic hot-swap.
+//!
+//! The paper's deployment protocol (Fig. 4: "the best-performing model
+//! with memory ≤ the limit") only pays off at fleet scale if a
+//! better-fitting model can replace a live one without draining
+//! traffic. The registry makes that a data-structure property instead
+//! of a coordination protocol:
+//!
+//! * A [`DeployedModel`] is **immutable**: the decoded serving engine,
+//!   the packed ToaD blob it was built from, the sweep's [`ModelCard`]
+//!   metadata, and a version number, bundled once at publish time and
+//!   never mutated afterwards.
+//! * The [`ModelRegistry`] maps model keys to `Arc<DeployedModel>`
+//!   behind a [`RwLock`]. Readers ([`ModelRegistry::current`]) take the
+//!   read lock just long enough to clone the `Arc` — a swap in progress
+//!   never blocks them behind model decoding, and a reader holding a
+//!   deployment keeps it alive for as long as its batch needs it.
+//! * [`ModelRegistry::publish`] installs a new version atomically:
+//!   every request flushed after the swap sees the new deployment;
+//!   batches already in flight finish on the `Arc` they cloned — the
+//!   version they started with. Nothing is torn, dropped, or blocked.
+//!
+//! Versions are monotonic across the whole registry (a global counter),
+//! so "newer" is well-defined even across keys and re-publishes.
+
+use super::planner::ModelCard;
+use crate::inference::QuantizedFlatModel;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One immutable serving artifact: engine + blob + metadata + version.
+///
+/// The engine is the quantized-threshold flat model (the batch serving
+/// engine); the blob is the packed ToaD encoding the planner selected —
+/// kept alongside so a device deployment and the gateway serve the same
+/// artifact.
+#[derive(Debug)]
+pub struct DeployedModel {
+    /// Registry-wide monotonic version, assigned at publish time.
+    pub version: u64,
+    /// Sweep metadata (id, score, size) plus the packed ToaD blob.
+    pub card: ModelCard,
+    /// The decoded batch-serving engine.
+    pub engine: QuantizedFlatModel,
+}
+
+impl DeployedModel {
+    /// The packed ToaD blob this deployment was built from.
+    pub fn blob(&self) -> &[u8] {
+        &self.card.blob
+    }
+}
+
+/// Versioned key → deployment map with atomic hot-swap.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    deployments: RwLock<HashMap<String, Arc<DeployedModel>>>,
+    /// Next version to assign; versions start at 1 so 0 can mean
+    /// "static deployment, not registry-managed" in metrics.
+    next_version: AtomicU64,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry { deployments: RwLock::new(HashMap::new()), next_version: AtomicU64::new(0) }
+    }
+
+    /// Publish a new deployment for `key`, returning the installed
+    /// artifact. The swap is atomic: concurrent [`ModelRegistry::current`]
+    /// calls see either the previous deployment or this one, never a
+    /// partial state. In-flight batches holding the previous `Arc`
+    /// finish on it undisturbed.
+    pub fn publish(
+        &self,
+        key: &str,
+        card: ModelCard,
+        engine: QuantizedFlatModel,
+    ) -> Arc<DeployedModel> {
+        let version = self.next_version.fetch_add(1, Ordering::Relaxed) + 1;
+        let dep = Arc::new(DeployedModel { version, card, engine });
+        self.write().insert(key.to_string(), Arc::clone(&dep));
+        dep
+    }
+
+    /// The live deployment for `key`, if any. Clones the `Arc` under a
+    /// briefly-held read lock — never blocks behind engine construction.
+    pub fn current(&self, key: &str) -> Option<Arc<DeployedModel>> {
+        self.read().get(key).cloned()
+    }
+
+    /// Remove `key` from service. Requests flushed afterwards fail
+    /// ("no model deployed"); batches already holding the `Arc` finish
+    /// normally. Returns the retired deployment.
+    pub fn retire(&self, key: &str) -> Option<Arc<DeployedModel>> {
+        self.write().remove(key)
+    }
+
+    /// The live version for `key`, if any.
+    pub fn version_of(&self, key: &str) -> Option<u64> {
+        self.read().get(key).map(|d| d.version)
+    }
+
+    /// Keys with a live deployment.
+    pub fn keys(&self) -> Vec<String> {
+        self.read().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.read().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.read().is_empty()
+    }
+
+    /// Highest version assigned so far (0 = nothing ever published).
+    pub fn latest_version(&self) -> u64 {
+        self.next_version.load(Ordering::Relaxed)
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, HashMap<String, Arc<DeployedModel>>> {
+        // A poisoned lock means a panic elsewhere; the map itself is
+        // always in a consistent state (single-call inserts/removes),
+        // so serving continues rather than cascading the panic.
+        self.deployments.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write(&self) -> std::sync::RwLockWriteGuard<'_, HashMap<String, Arc<DeployedModel>>> {
+        self.deployments.write().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+    use crate::gbdt::{self, GbdtParams};
+    use crate::layout::{encode, EncodeOptions, FeatureInfo};
+
+    fn deployment(seed: u64, rounds: usize, score: f64) -> (ModelCard, QuantizedFlatModel) {
+        let data = PaperDataset::BreastCancer.generate(seed).select(&(0..200).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(rounds, 2));
+        let finfo = FeatureInfo::from_dataset(&data);
+        let blob = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
+        let card = ModelCard { id: format!("m{rounds}"), score, size_bytes: blob.len(), blob };
+        (card, model.quantize())
+    }
+
+    #[test]
+    fn publish_assigns_monotonic_versions() {
+        let reg = ModelRegistry::new();
+        assert!(reg.current("a").is_none());
+        assert_eq!(reg.latest_version(), 0);
+        let (c1, e1) = deployment(1, 2, 0.8);
+        let (c2, e2) = deployment(2, 4, 0.9);
+        let d1 = reg.publish("a", c1, e1);
+        let d2 = reg.publish("a", c2, e2);
+        assert!(d2.version > d1.version, "versions must be monotonic");
+        assert_eq!(reg.version_of("a"), Some(d2.version));
+        assert_eq!(reg.current("a").unwrap().card.id, d2.card.id);
+        assert_eq!(reg.latest_version(), d2.version);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn inflight_arc_survives_swap_and_retire() {
+        let reg = ModelRegistry::new();
+        let (c1, e1) = deployment(3, 2, 0.8);
+        reg.publish("a", c1, e1);
+        // An "in-flight batch" holds the deployment across a swap.
+        let held = reg.current("a").unwrap();
+        let v1 = held.version;
+        let (c2, e2) = deployment(4, 4, 0.9);
+        reg.publish("a", c2, e2);
+        assert_eq!(held.version, v1, "held deployment must be immutable");
+        assert!(held.engine.n_outputs() >= 1);
+        let retired = reg.retire("a").unwrap();
+        assert!(retired.version > v1);
+        assert!(reg.current("a").is_none(), "retired key no longer serves");
+        // The held Arc still predicts after retire: in-flight work
+        // finishes on the version it started with.
+        assert_eq!(held.engine.predict_raw(&[0.0; 30]).len(), 1);
+    }
+
+    #[test]
+    fn keys_are_independent() {
+        let reg = ModelRegistry::new();
+        let (c1, e1) = deployment(5, 2, 0.8);
+        let (c2, e2) = deployment(6, 2, 0.8);
+        reg.publish("a", c1, e1);
+        reg.publish("b", c2, e2);
+        let mut keys = reg.keys();
+        keys.sort();
+        assert_eq!(keys, vec!["a", "b"]);
+        reg.retire("a");
+        assert!(reg.current("b").is_some());
+        assert_eq!(reg.len(), 1);
+    }
+}

@@ -1,9 +1,13 @@
 //! Request routing: model key → deployment target(s).
 //!
 //! Deployments are either on-device (a simulated node runs the packed
-//! model locally) or gateway-side (a [`super::batcher::Batcher`] feeding
-//! the XLA engine). The router resolves a model key to a target and
-//! round-robins across replicas.
+//! model locally) or gateway-side (a [`super::batcher::Batcher`] over a
+//! batched engine, possibly registry-backed for hot-swap). The router
+//! resolves a model key to a target and round-robins across replicas
+//! on a relaxed atomic counter — [`Router::route`] takes `&self` and
+//! is called concurrently from every serving thread with no lock and
+//! no contention beyond the counter itself. Routes are registered
+//! during server setup (`&mut self`) and immutable while serving.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -63,6 +67,36 @@ mod tests {
         r.add_route("m", TargetId(12));
         let picks: Vec<usize> = (0..6).map(|_| r.route("m").unwrap().0).collect();
         assert_eq!(picks, vec![10, 11, 12, 10, 11, 12]);
+    }
+
+    #[test]
+    fn concurrent_routing_balances_replicas() {
+        // 4 threads × 300 routes over 3 replicas: the atomic counter
+        // must hand out every pick exactly once, so the replica counts
+        // sum to 1200 and are perfectly balanced (each counter value in
+        // 0..1200 maps to exactly one replica).
+        let mut r = Router::new();
+        for t in 0..3 {
+            r.add_route("m", TargetId(t));
+        }
+        let counts = std::sync::Mutex::new([0usize; 3]);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let mut local = [0usize; 3];
+                    for _ in 0..300 {
+                        local[r.route("m").unwrap().0] += 1;
+                    }
+                    let mut c = counts.lock().unwrap();
+                    for (a, b) in c.iter_mut().zip(local) {
+                        *a += b;
+                    }
+                });
+            }
+        });
+        let c = counts.into_inner().unwrap();
+        assert_eq!(c.iter().sum::<usize>(), 1200);
+        assert_eq!(c, [400, 400, 400], "round-robin must balance exactly");
     }
 
     #[test]

@@ -1,29 +1,72 @@
 //! The fleet front door: devices + gateway batchers behind one API.
 //!
-//! A [`FleetServer`] owns simulated devices (on-device inference) and
-//! gateway batchers (XLA-backed batched inference), a [`Router`] mapping
-//! model keys to them, and a latency recorder per model. This is the
-//! component the end-to-end example (`examples/iot_fleet.rs`) drives.
+//! A [`FleetServer`] owns simulated devices (on-device inference),
+//! gateway batchers (batched engine inference), a [`Router`] mapping
+//! model keys to them, a shared [`ModelRegistry`] for hot-swappable
+//! gateway deployments, and a latency recorder per model.
+//!
+//! Serving is concurrent: [`FleetServer::submit`] and
+//! [`FleetServer::predict`] take `&self` and the server is
+//! `Send + Sync`, so any number of threads drive one server (the
+//! stress test in `tests/serving_concurrency.rs` and the hot-swap demo
+//! in `examples/iot_fleet.rs` both do). Registration (`add_device`,
+//! `add_gateway`) is the setup phase and keeps `&mut self`.
 
-use super::batcher::Batcher;
+use super::batcher::{BatchReply, Batcher, BatcherConfig, SubmitError};
 use super::device::SimulatedDevice;
 use super::metrics::LatencyRecorder;
+use super::registry::ModelRegistry;
 use super::router::{Router, TargetId};
 use crate::anyhow;
 use crate::error::Result;
 use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 enum Target {
-    Device(SimulatedDevice),
+    /// Devices mutate per-prediction state (MCU time accounting), so
+    /// each gets its own lock; different replicas serve in parallel.
+    Device(Mutex<SimulatedDevice>),
     Gateway(Batcher),
 }
 
 /// Fleet coordinator: routes rows to deployments and records latency.
+/// Shareable across serving threads (`&self` end-to-end).
 pub struct FleetServer {
     targets: Vec<Target>,
     router: Router,
+    registry: Arc<ModelRegistry>,
     metrics: HashMap<String, LatencyRecorder>,
+}
+
+/// An in-flight request: resolve with [`Ticket::wait`] to get the
+/// scores + serving version and record the request's latency.
+pub struct Ticket<'a> {
+    inner: TicketInner,
+    recorder: &'a LatencyRecorder,
+    start: Instant,
+}
+
+enum TicketInner {
+    /// Device predictions complete synchronously at submit time.
+    Ready(BatchReply),
+    /// Gateway predictions resolve when the worker flushes the batch.
+    Pending(Receiver<BatchReply>),
+}
+
+impl Ticket<'_> {
+    /// Block until the reply is ready; records latency on completion.
+    pub fn wait(self) -> Result<BatchReply> {
+        let reply = match self.inner {
+            TicketInner::Ready(r) => r,
+            TicketInner::Pending(rx) => rx
+                .recv()
+                .map_err(|_| anyhow!("model retired or gateway shut down mid-flight"))?,
+        };
+        self.recorder.record_version(self.start.elapsed(), reply.version);
+        Ok(reply)
+    }
 }
 
 impl Default for FleetServer {
@@ -34,13 +77,29 @@ impl Default for FleetServer {
 
 impl FleetServer {
     pub fn new() -> FleetServer {
-        FleetServer { targets: Vec::new(), router: Router::new(), metrics: HashMap::new() }
+        FleetServer::with_registry(Arc::new(ModelRegistry::new()))
+    }
+
+    /// Build a server around an existing (possibly shared) registry —
+    /// e.g. one a planner publishes into.
+    pub fn with_registry(registry: Arc<ModelRegistry>) -> FleetServer {
+        FleetServer {
+            targets: Vec::new(),
+            router: Router::new(),
+            registry,
+            metrics: HashMap::new(),
+        }
+    }
+
+    /// The registry backing this server's hot-swappable gateways.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     /// Register an on-device deployment for `model`.
     pub fn add_device(&mut self, model: &str, device: SimulatedDevice) -> TargetId {
         let id = TargetId(self.targets.len());
-        self.targets.push(Target::Device(device));
+        self.targets.push(Target::Device(Mutex::new(device)));
         self.router.add_route(model, id);
         self.metrics.entry(model.to_string()).or_default();
         id
@@ -55,20 +114,46 @@ impl FleetServer {
         id
     }
 
+    /// Register a hot-swappable gateway: a batcher that resolves
+    /// `model` in this server's registry at every flush, so a
+    /// [`ModelRegistry::publish`] swaps the serving engine mid-traffic.
+    pub fn add_registry_gateway(&mut self, model: &str, config: BatcherConfig) -> TargetId {
+        let backend = super::batcher::Backend::Registry {
+            registry: Arc::clone(&self.registry),
+            key: model.to_string(),
+        };
+        self.add_gateway(model, Batcher::spawn(config, backend))
+    }
+
     pub fn router(&self) -> &Router {
         &self.router
     }
 
-    /// Serve one request synchronously; records wall-clock latency.
-    pub fn predict(&mut self, model: &str, row: Vec<f32>) -> Result<Vec<f64>> {
-        let target = self.router.route(model).ok_or_else(|| anyhow!("no route for {model}"))?;
+    /// Route one request and start serving it. Returns a [`Ticket`]
+    /// immediately; gateway backpressure surfaces as
+    /// [`SubmitError::Overloaded`] here, before any work is queued.
+    pub fn submit(
+        &self,
+        model: &str,
+        row: Vec<f32>,
+    ) -> std::result::Result<Ticket<'_>, SubmitError> {
+        let target = self.router.route(model).ok_or(SubmitError::NoRoute)?;
+        let recorder = self.metrics.get(model).expect("route implies recorder");
         let start = Instant::now();
-        let out = match &mut self.targets[target.0] {
-            Target::Device(dev) => dev.predict(&row).map_err(|e| anyhow!(e))?,
-            Target::Gateway(b) => b.predict(row),
+        let inner = match &self.targets[target.0] {
+            Target::Device(dev) => {
+                let scores = lock(dev).predict(&row).map_err(|_| SubmitError::NoModel)?;
+                TicketInner::Ready(BatchReply { scores, version: 0 })
+            }
+            Target::Gateway(b) => TicketInner::Pending(b.submit(row)?),
         };
-        self.metrics.get_mut(model).unwrap().record(start.elapsed());
-        Ok(out)
+        Ok(Ticket { inner, recorder, start })
+    }
+
+    /// Serve one request synchronously; records wall-clock latency.
+    pub fn predict(&self, model: &str, row: Vec<f32>) -> Result<Vec<f64>> {
+        let ticket = self.submit(model, row).map_err(|e| anyhow!("{model}: {e}"))?;
+        Ok(ticket.wait()?.scores)
     }
 
     pub fn metrics(&self, model: &str) -> Option<&LatencyRecorder> {
@@ -80,11 +165,15 @@ impl FleetServer {
         self.targets
             .iter()
             .map(|t| match t {
-                Target::Device(d) => d.sim_busy_seconds(),
+                Target::Device(d) => lock(d).sim_busy_seconds(),
                 Target::Gateway(_) => 0.0,
             })
             .sum()
     }
+}
+
+fn lock(dev: &Mutex<SimulatedDevice>) -> MutexGuard<'_, SimulatedDevice> {
+    dev.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 #[cfg(test)]
@@ -92,9 +181,23 @@ mod tests {
     use super::*;
     use crate::coordinator::batcher::{Backend, BatcherConfig};
     use crate::coordinator::device::DeviceKind;
+    use crate::coordinator::planner::ModelCard;
     use crate::data::synth::PaperDataset;
     use crate::gbdt::{self, GbdtParams};
     use crate::layout::{encode, EncodeOptions, FeatureInfo};
+
+    fn assert_server_is_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<FleetServer>();
+        check::<Batcher>();
+        check::<ModelRegistry>();
+        check::<LatencyRecorder>();
+    }
+
+    #[test]
+    fn server_types_are_send_sync() {
+        assert_server_is_send_sync();
+    }
 
     #[test]
     fn device_and_gateway_routes_agree() {
@@ -111,7 +214,11 @@ mod tests {
         server.add_gateway(
             "bc",
             Batcher::spawn(
-                BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+                BatcherConfig {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_millis(1),
+                    queue_depth: 64,
+                },
                 Backend::Native(model.flatten()),
             ),
         );
@@ -131,7 +238,43 @@ mod tests {
 
     #[test]
     fn unknown_model_errors() {
-        let mut server = FleetServer::new();
+        let server = FleetServer::new();
         assert!(server.predict("ghost", vec![0.0]).is_err());
+        assert_eq!(server.submit("ghost", vec![0.0]).err(), Some(SubmitError::NoRoute));
+    }
+
+    #[test]
+    fn registry_gateway_hot_swaps_and_counts_versions() {
+        let data = PaperDataset::BreastCancer.generate(83).select(&(0..250).collect::<Vec<_>>());
+        let m1 = gbdt::booster::train(&data, GbdtParams::paper(4, 2));
+        let m2 = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
+        let card = |id: &str, score: f64| ModelCard {
+            id: id.into(),
+            score,
+            size_bytes: 1,
+            blob: vec![],
+        };
+
+        let mut server = FleetServer::new();
+        server.add_registry_gateway(
+            "bc",
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                queue_depth: 64,
+            },
+        );
+        let d1 = server.registry().publish("bc", card("m1", 0.9), m1.quantize());
+        let r1 = server.submit("bc", data.row(0)).unwrap().wait().unwrap();
+        assert_eq!(r1.version, d1.version);
+        assert_eq!(r1.scores, m1.predict_raw(&data.row(0)));
+
+        let d2 = server.registry().publish("bc", card("m2", 0.95), m2.quantize());
+        let r2 = server.submit("bc", data.row(0)).unwrap().wait().unwrap();
+        assert_eq!(r2.version, d2.version, "publish must hot-swap the gateway");
+        assert_eq!(r2.scores, m2.predict_raw(&data.row(0)));
+
+        let counts = server.metrics("bc").unwrap().version_counts();
+        assert_eq!(counts, vec![(d1.version, 1), (d2.version, 1)]);
     }
 }

@@ -30,11 +30,14 @@ pub struct GbdtParams {
     pub min_hess_in_leaf: f64,
     pub max_bins: usize,
     /// Worker threads for the feature-sharded histogram build
-    /// (`HistogramSet::build_sharded`); 1 = sequential. Bit-identical
-    /// models for any value — this is purely a wall-clock knob for
-    /// wide datasets. Leaves smaller than
-    /// `histogram::SHARD_MIN_ROWS` rows always build sequentially, so
-    /// deep-tree tail leaves never pay thread-spawn overhead.
+    /// (`HistogramSet::build_sharded`). `0` (the default) auto-selects
+    /// from the dataset width and `available_parallelism()` (see
+    /// [`super::histogram::auto_shards`]); `1` forces sequential; any
+    /// other value is used as-is. Bit-identical models for every
+    /// value — this is purely a wall-clock knob for wide datasets.
+    /// Leaves smaller than `histogram::SHARD_MIN_ROWS` rows always
+    /// build sequentially, so deep-tree tail leaves never pay
+    /// thread-spawn overhead.
     pub histogram_shards: usize,
 }
 
@@ -50,7 +53,7 @@ impl Default for GbdtParams {
             min_data_in_leaf: 20,
             min_hess_in_leaf: 1e-3,
             max_bins: 255,
-            histogram_shards: 1,
+            histogram_shards: 0,
         }
     }
 }
@@ -63,6 +66,16 @@ impl GbdtParams {
             max_depth,
             max_leaves: 1usize << max_depth.min(16),
             ..Default::default()
+        }
+    }
+
+    /// The shard count [`Booster::new`] hands the histogram pool:
+    /// `histogram_shards` itself when set, otherwise the automatic
+    /// width × parallelism choice of [`super::histogram::auto_shards`].
+    pub fn resolved_shards(&self, n_features: usize) -> usize {
+        match self.histogram_shards {
+            0 => super::histogram::auto_shards(n_features),
+            k => k,
         }
     }
 
@@ -126,7 +139,10 @@ impl<P: SplitPenalty> Booster<P> {
             objective,
             binner,
             binned,
-            pool: HistogramPool::with_shards(&bins_per_feature, params.histogram_shards),
+            pool: HistogramPool::with_shards(
+                &bins_per_feature,
+                params.resolved_shards(train.n_features()),
+            ),
             targets: train.targets.clone(),
             labels: train.labels.clone(),
             raw,
@@ -417,16 +433,36 @@ mod tests {
     fn sharded_histogram_training_is_bit_identical() {
         // `histogram_shards` is a wall-clock knob only: the sharded
         // build is bit-identical to the sequential one, so the grown
-        // model must match exactly, tree for tree.
+        // model must match exactly, tree for tree — including the
+        // auto-selected count (0, the default).
         let data = small(PaperDataset::BreastCancer, 300);
         let p = GbdtParams::paper(6, 3);
-        let base = train(&data, p);
-        let sharded = train(&data, GbdtParams { histogram_shards: 3, ..p });
-        assert_eq!(base.n_trees(), sharded.n_trees());
-        for i in (0..data.n_rows()).step_by(29) {
-            let x = data.row(i);
-            assert_eq!(base.predict_raw(&x), sharded.predict_raw(&x), "row {i}");
+        let base = train(&data, GbdtParams { histogram_shards: 1, ..p });
+        for shards in [0usize, 3] {
+            let sharded = train(&data, GbdtParams { histogram_shards: shards, ..p });
+            assert_eq!(base.n_trees(), sharded.n_trees());
+            for i in (0..data.n_rows()).step_by(29) {
+                let x = data.row(i);
+                let want = base.predict_raw(&x);
+                assert_eq!(want, sharded.predict_raw(&x), "shards={shards} row {i}");
+            }
         }
+    }
+
+    #[test]
+    fn auto_shard_resolution_bounds() {
+        let p = GbdtParams::default();
+        assert_eq!(p.histogram_shards, 0, "default is auto");
+        // Never wider than the feature count, never zero, capped.
+        assert_eq!(p.resolved_shards(0), 1);
+        assert_eq!(p.resolved_shards(1), 1);
+        for d in [2usize, 5, 30, 1000] {
+            let k = p.resolved_shards(d);
+            assert!(k >= 1 && k <= d, "resolved {k} for {d} features");
+            assert!(k <= crate::gbdt::histogram::AUTO_SHARD_MAX);
+        }
+        // An explicit count is taken verbatim.
+        assert_eq!(GbdtParams { histogram_shards: 7, ..p }.resolved_shards(2), 7);
     }
 
     #[test]

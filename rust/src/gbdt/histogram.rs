@@ -67,6 +67,28 @@ use crate::data::{BinColumns, BinMatrix};
 /// exercise the threaded path on tiny inputs deliberately).
 pub const SHARD_MIN_ROWS: usize = 4096;
 
+/// Upper bound for the auto-selected shard count: feature sharding
+/// splits per-feature work, and past this many workers the scoped
+/// spawn/join cost and memory-bandwidth contention win over extra
+/// cores even on very wide datasets.
+pub const AUTO_SHARD_MAX: usize = 16;
+
+/// Auto-select a shard count for the feature-sharded histogram build:
+/// one worker per available core, clamped to the feature count (one
+/// feature cannot be split across shards) and [`AUTO_SHARD_MAX`].
+/// Datasets too narrow to amortize a spawn (`< 2` features) stay
+/// sequential, and the [`SHARD_MIN_ROWS`] gate in
+/// [`HistogramPool::build`] keeps small leaves sequential regardless
+/// of what this resolves to. Purely a wall-clock knob: the sharded
+/// build is bit-identical for any count.
+pub fn auto_shards(n_features: usize) -> usize {
+    if n_features < 2 {
+        return 1;
+    }
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    cores.min(n_features).min(AUTO_SHARD_MAX)
+}
+
 /// Flat histogram over all features of a dataset.
 ///
 /// Storage is an interleaved `[grad, hess, count]` f64 triple per bin:

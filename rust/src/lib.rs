@@ -26,8 +26,10 @@
 //!   that loads AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`)
 //!   for batched serving,
 //! * an IoT fleet coordinator ([`coordinator`]): simulated
-//!   memory-constrained devices, a deployment planner, request router and
-//!   dynamic batcher,
+//!   memory-constrained devices, a deployment planner, a versioned model
+//!   registry with atomic hot-swap, and a concurrent serving front door
+//!   (`&self` submit, bounded-queue batching with backpressure,
+//!   per-version latency metrics),
 //! * a microcontroller cycle-cost model ([`mcu`]) reproducing the paper's
 //!   Table 2 latency comparison, and
 //! * the experiment sweep harness ([`sweep`]) regenerating every figure

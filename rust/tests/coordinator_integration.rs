@@ -61,7 +61,7 @@ fn native_gateway_serves_batches() {
     let m = train_toad(&train_set, &params);
 
     let batcher = Batcher::spawn(
-        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), queue_depth: 1024 },
         Backend::Native(m.model.flatten()),
     );
     let mut server = FleetServer::new();
@@ -109,7 +109,7 @@ mod xla_gateway {
         let tm = tensorize(&m.model, 256, 4, 64, 1).unwrap();
 
         let batcher = Batcher::spawn(
-            BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+            BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), queue_depth: 1024 },
             Backend::Xla { artifacts_dir: dir, features: 64, tensors: tm },
         );
         let mut server = FleetServer::new();

@@ -68,6 +68,32 @@ fn prop_sharded_build_matches_scalar() {
 }
 
 #[test]
+fn auto_selected_shards_match_scalar_bitwise() {
+    // The auto-selected count (GbdtParams::histogram_shards = 0 →
+    // auto_shards(width)) must be bit-identical to the scalar oracle
+    // like every manual count — on this machine's actual parallelism.
+    use toad::gbdt::histogram::{auto_shards, AUTO_SHARD_MAX};
+    use toad::gbdt::GbdtParams;
+    run_prop("auto-sharded histogram == scalar histogram", 10, |g| {
+        let n = g.usize_in(1, 400);
+        let d = g.usize_in(1, 40);
+        let k = GbdtParams::default().resolved_shards(d);
+        assert_eq!(k, auto_shards(d), "params must delegate to auto_shards");
+        assert!(k >= 1 && k <= d.max(1) && k <= AUTO_SHARD_MAX, "auto count {k} for {d}");
+        let bins_per: Vec<usize> = (0..d).map(|_| g.usize_in(1, 16)).collect();
+        let binned = BinMatrix::from_fn(n, &bins_per, |f, _| g.usize(bins_per[f]) as u16);
+        let grad: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let hess: Vec<f64> = (0..n).map(|_| g.f64_in(0.01, 2.0)).collect();
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut scalar = HistogramSet::new(&bins_per);
+        scalar.build_scalar(&binned, &rows, &grad, &hess);
+        let mut pool = HistogramPool::with_shards(&bins_per, k);
+        let auto = pool.build(&binned, &rows, &grad, &hess);
+        assert_bit_identical(&scalar, &auto, &format!("auto shards k={k} d={d} n={n}"));
+    });
+}
+
+#[test]
 fn sharded_single_feature_clamps_and_matches() {
     // One feature cannot be split across shards: every k clamps to the
     // sequential build and must still be exact.

@@ -1,0 +1,232 @@
+//! Concurrent serving: N writer threads publishing registry versions
+//! while M reader threads hammer `FleetServer::submit` through `&self`.
+//!
+//! The contract under test (ISSUE 4 acceptance):
+//! * every response comes from a version that was published — never a
+//!   torn, partial, or never-published state (proven bit-exactly: each
+//!   version's model predicts a distinct constant, and every reply
+//!   must match its reported version's constant to the bit),
+//! * a publish during live traffic changes the serving version without
+//!   dropping, blocking, or corrupting in-flight requests,
+//! * the bounded queue surfaces `SubmitError::Overloaded` backpressure
+//!   instead of buffering without limit.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+use toad::coordinator::batcher::SubmitError;
+use toad::coordinator::{BatcherConfig, FleetServer, ModelCard};
+use toad::data::{Dataset, Task};
+use toad::gbdt::{self, GbdtModel, GbdtParams};
+
+/// A model that predicts exactly `c` for every row: one depth-0 round
+/// on a constant-target regression set leaves the base score = mean =
+/// `c` and a zero leaf. The quantized serving engine is bit-identical
+/// to `predict_raw`, so replies can be checked with `to_bits`.
+fn constant_model(c: f64) -> (GbdtModel, f64) {
+    let n = 32;
+    let data = Dataset {
+        name: format!("const_{c}"),
+        features: (0..4).map(|f| (0..n).map(|i| (i * (f + 1)) as f32 * 0.1).collect()).collect(),
+        targets: vec![c; n],
+        labels: Vec::new(),
+        task: Task::Regression,
+    };
+    let model = gbdt::booster::train(&data, GbdtParams::paper(1, 0));
+    let expect = model.predict_raw(&data.row(0))[0];
+    (model, expect)
+}
+
+fn card(id: &str, score: f64) -> ModelCard {
+    ModelCard { id: id.into(), score, size_bytes: 1, blob: Vec::new() }
+}
+
+#[test]
+fn hot_swap_under_concurrent_load() {
+    let mut server = FleetServer::new();
+    server.add_registry_gateway(
+        "m",
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            queue_depth: 4096,
+        },
+    );
+
+    // version → the exact constant that version predicts. The publish
+    // and its map insert happen under the map lock, and readers look
+    // replies up under the same lock — so by the time a reader can
+    // look up a version it observed, the entry is already there.
+    let expected: Mutex<HashMap<u64, u64>> = Mutex::new(HashMap::new());
+    let publish = |v: usize| {
+        let (model, c) = constant_model(v as f64);
+        let engine = model.quantize();
+        let mut map = expected.lock().unwrap();
+        let dep = server.registry().publish("m", card(&format!("v{v}"), v as f64), engine);
+        map.insert(dep.version, c.to_bits());
+        dep.version
+    };
+
+    let v1 = publish(1);
+    let row = vec![0.5f32; 4];
+    // One synchronous request up front pins version 1 in the metrics,
+    // so the final version-count assertion can demand ≥ 2 versions
+    // without racing reader startup against the first swap.
+    let warm = server.submit("m", row.clone()).unwrap().wait().unwrap();
+    assert_eq!(warm.version, v1);
+
+    let stop = AtomicBool::new(false);
+    let served = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        // Writer: five more versions land while traffic is flowing.
+        let writer = s.spawn(|| {
+            for v in 2..=6 {
+                std::thread::sleep(Duration::from_millis(3));
+                publish(v);
+            }
+        });
+
+        // Readers: hammer submit, verify every reply bit-exactly.
+        for t in 0..4 {
+            let server = &server;
+            let expected = &expected;
+            let stop = &stop;
+            let served = &served;
+            let row = &row;
+            s.spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let ticket = match server.submit("m", row.clone()) {
+                        Ok(tk) => tk,
+                        Err(SubmitError::Overloaded { .. }) => continue, // shed, retry
+                        Err(e) => panic!("reader {t}: unexpected submit error {e}"),
+                    };
+                    let reply = ticket.wait().expect("published key must serve");
+                    let want = *expected
+                        .lock()
+                        .unwrap()
+                        .get(&reply.version)
+                        .unwrap_or_else(|| panic!("version {} never published", reply.version));
+                    assert_eq!(
+                        reply.scores[0].to_bits(),
+                        want,
+                        "reader {t}: reply from version {} is torn",
+                        reply.version
+                    );
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+
+        writer.join().expect("writer");
+        // Let readers observe the final version, then stop them.
+        std::thread::sleep(Duration::from_millis(20));
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    assert!(served.load(Ordering::Relaxed) > 0, "readers must have served requests");
+
+    // After the last publish, a fresh request must be served by the
+    // newest version (flushes resolve the registry at flush time).
+    let final_reply = server.submit("m", row).unwrap().wait().unwrap();
+    assert_eq!(final_reply.version, server.registry().latest_version());
+    let vc = server.metrics("m").unwrap().version_counts();
+    let published = expected.lock().unwrap();
+    for &(v, _) in &vc {
+        assert!(published.contains_key(&v), "metrics recorded unpublished version {v}");
+    }
+    assert!(vc.len() >= 2, "hot swap must have been observed across versions: {vc:?}");
+}
+
+#[test]
+fn overload_backpressure_surfaces_and_recovers() {
+    let mut server = FleetServer::new();
+    server.add_registry_gateway(
+        "m",
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(1), queue_depth: 2 },
+    );
+    let (model, expect) = constant_model(7.0);
+    server.registry().publish("m", card("v", 0.9), model.quantize());
+
+    // A tight submit loop outpaces the worker (enqueue is nanoseconds,
+    // a flush runs a real batch), so the 2-deep bound must trip; every
+    // admitted request must still be served with the exact payload.
+    let row = vec![0.1f32; 4];
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..50_000 {
+        match server.submit("m", row.clone()) {
+            Ok(tk) => tickets.push(tk),
+            Err(SubmitError::Overloaded { depth }) => {
+                assert_eq!(depth, 2);
+                shed += 1;
+                if shed > 8 {
+                    break;
+                }
+            }
+            Err(e) => panic!("unexpected submit error {e}"),
+        }
+    }
+    assert!(shed > 0, "bounded queue never pushed back under a tight submit loop");
+    for tk in tickets {
+        let reply = tk.wait().expect("admitted request must be served");
+        assert_eq!(reply.scores[0].to_bits(), expect.to_bits());
+    }
+    // And the gateway keeps serving after the burst.
+    assert!(server.predict("m", row).is_ok());
+}
+
+#[test]
+fn retire_fails_clean_and_republish_recovers() {
+    let mut server = FleetServer::new();
+    server.add_registry_gateway(
+        "m",
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
+    );
+    let (m1, c1) = constant_model(1.0);
+    let d1 = server.registry().publish("m", card("v1", 0.9), m1.quantize());
+    let row = vec![0.2f32; 4];
+    let r1 = server.submit("m", row.clone()).unwrap().wait().unwrap();
+    assert_eq!((r1.version, r1.scores[0].to_bits()), (d1.version, c1.to_bits()));
+
+    let retired = server.registry().retire("m").expect("was live");
+    assert_eq!(retired.version, d1.version);
+    // Submit is admitted (the route exists) but resolves to an error,
+    // not a hang or a stale prediction.
+    let err = server.submit("m", row.clone()).unwrap().wait();
+    assert!(err.is_err(), "retired key must not serve");
+
+    let (m2, c2) = constant_model(2.0);
+    let d2 = server.registry().publish("m", card("v2", 0.9), m2.quantize());
+    assert!(d2.version > d1.version);
+    let r2 = server.submit("m", row).unwrap().wait().unwrap();
+    assert_eq!((r2.version, r2.scores[0].to_bits()), (d2.version, c2.to_bits()));
+}
+
+#[test]
+fn concurrent_publishers_get_distinct_monotonic_versions() {
+    let registry = toad::coordinator::ModelRegistry::new();
+    let versions: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let registry = &registry;
+            let versions = &versions;
+            s.spawn(move || {
+                for i in 0..8 {
+                    let (model, _) = constant_model((t * 8 + i) as f64);
+                    let key = format!("k{t}");
+                    let dep = registry.publish(&key, card("c", 0.5), model.quantize());
+                    versions.lock().unwrap().push(dep.version);
+                }
+            });
+        }
+    });
+    let mut vs = versions.into_inner().unwrap();
+    vs.sort_unstable();
+    let n = vs.len();
+    vs.dedup();
+    assert_eq!(vs.len(), n, "versions must be unique across concurrent publishers");
+    assert_eq!(registry.latest_version(), 32);
+    assert_eq!(registry.len(), 4);
+}

@@ -42,9 +42,10 @@ impl Records {
     }
 
     /// Hand-rolled JSON (the build is dependency-free by design).
-    fn to_json(&self, dataset: &str, speedups: &[(&str, f64)]) -> String {
+    fn to_json(&self, dataset: &str, simd_tier: &str, speedups: &[(&str, f64)]) -> String {
         let mut s = String::from("{\n");
         s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
+        s.push_str(&format!("  \"simd_tier\": \"{simd_tier}\",\n"));
         s.push_str("  \"unit\": \"ns_per_op\",\n");
         s.push_str("  \"kernels\": {\n");
         for (i, (k, v)) in self.0.iter().enumerate() {
@@ -62,6 +63,10 @@ impl Records {
 }
 
 fn main() {
+    // The tier every dispatched hot path below runs on (also consumed
+    // by the CI bench job's log: grep "simd dispatch tier").
+    let tier = toad::simd::tier();
+    println!("simd dispatch tier: {} (lane kernels + scalar fallback)", tier.name());
     let data = PaperDataset::CovertypeBinary.generate(1);
     let data = data.select(&(0..16_384).collect::<Vec<_>>());
     let binner = Binner::fit(&data, 255);
@@ -110,6 +115,20 @@ fn main() {
         pool.recycle(h);
     });
     rec.push("histogram_subset_gathered", per);
+
+    // ---- histogram accumulation: forced-scalar twin vs SIMD tier -----
+    // Same columnar+pool path both times; only the dispatch tier
+    // differs, so this isolates the explicit SIMD win.
+    let per_hist_scalar = time("histogram build forced-scalar tier", 20, || {
+        let h = pool.build_with_tier(&binned, &rows, &grad, &hess, toad::simd::Tier::Scalar);
+        pool.recycle(h);
+    });
+    rec.push("histogram_build_forced_scalar", per_hist_scalar);
+    let per_hist_simd = time(&format!("histogram build simd tier ({})", tier.name()), 20, || {
+        let h = pool.build_with_tier(&binned, &rows, &grad, &hess, tier);
+        pool.recycle(h);
+    });
+    rec.push("histogram_build_simd", per_hist_simd);
 
     // ---- feature-sharded parallel build (auto-selected count) ---------
     let shards = toad::gbdt::histogram::auto_shards(bins.len());
@@ -187,6 +206,18 @@ fn main() {
         std::hint::black_box(acc);
     });
     rec.push("quantized_single_512", per);
+
+    // ---- quantized descent: forced-scalar twin vs SIMD tier ----------
+    // Same binning + block partition both times; only the descent lane
+    // kernel differs.
+    let per_desc_scalar = time("quantized batch forced-scalar tier", 20, || {
+        std::hint::black_box(quant.predict_batch_with_tier(&test_rows, toad::simd::Tier::Scalar));
+    });
+    rec.push("quantized_batch_forced_scalar", per_desc_scalar);
+    let per_desc_simd = time(&format!("quantized batch simd tier ({})", tier.name()), 20, || {
+        std::hint::black_box(quant.predict_batch_with_tier(&test_rows, tier));
+    });
+    rec.push("quantized_batch_simd", per_desc_simd);
 
     // Columnar batch: feeds the dataset's own feature columns (no
     // per-row gather, one binning pass per column).
@@ -309,6 +340,10 @@ fn main() {
         rec.lookup("quantized_batch") / rec.lookup("columnar_batch");
     let concurrent_vs_serial =
         rec.lookup("gateway_native_single_row") / rec.lookup("server_submit_concurrent");
+    let simd_vs_scalar_descent =
+        rec.lookup("quantized_batch_forced_scalar") / rec.lookup("quantized_batch_simd");
+    let simd_vs_scalar_histogram =
+        rec.lookup("histogram_build_forced_scalar") / rec.lookup("histogram_build_simd");
     println!("\n== speedups vs scalar baselines ==");
     println!("{:44} {:>11.2}x", "histogram build (dense)", hist_speedup);
     println!("{:44} {:>11.2}x", "histogram build (subset/gathered)", subset_speedup);
@@ -318,9 +353,12 @@ fn main() {
     println!("{:44} {:>11.2}x", "quantized vs flat batch", quant_vs_flat);
     println!("{:44} {:>11.2}x", "columnar vs row-major batch", columnar_vs_row);
     println!("{:44} {:>11.2}x", "concurrent server vs serial gateway", concurrent_vs_serial);
+    println!("{:44} {:>11.2}x", "simd vs scalar descent", simd_vs_scalar_descent);
+    println!("{:44} {:>11.2}x", "simd vs scalar histogram", simd_vs_scalar_histogram);
 
     let json = rec.to_json(
         &format!("covtype_binary_{n}x{d}"),
+        tier.name(),
         &[
             ("histogram_build", hist_speedup),
             ("histogram_subset", subset_speedup),
@@ -330,6 +368,8 @@ fn main() {
             ("quantized_vs_flat_batch", quant_vs_flat),
             ("columnar_vs_row_batch", columnar_vs_row),
             ("server_concurrent_vs_serial", concurrent_vs_serial),
+            ("simd_vs_scalar_descent", simd_vs_scalar_descent),
+            ("simd_vs_scalar_histogram", simd_vs_scalar_histogram),
         ],
     );
     // CARGO_MANIFEST_DIR is <repo>/rust; the trajectory file lives at

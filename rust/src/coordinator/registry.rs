@@ -78,9 +78,17 @@ impl ModelRegistry {
         card: ModelCard,
         engine: QuantizedFlatModel,
     ) -> Arc<DeployedModel> {
+        // Assign the version while holding the write lock: two racing
+        // publishes to the same key are thereby serialized, so the one
+        // installed last always carries the higher version and the live
+        // version per key never regresses. (Assigning before locking
+        // allowed thread A to draw version v, lose the lock race to
+        // thread B's v+1, and then overwrite B — leaving the older
+        // deployment live.)
+        let mut map = self.write();
         let version = self.next_version.fetch_add(1, Ordering::Relaxed) + 1;
         let dep = Arc::new(DeployedModel { version, card, engine });
-        self.write().insert(key.to_string(), Arc::clone(&dep));
+        map.insert(key.to_string(), Arc::clone(&dep));
         dep
     }
 

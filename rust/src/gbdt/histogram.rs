@@ -26,10 +26,11 @@
 //!   root leaf of every tree; row sets are always distinct indices), the
 //!   row-index indirection drops out entirely and each feature column is
 //!   a straight sequential sweep.
-//! * **4-way unrolled accumulation** — the `u16` bin-column walk is
-//!   unrolled so four independent bin updates are in flight per
-//!   iteration, hiding the latency of the scattered read-modify-write
-//!   into the triple array.
+//! * **4-way unrolled accumulation** — the bin-column walk keeps four
+//!   independent bin updates in flight per iteration, hiding the
+//!   latency of the scattered read-modify-write into the triple array.
+//!   (Since §Perf iteration 6 this unrolled loop is the **scalar
+//!   tier** of the SIMD accumulators below.)
 //!
 //! [`HistogramPool`] owns the gather scratch and a free list of
 //! histogram buffers so the grower checks out per-leaf histograms
@@ -56,8 +57,24 @@
 //! identical to [`HistogramSet::build`]/[`HistogramSet::build_scalar`],
 //! so the result is bit-identical for any shard count (property-tested
 //! in `tests/histogram_parity.rs`).
+//!
+//! # The SIMD accumulators (§Perf iteration 6)
+//!
+//! The per-feature accumulation loops live in [`crate::simd::hist`]:
+//! bin codes stream in as full vectors (dense path) or a software
+//! gather (leaf subsets), the `3·code` triple-offset arithmetic runs in
+//! vector registers (AVX2/SSE2, runtime-dispatched once per process via
+//! [`crate::simd::tier`]), and the conflict-unsafe `(g, h, 1)` scatter
+//! stays scalar **in row order** — which is exactly what keeps every
+//! tier bit-identical to [`HistogramSet::build_scalar`]. The scalar
+//! tier runs the 4-way unrolled twins this module shipped with before
+//! the SIMD layer; [`HistogramSet::build_with_tier`] forces a tier for
+//! parity tests and benches, and the sharded build composes with the
+//! SIMD kernels (each worker runs the same tier-dispatched loops over
+//! its feature range).
 
 use crate::data::{BinColumns, BinMatrix};
+use crate::simd::{self, Code, Tier};
 
 /// Row-count threshold below which [`HistogramPool::build`] ignores the
 /// configured shard count and stays sequential: a scoped spawn/join
@@ -85,7 +102,12 @@ pub fn auto_shards(n_features: usize) -> usize {
     if n_features < 2 {
         return 1;
     }
-    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    // `available_parallelism` can hit procfs/sysfs on every call and is
+    // re-resolved per `Booster::new`; the machine's core count does not
+    // change under us, so probe once per process.
+    static CORES: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    let cores = *CORES
+        .get_or_init(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
     cores.min(n_features).min(AUTO_SHARD_MAX)
 }
 
@@ -103,88 +125,15 @@ pub struct HistogramSet {
     data: Vec<f64>,
 }
 
-/// Add one `(grad, hess, count)` update at triple-offset `b`.
-///
-/// The single slice reborrow keeps this to one bounds check per update;
-/// the caller guarantees `b` is a multiple of 3 derived from an in-range
-/// bin (the [`BinMatrix`] invariant: `bin(f, i) < n_bins(f)`).
-#[inline(always)]
-fn bump(data: &mut [f64], b: usize, g: f64, h: f64) {
-    let t = &mut data[b..b + 3];
-    t[0] += g;
-    t[1] += h;
-    t[2] += 1.0;
-}
-
-/// Dense accumulation: every row of `col` contributes, statistics are
-/// read sequentially. 4-way unrolled; monomorphized per bin-code width.
-fn accumulate_dense<T: Copy>(data: &mut [f64], off: usize, col: &[T], grad: &[f64], hess: &[f64])
-where
-    usize: From<T>,
-{
-    debug_assert_eq!(col.len(), grad.len());
-    debug_assert_eq!(col.len(), hess.len());
-    let n = col.len();
-    let base = 3 * off;
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let b0 = base + 3 * usize::from(col[i]);
-        let b1 = base + 3 * usize::from(col[i + 1]);
-        let b2 = base + 3 * usize::from(col[i + 2]);
-        let b3 = base + 3 * usize::from(col[i + 3]);
-        bump(data, b0, grad[i], hess[i]);
-        bump(data, b1, grad[i + 1], hess[i + 1]);
-        bump(data, b2, grad[i + 2], hess[i + 2]);
-        bump(data, b3, grad[i + 3], hess[i + 3]);
-        i += 4;
-    }
-    while i < n {
-        bump(data, base + 3 * usize::from(col[i]), grad[i], hess[i]);
-        i += 1;
-    }
-}
-
-/// Subset accumulation over gathered statistics: `og[j]`/`oh[j]` are the
-/// grad/hess of row `rows[j]`, read sequentially; only the bin lookup
-/// `col[rows[j]]` stays a random access. 4-way unrolled; monomorphized
-/// per bin-code width.
-fn accumulate_gathered<T: Copy>(
-    data: &mut [f64],
-    off: usize,
-    col: &[T],
-    rows: &[u32],
-    og: &[f64],
-    oh: &[f64],
-) where
-    usize: From<T>,
-{
-    debug_assert_eq!(rows.len(), og.len());
-    debug_assert_eq!(rows.len(), oh.len());
-    let n = rows.len();
-    let base = 3 * off;
-    let mut j = 0usize;
-    while j + 4 <= n {
-        let b0 = base + 3 * usize::from(col[rows[j] as usize]);
-        let b1 = base + 3 * usize::from(col[rows[j + 1] as usize]);
-        let b2 = base + 3 * usize::from(col[rows[j + 2] as usize]);
-        let b3 = base + 3 * usize::from(col[rows[j + 3] as usize]);
-        bump(data, b0, og[j], oh[j]);
-        bump(data, b1, og[j + 1], oh[j + 1]);
-        bump(data, b2, og[j + 2], oh[j + 2]);
-        bump(data, b3, og[j + 3], oh[j + 3]);
-        j += 4;
-    }
-    while j < n {
-        bump(data, base + 3 * usize::from(col[rows[j] as usize]), og[j], oh[j]);
-        j += 1;
-    }
-}
-
 /// One shard's share of a sharded build: accumulate the features of
 /// `range` into `chunk`, whose triples start at `offsets[range.start]`
-/// in the full set. Runs on a scoped worker thread.
+/// in the full set. Runs on a scoped worker thread; composes with the
+/// SIMD layer by running the same tier-dispatched accumulators
+/// ([`crate::simd::hist`], monomorphized per bin-code width,
+/// bit-identical on every tier) over its feature range.
 #[allow(clippy::too_many_arguments)]
-fn accumulate_shard<T: Copy>(
+fn accumulate_shard<T: Code>(
+    tier: Tier,
     chunk: &mut [f64],
     offsets: &[usize],
     range: std::ops::Range<usize>,
@@ -196,17 +145,15 @@ fn accumulate_shard<T: Copy>(
     hess: &[f64],
     og: &[f64],
     oh: &[f64],
-) where
-    usize: From<T>,
-{
+) {
     let base = offsets[range.start];
     for f in range {
         let off = offsets[f] - base;
         let col = &arena[f * n_rows..(f + 1) * n_rows];
         if dense {
-            accumulate_dense(chunk, off, col, grad, hess);
+            simd::accumulate_dense(tier, chunk, off, col, grad, hess);
         } else {
-            accumulate_gathered(chunk, off, col, rows, og, oh);
+            simd::accumulate_gathered(tier, chunk, off, col, rows, og, oh);
         }
     }
 }
@@ -243,20 +190,39 @@ impl HistogramSet {
     /// `grad`/`hess` are the per-row boosting statistics of the current
     /// round. Standalone entry point that allocates its own gather
     /// scratch — the training loop goes through [`HistogramPool::build`]
-    /// which reuses scratch across leaves.
+    /// which reuses scratch across leaves. Runs the SIMD accumulators
+    /// on the CPU's best detected tier ([`crate::simd::tier`]).
     pub fn build(&mut self, binned: &BinMatrix, rows: &[u32], grad: &[f64], hess: &[f64]) {
-        let mut og = Vec::new();
-        let mut oh = Vec::new();
-        self.build_with_scratch(binned, rows, grad, hess, &mut og, &mut oh);
+        self.build_with_tier(binned, rows, grad, hess, simd::tier());
     }
 
-    /// [`HistogramSet::build`] with caller-provided gather scratch.
+    /// [`HistogramSet::build`] on an explicit dispatch tier — the
+    /// forced-scalar twin for parity tests and the before/after pairs
+    /// in `benches/perf_hotpaths.rs`. Unsupported tiers clamp to the
+    /// detected one; every tier is bit-identical.
+    pub fn build_with_tier(
+        &mut self,
+        binned: &BinMatrix,
+        rows: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+        tier: Tier,
+    ) {
+        let mut og = Vec::new();
+        let mut oh = Vec::new();
+        self.build_with_scratch(binned, rows, grad, hess, tier, &mut og, &mut oh);
+    }
+
+    /// [`HistogramSet::build_with_tier`] with caller-provided gather
+    /// scratch.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn build_with_scratch(
         &mut self,
         binned: &BinMatrix,
         rows: &[u32],
         grad: &[f64],
         hess: &[f64],
+        tier: Tier,
         og: &mut Vec<f64>,
         oh: &mut Vec<f64>,
     ) {
@@ -267,8 +233,8 @@ impl HistogramSet {
             // dataset: iteration order is free (sums commute up to fp
             // rounding) and the indirection drops out.
             match binned.columns() {
-                BinColumns::U8(a) => self.dense_cols(a, n, grad, hess),
-                BinColumns::U16(a) => self.dense_cols(a, n, grad, hess),
+                BinColumns::U8(a) => self.dense_cols(tier, a, n, grad, hess),
+                BinColumns::U16(a) => self.dense_cols(tier, a, n, grad, hess),
             }
             return;
         }
@@ -284,34 +250,37 @@ impl HistogramSet {
             oh.push(hess[i as usize]);
         }
         match binned.columns() {
-            BinColumns::U8(a) => self.gathered_cols(a, n, rows, og, oh),
-            BinColumns::U16(a) => self.gathered_cols(a, n, rows, og, oh),
+            BinColumns::U8(a) => self.gathered_cols(tier, a, n, rows, og, oh),
+            BinColumns::U16(a) => self.gathered_cols(tier, a, n, rows, og, oh),
         }
     }
 
-    fn dense_cols<T: Copy>(&mut self, arena: &[T], n: usize, grad: &[f64], hess: &[f64])
-    where
-        usize: From<T>,
-    {
+    fn dense_cols<T: Code>(
+        &mut self,
+        tier: Tier,
+        arena: &[T],
+        n: usize,
+        grad: &[f64],
+        hess: &[f64],
+    ) {
         for f in 0..self.n_features() {
             let col = &arena[f * n..(f + 1) * n];
-            accumulate_dense(&mut self.data, self.offsets[f], col, grad, hess);
+            simd::accumulate_dense(tier, &mut self.data, self.offsets[f], col, grad, hess);
         }
     }
 
-    fn gathered_cols<T: Copy>(
+    fn gathered_cols<T: Code>(
         &mut self,
+        tier: Tier,
         arena: &[T],
         n: usize,
         rows: &[u32],
         og: &[f64],
         oh: &[f64],
-    ) where
-        usize: From<T>,
-    {
+    ) {
         for f in 0..self.n_features() {
             let col = &arena[f * n..(f + 1) * n];
-            accumulate_gathered(&mut self.data, self.offsets[f], col, rows, og, oh);
+            simd::accumulate_gathered(tier, &mut self.data, self.offsets[f], col, rows, og, oh);
         }
     }
 
@@ -371,13 +340,29 @@ impl HistogramSet {
         hess: &[f64],
         n_shards: usize,
     ) {
-        let mut og = Vec::new();
-        let mut oh = Vec::new();
-        self.build_sharded_with_scratch(binned, rows, grad, hess, n_shards, &mut og, &mut oh);
+        self.build_sharded_with_tier(binned, rows, grad, hess, n_shards, simd::tier());
     }
 
-    /// [`HistogramSet::build_sharded`] with caller-provided gather
-    /// scratch (the [`HistogramPool`] path).
+    /// [`HistogramSet::build_sharded`] on an explicit dispatch tier
+    /// (parity tests, benches). Unsupported tiers clamp to the detected
+    /// one; every (tier, shard count) combination is bit-identical.
+    pub fn build_sharded_with_tier(
+        &mut self,
+        binned: &BinMatrix,
+        rows: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+        n_shards: usize,
+        tier: Tier,
+    ) {
+        let mut og = Vec::new();
+        let mut oh = Vec::new();
+        self.build_sharded_with_scratch(binned, rows, grad, hess, n_shards, tier, &mut og, &mut oh);
+    }
+
+    /// [`HistogramSet::build_sharded_with_tier`] with caller-provided
+    /// gather scratch (the [`HistogramPool`] path).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn build_sharded_with_scratch(
         &mut self,
         binned: &BinMatrix,
@@ -385,13 +370,14 @@ impl HistogramSet {
         grad: &[f64],
         hess: &[f64],
         n_shards: usize,
+        tier: Tier,
         og: &mut Vec<f64>,
         oh: &mut Vec<f64>,
     ) {
         let nf = self.n_features();
         let k = n_shards.clamp(1, nf.max(1));
         if k <= 1 {
-            self.build_with_scratch(binned, rows, grad, hess, og, oh);
+            self.build_with_scratch(binned, rows, grad, hess, tier, og, oh);
             return;
         }
         self.reset();
@@ -438,10 +424,10 @@ impl HistogramSet {
             for (range, chunk) in shards {
                 scope.spawn(move || match binned.columns() {
                     BinColumns::U8(a) => accumulate_shard(
-                        chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
+                        tier, chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
                     ),
                     BinColumns::U16(a) => accumulate_shard(
-                        chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
+                        tier, chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
                     ),
                 });
             }
@@ -559,7 +545,8 @@ impl HistogramPool {
     /// Checkout + build in one step, reusing the pool's gather scratch.
     /// Runs sharded when the pool was configured with more than one
     /// shard (see [`HistogramPool::with_shards`]) and the leaf is big
-    /// enough to amortize thread spawn ([`SHARD_MIN_ROWS`]).
+    /// enough to amortize thread spawn ([`SHARD_MIN_ROWS`]); the
+    /// accumulators run on the CPU's best detected SIMD tier.
     pub fn build(
         &mut self,
         binned: &BinMatrix,
@@ -567,9 +554,32 @@ impl HistogramPool {
         grad: &[f64],
         hess: &[f64],
     ) -> HistogramSet {
+        self.build_with_tier(binned, rows, grad, hess, simd::tier())
+    }
+
+    /// [`HistogramPool::build`] on an explicit dispatch tier (parity
+    /// tests, benches). Unsupported tiers clamp to the detected one;
+    /// every tier is bit-identical.
+    pub fn build_with_tier(
+        &mut self,
+        binned: &BinMatrix,
+        rows: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+        tier: Tier,
+    ) -> HistogramSet {
         let shards = if rows.len() >= SHARD_MIN_ROWS { self.shards } else { 1 };
         let mut h = self.checkout();
-        h.build_sharded_with_scratch(binned, rows, grad, hess, shards, &mut self.og, &mut self.oh);
+        h.build_sharded_with_scratch(
+            binned,
+            rows,
+            grad,
+            hess,
+            shards,
+            tier,
+            &mut self.og,
+            &mut self.oh,
+        );
         h
     }
 

@@ -9,9 +9,11 @@
 //!    ([`crate::gbdt::GbdtModel`]),
 //! 2. the quantized-threshold flat engine ([`QuantizedFlatModel`]) —
 //!    the same layouts with `u16` threshold *ranks* instead of `f32`
-//!    values: rows are pre-binned once per block and descents run on
-//!    integer compares with 8 rows interleaved per tree walk; also
-//!    bit-identical, and the default dataset-scoring path,
+//!    values: rows are pre-binned once per block and descents run a
+//!    lane group of rows per tree walk through the runtime-dispatched
+//!    SIMD kernel ([`crate::simd`]: AVX2/SSE2 vectors, scalar
+//!    fallback); also bit-identical (on every dispatch tier), and the
+//!    default dataset-scoring path,
 //! 3. direct bit-packed traversal ([`crate::layout::PackedModel`]) —
 //!    what a microcontroller with the blob in flash executes,
 //! 4. the XLA runtime ([`crate::runtime`], `xla` feature) — the

@@ -20,13 +20,16 @@
 //!   [`FlatModel`] and the pointer trees. A NaN input maps to the
 //!   dedicated bin [`NAN_BIN`], which compares greater than every real
 //!   rank and so routes right, exactly like `!(x ≤ t)` on floats.
-//! * **Multi-row interleaved descent.** A complete tree's descent runs
+//! * **Vectorized multi-row descent.** A complete tree's descent runs
 //!   a fixed `depth` iterations, so [`QuantizedFlatModel::predict_batch`]
-//!   walks [`LANES`] rows per tree in lockstep: one level of all lanes,
-//!   then the next. The lane chains are independent, which lets the
-//!   compiler keep eight descents in flight (and vectorize the compare
-//!   + index arithmetic) instead of serializing on one row's
-//!   load→compare→index dependency chain.
+//!   walks a whole lane group of rows per tree in lockstep: one level
+//!   of all lanes, then the next. The lane kernel is the explicit SIMD
+//!   one in [`crate::simd::descend_complete`] — 16 `u16` lanes on AVX2,
+//!   8 on the SSE2 x86-64 baseline, and the [`LANES`]-way interleaved
+//!   scalar twin elsewhere — dispatched once per process
+//!   ([`crate::simd::tier`]) and bit-identical across tiers; block
+//!   tails and the single-row path share one scalar per-row routine
+//!   ([`crate::simd::descend_row`]), so the kernels cannot drift.
 //!
 //! * **Zero-gather columnar batches.** Column-major callers (the
 //!   dataset scorer, the coordinator batcher) skip the per-row gather
@@ -47,13 +50,15 @@ use super::flat::{complete_layout_ok, TreeRef};
 use crate::gbdt::loss::Objective;
 use crate::gbdt::tree::{Node, Tree};
 use crate::gbdt::GbdtModel;
+use crate::simd::{self, Tier};
 
 /// Rows per block of the batched predict loop (shared with the flat
 /// engine so the two batch kernels are directly comparable).
 pub use super::flat::BLOCK_ROWS;
 
-/// Rows walked in lockstep per tree in [`QuantizedFlatModel::predict_batch`].
-pub const LANES: usize = 8;
+/// Rows interleaved per tree walk by the **scalar** descent tier (the
+/// SIMD tiers widen to 8/16 hardware lanes — see [`crate::simd`]).
+pub const LANES: usize = simd::SCALAR_LANES;
 
 /// Rows binned per chunk of the columnar batch path: bounds the
 /// transient bin arena + row-major mirror to chunk-sized buffers on
@@ -303,11 +308,10 @@ impl QuantizedFlatModel {
         let n_internal = (1usize << depth) - 1;
         let feat = &self.cfeat[ioff..ioff + n_internal];
         let thr = &self.cthr[ioff..ioff + n_internal];
-        let mut i = 0usize;
-        while i < n_internal {
-            i = 2 * i + 2 - (xb[feat[i] as usize] <= thr[i]) as usize;
-        }
-        self.cleaf[loff + i - n_internal]
+        // The same per-row routine the block kernels use for their
+        // tails ([`crate::simd::descend_row`]), so single-row and
+        // batched descents cannot drift.
+        self.cleaf[loff + simd::descend_row(feat, thr, xb)]
     }
 
     #[inline]
@@ -340,10 +344,17 @@ impl QuantizedFlatModel {
     /// `out.len() × nf` codes (`xb[r * nf + f]`). This is the one
     /// descent kernel behind both [`QuantizedFlatModel::predict_batch`]
     /// and [`QuantizedFlatModel::predict_batch_columns`], so the two
-    /// entry points are bit-identical by construction.
-    fn descend_block(&self, xb: &[u16], nf: usize, out: &mut [Vec<f64>]) {
+    /// entry points are bit-identical by construction. Complete trees
+    /// run the tier-dispatched lane kernel
+    /// ([`crate::simd::descend_complete`]); leaf contributions are then
+    /// added in row order, so the summation order (and therefore every
+    /// output bit) is identical on every tier.
+    fn descend_block_tiered(&self, xb: &[u16], nf: usize, out: &mut [Vec<f64>], tier: Tier) {
         let n_rows = out.len();
         debug_assert_eq!(xb.len(), n_rows * nf);
+        assert!(n_rows <= BLOCK_ROWS, "descend_block operates on one block at a time");
+        let mut idx = [0u32; BLOCK_ROWS];
+        let idx = &mut idx[..n_rows];
         for (k, trees) in self.trees.iter().enumerate() {
             for &tref in trees {
                 match tref {
@@ -353,32 +364,9 @@ impl QuantizedFlatModel {
                         let feat = &self.cfeat[ioff..ioff + n_internal];
                         let thr = &self.cthr[ioff..ioff + n_internal];
                         let leaf = &self.cleaf[loff..loff + (1usize << depth)];
-                        // Interleaved lanes: a complete tree's descent
-                        // is exactly `depth` steps, so all lanes
-                        // advance one level per iteration with no
-                        // per-lane branching.
-                        let mut r = 0usize;
-                        while r + LANES <= n_rows {
-                            let mut idx = [0usize; LANES];
-                            for _ in 0..depth {
-                                for (l, i) in idx.iter_mut().enumerate() {
-                                    let code = xb[(r + l) * nf + feat[*i] as usize];
-                                    *i = 2 * *i + 2 - (code <= thr[*i]) as usize;
-                                }
-                            }
-                            for (l, &i) in idx.iter().enumerate() {
-                                out[r + l][k] += leaf[i - n_internal];
-                            }
-                            r += LANES;
-                        }
-                        // Scalar tail (< LANES rows).
-                        for t in r..n_rows {
-                            let row = &xb[t * nf..(t + 1) * nf];
-                            let mut i = 0usize;
-                            while i < n_internal {
-                                i = 2 * i + 2 - (row[feat[i] as usize] <= thr[i]) as usize;
-                            }
-                            out[t][k] += leaf[i - n_internal];
+                        simd::descend_complete(tier, feat, thr, depth, xb, nf, idx);
+                        for (o, &i) in out.iter_mut().zip(idx.iter()) {
+                            o[k] += leaf[i as usize];
                         }
                     }
                     TreeRef::Nodes { off } => {
@@ -393,11 +381,20 @@ impl QuantizedFlatModel {
     }
 
     /// Batched raw scores: rows are binned once per [`BLOCK_ROWS`]-row
-    /// block, then each tree walks the block with [`LANES`] rows in
-    /// lockstep — numerically identical to per-row
-    /// [`QuantizedFlatModel::predict_raw`] (same routing, same
-    /// summation order).
+    /// block, then each tree walks the block a lane group at a time
+    /// through the tier-dispatched SIMD kernel — numerically identical
+    /// to per-row [`QuantizedFlatModel::predict_raw`] (same routing,
+    /// same summation order). Runs on the CPU's best detected tier
+    /// ([`crate::simd::tier`]).
     pub fn predict_batch(&self, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        self.predict_batch_with_tier(rows, simd::tier())
+    }
+
+    /// [`QuantizedFlatModel::predict_batch`] on an explicit dispatch
+    /// tier — the forced-scalar twin for parity tests and the
+    /// before/after pairs in `benches/perf_hotpaths.rs`. Unsupported
+    /// tiers clamp to the detected one; every tier is bit-identical.
+    pub fn predict_batch_with_tier(&self, rows: &[Vec<f32>], tier: Tier) -> Vec<Vec<f64>> {
         let nf = self.n_features;
         let mut out: Vec<Vec<f64>> = rows.iter().map(|_| self.base_scores.clone()).collect();
         let mut binned = vec![0u16; BLOCK_ROWS * nf];
@@ -407,7 +404,7 @@ impl QuantizedFlatModel {
             for (r, x) in block.iter().enumerate() {
                 self.bin_row(x, &mut binned[r * nf..(r + 1) * nf]);
             }
-            self.descend_block(&binned[..block.len() * nf], nf, &mut out[start..end]);
+            self.descend_block_tiered(&binned[..block.len() * nf], nf, &mut out[start..end], tier);
         }
         out
     }
@@ -429,6 +426,18 @@ impl QuantizedFlatModel {
     /// Columns beyond the model's feature count are ignored, mirroring
     /// the row path (which reads only `x[0..n_features]`).
     pub fn predict_batch_columns(&self, cols: &[&[f32]], n_rows: usize) -> Vec<Vec<f64>> {
+        self.predict_batch_columns_with_tier(cols, n_rows, simd::tier())
+    }
+
+    /// [`QuantizedFlatModel::predict_batch_columns`] on an explicit
+    /// dispatch tier (parity tests, benches). Unsupported tiers clamp
+    /// to the detected one; every tier is bit-identical.
+    pub fn predict_batch_columns_with_tier(
+        &self,
+        cols: &[&[f32]],
+        n_rows: usize,
+        tier: Tier,
+    ) -> Vec<Vec<f64>> {
         let nf = self.n_features;
         assert!(
             cols.len() >= nf,
@@ -452,7 +461,7 @@ impl QuantizedFlatModel {
             for start in (0..cend - cstart).step_by(BLOCK_ROWS) {
                 let end = (start + BLOCK_ROWS).min(cend - cstart);
                 let rows = &mut out[cstart + start..cstart + end];
-                self.descend_block(&xb[start * nf..end * nf], nf, rows);
+                self.descend_block_tiered(&xb[start * nf..end * nf], nf, rows, tier);
             }
         }
         out
@@ -718,6 +727,28 @@ mod tests {
         for x in [below, t, above, f32::NEG_INFINITY, f32::INFINITY] {
             assert_eq!(quant.predict_raw(&[x]), model.predict_raw(&[x]), "x={x}");
         }
+    }
+
+    #[test]
+    fn forced_tiers_are_bit_identical_on_trained_model() {
+        let data = PaperDataset::BreastCancer.generate(36).select(&(0..300).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(12, 3));
+        let quant = QuantizedFlatModel::from_model(&model);
+        // 70 rows = one full block + a 6-row tail; a couple of NaN rows.
+        let mut rows: Vec<Vec<f32>> = (0..70).map(|i| data.row(i)).collect();
+        rows[3][0] = f32::NAN;
+        rows[68][1] = f32::NAN;
+        let want = quant.predict_batch_with_tier(&rows, crate::simd::Tier::Scalar);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(want[i], model.predict_raw(row), "scalar tier vs pointer, row {i}");
+        }
+        for tier in crate::simd::available_tiers() {
+            let got = quant.predict_batch_with_tier(&rows, tier);
+            assert_eq!(got, want, "tier {}", tier.name());
+        }
+        // Forcing a tier the CPU lacks clamps instead of crashing.
+        let forced = quant.predict_batch_with_tier(&rows, crate::simd::Tier::Avx2);
+        assert_eq!(forced, want);
     }
 
     #[test]

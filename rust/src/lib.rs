@@ -20,6 +20,10 @@
 //!   with multi-row interleaved descent, plus a zero-gather columnar
 //!   batch path over the shared `data::BinMatrix` bin arena) and a
 //!   direct bit-packed interpreter (what an MCU would execute),
+//! * explicit SIMD kernels with runtime CPU dispatch ([`simd`]):
+//!   AVX2/SSE2 lane kernels (scalar fallback elsewhere) behind both
+//!   hot paths — the quantized descent and histogram accumulation —
+//!   selected once per process and bit-identical across tiers,
 //! * every baseline the paper evaluates ([`baselines`]): CEGB, CCP,
 //!   random forests, and Guo et al. ordering-based ensemble pruning,
 //! * an XLA/PJRT runtime ([`runtime`], behind the `xla` cargo feature)
@@ -52,6 +56,7 @@ pub mod mcu;
 pub mod metrics;
 pub mod prng;
 pub mod runtime;
+pub mod simd;
 pub mod sweep;
 pub mod testutil;
 pub mod toad;

@@ -1,0 +1,357 @@
+//! Vectorized complete-tree descent over quantized (`u16` rank) codes.
+//!
+//! A complete tree of depth `d` descends in exactly `d` steps of
+//! `i ← 2i + 2 − (xb[feat[i]] ≤ thr[i])`, so a whole lane group of rows
+//! advances one level per iteration with no per-lane branching. The
+//! SIMD kernels keep the lane indices in `u16` vector lanes (complete
+//! trees cap at `MAX_COMPLETE_DEPTH = 10`, so the final index
+//! `≤ 2^{d+1} − 2 = 2046` has headroom through depth 15) and run the
+//! compare + index update as vector ops:
+//!
+//! * the unsigned compare `xb ≤ t` is the signed `cmpgt` of
+//!   bias-flipped operands (`x ^ 0x8000`), since SSE2/AVX2 have no
+//!   unsigned `u16` compare — `gt` lanes come back as `0xFFFF` (−1),
+//!   so `i ← 2i + 1 − gt` lands on `2i + 1` (left) or `2i + 2` (right)
+//!   exactly like the scalar expression;
+//! * the per-lane fetches of `feat[i]`, `thr[i]` and the row code stay
+//!   scalar through a lane-index spill: a hardware gather loads 32-bit
+//!   elements and would over-read past the end of the `u16` arrays.
+//!
+//! This works on the sentinel values by construction: the NaN bin
+//! `0xFFFF` exceeds every stored rank (routes right) and the
+//! pass-through rank `0xFFFF` satisfies `xb ≤ t` for every bin (routes
+//! left), both of which are plain unsigned comparisons — no special
+//! cases in any tier.
+//!
+//! [`descend_row`] is the one scalar per-row routine: it serves the
+//! single-row engine path, the scalar tier, and the sub-lane-group
+//! tails of both vector tiers, so the tail and lane kernels cannot
+//! drift apart.
+
+use super::Tier;
+
+/// Rows interleaved per iteration by the scalar tier (and the historic
+/// `LANES` of `inference::quantized`): eight independent lane chains
+/// keep the load→compare→index dependency chains of eight descents in
+/// flight even without explicit vectors.
+pub const SCALAR_LANES: usize = 8;
+
+/// Descend one row through a complete tree and return the **leaf
+/// index** (`0 .. 2^depth`). `feat`/`thr` are the tree's internal-slot
+/// arrays (`2^depth − 1` entries); `row` is the full row of bin codes
+/// (`row[feat[i]]` must be in range for every slot).
+///
+/// This is the shared per-row routine behind the quantized engine's
+/// single-row path and every block tail — one definition, no drift.
+#[inline]
+pub fn descend_row(feat: &[u16], thr: &[u16], row: &[u16]) -> usize {
+    let n_internal = feat.len();
+    let mut i = 0usize;
+    while i < n_internal {
+        i = 2 * i + 2 - (row[feat[i] as usize] <= thr[i]) as usize;
+    }
+    i - n_internal
+}
+
+/// Descend every row of a row-major code block through one complete
+/// tree, writing per-row **leaf indices** into `out`.
+///
+/// * `feat`/`thr`: the tree's `2^depth − 1` internal slots.
+/// * `xb`: `out.len() × nf` row-major bin codes (`xb[r * nf + f]`).
+/// * `tier`: requested dispatch tier; clamped to what the CPU supports
+///   ([`Tier::clamp_detected`]), so forcing a wider tier on older
+///   hardware degrades safely.
+///
+/// Every tier returns bit-identical indices (pure integer arithmetic,
+/// property-tested in `tests/engine_parity.rs`); the caller adds the
+/// leaf values in row order, so summation order is tier-independent.
+pub fn descend_complete(
+    tier: Tier,
+    feat: &[u16],
+    thr: &[u16],
+    depth: usize,
+    xb: &[u16],
+    nf: usize,
+    out: &mut [u32],
+) {
+    debug_assert!(depth <= 15, "lane indices must fit u16 (depth {depth})");
+    debug_assert_eq!(feat.len(), (1usize << depth) - 1);
+    debug_assert_eq!(thr.len(), (1usize << depth) - 1);
+    debug_assert_eq!(xb.len(), out.len() * nf);
+    let n_rows = out.len();
+    // Lane-group body, dispatched per tier; returns the tail start.
+    let r = {
+        #[cfg(target_arch = "x86_64")]
+        {
+            descend_groups_x86(tier, feat, thr, depth, xb, nf, out)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = tier;
+            descend_scalar_groups(feat, thr, depth, xb, nf, out)
+        }
+    };
+    // Shared scalar tail (fewer rows than one lane group).
+    for t in r..n_rows {
+        out[t] = descend_row(feat, thr, &xb[t * nf..(t + 1) * nf]) as u32;
+    }
+}
+
+/// x86-64 lane-group dispatch; returns the first row not processed.
+#[cfg(target_arch = "x86_64")]
+fn descend_groups_x86(
+    tier: Tier,
+    feat: &[u16],
+    thr: &[u16],
+    depth: usize,
+    xb: &[u16],
+    nf: usize,
+    out: &mut [u32],
+) -> usize {
+    let n_rows = out.len();
+    let mut r = 0usize;
+    match tier.clamp_detected() {
+        Tier::Avx2 => {
+            while r + 16 <= n_rows {
+                let lanes = &mut out[r..r + 16];
+                // SAFETY: AVX2 verified by clamp_detected above.
+                unsafe { x86::descend16_avx2(feat, thr, depth, xb, nf, r, lanes) };
+                r += 16;
+            }
+            while r + 8 <= n_rows {
+                // SAFETY: SSE2 is baseline on x86-64.
+                unsafe { x86::descend8_sse2(feat, thr, depth, xb, nf, r, &mut out[r..r + 8]) };
+                r += 8;
+            }
+            r
+        }
+        Tier::Sse2 => {
+            while r + 8 <= n_rows {
+                // SAFETY: SSE2 is baseline on x86-64.
+                unsafe { x86::descend8_sse2(feat, thr, depth, xb, nf, r, &mut out[r..r + 8]) };
+                r += 8;
+            }
+            r
+        }
+        Tier::Scalar => descend_scalar_groups(feat, thr, depth, xb, nf, out),
+    }
+}
+
+/// Scalar tier: [`SCALAR_LANES`] interleaved lane chains per iteration
+/// (independent, so the compiler can keep all eight descents in flight
+/// and autovectorize the compare + index arithmetic). Returns the
+/// first row not processed (the tail start).
+fn descend_scalar_groups(
+    feat: &[u16],
+    thr: &[u16],
+    depth: usize,
+    xb: &[u16],
+    nf: usize,
+    out: &mut [u32],
+) -> usize {
+    let n_rows = out.len();
+    let n_internal = (1usize << depth) - 1;
+    let mut r = 0usize;
+    while r + SCALAR_LANES <= n_rows {
+        let mut idx = [0usize; SCALAR_LANES];
+        for _ in 0..depth {
+            for (l, i) in idx.iter_mut().enumerate() {
+                let code = xb[(r + l) * nf + feat[*i] as usize];
+                *i = 2 * *i + 2 - (code <= thr[*i]) as usize;
+            }
+        }
+        for (l, &i) in idx.iter().enumerate() {
+            out[r + l] = (i - n_internal) as u32;
+        }
+        r += SCALAR_LANES;
+    }
+    r
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// Eight rows (`r .. r + 8`) in lockstep on 128-bit vectors;
+    /// writes leaf indices into `out[0..8]`.
+    ///
+    /// # Safety
+    /// Requires SSE2, which is architecturally guaranteed on x86-64.
+    /// All memory accesses are bounds-checked slice indexing or loads/
+    /// stores of local fixed-size arrays.
+    #[inline]
+    pub unsafe fn descend8_sse2(
+        feat: &[u16],
+        thr: &[u16],
+        depth: usize,
+        xb: &[u16],
+        nf: usize,
+        r: usize,
+        out: &mut [u32],
+    ) {
+        let bias = _mm_set1_epi16(i16::MIN);
+        let one = _mm_set1_epi16(1);
+        let mut idx = _mm_setzero_si128();
+        let mut lanes = [0u16; 8];
+        let mut codes = [0u16; 8];
+        let mut thrs = [0u16; 8];
+        for _ in 0..depth {
+            _mm_storeu_si128(lanes.as_mut_ptr().cast(), idx);
+            for l in 0..8 {
+                let i = lanes[l] as usize;
+                codes[l] = xb[(r + l) * nf + feat[i] as usize];
+                thrs[l] = thr[i];
+            }
+            let c = _mm_loadu_si128(codes.as_ptr().cast());
+            let t = _mm_loadu_si128(thrs.as_ptr().cast());
+            // Unsigned `c > t` as signed compare of bias-flipped lanes.
+            let gt = _mm_cmpgt_epi16(_mm_xor_si128(c, bias), _mm_xor_si128(t, bias));
+            // i ← 2i + 1 − gt   (gt lanes are 0 or −1)
+            idx = _mm_sub_epi16(_mm_add_epi16(_mm_add_epi16(idx, idx), one), gt);
+        }
+        _mm_storeu_si128(lanes.as_mut_ptr().cast(), idx);
+        let n_internal = (1u32 << depth) - 1;
+        for (o, &lane) in out.iter_mut().zip(&lanes) {
+            *o = lane as u32 - n_internal;
+        }
+    }
+
+    /// Sixteen rows (`r .. r + 16`) in lockstep on 256-bit vectors;
+    /// writes leaf indices into `out[0..16]`.
+    ///
+    /// # Safety
+    /// Caller must verify AVX2 support (`Tier::clamp_detected`). All
+    /// memory accesses are bounds-checked slice indexing or loads/
+    /// stores of local fixed-size arrays.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn descend16_avx2(
+        feat: &[u16],
+        thr: &[u16],
+        depth: usize,
+        xb: &[u16],
+        nf: usize,
+        r: usize,
+        out: &mut [u32],
+    ) {
+        let bias = _mm256_set1_epi16(i16::MIN);
+        let one = _mm256_set1_epi16(1);
+        let mut idx = _mm256_setzero_si256();
+        let mut lanes = [0u16; 16];
+        let mut codes = [0u16; 16];
+        let mut thrs = [0u16; 16];
+        for _ in 0..depth {
+            _mm256_storeu_si256(lanes.as_mut_ptr().cast(), idx);
+            for l in 0..16 {
+                let i = lanes[l] as usize;
+                codes[l] = xb[(r + l) * nf + feat[i] as usize];
+                thrs[l] = thr[i];
+            }
+            let c = _mm256_loadu_si256(codes.as_ptr().cast());
+            let t = _mm256_loadu_si256(thrs.as_ptr().cast());
+            let gt = _mm256_cmpgt_epi16(_mm256_xor_si256(c, bias), _mm256_xor_si256(t, bias));
+            idx = _mm256_sub_epi16(_mm256_add_epi16(_mm256_add_epi16(idx, idx), one), gt);
+        }
+        _mm256_storeu_si256(lanes.as_mut_ptr().cast(), idx);
+        let n_internal = (1u32 << depth) - 1;
+        for (o, &lane) in out.iter_mut().zip(&lanes) {
+            *o = lane as u32 - n_internal;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::testutil::prop::run_prop;
+
+    /// Reference: per-row scalar routine over the whole block.
+    fn oracle(feat: &[u16], thr: &[u16], xb: &[u16], nf: usize, out: &mut [u32]) {
+        for (t, o) in out.iter_mut().enumerate() {
+            *o = descend_row(feat, thr, &xb[t * nf..(t + 1) * nf]) as u32;
+        }
+    }
+
+    #[test]
+    fn prop_every_tier_matches_the_per_row_oracle() {
+        run_prop("simd descent == per-row oracle", 80, |g| {
+            let depth = g.usize_in(0, 10);
+            let n_internal = (1usize << depth) - 1;
+            let nf = g.usize_in(1, 9);
+            let mut rng = Pcg64::new(g.case_seed ^ 0xD15);
+            // Thresholds mix real ranks with the 0xFFFF pass-through
+            // sentinel; codes mix ranks with the 0xFFFF NaN sentinel.
+            let feat: Vec<u16> = (0..n_internal).map(|_| rng.gen_range(nf) as u16).collect();
+            let thr: Vec<u16> = (0..n_internal)
+                .map(|_| {
+                    if rng.gen_bool(0.15) {
+                        u16::MAX
+                    } else {
+                        rng.gen_range(300) as u16
+                    }
+                })
+                .collect();
+            // Row counts sweep tails of both lane widths (1..=17) and
+            // full blocks.
+            let n_rows = if g.bool(0.5) { g.usize_in(1, 17) } else { g.usize_in(18, 70) };
+            let xb: Vec<u16> = (0..n_rows * nf)
+                .map(|_| {
+                    if rng.gen_bool(0.1) {
+                        u16::MAX
+                    } else {
+                        rng.gen_range(300) as u16
+                    }
+                })
+                .collect();
+            let mut want = vec![0u32; n_rows];
+            oracle(&feat, &thr, &xb, nf, &mut want);
+            for tier in crate::simd::available_tiers() {
+                let mut got = vec![0u32; n_rows];
+                descend_complete(tier, &feat, &thr, depth, &xb, nf, &mut got);
+                assert_eq!(got, want, "tier {} depth {depth} rows {n_rows}", tier.name());
+            }
+            // An unsupported forced tier must clamp, not crash.
+            let mut clamped = vec![0u32; n_rows];
+            descend_complete(Tier::Avx2, &feat, &thr, depth, &xb, nf, &mut clamped);
+            assert_eq!(clamped, want);
+        });
+    }
+
+    #[test]
+    fn depth_zero_tree_sends_every_row_to_leaf_zero() {
+        let xb = vec![7u16; 24 * 3];
+        for tier in crate::simd::available_tiers() {
+            let mut out = vec![9u32; 24];
+            descend_complete(tier, &[], &[], 0, &xb, 3, &mut out);
+            assert!(out.iter().all(|&i| i == 0), "tier {}", tier.name());
+        }
+    }
+
+    #[test]
+    fn empty_block_is_a_no_op() {
+        for tier in crate::simd::available_tiers() {
+            let mut out: Vec<u32> = Vec::new();
+            descend_complete(tier, &[0], &[5], 1, &[], 1, &mut out);
+            assert!(out.is_empty());
+        }
+    }
+
+    #[test]
+    fn sentinel_routing_matches_scalar_semantics() {
+        // Depth-1 tree on feature 0: rank threshold 5.
+        let feat = [0u16];
+        let nf = 1usize;
+        // code ≤ 5 → left leaf 0; code > 5 (incl. the NaN bin) → leaf 1.
+        let thr_real = [5u16];
+        // Pass-through slot: every code (incl. NaN bin) routes left.
+        let thr_pass = [u16::MAX];
+        let xb = [0u16, 5, 6, u16::MAX, 3, 7, u16::MAX, 5, 1];
+        for tier in crate::simd::available_tiers() {
+            let mut out = vec![0u32; xb.len()];
+            descend_complete(tier, &feat, &thr_real, 1, &xb, nf, &mut out);
+            assert_eq!(out, [0, 0, 1, 1, 0, 1, 1, 0, 0], "tier {}", tier.name());
+            descend_complete(tier, &feat, &thr_pass, 1, &xb, nf, &mut out);
+            assert!(out.iter().all(|&i| i == 0), "pass-through must route left");
+        }
+    }
+}

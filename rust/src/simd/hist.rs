@@ -1,0 +1,453 @@
+//! Vectorized histogram accumulation over `u8`/`u16` bin-code columns.
+//!
+//! One histogram update is `triples[3·(off + code)] += (g, h, 1)` —
+//! a scattered read-modify-write that cannot be vectorized naively,
+//! because two rows of the same leaf can land in the same bin (a
+//! vector scatter would need conflict detection, and reordering the
+//! adds would break the bit-parity contract with the scalar oracle).
+//! What *does* vectorize profitably:
+//!
+//! * **code streaming** — the dense path loads a full lane group of
+//!   contiguous codes per iteration (16 `u8`s in one 128-bit load);
+//!   the gathered path fills the same lane buffer with a software
+//!   gather (`col[rows[j]]`; a hardware gather reads 32-bit elements
+//!   and would over-read past the end of sub-32-bit arrays);
+//! * **offset arithmetic** — widening `u8`/`u16` codes to `u32` and
+//!   computing `3·code` happens entirely in vector registers, so the
+//!   scalar scatter loop receives ready-made triple offsets and is
+//!   pure read-modify-write;
+//! * the scatter itself applies the `(g, h, 1)` bumps **in row
+//!   order**, which is what keeps every tier bit-identical to
+//!   [`HistogramSet::build_scalar`](crate::gbdt::histogram::HistogramSet::build_scalar)
+//!   (property-tested in `tests/histogram_parity.rs`).
+//!
+//! The kernels are monomorphized per code width via the sealed
+//! [`Code`] trait (`u8` for the common `max_bins ≤ 256` arena, `u16`
+//! for wide features), mirroring `BinMatrix::columns` dispatch. The
+//! scalar tier runs the 4-way unrolled twins — the exact loops the
+//! histogram build shipped before this module existed.
+
+use super::Tier;
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u8 {}
+    impl Sealed for u16 {}
+}
+
+/// Bin-code element width of the `BinMatrix` arena: `u8` or `u16`
+/// (sealed — the SIMD kernels pun slices through raw pointers based on
+/// [`Code::IS_U8`], which is only sound for exactly these two types).
+pub trait Code: sealed::Sealed + Copy + 'static {
+    /// Whether this is the `u8` arena (`false` ⇒ `u16`).
+    const IS_U8: bool;
+    /// Lane-buffer initializer for the software gather.
+    const ZERO: Self;
+    /// The code as a bin index.
+    fn idx(self) -> usize;
+}
+
+impl Code for u8 {
+    const IS_U8: bool = true;
+    const ZERO: u8 = 0;
+    #[inline(always)]
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+impl Code for u16 {
+    const IS_U8: bool = false;
+    const ZERO: u16 = 0;
+    #[inline(always)]
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Add one `(grad, hess, count)` update at triple-offset `b`.
+///
+/// The single slice reborrow keeps this to one bounds check per update;
+/// the caller guarantees `b` is a multiple of 3 derived from an
+/// in-range bin (the `BinMatrix` invariant: `bin(f, i) < n_bins(f)`).
+#[inline(always)]
+fn bump(data: &mut [f64], b: usize, g: f64, h: f64) {
+    let t = &mut data[b..b + 3];
+    t[0] += g;
+    t[1] += h;
+    t[2] += 1.0;
+}
+
+/// Apply one lane group of bumps in row order. `off3[j]` is `3·code`
+/// of the group's `j`-th row; `base3` is the feature's triple base.
+#[inline(always)]
+fn scatter(data: &mut [f64], base3: usize, off3: &[u32], g: &[f64], h: &[f64]) {
+    for ((&o, &gj), &hj) in off3.iter().zip(g).zip(h) {
+        bump(data, base3 + o as usize, gj, hj);
+    }
+}
+
+/// Dense accumulation: every row of `col` contributes; `grad`/`hess`
+/// are read sequentially. Tier-dispatched; all tiers bit-identical.
+pub fn accumulate_dense<T: Code>(
+    tier: Tier,
+    data: &mut [f64],
+    off: usize,
+    col: &[T],
+    grad: &[f64],
+    hess: &[f64],
+) {
+    debug_assert_eq!(col.len(), grad.len());
+    debug_assert_eq!(col.len(), hess.len());
+    let n = col.len();
+    let base3 = 3 * off;
+    // Lane-group body, dispatched per tier; returns the tail start.
+    let mut i = {
+        #[cfg(target_arch = "x86_64")]
+        {
+            dense_groups_x86(tier, data, base3, col, grad, hess)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = tier;
+            dense_scalar_unrolled(data, base3, col, grad, hess)
+        }
+    };
+    while i < n {
+        bump(data, base3 + 3 * col[i].idx(), grad[i], hess[i]);
+        i += 1;
+    }
+}
+
+/// x86-64 lane-group dispatch of the dense path; returns the first row
+/// not processed.
+#[cfg(target_arch = "x86_64")]
+fn dense_groups_x86<T: Code>(
+    tier: Tier,
+    data: &mut [f64],
+    base3: usize,
+    col: &[T],
+    grad: &[f64],
+    hess: &[f64],
+) -> usize {
+    let n = col.len();
+    let mut i = 0usize;
+    match tier.clamp_detected() {
+        Tier::Avx2 => {
+            let mut off3 = [0u32; 16];
+            while i + 16 <= n {
+                // SAFETY: AVX2 verified by clamp_detected; ≥ 16 codes
+                // remain at `col[i..]`.
+                unsafe { x86::offsets16_avx2::<T>(col.as_ptr().add(i), &mut off3) };
+                scatter(data, base3, &off3, &grad[i..i + 16], &hess[i..i + 16]);
+                i += 16;
+            }
+            if i + 8 <= n {
+                let mut off8 = [0u32; 8];
+                // SAFETY: SSE2 is baseline on x86-64; ≥ 8 codes remain
+                // at `col[i..]`.
+                unsafe { x86::offsets8_sse2::<T>(col.as_ptr().add(i), &mut off8) };
+                scatter(data, base3, &off8, &grad[i..i + 8], &hess[i..i + 8]);
+                i += 8;
+            }
+            i
+        }
+        Tier::Sse2 => {
+            let mut off3 = [0u32; 8];
+            while i + 8 <= n {
+                // SAFETY: SSE2 is baseline on x86-64; ≥ 8 codes remain
+                // at `col[i..]`.
+                unsafe { x86::offsets8_sse2::<T>(col.as_ptr().add(i), &mut off3) };
+                scatter(data, base3, &off3, &grad[i..i + 8], &hess[i..i + 8]);
+                i += 8;
+            }
+            i
+        }
+        Tier::Scalar => dense_scalar_unrolled(data, base3, col, grad, hess),
+    }
+}
+
+/// Subset accumulation over gathered statistics: `og[j]`/`oh[j]` are
+/// the grad/hess of row `rows[j]`, read sequentially; the bin lookup
+/// `col[rows[j]]` is a software gather into the lane buffer.
+/// Tier-dispatched; all tiers bit-identical.
+pub fn accumulate_gathered<T: Code>(
+    tier: Tier,
+    data: &mut [f64],
+    off: usize,
+    col: &[T],
+    rows: &[u32],
+    og: &[f64],
+    oh: &[f64],
+) {
+    debug_assert_eq!(rows.len(), og.len());
+    debug_assert_eq!(rows.len(), oh.len());
+    let n = rows.len();
+    let base3 = 3 * off;
+    // Lane-group body, dispatched per tier; returns the tail start.
+    let mut j = {
+        #[cfg(target_arch = "x86_64")]
+        {
+            gathered_groups_x86(tier, data, base3, col, rows, og, oh)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = tier;
+            gathered_scalar_unrolled(data, base3, col, rows, og, oh)
+        }
+    };
+    while j < n {
+        bump(data, base3 + 3 * col[rows[j] as usize].idx(), og[j], oh[j]);
+        j += 1;
+    }
+}
+
+/// x86-64 lane-group dispatch of the gathered path; returns the first
+/// row not processed.
+#[cfg(target_arch = "x86_64")]
+fn gathered_groups_x86<T: Code>(
+    tier: Tier,
+    data: &mut [f64],
+    base3: usize,
+    col: &[T],
+    rows: &[u32],
+    og: &[f64],
+    oh: &[f64],
+) -> usize {
+    let n = rows.len();
+    let mut j = 0usize;
+    match tier.clamp_detected() {
+        Tier::Avx2 => {
+            let mut codes = [T::ZERO; 16];
+            let mut off3 = [0u32; 16];
+            while j + 16 <= n {
+                for (c, &r) in codes.iter_mut().zip(&rows[j..j + 16]) {
+                    *c = col[r as usize];
+                }
+                // SAFETY: AVX2 verified by clamp_detected; the lane
+                // buffer holds 16 codes.
+                unsafe { x86::offsets16_avx2::<T>(codes.as_ptr(), &mut off3) };
+                scatter(data, base3, &off3, &og[j..j + 16], &oh[j..j + 16]);
+                j += 16;
+            }
+            if j + 8 <= n {
+                let mut off8 = [0u32; 8];
+                for (c, &r) in codes.iter_mut().take(8).zip(&rows[j..j + 8]) {
+                    *c = col[r as usize];
+                }
+                // SAFETY: SSE2 is baseline on x86-64; the lane buffer
+                // holds ≥ 8 codes.
+                unsafe { x86::offsets8_sse2::<T>(codes.as_ptr(), &mut off8) };
+                scatter(data, base3, &off8, &og[j..j + 8], &oh[j..j + 8]);
+                j += 8;
+            }
+            j
+        }
+        Tier::Sse2 => {
+            let mut codes = [T::ZERO; 8];
+            let mut off3 = [0u32; 8];
+            while j + 8 <= n {
+                for (c, &r) in codes.iter_mut().zip(&rows[j..j + 8]) {
+                    *c = col[r as usize];
+                }
+                // SAFETY: SSE2 is baseline on x86-64; the lane buffer
+                // holds 8 codes.
+                unsafe { x86::offsets8_sse2::<T>(codes.as_ptr(), &mut off3) };
+                scatter(data, base3, &off3, &og[j..j + 8], &oh[j..j + 8]);
+                j += 8;
+            }
+            j
+        }
+        Tier::Scalar => gathered_scalar_unrolled(data, base3, col, rows, og, oh),
+    }
+}
+
+/// Scalar tier of the dense path: the 4-way unrolled loop the build
+/// shipped with before the SIMD layer (four independent bin updates in
+/// flight). Returns the first row not processed.
+fn dense_scalar_unrolled<T: Code>(
+    data: &mut [f64],
+    base3: usize,
+    col: &[T],
+    grad: &[f64],
+    hess: &[f64],
+) -> usize {
+    let n = col.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let b0 = base3 + 3 * col[i].idx();
+        let b1 = base3 + 3 * col[i + 1].idx();
+        let b2 = base3 + 3 * col[i + 2].idx();
+        let b3 = base3 + 3 * col[i + 3].idx();
+        bump(data, b0, grad[i], hess[i]);
+        bump(data, b1, grad[i + 1], hess[i + 1]);
+        bump(data, b2, grad[i + 2], hess[i + 2]);
+        bump(data, b3, grad[i + 3], hess[i + 3]);
+        i += 4;
+    }
+    i
+}
+
+/// Scalar tier of the gathered path: 4-way unrolled like
+/// [`dense_scalar_unrolled`]. Returns the first row not processed.
+fn gathered_scalar_unrolled<T: Code>(
+    data: &mut [f64],
+    base3: usize,
+    col: &[T],
+    rows: &[u32],
+    og: &[f64],
+    oh: &[f64],
+) -> usize {
+    let n = rows.len();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let b0 = base3 + 3 * col[rows[j] as usize].idx();
+        let b1 = base3 + 3 * col[rows[j + 1] as usize].idx();
+        let b2 = base3 + 3 * col[rows[j + 2] as usize].idx();
+        let b3 = base3 + 3 * col[rows[j + 3] as usize].idx();
+        bump(data, b0, og[j], oh[j]);
+        bump(data, b1, og[j + 1], oh[j + 1]);
+        bump(data, b2, og[j + 2], oh[j + 2]);
+        bump(data, b3, og[j + 3], oh[j + 3]);
+        j += 4;
+    }
+    j
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::Code;
+    use core::arch::x86_64::*;
+
+    /// Widen 8 codes at `codes` to `u32` and store `3·code` into `out`.
+    ///
+    /// # Safety
+    /// Requires SSE2 (x86-64 baseline) and at least 8 readable codes
+    /// at `codes`.
+    #[inline]
+    pub unsafe fn offsets8_sse2<T: Code>(codes: *const T, out: &mut [u32; 8]) {
+        let z = _mm_setzero_si128();
+        // u16x8 lane group, whichever the source width.
+        let w = if T::IS_U8 {
+            let v = _mm_loadl_epi64(codes.cast()); // 8 bytes
+            _mm_unpacklo_epi8(v, z)
+        } else {
+            _mm_loadu_si128(codes.cast()) // 8 u16s
+        };
+        let lo = _mm_unpacklo_epi16(w, z); // u32x4
+        let hi = _mm_unpackhi_epi16(w, z); // u32x4
+        // 3x = x + (x + x): no multiply unit needed on SSE2.
+        let lo3 = _mm_add_epi32(lo, _mm_add_epi32(lo, lo));
+        let hi3 = _mm_add_epi32(hi, _mm_add_epi32(hi, hi));
+        _mm_storeu_si128(out.as_mut_ptr().cast(), lo3);
+        _mm_storeu_si128(out.as_mut_ptr().add(4).cast(), hi3);
+    }
+
+    /// Widen 16 codes at `codes` to `u32` and store `3·code` into `out`.
+    ///
+    /// # Safety
+    /// Caller must verify AVX2 support (`Tier::clamp_detected`) and
+    /// provide at least 16 readable codes at `codes`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn offsets16_avx2<T: Code>(codes: *const T, out: &mut [u32; 16]) {
+        let (lo, hi) = if T::IS_U8 {
+            let v = _mm_loadu_si128(codes.cast()); // 16 bytes
+            let w = _mm256_cvtepu8_epi16(v); // u16x16
+            (
+                _mm256_cvtepu16_epi32(_mm256_castsi256_si128(w)),
+                _mm256_cvtepu16_epi32(_mm256_extracti128_si256::<1>(w)),
+            )
+        } else {
+            (
+                _mm256_cvtepu16_epi32(_mm_loadu_si128(codes.cast())),
+                _mm256_cvtepu16_epi32(_mm_loadu_si128(codes.cast::<__m128i>().add(1))),
+            )
+        };
+        let lo3 = _mm256_add_epi32(lo, _mm256_add_epi32(lo, lo));
+        let hi3 = _mm256_add_epi32(hi, _mm256_add_epi32(hi, hi));
+        _mm256_storeu_si256(out.as_mut_ptr().cast(), lo3);
+        _mm256_storeu_si256(out.as_mut_ptr().cast::<__m256i>().add(1), hi3);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::testutil::prop::run_prop;
+
+    /// Reference: the one-update-per-row scalar loop.
+    fn oracle<T: Code>(
+        data: &mut [f64],
+        off: usize,
+        col: &[T],
+        rows: &[u32],
+        g: &[f64],
+        h: &[f64],
+    ) {
+        for &r in rows {
+            let r = r as usize;
+            let b = 3 * (off + col[r].idx());
+            data[b] += g[r];
+            data[b + 1] += h[r];
+            data[b + 2] += 1.0;
+        }
+    }
+
+    fn check_width<T: Code + From<u8>>(g: &mut crate::testutil::prop::Gen, n_bins: usize) {
+        let n = g.usize_in(1, 120);
+        let mut rng = Pcg64::new(g.case_seed ^ 0xA1);
+        let col: Vec<T> =
+            (0..n).map(|_| T::from(rng.gen_range(n_bins.min(256)) as u8)).collect();
+        let grad: Vec<f64> = (0..n).map(|_| rng.gen_normal()).collect();
+        let hess: Vec<f64> = (0..n).map(|_| rng.gen_uniform(0.01, 2.0)).collect();
+        let all: Vec<u32> = (0..n as u32).collect();
+        let subset: Vec<u32> = all.iter().copied().filter(|_| rng.gen_bool(0.5)).collect();
+
+        let mut want = vec![0.0f64; 3 * (n_bins + 4)];
+        oracle(&mut want, 1, &col, &all, &grad, &hess);
+        for tier in crate::simd::available_tiers() {
+            let mut got = vec![0.0f64; 3 * (n_bins + 4)];
+            accumulate_dense(tier, &mut got, 1, &col, &grad, &hess);
+            assert_bits(&want, &got, tier);
+        }
+
+        let og: Vec<f64> = subset.iter().map(|&r| grad[r as usize]).collect();
+        let oh: Vec<f64> = subset.iter().map(|&r| hess[r as usize]).collect();
+        let mut want = vec![0.0f64; 3 * (n_bins + 4)];
+        oracle(&mut want, 1, &col, &subset, &grad, &hess);
+        for tier in crate::simd::available_tiers() {
+            let mut got = vec![0.0f64; 3 * (n_bins + 4)];
+            accumulate_gathered(tier, &mut got, 1, &col, &subset, &og, &oh);
+            assert_bits(&want, &got, tier);
+        }
+    }
+
+    fn assert_bits(want: &[f64], got: &[f64], tier: Tier) {
+        for (i, (w, g)) in want.iter().zip(got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "tier {} slot {i}: {w} vs {g}", tier.name());
+        }
+    }
+
+    #[test]
+    fn prop_every_tier_matches_the_scalar_oracle() {
+        run_prop("simd histogram == scalar oracle", 60, |g| {
+            check_width::<u8>(g, 37);
+            check_width::<u16>(g, 37);
+        });
+    }
+
+    #[test]
+    fn empty_and_single_row_inputs() {
+        for tier in crate::simd::available_tiers() {
+            let mut data = vec![0.0f64; 9];
+            accumulate_dense::<u8>(tier, &mut data, 0, &[], &[], &[]);
+            assert!(data.iter().all(|&v| v == 0.0));
+            accumulate_dense::<u8>(tier, &mut data, 0, &[2], &[1.5], &[0.5]);
+            assert_eq!(&data[6..9], &[1.5, 0.5, 1.0]);
+            let mut data = vec![0.0f64; 9];
+            accumulate_gathered::<u16>(tier, &mut data, 0, &[9, 1, 9], &[1], &[2.0], &[3.0]);
+            assert_eq!(&data[3..6], &[2.0, 3.0, 1.0]);
+        }
+    }
+}

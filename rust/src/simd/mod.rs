@@ -1,0 +1,167 @@
+//! Explicit SIMD kernels with runtime CPU dispatch.
+//!
+//! The two hottest loops in the system — the quantized engine's
+//! complete-tree descent (`inference::quantized`) and histogram
+//! accumulation (`gbdt::histogram`) — previously relied on the
+//! autovectorizer: the descent interleaved 8 independent scalar lane
+//! chains and the accumulators were 4-way unrolled. This module makes
+//! the vector shape explicit:
+//!
+//! * **Runtime dispatch, selected once.** [`tier`] probes the CPU a
+//!   single time (cached in a `OnceLock`) and returns the best
+//!   [`Tier`]: AVX2 (16 `u16` lanes) when detected, SSE2 (8 lanes) as
+//!   the x86-64 baseline, and a portable scalar fallback everywhere
+//!   else. Every kernel also accepts an explicit tier so tests and
+//!   benches can force the scalar twin and assert bit-parity.
+//! * **Descent** ([`descend_complete`]): one tree level advances a
+//!   whole lane group with a vector unsigned-`u16` compare (signed
+//!   `cmpgt` over bias-flipped operands — SSE2 has no unsigned compare)
+//!   and vector index arithmetic `i ← 2i + 2 − (xb ≤ t)`. Node/code
+//!   fetches per lane stay scalar (a hardware gather of `u16` elements
+//!   would over-read past slice ends), which is exactly the memory-ILP
+//!   shape PACSET identifies; the compare + index chain is where the
+//!   vector units help. Complete trees cap at depth
+//!   `MAX_COMPLETE_DEPTH = 10`, so lane indices (`≤ 2^{d+1} − 2`) fit
+//!   `u16` lanes with headroom through depth 15.
+//! * **Histogram accumulation** ([`hist`]): bin codes stream in as
+//!   full vectors (dense path) or a software gather (leaf subsets),
+//!   and the triple-offset arithmetic `3·code` is widened and computed
+//!   in vector registers; the read-modify-write scatter into the
+//!   `[g, h, c]` triples stays scalar **in row order** — two rows of a
+//!   leaf can land in the same bin, so a vector scatter would need
+//!   conflict detection, and preserving row order is what keeps every
+//!   tier bit-identical to the scalar oracle.
+//!
+//! **Safety boundary:** all `unsafe` (the `core::arch` intrinsics and
+//! the width-punning code-pointer casts) lives inside this module,
+//! behind tier checks that clamp a requested tier to what the CPU
+//! actually supports ([`Tier::clamp_detected`]). Everything exported is
+//! a safe function; the rest of the crate contains no `unsafe` at all.
+//!
+//! **Bit-parity contract:** for identical inputs, every tier of every
+//! kernel produces bit-identical outputs — descent is pure integer
+//! arithmetic, and histogram accumulation performs the same `f64`
+//! additions in the same row order per feature. Property-tested in
+//! `tests/engine_parity.rs` and `tests/histogram_parity.rs` across all
+//! tiers the running CPU supports.
+
+pub mod descent;
+pub mod hist;
+
+pub use descent::{descend_complete, descend_row, SCALAR_LANES};
+pub use hist::{accumulate_dense, accumulate_gathered, Code};
+
+use std::sync::OnceLock;
+
+/// A dispatch tier, ordered from portable to widest. `Ord` follows
+/// capability: `Scalar < Sse2 < Avx2`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    /// Portable fallback: the 8-row interleaved scalar descent and the
+    /// 4-way unrolled accumulators (the autovectorizable twins every
+    /// SIMD path is tested against). The only tier on non-x86-64.
+    Scalar,
+    /// x86-64 baseline: 128-bit vectors, 8 `u16` lanes.
+    Sse2,
+    /// 256-bit vectors, 16 `u16` lanes (runtime-detected).
+    Avx2,
+}
+
+impl Tier {
+    /// Human-readable name (bench output, CI logs, JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Sse2 => "sse2",
+            Tier::Avx2 => "avx2",
+        }
+    }
+
+    /// Probe the CPU (uncached — use [`tier`] on hot paths).
+    pub fn detect() -> Tier {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                Tier::Avx2
+            } else {
+                // SSE2 is architecturally guaranteed on x86-64.
+                Tier::Sse2
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            Tier::Scalar
+        }
+    }
+
+    /// Clamp a *requested* tier to what this CPU supports, so forcing
+    /// e.g. `Tier::Avx2` on an SSE2-only machine degrades safely (and
+    /// bit-identically) instead of executing unsupported instructions.
+    /// Every kernel entry point routes through this.
+    pub fn clamp_detected(self) -> Tier {
+        self.min(tier())
+    }
+}
+
+/// The cached dispatch tier of this machine: detected once on first
+/// use, then a single atomic load. This is what the production entry
+/// points (`QuantizedFlatModel::predict_batch`, `HistogramPool::build`,
+/// …) run with; the `*_with_tier` twins exist for parity tests and the
+/// before/after bench pairs.
+pub fn tier() -> Tier {
+    static TIER: OnceLock<Tier> = OnceLock::new();
+    *TIER.get_or_init(Tier::detect)
+}
+
+/// Every tier the running CPU can actually execute, widest last —
+/// what the cross-tier parity property tests iterate.
+pub fn available_tiers() -> Vec<Tier> {
+    [Tier::Scalar, Tier::Sse2, Tier::Avx2]
+        .into_iter()
+        .filter(|t| *t <= tier())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detection_is_stable_and_ordered() {
+        let t = tier();
+        assert_eq!(t, tier(), "cached tier must be stable");
+        assert_eq!(t, Tier::detect(), "cache must hold the detected tier");
+        assert!(Tier::Scalar < Tier::Sse2 && Tier::Sse2 < Tier::Avx2);
+        #[cfg(target_arch = "x86_64")]
+        assert!(t >= Tier::Sse2, "SSE2 is the x86-64 baseline");
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(t, Tier::Scalar);
+    }
+
+    #[test]
+    fn clamp_degrades_unsupported_tiers() {
+        for requested in [Tier::Scalar, Tier::Sse2, Tier::Avx2] {
+            let eff = requested.clamp_detected();
+            assert!(eff <= tier());
+            assert!(eff <= requested);
+        }
+        assert_eq!(Tier::Scalar.clamp_detected(), Tier::Scalar);
+    }
+
+    #[test]
+    fn available_tiers_is_prefix_ending_at_detected() {
+        let avail = available_tiers();
+        assert_eq!(avail.first(), Some(&Tier::Scalar));
+        assert_eq!(avail.last(), Some(&tier()));
+        for w in avail.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn names_are_distinct() {
+        assert_eq!(Tier::Scalar.name(), "scalar");
+        assert_eq!(Tier::Sse2.name(), "sse2");
+        assert_eq!(Tier::Avx2.name(), "avx2");
+    }
+}

@@ -21,10 +21,18 @@
 //!
 //! Every property also injects NaN feature values: all engines must
 //! route NaN right at every split (the `x ≤ t` predicate is false).
+//!
+//! The SIMD properties additionally pin the dispatch tiers against each
+//! other: `QuantizedFlatModel::predict_batch_with_tier` must be
+//! **bit-identical** on every tier the CPU supports (scalar, SSE2,
+//! AVX2), across NaN rows, every lane-tail length, and both `BinMatrix`
+//! arena widths on the columnar path.
 
-use toad::gbdt::{booster, GbdtParams};
+use toad::gbdt::loss::Objective;
+use toad::gbdt::{booster, GbdtModel, GbdtParams, Node, Tree};
 use toad::inference::{FlatModel, QuantizedFlatModel};
 use toad::layout::{encode, EncodeOptions, FeatureInfo, PackedModel};
+use toad::simd::{self, Tier};
 use toad::testutil::prop::run_prop;
 
 #[test]
@@ -151,4 +159,138 @@ fn engines_agree_on_off_data_probes() {
             assert!((packed.predict_raw(probe)[0] - pointer[0]).abs() < 1e-4, "probe {i}");
         }
     });
+}
+
+/// Every SIMD dispatch tier must produce bit-identical batches to the
+/// forced-scalar twin on trained models — row path and columnar path,
+/// NaN rows included, with row counts sweeping the lane-group tails.
+#[test]
+fn prop_simd_descent_tiers_match_forced_scalar() {
+    run_prop("simd descent tiers == forced scalar", 10, |g| {
+        let data = g.regression_dataset(40, 200, 6);
+        let rounds = g.usize_in(2, 8);
+        let depth = g.usize_in(1, 5);
+        let model = booster::train(&data, GbdtParams::paper(rounds, depth));
+        let quant = QuantizedFlatModel::from_model(&model);
+        // Half the cases use 1..=17 rows (every tail length of both the
+        // 8- and 16-lane kernels), half use bigger multi-group blocks.
+        let n_rows = if g.bool(0.5) { g.usize_in(1, 17) } else { g.usize_in(18, 80) };
+        let rows: Vec<Vec<f32>> = (0..n_rows)
+            .map(|i| {
+                let mut r = data.row(i % data.n_rows());
+                if g.bool(0.3) {
+                    let f = g.usize(r.len());
+                    r[f] = f32::NAN;
+                }
+                r
+            })
+            .collect();
+        let cols: Vec<Vec<f32>> =
+            (0..data.n_features()).map(|f| rows.iter().map(|r| r[f]).collect()).collect();
+        let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let want = quant.predict_batch_with_tier(&rows, Tier::Scalar);
+        // Ground truth: the forced-scalar twin matches the pointer trees.
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(want[i], model.predict_raw(row), "scalar tier vs pointer, row {i}");
+        }
+        for tier in simd::available_tiers() {
+            assert_eq!(
+                quant.predict_batch_with_tier(&rows, tier),
+                want,
+                "row batch, tier {}",
+                tier.name()
+            );
+            assert_eq!(
+                quant.predict_batch_columns_with_tier(&col_refs, n_rows, tier),
+                want,
+                "columnar batch, tier {}",
+                tier.name()
+            );
+        }
+        // A tier the CPU may lack must clamp, never crash or diverge.
+        assert_eq!(quant.predict_batch_with_tier(&rows, Tier::Avx2), want);
+    });
+}
+
+/// Deterministic tier parity on a handmade model whose feature 0 uses
+/// 300 distinct thresholds — more than 256 bins, so the columnar path's
+/// `BinMatrix` arena is forced to `u16` width (the trained-model
+/// property above stays in the common `u8` regime). Also walks every
+/// tail length 1..=17 explicitly and includes a deep general-layout
+/// tree so the block kernel mixes complete and node descents.
+#[test]
+fn simd_tiers_agree_on_wide_threshold_tables_and_every_tail_length() {
+    let mut trees = Vec::new();
+    for k in 0..300u32 {
+        let t = -1.5 + 0.01 * k as f32;
+        trees.push(Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 0, threshold: t, left: 1, right: 2 },
+                Node::Leaf { value: 0.25 + k as f64 * 0.001 },
+                Node::Leaf { value: -0.5 + k as f64 * 0.002 },
+            ],
+        });
+    }
+    // A depth-14 left-leaning chain on feature 1: too deep for the
+    // complete layout, so it takes the general node path in the block.
+    let mut nodes = Vec::new();
+    for d in 0..14usize {
+        let idx = nodes.len();
+        nodes.push(Node::Internal {
+            feature: 1,
+            bin: d as u16,
+            threshold: -(d as f32) * 0.1,
+            left: idx + 2,
+            right: idx + 1,
+        });
+        nodes.push(Node::Leaf { value: d as f64 });
+    }
+    nodes.push(Node::Leaf { value: -7.0 });
+    trees.push(Tree { nodes });
+    let model = GbdtModel {
+        objective: Objective::L2,
+        base_scores: vec![0.1],
+        trees: vec![trees],
+        n_features: 2,
+        name: "simd-wide".into(),
+    };
+    let quant = QuantizedFlatModel::from_model(&model);
+    assert!(quant.n_thresholds() > 256, "feature 0 must overflow the u8 arena");
+
+    // Probe rows straddle threshold boundaries; every 7th has a NaN.
+    let all_rows: Vec<Vec<f32>> = (0..70)
+        .map(|i| {
+            let x = -2.0 + 0.037 * i as f32;
+            let y = -1.6 + 0.11 * i as f32;
+            match i % 7 {
+                0 => vec![f32::NAN, y],
+                3 => vec![x, f32::NAN],
+                _ => vec![x, y],
+            }
+        })
+        .collect();
+    for n in (1..=17).chain([31, 32, 33, 63, 64, 65, 70]) {
+        let rows = &all_rows[..n];
+        let cols: Vec<Vec<f32>> =
+            (0..2).map(|f| rows.iter().map(|r| r[f]).collect()).collect();
+        let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let want = quant.predict_batch_with_tier(rows, Tier::Scalar);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(want[i], model.predict_raw(row), "n={n} row {i} vs pointer");
+        }
+        for tier in simd::available_tiers() {
+            assert_eq!(
+                quant.predict_batch_with_tier(rows, tier),
+                want,
+                "n={n}, tier {}",
+                tier.name()
+            );
+            assert_eq!(
+                quant.predict_batch_columns_with_tier(&col_refs, n, tier),
+                want,
+                "n={n} columnar (u16 arena), tier {}",
+                tier.name()
+            );
+        }
+    }
 }

@@ -7,7 +7,10 @@
 //! Shard counts cover the degenerate (1 = sequential), typical (2, 3)
 //! and oversubscribed (7 > most feature counts, forcing the clamp)
 //! cases; row sets cover the whole dataset (dense fast path), random
-//! subsets (gathered path), single rows, and the empty leaf.
+//! subsets (gathered path), single rows, and the empty leaf. The SIMD
+//! property additionally pins every dispatch tier (scalar, SSE2, AVX2)
+//! of the accumulators — alone, sharded, and pooled — against the same
+//! oracle on both the u8 and u16 arenas.
 
 use toad::data::BinMatrix;
 use toad::gbdt::histogram::{HistogramPool, HistogramSet};
@@ -129,4 +132,56 @@ fn sharded_empty_row_set_yields_zero_histogram() {
             }
         }
     }
+}
+
+/// Every SIMD dispatch tier of the accumulators — dense, gathered,
+/// sharded, and pooled (recycled buffers included) — must be
+/// **bit-identical** to the scalar oracle on both arena widths, with
+/// row counts sweeping the 4/8/16-lane tails and row sets covering the
+/// whole dataset, random subsets, a single row, and the empty leaf.
+#[test]
+fn prop_simd_histogram_tiers_match_scalar_oracle() {
+    use toad::simd::{self, Tier};
+    run_prop("simd histogram tiers == scalar oracle", 25, |g| {
+        // Tail-heavy half: 1..=40 rows crosses every lane-group width.
+        let n = if g.bool(0.5) { g.usize_in(1, 40) } else { g.usize_in(41, 300) };
+        let d = g.usize_in(1, 6);
+        // Occasionally force a wide feature so the u16 arena kernels
+        // are exercised alongside the common u8 ones.
+        let bins_per: Vec<usize> = (0..d)
+            .map(|_| if g.bool(0.15) { g.usize_in(260, 400) } else { g.usize_in(2, 16) })
+            .collect();
+        let binned = BinMatrix::from_fn(n, &bins_per, |f, _| g.usize(bins_per[f]) as u16);
+        let grad: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let hess: Vec<f64> = (0..n).map(|_| g.f64_in(0.01, 2.0)).collect();
+        let all: Vec<u32> = (0..n as u32).collect();
+        let subset: Vec<u32> = all.iter().copied().filter(|_| g.bool(0.5)).collect();
+        let single: Vec<u32> = vec![g.usize(n) as u32];
+        let empty: Vec<u32> = Vec::new();
+        for rows in [&all, &subset, &single, &empty] {
+            let mut oracle = HistogramSet::new(&bins_per);
+            oracle.build_scalar(&binned, rows, &grad, &hess);
+            for tier in simd::available_tiers() {
+                let ctx = format!("tier={} rows={} n={n}", tier.name(), rows.len());
+                let mut tiered = HistogramSet::new(&bins_per);
+                tiered.build_with_tier(&binned, rows, &grad, &hess, tier);
+                assert_bit_identical(&oracle, &tiered, &ctx);
+                // Sharding composes with the SIMD tiers bit-exactly.
+                let mut sharded = HistogramSet::new(&bins_per);
+                sharded.build_sharded_with_tier(&binned, rows, &grad, &hess, 3, tier);
+                assert_bit_identical(&oracle, &sharded, &format!("{ctx} (sharded x3)"));
+                // Pool path, including a recycled (dirty) buffer.
+                let mut pool = HistogramPool::new(&bins_per);
+                let built = pool.build_with_tier(&binned, rows, &grad, &hess, tier);
+                assert_bit_identical(&oracle, &built, &format!("{ctx} (pool)"));
+                pool.recycle(built);
+                let reused = pool.build_with_tier(&binned, rows, &grad, &hess, tier);
+                assert_bit_identical(&oracle, &reused, &format!("{ctx} (recycled)"));
+            }
+            // Forcing a tier the CPU may lack clamps, never crashes.
+            let mut clamped = HistogramSet::new(&bins_per);
+            clamped.build_with_tier(&binned, rows, &grad, &hess, Tier::Avx2);
+            assert_bit_identical(&oracle, &clamped, "forced avx2 clamps");
+        }
+    });
 }

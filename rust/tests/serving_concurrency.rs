@@ -230,3 +230,59 @@ fn concurrent_publishers_get_distinct_monotonic_versions() {
     assert_eq!(registry.latest_version(), 32);
     assert_eq!(registry.len(), 4);
 }
+
+/// Racing publishes to the *same* key must never leave an older
+/// version live: the registry assigns the version inside the write
+/// critical section, so the deployment installed last always carries
+/// the highest version and any observer sees `version_of` only move
+/// forward. (Regression test: versions used to be drawn before the
+/// lock, letting a preempted publisher overwrite a newer one.)
+#[test]
+fn racing_publishes_to_one_key_never_regress_the_live_version() {
+    let registry = toad::coordinator::ModelRegistry::new();
+    let (seed, _) = constant_model(0.0);
+    registry.publish("m", card("c", 0.5), seed.quantize());
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // Watcher: the live version must be non-decreasing throughout
+        // the whole publish race.
+        let registry_ref = &registry;
+        let stop_ref = &stop;
+        let watcher = s.spawn(move || {
+            let mut last = 0u64;
+            while !stop_ref.load(Ordering::Acquire) {
+                let v = registry_ref.version_of("m").expect("key stays published");
+                assert!(v >= last, "live version regressed: {last} -> {v}");
+                last = v;
+            }
+            // One unconditional sample after observing the stop flag:
+            // the Acquire load synchronizes with the Release store that
+            // runs only once every publisher has joined, so this sample
+            // is guaranteed (even if the loop body never ran) and must
+            // see the highest version ever installed.
+            let v = registry_ref.version_of("m").expect("key stays published");
+            assert!(v >= last, "live version regressed: {last} -> {v}");
+            v
+        });
+        // Inner scope joins all publishers before the watcher is told
+        // to stop, so it samples across the entire race window.
+        std::thread::scope(|inner| {
+            for t in 0..4 {
+                let registry = &registry;
+                inner.spawn(move || {
+                    for i in 0..16 {
+                        let (model, _) = constant_model((t * 16 + i) as f64);
+                        registry.publish("m", card("c", 0.5), model.quantize());
+                    }
+                });
+            }
+        });
+        stop.store(true, Ordering::Release);
+        let last = watcher.join().expect("watcher must not panic");
+        assert_eq!(last, 65, "watcher's final sample must be the final version");
+    });
+    // 1 seed + 64 racing publishes; the final live version is the
+    // highest ever assigned — nothing older stayed installed.
+    assert_eq!(registry.version_of("m"), Some(65));
+    assert_eq!(registry.latest_version(), 65);
+}

@@ -13,7 +13,10 @@
 //!   planner `replan` publishes a better candidate into the registry —
 //!   the serving version swaps live, with no dropped or torn replies,
 //! * reports accuracy, latency percentiles, throughput, and how many
-//!   requests each registry version served.
+//!   requests each registry version served,
+//! * serves the *same* published model to two device classes through
+//!   per-class gateways that differ only in their adaptive exit
+//!   tolerance, reporting per-class mean trees evaluated.
 //!
 //! ```bash
 //! cargo run --release --example iot_fleet
@@ -23,11 +26,13 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 use toad::coordinator::batcher::SubmitError;
 use toad::coordinator::{
-    BatcherConfig, DeploymentPlanner, DeviceKind, FleetServer, ModelCard, SimulatedDevice,
+    BatcherConfig, ClassAssignment, DeploymentPlanner, DeviceKind, FleetServer, ModelCard,
+    SimulatedDevice,
 };
 use toad::data::synth::PaperDataset;
 use toad::data::train_test_split;
 use toad::gbdt::GbdtParams;
+use toad::inference::AdaptivePolicy;
 use toad::sweep::table::human_bytes;
 use toad::toad::{train_toad, ToadParams};
 
@@ -75,6 +80,7 @@ fn main() {
             max_batch: 32,
             max_wait: Duration::from_millis(1),
             queue_depth: 4096,
+            ..Default::default()
         },
     );
     // Initial publish: a budget that admits only the smallest
@@ -192,5 +198,45 @@ fn main() {
     println!(
         "simulated on-device compute: {:.1} ms across the fleet",
         server.fleet_sim_busy_seconds() * 1e3
+    );
+
+    // ---- device classes: one model, per-class exit tolerances --------
+    // A line-powered hub wants exact scores; a battery sensor accepts a
+    // margin-bounded answer for fewer trees walked per row. Both
+    // classes resolve the same registry key, so the hot-swap above
+    // upgraded every class at once.
+    let classes = [
+        ClassAssignment { class: "sensor".into(), policy: AdaptivePolicy::Margin(0.25) },
+        ClassAssignment { class: "hub".into(), policy: AdaptivePolicy::Exact },
+    ];
+    let (dep, gateways) = planner
+        .replan_classes(server.registry(), "cov", usize::MAX, &classes)
+        .expect("candidates exist");
+    server.add_class_gateways("cov", &gateways);
+    println!("\ndevice classes share `{}` v{}:", dep.card.id, dep.version);
+    let n_probe = 400usize;
+    let mut class_trees = Vec::new();
+    for class in ["sensor", "hub"] {
+        let route = format!("cov@{class}");
+        let mut trees = 0u64;
+        let mut agree = 0usize;
+        for i in 0..n_probe {
+            let reply = server.submit(&route, test_set.row(i)).unwrap().wait().unwrap();
+            trees += u64::from(reply.trees_evaluated);
+            if (reply.scores[0] > 0.0) as usize == test_set.labels[i] {
+                agree += 1;
+            }
+        }
+        let mean_trees = trees as f64 / n_probe as f64;
+        println!(
+            "  {class:>6}: mean trees evaluated {:.1}, stream accuracy {:.4}",
+            mean_trees,
+            agree as f64 / n_probe as f64
+        );
+        class_trees.push(mean_trees);
+    }
+    assert!(
+        class_trees[0] <= class_trees[1],
+        "the Margin class must not walk more trees than the Exact class"
     );
 }

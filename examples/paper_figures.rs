@@ -1,7 +1,7 @@
 //! Regenerate the paper's figures on fuller grids than the benches.
 //!
 //! ```bash
-//! cargo run --release --example paper_figures -- [fig4|fig5|fig6|fig7|fig8|table2|all]
+//! cargo run --release --example paper_figures -- [fig4|fig5|fig6|fig7|fig8|table2|adaptive|all]
 //! ```
 //!
 //! The benches (`cargo bench`) run the same drivers on reduced grids;
@@ -10,7 +10,8 @@
 
 use toad::data::synth::PaperDataset;
 use toad::sweep::figures::{
-    fig4_rows, fig8_rows, multivariate_rows, table2_rows, univariate_rows, PenaltyKind,
+    adaptive_rows, fig4_rows, fig8_rows, multivariate_rows, table2_rows, univariate_rows,
+    PenaltyKind,
 };
 use toad::sweep::table::{human_bytes, render};
 
@@ -23,6 +24,7 @@ fn main() {
         "fig7" => fig7(),
         "fig8" => fig8(),
         "table2" => table2(),
+        "adaptive" => adaptive(),
         "all" => {
             fig4();
             fig5();
@@ -30,6 +32,7 @@ fn main() {
             fig7();
             fig8();
             table2();
+            adaptive();
         }
         other => eprintln!("unknown figure `{other}`"),
     }
@@ -181,6 +184,33 @@ fn fig8() {
             .collect();
         println!("\n-- {} --", ds.name());
         print!("{}", render(&["series", "limit", "mean", "std"], &table));
+    }
+}
+
+fn adaptive() {
+    println!("\n== Adaptive early exit: accuracy vs mean trees evaluated ==");
+    let eps_grid = [0.0f32, 1e-6, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 4.0];
+    for ds in [
+        PaperDataset::Mushroom,
+        PaperDataset::BreastCancer,
+        PaperDataset::KrVsKp,
+        PaperDataset::CovertypeBinary,
+    ] {
+        let rows = adaptive_rows(ds, 1, 64, 2, &eps_grid, 6000);
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{:.2e}", r.eps),
+                    format!("{:.4}", r.score),
+                    format!("{:+.4}", r.score - r.exact_score),
+                    format!("{:.1}", r.mean_trees),
+                    format!("{}", r.n_trees),
+                ]
+            })
+            .collect();
+        println!("\n-- {} --", ds.name());
+        print!("{}", render(&["eps", "score", "delta", "mean_trees", "n_trees"], &table));
     }
 }
 

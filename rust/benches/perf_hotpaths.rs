@@ -42,7 +42,13 @@ impl Records {
     }
 
     /// Hand-rolled JSON (the build is dependency-free by design).
-    fn to_json(&self, dataset: &str, simd_tier: &str, speedups: &[(&str, f64)]) -> String {
+    fn to_json(
+        &self,
+        dataset: &str,
+        simd_tier: &str,
+        speedups: &[(&str, f64)],
+        stats: &[(&str, f64)],
+    ) -> String {
         let mut s = String::from("{\n");
         s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
         s.push_str(&format!("  \"simd_tier\": \"{simd_tier}\",\n"));
@@ -55,6 +61,11 @@ impl Records {
         s.push_str("  },\n  \"speedups\": {\n");
         for (i, (k, v)) in speedups.iter().enumerate() {
             let comma = if i + 1 == speedups.len() { "" } else { "," };
+            s.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+        }
+        s.push_str("  },\n  \"stats\": {\n");
+        for (i, (k, v)) in stats.iter().enumerate() {
+            let comma = if i + 1 == stats.len() { "" } else { "," };
             s.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
         }
         s.push_str("  }\n}\n");
@@ -232,6 +243,24 @@ fn main() {
         512.0 / per_columnar / 1e3
     );
 
+    // ---- adaptive early exit vs full descent --------------------------
+    // Same engine, same rows; the adaptive kernel may stop a row's
+    // descent once the remaining trees cannot change its predicted
+    // sign (or move it more than the margin).
+    use toad::inference::AdaptivePolicy;
+    let adaptive_policy = AdaptivePolicy::Margin(0.1);
+    let per_adaptive = time("adaptive predict_batch Margin(0.1)", 20, || {
+        std::hint::black_box(quant.predict_batch_adaptive(&test_rows, adaptive_policy));
+    });
+    rec.push("adaptive_batch", per_adaptive);
+    let mean_trees = quant.predict_batch_adaptive(&test_rows, adaptive_policy).mean_trees();
+    println!(
+        "{:44} {:>12.1} of {} trees",
+        "  -> mean trees evaluated per row",
+        mean_trees,
+        model.n_trees()
+    );
+
     let per = time("bit-packed predict (512 rows)", 5, || {
         let mut acc = 0.0;
         for r in &test_rows {
@@ -257,6 +286,7 @@ fn main() {
             max_batch: 32,
             max_wait: std::time::Duration::from_micros(200),
             queue_depth: 4096,
+            ..Default::default()
         },
         toad::coordinator::batcher::Backend::Native(flat.clone()),
     );
@@ -289,6 +319,7 @@ fn main() {
             max_batch: 64,
             max_wait: std::time::Duration::from_micros(200),
             queue_depth: 65_536,
+            ..Default::default()
         },
     );
     server.registry().publish("cov", card.clone(), engine.clone());
@@ -344,6 +375,7 @@ fn main() {
         rec.lookup("quantized_batch_forced_scalar") / rec.lookup("quantized_batch_simd");
     let simd_vs_scalar_histogram =
         rec.lookup("histogram_build_forced_scalar") / rec.lookup("histogram_build_simd");
+    let adaptive_vs_full = rec.lookup("quantized_batch") / rec.lookup("adaptive_batch");
     println!("\n== speedups vs scalar baselines ==");
     println!("{:44} {:>11.2}x", "histogram build (dense)", hist_speedup);
     println!("{:44} {:>11.2}x", "histogram build (subset/gathered)", subset_speedup);
@@ -355,6 +387,7 @@ fn main() {
     println!("{:44} {:>11.2}x", "concurrent server vs serial gateway", concurrent_vs_serial);
     println!("{:44} {:>11.2}x", "simd vs scalar descent", simd_vs_scalar_descent);
     println!("{:44} {:>11.2}x", "simd vs scalar histogram", simd_vs_scalar_histogram);
+    println!("{:44} {:>11.2}x", "adaptive vs full quantized batch", adaptive_vs_full);
 
     let json = rec.to_json(
         &format!("covtype_binary_{n}x{d}"),
@@ -370,7 +403,9 @@ fn main() {
             ("server_concurrent_vs_serial", concurrent_vs_serial),
             ("simd_vs_scalar_descent", simd_vs_scalar_descent),
             ("simd_vs_scalar_histogram", simd_vs_scalar_histogram),
+            ("adaptive_vs_full", adaptive_vs_full),
         ],
+        &[("mean_trees_evaluated", mean_trees), ("n_trees", model.n_trees() as f64)],
     );
     // CARGO_MANIFEST_DIR is <repo>/rust; the trajectory file lives at
     // the repo root.
@@ -414,6 +449,7 @@ fn xla_section(test_rows: &[Vec<f32>]) {
             max_batch: 32,
             max_wait: std::time::Duration::from_micros(200),
             queue_depth: 4096,
+            ..Default::default()
         },
         toad::coordinator::batcher::Backend::Xla {
             artifacts_dir: artifacts,

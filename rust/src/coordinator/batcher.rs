@@ -31,9 +31,16 @@
 //! * `Backend::Xla` (`xla` feature) — the AOT-compiled PJRT artifact.
 //!   Artifacts are compiled at a fixed batch size, and PJRT handles are
 //!   not `Send`, so the engine lives entirely inside the worker thread.
+//!
+//! Each gateway carries an [`AdaptivePolicy`] ([`BatcherConfig::policy`]):
+//! quantized flushes route through the margin-bounded early-exit kernel,
+//! and every [`BatchReply`] reports how many trees its row actually
+//! walked. Spawning several gateways over one registry key with
+//! different tolerances serves one published model to multiple device
+//! classes at different accuracy/latency points.
 
 use super::registry::ModelRegistry;
-use crate::inference::{FlatModel, QuantizedFlatModel};
+use crate::inference::{AdaptiveBatch, AdaptivePolicy, FlatModel, QuantizedFlatModel};
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -52,11 +59,23 @@ pub struct BatcherConfig {
     /// Admission bound: requests queued but not yet flushed. A submit
     /// beyond this returns [`SubmitError::Overloaded`] immediately.
     pub queue_depth: usize,
+    /// Adaptive early-exit policy applied by the quantized backends
+    /// (`Quantized` and `Registry` flushes): the per-device-class exit
+    /// tolerance of this gateway. One published model can be served to
+    /// several device classes through gateways that differ only here.
+    /// Non-quantized backends evaluate fully regardless. Default:
+    /// [`AdaptivePolicy::Exact`].
+    pub policy: AdaptivePolicy,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), queue_depth: 1024 }
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            policy: AdaptivePolicy::Exact,
+        }
     }
 }
 
@@ -92,11 +111,19 @@ impl fmt::Display for SubmitError {
 impl std::error::Error for SubmitError {}
 
 /// A served prediction: raw scores plus the registry version that
-/// produced them (0 for static, non-registry backends).
+/// produced them (0 for static, non-registry backends) and the number
+/// of trees the serving engine actually walked for *this* row.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BatchReply {
     pub scores: Vec<f64>,
     pub version: u64,
+    /// Trees evaluated for this request's row. Equals the model's tree
+    /// count on non-adaptive backends or an unarmed policy; under
+    /// [`AdaptivePolicy::Margin`] it is the row's actual early-exit
+    /// depth. Only real rows ever produce a reply, so per-class
+    /// mean-trees statistics aggregated from replies are never skewed
+    /// by block padding.
+    pub trees_evaluated: u32,
 }
 
 /// One in-flight request.
@@ -307,7 +334,7 @@ fn worker_loop(config: BatcherConfig, backend: Backend, shared: Arc<Shared>) {
             batch
         };
         if !batch.is_empty() {
-            flush(&mut engine, &mut batch);
+            flush(&mut engine, &mut batch, config.policy);
         }
     }
 
@@ -326,8 +353,15 @@ fn worker_loop(config: BatcherConfig, backend: Backend, shared: Arc<Shared>) {
     /// Assemble the pending queue directly into the columnar block the
     /// quantized engine's zero-gather kernel consumes: one Vec per
     /// feature, short rows zero-padded on the fly — no per-request row
-    /// clone or zero-pad pass.
-    fn flush_columnar(quant: &QuantizedFlatModel, batch: &[Request]) -> Vec<Vec<f64>> {
+    /// clone or zero-pad pass. The adaptive entry point reports a
+    /// trees-evaluated count for exactly the `batch.len()` real rows —
+    /// the engine's internal descent blocks may be ragged, but no
+    /// padded row ever reaches the per-row statistics.
+    fn flush_columnar(
+        quant: &QuantizedFlatModel,
+        batch: &[Request],
+        policy: AdaptivePolicy,
+    ) -> AdaptiveBatch {
         let nf = quant.n_features();
         let n = batch.len();
         let mut cols: Vec<Vec<f32>> = (0..nf).map(|_| Vec::with_capacity(n)).collect();
@@ -337,21 +371,25 @@ fn worker_loop(config: BatcherConfig, backend: Backend, shared: Arc<Shared>) {
             }
         }
         let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
-        quant.predict_batch_columns(&col_refs, n)
+        quant.predict_batch_columns_adaptive(&col_refs, n, policy)
     }
 
-    fn flush(engine: &mut Engine, batch: &mut Vec<Request>) {
+    fn flush(engine: &mut Engine, batch: &mut Vec<Request>, policy: AdaptivePolicy) {
         let mut version = 0u64;
-        let outputs: Vec<Vec<f64>> = match engine {
+        let outputs: AdaptiveBatch = match engine {
             Engine::Native(flat) => {
                 // Take the rows out instead of cloning — `batch` is
                 // drained right after, and only the reply channel is
                 // needed then.
                 let rows: Vec<Vec<f32>> =
                     batch.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
-                flat.predict_batch(&pad(rows, flat.n_features()))
+                let scores = flat.predict_batch(&pad(rows, flat.n_features()));
+                AdaptiveBatch {
+                    trees_evaluated: vec![flat.n_trees() as u32; scores.len()],
+                    scores,
+                }
             }
-            Engine::Quantized(quant) => flush_columnar(quant, batch),
+            Engine::Quantized(quant) => flush_columnar(quant, batch, policy),
             Engine::Registry { registry, key } => {
                 // Resolve the live deployment once per flush: the whole
                 // batch is served by one version, and a publish landing
@@ -364,18 +402,24 @@ fn worker_loop(config: BatcherConfig, backend: Backend, shared: Arc<Shared>) {
                     return;
                 };
                 version = dep.version;
-                flush_columnar(&dep.engine, batch)
+                flush_columnar(&dep.engine, batch, policy)
             }
             #[cfg(feature = "xla")]
             Engine::Xla(e) => {
                 let rows: Vec<Vec<f32>> =
                     batch.iter_mut().map(|r| std::mem::take(&mut r.row)).collect();
-                e.predict(&rows).expect("xla predict")
+                let scores = e.predict(&rows).expect("xla predict");
+                // The dense tensor kernel always walks every tree.
+                AdaptiveBatch {
+                    trees_evaluated: vec![e.tensors().n_trees as u32; scores.len()],
+                    scores,
+                }
             }
         };
-        for (req, scores) in batch.drain(..).zip(outputs) {
+        let replies = batch.drain(..).zip(outputs.scores.into_iter().zip(outputs.trees_evaluated));
+        for (req, (scores, trees_evaluated)) in replies {
             // A dropped receiver just means the client went away.
-            let _ = req.reply.send(BatchReply { scores, version });
+            let _ = req.reply.send(BatchReply { scores, version, trees_evaluated });
         }
     }
 }
@@ -398,7 +442,12 @@ mod tests {
     fn native_batcher_matches_model() {
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1), queue_depth: 64 },
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                ..Default::default()
+            },
             Backend::Native(flat),
         );
         for i in 0..20 {
@@ -413,7 +462,12 @@ mod tests {
     fn quantized_batcher_matches_model_including_short_rows() {
         let (_, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1), queue_depth: 64 },
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                ..Default::default()
+            },
             Backend::Quantized(model.quantize()),
         );
         for i in 0..20 {
@@ -438,7 +492,12 @@ mod tests {
         // its own row.
         let (_, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 70, max_wait: Duration::from_secs(5), queue_depth: 128 },
+            BatcherConfig {
+                max_batch: 70,
+                max_wait: Duration::from_secs(5),
+                queue_depth: 128,
+                ..Default::default()
+            },
             Backend::Quantized(model.quantize()),
         );
         let rxs: Vec<_> = (0..70).map(|i| (i, b.submit(data.row(i)).unwrap())).collect();
@@ -461,6 +520,7 @@ mod tests {
                 max_batch: 1000,
                 max_wait: Duration::from_millis(5),
                 queue_depth: 2000,
+                ..Default::default()
             },
             Backend::Native(flat),
         );
@@ -476,7 +536,12 @@ mod tests {
         // own row's prediction (no cross-wiring in the batcher).
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                ..Default::default()
+            },
             Backend::Native(flat),
         );
         let rxs: Vec<_> = (0..16).map(|i| (i, b.submit(data.row(i)).unwrap())).collect();
@@ -495,7 +560,12 @@ mod tests {
         // Everything that *was* admitted must still be served.
         let (flat, data, _) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(30), queue_depth: 2 },
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_secs(30),
+                queue_depth: 2,
+                ..Default::default()
+            },
             Backend::Native(flat),
         );
         let mut rxs = Vec::new();
@@ -529,7 +599,12 @@ mod tests {
         // waits for the deadline — that is the batching contract.)
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(30), queue_depth: 4 },
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_secs(30),
+                queue_depth: 4,
+                ..Default::default()
+            },
             Backend::Native(flat),
         );
         let rxs: Vec<_> = (0..4).map(|i| (i, b.submit(data.row(i)).unwrap())).collect();
@@ -547,7 +622,12 @@ mod tests {
     fn concurrent_submitters_share_one_gateway() {
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(1), queue_depth: 256 },
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 256,
+                ..Default::default()
+            },
             Backend::Native(flat),
         );
         std::thread::scope(|s| {
@@ -577,6 +657,7 @@ mod tests {
                     max_batch: 1000,
                     max_wait: Duration::from_secs(10),
                     queue_depth: 2000,
+                    ..Default::default()
                 },
                 Backend::Native(flat),
             );
@@ -591,7 +672,12 @@ mod tests {
     fn short_rows_are_zero_padded_not_fatal() {
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                ..Default::default()
+            },
             Backend::Native(flat),
         );
         // A truncated (even empty) row must be served as if zero-padded,
@@ -611,12 +697,78 @@ mod tests {
         let data = PaperDataset::WineQuality.generate(72).select(&(0..400).collect::<Vec<_>>());
         let model = gbdt::booster::train(&data, GbdtParams::paper(3, 2));
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                ..Default::default()
+            },
             Backend::Native(model.flatten()),
         );
         let got = b.predict(data.row(0)).unwrap();
         assert_eq!(got.len(), 7);
         assert_eq!(got, model.predict_raw(&data.row(0)));
+    }
+
+    #[test]
+    fn exact_policy_replies_report_full_depth() {
+        let (_, data, model) = fixtures();
+        let quant = model.quantize();
+        let n_trees = crate::inference::Predictor::n_trees(&quant) as u32;
+        let b = Batcher::spawn(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                ..Default::default()
+            },
+            Backend::Quantized(quant),
+        );
+        let got = b.submit(data.row(0)).unwrap().recv().unwrap();
+        assert_eq!(got.trees_evaluated, n_trees, "Exact gateway must walk every tree");
+    }
+
+    #[test]
+    fn margin_gateway_early_exits_and_preserves_classes() {
+        // A near-separable task served through a Margin gateway: across
+        // a 70-row flush (full 64-row block + ragged 6-row tail) most
+        // rows must exit before the last tree, every reply must keep
+        // its row's predicted class, and `trees_evaluated` must count
+        // only real rows (never the block padding).
+        let data = PaperDataset::Mushroom.generate(73).select(&(0..300).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
+        let quant = model.quantize();
+        let n_trees = crate::inference::Predictor::n_trees(&quant) as u32;
+        let b = Batcher::spawn(
+            BatcherConfig {
+                max_batch: 70,
+                max_wait: Duration::from_secs(5),
+                queue_depth: 128,
+                policy: AdaptivePolicy::Margin(1e-6),
+            },
+            Backend::Quantized(quant),
+        );
+        let rxs: Vec<_> = (0..70).map(|i| (i, b.submit(data.row(i)).unwrap())).collect();
+        let mut total_trees = 0u64;
+        for (i, rx) in rxs {
+            let got = rx.recv().unwrap();
+            assert!(
+                (1..=n_trees).contains(&got.trees_evaluated),
+                "row {i}: trees_evaluated {} out of range 1..={n_trees}",
+                got.trees_evaluated
+            );
+            let full = model.predict_raw(&data.row(i))[0];
+            assert_eq!(
+                got.scores[0] > 0.0,
+                full > 0.0,
+                "row {i}: early exit flipped the predicted class"
+            );
+            total_trees += u64::from(got.trees_evaluated);
+        }
+        assert!(
+            total_trees < u64::from(n_trees) * 70,
+            "separable task through a Margin gateway never exited early"
+        );
     }
 
     #[test]
@@ -626,7 +778,12 @@ mod tests {
         let model_b = gbdt::booster::train(&small, GbdtParams::paper(4, 2));
         let registry = Arc::new(ModelRegistry::new());
         let b = Batcher::spawn(
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                ..Default::default()
+            },
             Backend::Registry { registry: Arc::clone(&registry), key: "m".into() },
         );
 

@@ -101,6 +101,13 @@ impl SimulatedDevice {
         self.model.as_ref().map(|m| m.size_bytes())
     }
 
+    /// Trees in the deployed model (`None` until something is
+    /// deployed). On-device descent always walks every tree, so this is
+    /// also the per-prediction trees-evaluated count.
+    pub fn model_trees(&self) -> Option<usize> {
+        self.model.as_ref().map(crate::inference::Predictor::n_trees)
+    }
+
     /// Deploy a packed blob; fails if it does not fit or is corrupt
     /// (blobs travel over flaky links in the field — validate before
     /// interpreting them from flash).

@@ -14,9 +14,11 @@
 //!   [`DeployedModel`] artifacts behind atomic publish/retire;
 //!   in-flight batches finish on the version they started with.
 //! * [`planner`] — picks, from a sweep's model candidates, the best
-//!   scorer that fits a device's memory budget (paper §4.2), and
+//!   scorer that fits a device's memory budget (paper §4.2),
 //!   [`DeploymentPlanner::replan`] publishes live upgrades into the
-//!   registry.
+//!   registry, and [`DeploymentPlanner::replan_classes`] derives
+//!   per-device-class gateway configs (one model, per-class adaptive
+//!   exit tolerances).
 //! * [`batcher`] — dynamic batching worker with bounded-queue admission
 //!   control ([`SubmitError::Overloaded`] backpressure) feeding a
 //!   batched engine: native flat, quantized columnar, registry-resolved
@@ -39,7 +41,7 @@ pub mod server;
 pub use batcher::{BatchReply, Batcher, BatcherConfig, SubmitError};
 pub use device::{DeviceKind, SimulatedDevice};
 pub use metrics::LatencyRecorder;
-pub use planner::{DeploymentPlanner, ModelCard};
+pub use planner::{ClassAssignment, DeploymentPlanner, ModelCard};
 pub use registry::{DeployedModel, ModelRegistry};
 pub use router::Router;
 pub use server::{FleetServer, Ticket};

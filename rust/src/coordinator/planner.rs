@@ -6,8 +6,10 @@
 //! deployment time: given the candidate models a sweep produced, pick
 //! the best scorer that fits each device.
 
+use super::batcher::BatcherConfig;
 use super::device::SimulatedDevice;
 use super::registry::{DeployedModel, ModelRegistry};
+use crate::inference::AdaptivePolicy;
 use std::fmt;
 use std::sync::Arc;
 
@@ -20,6 +22,17 @@ pub struct ModelCard {
     pub size_bytes: usize,
     /// The encoded ToaD blob.
     pub blob: Vec<u8>,
+}
+
+/// One device class in a fleet plan: every class serves the *same*
+/// published model; classes differ only in the adaptive exit tolerance
+/// their gateway applies ([`AdaptivePolicy`]). A low-power sensor class
+/// might run `Margin(0.05)` while a line-powered hub runs `Exact` —
+/// same bytes in flash, different accuracy/latency point.
+#[derive(Clone, Debug)]
+pub struct ClassAssignment {
+    pub class: String,
+    pub policy: AdaptivePolicy,
 }
 
 #[derive(Debug)]
@@ -133,6 +146,38 @@ impl DeploymentPlanner {
             PlanError::DeployFailed { id: best.id.clone(), reason: e }
         })?;
         Ok(Some(registry.publish(key, best.clone(), model.quantize())))
+    }
+
+    /// Plan one model for a heterogeneous fleet: [`replan`](Self::replan)
+    /// the best candidate under `budget` onto `key`, then derive one
+    /// gateway config per device class — identical except for the
+    /// class's adaptive exit tolerance.
+    ///
+    /// Returns the deployment that serves (freshly published, or the
+    /// incumbent when it is already the best fit) and
+    /// `(class, BatcherConfig)` pairs ready for
+    /// [`FleetServer::add_class_gateways`](
+    /// super::server::FleetServer::add_class_gateways). The model is
+    /// chosen *once* — per-class tolerance is a serving knob, not a
+    /// second model search.
+    pub fn replan_classes(
+        &self,
+        registry: &ModelRegistry,
+        key: &str,
+        budget: usize,
+        classes: &[ClassAssignment],
+    ) -> Result<(Arc<DeployedModel>, Vec<(String, BatcherConfig)>), PlanError> {
+        let dep = match self.replan(registry, key, budget)? {
+            Some(dep) => dep,
+            // `replan` returns `None` only when a current deployment is
+            // already the best fit, so `current` must resolve.
+            None => registry.current(key).expect("replan(None) implies a live deployment"),
+        };
+        let gateways = classes
+            .iter()
+            .map(|c| (c.class.clone(), BatcherConfig { policy: c.policy, ..Default::default() }))
+            .collect();
+        Ok((dep, gateways))
     }
 
     /// The quality-vs-memory Pareto frontier of the candidate pool
@@ -261,6 +306,37 @@ mod tests {
         // Nothing fits → the planner error propagates, nothing changes.
         assert!(matches!(p.replan(&reg, "bc", 1), Err(PlanError::NothingFits { .. })));
         assert_eq!(reg.version_of("bc"), Some(d2.version));
+    }
+
+    #[test]
+    fn replan_classes_shares_one_model_across_tolerances() {
+        use crate::coordinator::registry::ModelRegistry;
+        use crate::data::synth::PaperDataset;
+        use crate::gbdt::{self, GbdtParams};
+        use crate::layout::{encode, EncodeOptions, FeatureInfo};
+        let data = PaperDataset::BreastCancer.generate(85).select(&(0..250).collect::<Vec<_>>());
+        let finfo = FeatureInfo::from_dataset(&data);
+        let mut p = DeploymentPlanner::new();
+        let m = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
+        let blob = encode(&m, &finfo, &EncodeOptions::default()).unwrap();
+        p.add_candidate(ModelCard { id: "m".into(), score: 0.9, size_bytes: blob.len(), blob });
+
+        let reg = ModelRegistry::new();
+        let classes = [
+            ClassAssignment { class: "sensor".into(), policy: AdaptivePolicy::Margin(0.05) },
+            ClassAssignment { class: "hub".into(), policy: AdaptivePolicy::Exact },
+        ];
+        let (dep, gateways) = p.replan_classes(&reg, "bc", usize::MAX, &classes).unwrap();
+        assert_eq!(dep.card.id, "m");
+        assert_eq!(gateways.len(), 2);
+        assert_eq!(gateways[0].0, "sensor");
+        assert_eq!(gateways[0].1.policy, AdaptivePolicy::Margin(0.05));
+        assert_eq!(gateways[1].0, "hub");
+        assert_eq!(gateways[1].1.policy, AdaptivePolicy::Exact);
+        // Classes share one deployment: a second plan with the same
+        // budget reuses the incumbent instead of republishing.
+        let (dep2, _) = p.replan_classes(&reg, "bc", usize::MAX, &classes).unwrap();
+        assert_eq!(dep2.version, dep.version, "no spurious republish");
     }
 
     #[test]

@@ -125,6 +125,37 @@ impl FleetServer {
         self.add_gateway(model, Batcher::spawn(config, backend))
     }
 
+    /// Register one hot-swappable gateway per device class, every class
+    /// resolving the *same* registry key but applying its own
+    /// [`BatcherConfig`] — in particular its own adaptive exit
+    /// tolerance ([`BatcherConfig::policy`]). Requests route per class
+    /// under the key `"{model}@{class}"`, with a latency recorder per
+    /// class, while a single [`ModelRegistry::publish`] on `model`
+    /// hot-swaps all of them at once.
+    ///
+    /// This is the serving half of
+    /// [`DeploymentPlanner::replan_classes`](
+    /// super::planner::DeploymentPlanner::replan_classes): plan one
+    /// model under the budget, then serve it to heterogeneous device
+    /// classes at per-class accuracy/latency points.
+    pub fn add_class_gateways(
+        &mut self,
+        model: &str,
+        classes: &[(String, BatcherConfig)],
+    ) -> Vec<TargetId> {
+        classes
+            .iter()
+            .map(|(class, config)| {
+                let backend = super::batcher::Backend::Registry {
+                    registry: Arc::clone(&self.registry),
+                    key: model.to_string(),
+                };
+                let route = format!("{model}@{class}");
+                self.add_gateway(&route, Batcher::spawn(*config, backend))
+            })
+            .collect()
+    }
+
     pub fn router(&self) -> &Router {
         &self.router
     }
@@ -142,8 +173,11 @@ impl FleetServer {
         let start = Instant::now();
         let inner = match &self.targets[target.0] {
             Target::Device(dev) => {
-                let scores = lock(dev).predict(&row).map_err(|_| SubmitError::NoModel)?;
-                TicketInner::Ready(BatchReply { scores, version: 0 })
+                let mut d = lock(dev);
+                let scores = d.predict(&row).map_err(|_| SubmitError::NoModel)?;
+                // On-device descent always walks the whole ensemble.
+                let trees_evaluated = d.model_trees().unwrap_or(0) as u32;
+                TicketInner::Ready(BatchReply { scores, version: 0, trees_evaluated })
             }
             Target::Gateway(b) => TicketInner::Pending(b.submit(row)?),
         };
@@ -218,6 +252,7 @@ mod tests {
                     max_batch: 4,
                     max_wait: std::time::Duration::from_millis(1),
                     queue_depth: 64,
+                    ..Default::default()
                 },
                 Backend::Native(model.flatten()),
             ),
@@ -244,6 +279,53 @@ mod tests {
     }
 
     #[test]
+    fn class_gateways_serve_one_model_at_distinct_tolerances() {
+        use crate::inference::AdaptivePolicy;
+        // One published model, two device classes: the `hub` class runs
+        // Exact (full depth, bit-exact scores), the `sensor` class runs
+        // a Margin tolerance (may exit early, never flips the class).
+        let data = PaperDataset::Mushroom.generate(87).select(&(0..300).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(8, 2));
+        let n_trees = model.n_trees() as u32;
+
+        let mut server = FleetServer::new();
+        let gateway = |policy| BatcherConfig {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(1),
+            queue_depth: 64,
+            policy,
+        };
+        server.add_class_gateways(
+            "mush",
+            &[
+                ("sensor".to_string(), gateway(AdaptivePolicy::Margin(1e-6))),
+                ("hub".to_string(), gateway(AdaptivePolicy::Exact)),
+            ],
+        );
+        let card = ModelCard { id: "m".into(), score: 0.9, size_bytes: 1, blob: vec![] };
+        server.registry().publish("mush", card, model.quantize());
+
+        let mut sensor_trees = 0u64;
+        for i in 0..20 {
+            let row = data.row(i);
+            let want = model.predict_raw(&row)[0];
+            let hub = server.submit("mush@hub", row.clone()).unwrap().wait().unwrap();
+            assert_eq!(hub.scores[0], want, "row {i}: Exact class must be bit-identical");
+            assert_eq!(hub.trees_evaluated, n_trees);
+            let sensor = server.submit("mush@sensor", row).unwrap().wait().unwrap();
+            assert_eq!(sensor.scores[0] > 0.0, want > 0.0, "row {i}: class flipped");
+            sensor_trees += u64::from(sensor.trees_evaluated);
+        }
+        assert!(
+            sensor_trees < u64::from(n_trees) * 20,
+            "Margin class never exited early on a separable task"
+        );
+        // Per-class latency recorders exist independently.
+        assert_eq!(server.metrics("mush@hub").unwrap().count(), 20);
+        assert_eq!(server.metrics("mush@sensor").unwrap().count(), 20);
+    }
+
+    #[test]
     fn registry_gateway_hot_swaps_and_counts_versions() {
         let data = PaperDataset::BreastCancer.generate(83).select(&(0..250).collect::<Vec<_>>());
         let m1 = gbdt::booster::train(&data, GbdtParams::paper(4, 2));
@@ -262,6 +344,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: std::time::Duration::from_millis(1),
                 queue_depth: 64,
+                ..Default::default()
             },
         );
         let d1 = server.registry().publish("bc", card("m1", 0.9), m1.quantize());

@@ -90,6 +90,19 @@ impl GbdtModel {
         crate::inference::Predictor::score(&self.quantize(), data)
     }
 
+    /// [`GbdtModel::score`] under an adaptive early-exit policy:
+    /// quantizes once and scores through the margin-bounded engine,
+    /// reporting the mean trees evaluated per row alongside the metric.
+    /// [`crate::inference::AdaptivePolicy::Exact`] reproduces `score`
+    /// bit-identically at full depth.
+    pub fn score_adaptive(
+        &self,
+        data: &Dataset,
+        policy: crate::inference::AdaptivePolicy,
+    ) -> crate::inference::AdaptiveScore {
+        crate::inference::Predictor::score_adaptive(&self.quantize(), data, policy)
+    }
+
     /// Raw-score prediction over binned data (training-path shortcut:
     /// routing by bin index is exact on rows binned with the same
     /// binner).

@@ -28,6 +28,15 @@
 //! hold): the default gathers rows, and [`QuantizedFlatModel`]
 //! overrides it with a zero-gather kernel that bins each column once
 //! into the shared `BinMatrix` arena.
+//!
+//! Batch entry points additionally come in `_adaptive` twins taking an
+//! [`AdaptivePolicy`]: under [`AdaptivePolicy::Margin`] the quantized
+//! engine retires rows whose outcome is already decided by the
+//! precomputed suffix bounds (see [`quantized`]), returning per-row
+//! trees-evaluated counts alongside the scores ([`AdaptiveBatch`]);
+//! under [`AdaptivePolicy::Exact`] — and on engines without an
+//! early-exit kernel — they are bit-identical to the plain entry
+//! points at full depth.
 
 pub mod flat;
 pub mod quantized;
@@ -40,11 +49,90 @@ use crate::gbdt::loss::Objective;
 use crate::gbdt::GbdtModel;
 use crate::layout::PackedModel;
 
+/// How a batched prediction may finish rows before walking every tree.
+///
+/// The quantized engine precomputes, per output stream, the min/max
+/// total contribution of every tree suffix (from per-tree leaf
+/// extrema). After tree `t`, a row's full raw score provably lies in
+/// `[partial + lo, partial + hi]` where `(lo, hi)` bound trees `t+1..`;
+/// the policy decides what to do with that interval:
+///
+/// * [`AdaptivePolicy::Exact`]: nothing — every tree is walked and the
+///   output is bit-identical to the non-adaptive entry points on every
+///   SIMD tier.
+/// * [`AdaptivePolicy::Margin`]`(eps)`: retire a row once its interval
+///   no longer straddles the decision boundary (binary classification:
+///   the sign — provably the same class as full evaluation), or once
+///   the interval is narrower than `eps` (raw-score units: the
+///   completed score errs by less than `eps / 2`, so a class flip is
+///   only possible for rows whose full score lies within `eps` of the
+///   boundary). Retired rows are completed with the interval midpoint.
+///
+/// `Margin(0.0)` admits no score deviation and therefore routes to the
+/// exact kernel, as do non-positive/NaN tolerances, multi-output
+/// ensembles (no single sign to bound), and empty ensembles.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum AdaptivePolicy {
+    /// Walk every tree for every row.
+    #[default]
+    Exact,
+    /// Early-exit with tolerance `eps` in raw-score units.
+    Margin(f32),
+}
+
+impl AdaptivePolicy {
+    /// The armed tolerance: `Some(eps)` iff this policy permits early
+    /// exit at all. Only a strictly positive, non-NaN `eps` arms the
+    /// adaptive kernel — everything else is `Exact` by construction.
+    pub fn tolerance(self) -> Option<f64> {
+        match self {
+            AdaptivePolicy::Exact => None,
+            AdaptivePolicy::Margin(eps) if eps > 0.0 => Some(eps as f64),
+            AdaptivePolicy::Margin(_) => None,
+        }
+    }
+}
+
+/// Scores plus per-row evaluation depth from an adaptive batch call.
+#[derive(Clone, Debug)]
+pub struct AdaptiveBatch {
+    /// Raw scores in original row order (one inner vec per row).
+    pub scores: Vec<Vec<f64>>,
+    /// Trees actually walked per row — equal to the model's total tree
+    /// count whenever the row never exited (or the policy was exact).
+    pub trees_evaluated: Vec<u32>,
+}
+
+impl AdaptiveBatch {
+    /// Mean trees walked per row (`0.0` for an empty batch).
+    pub fn mean_trees(&self) -> f64 {
+        if self.trees_evaluated.is_empty() {
+            return 0.0;
+        }
+        self.trees_evaluated.iter().map(|&t| t as f64).sum::<f64>()
+            / self.trees_evaluated.len() as f64
+    }
+}
+
+/// A dataset metric plus the evaluation-depth statistic that produced
+/// it — the two axes of the sweep's accuracy-vs-trees-evaluated curve.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveScore {
+    /// Accuracy (classification) or R² (regression).
+    pub score: f64,
+    /// Mean trees evaluated per row.
+    pub mean_trees: f64,
+}
+
 /// A raw-score predictor.
 pub trait Predictor {
     fn predict_raw(&self, x: &[f32]) -> Vec<f64>;
     fn n_outputs(&self) -> usize;
     fn objective(&self) -> Objective;
+
+    /// Total trees in the ensemble (across output streams) — the
+    /// denominator of the adaptive mean-trees statistic.
+    fn n_trees(&self) -> usize;
 
     /// Raw scores for a batch of rows. Default: one row at a time;
     /// engines with a real batch kernel (e.g. [`FlatModel`]) override.
@@ -74,33 +162,72 @@ pub trait Predictor {
         }
     }
 
+    /// [`Predictor::predict_raw_batch`] under an adaptive exit policy,
+    /// with per-row trees-evaluated counts. The default evaluates
+    /// fully and reports full depth for every row — only engines with
+    /// a real early-exit kernel ([`QuantizedFlatModel`]) override.
+    /// [`AdaptivePolicy::Exact`] is always bit-identical to
+    /// `predict_raw_batch`.
+    fn predict_raw_batch_adaptive(
+        &self,
+        rows: &[Vec<f32>],
+        policy: AdaptivePolicy,
+    ) -> AdaptiveBatch {
+        let _ = policy;
+        let scores = self.predict_raw_batch(rows);
+        AdaptiveBatch { trees_evaluated: vec![self.n_trees() as u32; scores.len()], scores }
+    }
+
+    /// Column-major twin of [`Predictor::predict_raw_batch_adaptive`].
+    fn predict_raw_columns_adaptive(
+        &self,
+        cols: &[&[f32]],
+        n_rows: usize,
+        policy: AdaptivePolicy,
+    ) -> AdaptiveBatch {
+        let _ = policy;
+        let scores = self.predict_raw_columns(cols, n_rows);
+        AdaptiveBatch { trees_evaluated: vec![self.n_trees() as u32; scores.len()], scores }
+    }
+
     /// Dataset score: accuracy (classification) or R² (regression).
     /// Feeds the dataset's feature columns straight into the columnar
     /// batch path in bounded chunks — engines with a columnar kernel
     /// never materialize a row, and peak memory stays at one chunk of
     /// outputs rather than the whole dataset.
     fn score(&self, data: &Dataset) -> f64 {
+        self.score_adaptive(data, AdaptivePolicy::Exact).score
+    }
+
+    /// [`Predictor::score`] under an adaptive exit policy, also
+    /// reporting the mean evaluation depth — one point of the
+    /// accuracy-vs-trees-evaluated curve. Same chunked columnar walk
+    /// as `score` (which is this method at `Exact`).
+    fn score_adaptive(&self, data: &Dataset, policy: AdaptivePolicy) -> AdaptiveScore {
         const CHUNK: usize = 4 * flat::BLOCK_ROWS;
         let n = data.n_rows();
         let obj = self.objective();
         let mut reg_preds: Vec<f64> = Vec::new();
         let mut cls_preds: Vec<usize> = Vec::new();
+        let mut trees_total = 0.0f64;
         let mut start = 0usize;
         while start < n {
             let end = (start + CHUNK).min(n);
-            let cols: Vec<&[f32]> =
-                data.features.iter().map(|c| &c[start..end]).collect();
-            let raw = self.predict_raw_columns(&cols, end - start);
+            let cols: Vec<&[f32]> = data.features.iter().map(|c| &c[start..end]).collect();
+            let batch = self.predict_raw_columns_adaptive(&cols, end - start, policy);
+            trees_total += batch.trees_evaluated.iter().map(|&t| t as f64).sum::<f64>();
             match data.task {
-                Task::Regression => reg_preds.extend(raw.iter().map(|r| r[0])),
-                _ => cls_preds.extend(raw.iter().map(|r| obj.predict_class(r))),
+                Task::Regression => reg_preds.extend(batch.scores.iter().map(|r| r[0])),
+                _ => cls_preds.extend(batch.scores.iter().map(|r| obj.predict_class(r))),
             }
             start = end;
         }
-        match data.task {
+        let score = match data.task {
             Task::Regression => crate::metrics::r2_score(&data.targets, &reg_preds),
             _ => crate::metrics::accuracy(&data.labels, &cls_preds),
-        }
+        };
+        let mean_trees = if n == 0 { 0.0 } else { trees_total / n as f64 };
+        AdaptiveScore { score, mean_trees }
     }
 }
 
@@ -110,6 +237,9 @@ impl Predictor for GbdtModel {
     }
     fn n_outputs(&self) -> usize {
         GbdtModel::n_outputs(self)
+    }
+    fn n_trees(&self) -> usize {
+        GbdtModel::n_trees(self)
     }
     fn objective(&self) -> Objective {
         self.objective
@@ -122,6 +252,9 @@ impl Predictor for PackedModel {
     }
     fn n_outputs(&self) -> usize {
         PackedModel::n_outputs(self)
+    }
+    fn n_trees(&self) -> usize {
+        PackedModel::n_trees(self)
     }
     fn objective(&self) -> Objective {
         PackedModel::objective(self)
@@ -138,6 +271,9 @@ impl Predictor for FlatModel {
     fn n_outputs(&self) -> usize {
         FlatModel::n_outputs(self)
     }
+    fn n_trees(&self) -> usize {
+        FlatModel::n_trees(self)
+    }
     fn objective(&self) -> Objective {
         FlatModel::objective(self)
     }
@@ -153,8 +289,26 @@ impl Predictor for QuantizedFlatModel {
     fn predict_raw_columns(&self, cols: &[&[f32]], n_rows: usize) -> Vec<Vec<f64>> {
         self.predict_batch_columns(cols, n_rows)
     }
+    fn predict_raw_batch_adaptive(
+        &self,
+        rows: &[Vec<f32>],
+        policy: AdaptivePolicy,
+    ) -> AdaptiveBatch {
+        self.predict_batch_adaptive(rows, policy)
+    }
+    fn predict_raw_columns_adaptive(
+        &self,
+        cols: &[&[f32]],
+        n_rows: usize,
+        policy: AdaptivePolicy,
+    ) -> AdaptiveBatch {
+        self.predict_batch_columns_adaptive(cols, n_rows, policy)
+    }
     fn n_outputs(&self) -> usize {
         QuantizedFlatModel::n_outputs(self)
+    }
+    fn n_trees(&self) -> usize {
+        QuantizedFlatModel::n_trees(self)
     }
     fn objective(&self) -> Objective {
         QuantizedFlatModel::objective(self)

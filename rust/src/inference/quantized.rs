@@ -38,6 +38,17 @@
 //!   arena and descends over its row-major mirror with the exact same
 //!   blocked kernel — bin once, descend many.
 //!
+//! * **Adaptive early exit.** At quantize time the engine also
+//!   precomputes per-tree *suffix bounds* — the min/max total
+//!   contribution of every tree suffix, from per-tree leaf extrema —
+//!   so the `_adaptive` batch entry points can retire a row as soon as
+//!   its partial score ± the remaining bound can no longer change the
+//!   predicted sign (binary classification) or move by the policy's
+//!   tolerance. Retired rows are swap-compacted out of the active lane
+//!   set ([`crate::simd::descend_complete_gather`]), so survivors stay
+//!   densely packed in full hardware lane groups; work scales with row
+//!   difficulty instead of ensemble size.
+//!
 //! Compared to [`FlatModel`], each block pays one extra binning pass
 //! (a binary search per used feature) and then descends on u16
 //! compares; the win grows with ensemble size, since binning is
@@ -47,6 +58,7 @@
 //! [`FlatModel`]: crate::inference::FlatModel
 
 use super::flat::{complete_layout_ok, TreeRef};
+use super::{AdaptiveBatch, AdaptivePolicy};
 use crate::gbdt::loss::Objective;
 use crate::gbdt::tree::{Node, Tree};
 use crate::gbdt::GbdtModel;
@@ -105,6 +117,16 @@ pub struct QuantizedFlatModel {
     thr: Vec<u16>,
     children: Vec<u32>,
     leaf: Vec<f64>,
+    /// Per-stream suffix bounds over per-tree leaf extrema, computed
+    /// once at quantize time: `suffix_lo[k][t]` is the minimum possible
+    /// total contribution of trees `t..` of stream `k` (the sum of each
+    /// tree's smallest leaf), `suffix_hi` the maximum. Length
+    /// `trees[k].len() + 1` with a trailing `0.0`, so after evaluating
+    /// tree `t` the not-yet-walked remainder of a row's raw score lies
+    /// in `[suffix_lo[k][t+1], suffix_hi[k][t+1]]` — the interval the
+    /// adaptive early-exit kernel tests.
+    suffix_lo: Vec<Vec<f64>>,
+    suffix_hi: Vec<Vec<f64>>,
 }
 
 /// Rank of threshold `t` in the ascending table `bounds` (which must
@@ -229,6 +251,30 @@ impl QuantizedFlatModel {
             }
             trees.push(refs);
         }
+
+        // Pass 3: suffix bounds from per-tree leaf extrema — the
+        // adaptive early-exit kernel's "what can the remaining trees
+        // still do" interval, paid once per quantize instead of once
+        // per row.
+        let mut suffix_lo = Vec::with_capacity(model.trees.len());
+        let mut suffix_hi = Vec::with_capacity(model.trees.len());
+        for stream in &model.trees {
+            let mut lo = vec![0.0f64; stream.len() + 1];
+            let mut hi = vec![0.0f64; stream.len() + 1];
+            for (t, tree) in stream.iter().enumerate().rev() {
+                let mut tmin = f64::INFINITY;
+                let mut tmax = f64::NEG_INFINITY;
+                for v in tree.leaf_values() {
+                    tmin = tmin.min(v);
+                    tmax = tmax.max(v);
+                }
+                lo[t] = lo[t + 1] + tmin;
+                hi[t] = hi[t + 1] + tmax;
+            }
+            suffix_lo.push(lo);
+            suffix_hi.push(hi);
+        }
+
         QuantizedFlatModel {
             objective: model.objective,
             base_scores: model.base_scores.clone(),
@@ -242,6 +288,8 @@ impl QuantizedFlatModel {
             thr,
             children,
             leaf,
+            suffix_lo,
+            suffix_hi,
         }
     }
 
@@ -266,6 +314,15 @@ impl QuantizedFlatModel {
         self.bounds.iter().map(|b| b.len()).sum()
     }
 
+    /// The adaptive early-exit bound tables for output stream `k`:
+    /// `(lo, hi)` with `lo[t] = Σ_{u ≥ t}` (min leaf of tree `u`),
+    /// resp. max — length `n trees + 1`, trailing `0.0`. After walking
+    /// tree `t`, a row's not-yet-evaluated remainder lies in
+    /// `[lo[t+1], hi[t+1]]`.
+    pub fn suffix_bounds(&self, k: usize) -> (&[f64], &[f64]) {
+        (&self.suffix_lo[k], &self.suffix_hi[k])
+    }
+
     /// How many trees took the complete fast path (introspection/tests).
     pub fn n_complete_trees(&self) -> usize {
         self.trees
@@ -277,15 +334,19 @@ impl QuantizedFlatModel {
 
     /// Bin one dense row against the per-feature threshold tables.
     /// `out[f] ≤ k ⇔ x[f] ≤ bounds[f][k]` for every real `x[f]`; NaN
-    /// maps to [`NAN_BIN`].
+    /// maps to [`NAN_BIN`]. The rank count runs through the
+    /// tier-dispatched [`crate::simd::count_lt`] (vector compare +
+    /// popcount on short tables, binary search beyond); every tier
+    /// produces the same bin, so forcing [`Tier::Scalar`] is the
+    /// historical binary-search twin exactly.
     #[inline]
-    fn bin_row(&self, x: &[f32], out: &mut [u16]) {
+    fn bin_row(&self, x: &[f32], out: &mut [u16], tier: Tier) {
         for f in 0..self.n_features {
             let v = x[f];
             out[f] = if v.is_nan() {
                 NAN_BIN
             } else {
-                self.bounds[f].partition_point(|&b| b < v) as u16
+                simd::count_lt(tier, &self.bounds[f], v) as u16
             };
         }
     }
@@ -329,7 +390,7 @@ impl QuantizedFlatModel {
     /// `FlatModel::predict_raw`.
     pub fn predict_raw(&self, x: &[f32]) -> Vec<f64> {
         let mut xb = vec![0u16; self.n_features];
-        self.bin_row(x, &mut xb);
+        self.bin_row(x, &mut xb, simd::tier());
         let mut out = self.base_scores.clone();
         for (k, trees) in self.trees.iter().enumerate() {
             for &tref in trees {
@@ -380,6 +441,131 @@ impl QuantizedFlatModel {
         }
     }
 
+    /// Whether `policy` arms early exit on this model, and with which
+    /// semantics: `Some((eps, sign_exit))` for a strictly positive
+    /// tolerance on a single-output model with at least one tree
+    /// (`sign_exit` is true for binary classification, where the sign
+    /// test applies). Everything else — `Exact`, `Margin(0.0)` (zero
+    /// tolerance admits no score deviation), non-positive/NaN `eps`,
+    /// multi-output ensembles (no single sign to bound), empty
+    /// ensembles — routes to the exact kernel.
+    fn adaptive_mode(&self, policy: AdaptivePolicy) -> Option<(f64, bool)> {
+        let eps = policy.tolerance()?;
+        if self.trees.len() != 1 || self.trees[0].is_empty() {
+            return None;
+        }
+        Some((eps, matches!(self.objective, Objective::Logistic)))
+    }
+
+    /// Adaptive twin of [`descend_block_tiered`] for single-output
+    /// models: trees are walked in order, but after each tree every
+    /// still-active row is tested against the precomputed suffix bound
+    /// and retired once its outcome can no longer change:
+    ///
+    /// * **sign-decided** (`sign_exit`, binary classification): the
+    ///   interval `[s + lo, s + hi]` no longer straddles zero, so the
+    ///   predicted class provably equals full evaluation's;
+    /// * **bounded** (any objective): `hi − lo < eps`, so the final
+    ///   raw score cannot move by `eps` or more — the midpoint
+    ///   completion errs by less than `eps / 2`.
+    ///
+    /// Retired rows are completed with `s + (lo + hi) / 2` (which
+    /// keeps the decided sign: the midpoint lies inside the interval)
+    /// and swap-compacted out of the active index list, so survivors
+    /// keep filling whole hardware lane groups of the gather kernel
+    /// ([`crate::simd::descend_complete_gather`]) instead of idling as
+    /// masked lanes. Outputs land at their original row positions, so
+    /// row order is preserved by construction. Rows that never retire
+    /// accumulate the same leaf adds in the same order as the exact
+    /// kernel and are bit-identical to it. No exit test runs after the
+    /// last tree: a fully walked row's score is never adjusted (not
+    /// even by `+0.0`, which could flip a `-0.0` sum).
+    ///
+    /// `trees_eval[r]` receives the number of trees row `r` actually
+    /// walked. Caller guarantees `self.adaptive_mode(..)` returned
+    /// `Some` (single output stream, `eps > 0`).
+    #[allow(clippy::too_many_arguments)]
+    fn descend_block_adaptive(
+        &self,
+        xb: &[u16],
+        nf: usize,
+        out: &mut [Vec<f64>],
+        tier: Tier,
+        eps: f64,
+        sign_exit: bool,
+        trees_eval: &mut [u32],
+    ) {
+        let n_rows = out.len();
+        debug_assert_eq!(xb.len(), n_rows * nf);
+        debug_assert_eq!(trees_eval.len(), n_rows);
+        assert!(n_rows <= BLOCK_ROWS, "descend_block operates on one block at a time");
+        let stream = &self.trees[0];
+        let n_trees = stream.len();
+        let (suffix_lo, suffix_hi) = (&self.suffix_lo[0], &self.suffix_hi[0]);
+        let mut active = [0u32; BLOCK_ROWS];
+        for (r, slot) in active.iter_mut().enumerate().take(n_rows) {
+            *slot = r as u32;
+        }
+        let mut n_active = n_rows;
+        let mut idx = [0u32; BLOCK_ROWS];
+        trees_eval[..n_rows].fill(n_trees as u32);
+        for (t, &tref) in stream.iter().enumerate() {
+            let rows = &active[..n_active];
+            match tref {
+                TreeRef::Complete { ioff, loff, depth } => {
+                    let (ioff, loff, depth) = (ioff as usize, loff as usize, depth as usize);
+                    let n_internal = (1usize << depth) - 1;
+                    let feat = &self.cfeat[ioff..ioff + n_internal];
+                    let thr = &self.cthr[ioff..ioff + n_internal];
+                    let leaf = &self.cleaf[loff..loff + (1usize << depth)];
+                    simd::descend_complete_gather(
+                        tier,
+                        feat,
+                        thr,
+                        depth,
+                        xb,
+                        nf,
+                        rows,
+                        &mut idx[..n_active],
+                    );
+                    for (l, &r) in rows.iter().enumerate() {
+                        out[r as usize][0] += leaf[idx[l] as usize];
+                    }
+                }
+                TreeRef::Nodes { off } => {
+                    let off = off as usize;
+                    for &r in rows {
+                        let r = r as usize;
+                        out[r][0] += self.eval_nodes(off, &xb[r * nf..(r + 1) * nf]);
+                    }
+                }
+            }
+            if t + 1 >= n_trees {
+                break; // remaining interval is empty — nothing to test
+            }
+            let (lo, hi) = (suffix_lo[t + 1], suffix_hi[t + 1]);
+            let width_done = hi - lo < eps;
+            let mid = (lo + hi) * 0.5;
+            let mut l = 0usize;
+            while l < n_active {
+                let r = active[l] as usize;
+                let s = out[r][0];
+                let decided = sign_exit && (s + lo > 0.0 || s + hi <= 0.0);
+                if decided || width_done {
+                    out[r][0] = s + mid;
+                    trees_eval[r] = (t + 1) as u32;
+                    n_active -= 1;
+                    active[l] = active[n_active]; // swap-remove; recheck slot l
+                } else {
+                    l += 1;
+                }
+            }
+            if n_active == 0 {
+                break;
+            }
+        }
+    }
+
     /// Batched raw scores: rows are binned once per [`BLOCK_ROWS`]-row
     /// block, then each tree walks the block a lane group at a time
     /// through the tier-dispatched SIMD kernel — numerically identical
@@ -402,11 +588,64 @@ impl QuantizedFlatModel {
             let end = (start + BLOCK_ROWS).min(rows.len());
             let block = &rows[start..end];
             for (r, x) in block.iter().enumerate() {
-                self.bin_row(x, &mut binned[r * nf..(r + 1) * nf]);
+                self.bin_row(x, &mut binned[r * nf..(r + 1) * nf], tier);
             }
             self.descend_block_tiered(&binned[..block.len() * nf], nf, &mut out[start..end], tier);
         }
         out
+    }
+
+    /// [`QuantizedFlatModel::predict_batch`] under an adaptive exit
+    /// policy, with per-row trees-evaluated counts. Policies that do
+    /// not arm early exit on this model (see `adaptive_mode`) — in
+    /// particular [`AdaptivePolicy::Exact`] and `Margin(0.0)` — route
+    /// to the exact kernel and are bit-identical to `predict_batch` at
+    /// full depth. Runs on the CPU's best detected tier.
+    pub fn predict_batch_adaptive(
+        &self,
+        rows: &[Vec<f32>],
+        policy: AdaptivePolicy,
+    ) -> AdaptiveBatch {
+        self.predict_batch_adaptive_with_tier(rows, policy, simd::tier())
+    }
+
+    /// [`QuantizedFlatModel::predict_batch_adaptive`] on an explicit
+    /// dispatch tier (parity tests, benches). Unsupported tiers clamp
+    /// to the detected one; every tier is bit-identical — the exit
+    /// test reads partial sums that are themselves tier-independent.
+    pub fn predict_batch_adaptive_with_tier(
+        &self,
+        rows: &[Vec<f32>],
+        policy: AdaptivePolicy,
+        tier: Tier,
+    ) -> AdaptiveBatch {
+        let Some((eps, sign_exit)) = self.adaptive_mode(policy) else {
+            return AdaptiveBatch {
+                trees_evaluated: vec![self.n_trees() as u32; rows.len()],
+                scores: self.predict_batch_with_tier(rows, tier),
+            };
+        };
+        let nf = self.n_features;
+        let mut out: Vec<Vec<f64>> = rows.iter().map(|_| self.base_scores.clone()).collect();
+        let mut trees_evaluated = vec![0u32; rows.len()];
+        let mut binned = vec![0u16; BLOCK_ROWS * nf];
+        for start in (0..rows.len()).step_by(BLOCK_ROWS) {
+            let end = (start + BLOCK_ROWS).min(rows.len());
+            let block = &rows[start..end];
+            for (r, x) in block.iter().enumerate() {
+                self.bin_row(x, &mut binned[r * nf..(r + 1) * nf], tier);
+            }
+            self.descend_block_adaptive(
+                &binned[..block.len() * nf],
+                nf,
+                &mut out[start..end],
+                tier,
+                eps,
+                sign_exit,
+                &mut trees_evaluated[start..end],
+            );
+        }
+        AdaptiveBatch { scores: out, trees_evaluated }
     }
 
     /// Columnar batched raw scores: `cols[f][i]` is feature `f` of row
@@ -465,6 +704,71 @@ impl QuantizedFlatModel {
             }
         }
         out
+    }
+
+    /// [`QuantizedFlatModel::predict_batch_columns`] under an adaptive
+    /// exit policy — the entry point the gateway batcher serves
+    /// through. Non-arming policies route to the exact columnar kernel
+    /// at full depth; armed policies bin columns identically and run
+    /// the early-exit block kernel, so row routing (and every
+    /// non-exited row's score) matches the exact path bit-for-bit.
+    pub fn predict_batch_columns_adaptive(
+        &self,
+        cols: &[&[f32]],
+        n_rows: usize,
+        policy: AdaptivePolicy,
+    ) -> AdaptiveBatch {
+        self.predict_batch_columns_adaptive_with_tier(cols, n_rows, policy, simd::tier())
+    }
+
+    /// [`QuantizedFlatModel::predict_batch_columns_adaptive`] on an
+    /// explicit dispatch tier (parity tests, benches). Unsupported
+    /// tiers clamp; every tier is bit-identical.
+    pub fn predict_batch_columns_adaptive_with_tier(
+        &self,
+        cols: &[&[f32]],
+        n_rows: usize,
+        policy: AdaptivePolicy,
+        tier: Tier,
+    ) -> AdaptiveBatch {
+        let Some((eps, sign_exit)) = self.adaptive_mode(policy) else {
+            return AdaptiveBatch {
+                trees_evaluated: vec![self.n_trees() as u32; n_rows],
+                scores: self.predict_batch_columns_with_tier(cols, n_rows, tier),
+            };
+        };
+        let nf = self.n_features;
+        assert!(
+            cols.len() >= nf,
+            "need one column per model feature: got {}, model has {nf}",
+            cols.len()
+        );
+        let cols = &cols[..nf];
+        for (f, c) in cols.iter().enumerate() {
+            assert_eq!(c.len(), n_rows, "column {f} has {} rows, expected {n_rows}", c.len());
+        }
+        let mut out: Vec<Vec<f64>> = (0..n_rows).map(|_| self.base_scores.clone()).collect();
+        let mut trees_evaluated = vec![0u32; n_rows];
+        for cstart in (0..n_rows).step_by(COLUMNAR_CHUNK_ROWS) {
+            let cend = (cstart + COLUMNAR_CHUNK_ROWS).min(n_rows);
+            let chunk: Vec<&[f32]> = cols.iter().map(|c| &c[cstart..cend]).collect();
+            let binned =
+                crate::data::binning::bin_columns_over_tables(&self.bounds, &chunk, cend - cstart);
+            let xb = binned.to_row_major();
+            for start in (0..cend - cstart).step_by(BLOCK_ROWS) {
+                let end = (start + BLOCK_ROWS).min(cend - cstart);
+                self.descend_block_adaptive(
+                    &xb[start * nf..end * nf],
+                    nf,
+                    &mut out[cstart + start..cstart + end],
+                    tier,
+                    eps,
+                    sign_exit,
+                    &mut trees_evaluated[cstart + start..cstart + end],
+                );
+            }
+        }
+        AdaptiveBatch { scores: out, trees_evaluated }
     }
 }
 
@@ -770,5 +1074,76 @@ mod tests {
         assert_eq!(quant.predict_raw(&[0.0, 0.0, 0.0]), vec![0.25]);
         assert_eq!(quant.predict_batch(&[]).len(), 0);
         assert_eq!(quant.n_thresholds(), 0);
+        // An empty ensemble never arms early exit; the adaptive entry
+        // point degrades to the exact kernel at depth 0.
+        let ab = quant.predict_batch_adaptive(&[vec![0.0, 0.0, 0.0]], AdaptivePolicy::Margin(0.5));
+        assert_eq!(ab.scores, vec![vec![0.25]]);
+        assert_eq!(ab.trees_evaluated, vec![0]);
+    }
+
+    #[test]
+    fn suffix_bounds_are_suffix_sums_of_leaf_extrema() {
+        // sample_tree leaves {1, 2, 3}, constant leaf 0.5,
+        // chain_tree(14) leaves {0..13} ∪ {−7}.
+        let model = wrap(vec![sample_tree(), Tree::leaf(0.5), chain_tree(14)], 2);
+        let quant = QuantizedFlatModel::from_model(&model);
+        let (lo, hi) = quant.suffix_bounds(0);
+        assert_eq!(lo, &[-5.5, -6.5, -7.0, 0.0]);
+        assert_eq!(hi, &[16.5, 13.5, 13.0, 0.0]);
+    }
+
+    #[test]
+    fn unarmed_policies_match_plain_batch_bit_for_bit() {
+        let data = PaperDataset::BreastCancer.generate(37).select(&(0..300).collect::<Vec<_>>());
+        let model = gbdt::booster::train(&data, GbdtParams::paper(12, 3));
+        let quant = QuantizedFlatModel::from_model(&model);
+        let mut rows: Vec<Vec<f32>> = (0..70).map(|i| data.row(i)).collect();
+        rows[5][0] = f32::NAN;
+        let want = quant.predict_batch(&rows);
+        for policy in [
+            AdaptivePolicy::Exact,
+            AdaptivePolicy::Margin(0.0),
+            AdaptivePolicy::Margin(-1.0),
+            AdaptivePolicy::Margin(f32::NAN),
+        ] {
+            let ab = quant.predict_batch_adaptive(&rows, policy);
+            assert_eq!(ab.scores, want, "{policy:?} must be exact");
+            assert!(
+                ab.trees_evaluated.iter().all(|&t| t as usize == quant.n_trees()),
+                "{policy:?} must report full depth"
+            );
+        }
+        // Multi-output ensembles never arm, even with a positive eps.
+        let wine = PaperDataset::WineQuality.generate(34).select(&(0..400).collect::<Vec<_>>());
+        let mc = gbdt::booster::train(&wine, GbdtParams::paper(4, 2));
+        let mq = QuantizedFlatModel::from_model(&mc);
+        let wrows: Vec<Vec<f32>> = (0..20).map(|i| wine.row(i)).collect();
+        let ab = mq.predict_batch_adaptive(&wrows, AdaptivePolicy::Margin(0.5));
+        assert_eq!(ab.scores, mq.predict_batch(&wrows));
+        assert!(ab.trees_evaluated.iter().all(|&t| t as usize == mq.n_trees()));
+    }
+
+    #[test]
+    fn width_exit_on_l2_reports_depth_and_bounded_completion() {
+        // L2 objective: only the bounded (width) exit applies. With a
+        // huge tolerance the interval after tree 0 (width 20) is
+        // already narrow enough, so every row retires at depth 1 with
+        // the midpoint completion (−6.5 + 13.5)/2 = 3.5.
+        let model = wrap(vec![sample_tree(), Tree::leaf(0.5), chain_tree(14)], 2);
+        let quant = QuantizedFlatModel::from_model(&model);
+        let rows = vec![vec![0.4f32, 1.0], vec![0.6, 0.0], vec![f32::NAN, 3.0]];
+        let full = quant.predict_batch(&rows);
+        let ab = quant.predict_batch_adaptive(&rows, AdaptivePolicy::Margin(1000.0));
+        assert_eq!(ab.trees_evaluated, vec![1, 1, 1]);
+        assert!((ab.mean_trees() - 1.0).abs() < 1e-12);
+        // A one-tree model gives the exact depth-1 partial score
+        // (same base, same first tree).
+        let one = QuantizedFlatModel::from_model(&wrap(vec![sample_tree()], 2));
+        for (i, row) in rows.iter().enumerate() {
+            let partial = one.predict_raw(row)[0];
+            assert_eq!(ab.scores[i][0], partial + 3.5, "row {i}: midpoint completion");
+            // The completion errs by at most half the interval width.
+            assert!((ab.scores[i][0] - full[i][0]).abs() <= 10.0, "row {i}");
+        }
     }
 }

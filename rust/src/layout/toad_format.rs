@@ -689,6 +689,11 @@ impl PackedModel {
         self.p.n_outputs
     }
 
+    /// Total trees in the blob (`n_outputs × n_rounds`).
+    pub fn n_trees(&self) -> usize {
+        self.p.n_outputs * self.p.n_rounds
+    }
+
     pub fn n_features(&self) -> usize {
         self.p.n_features
     }

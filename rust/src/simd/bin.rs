@@ -1,0 +1,154 @@
+//! Vectorized binning: count of table thresholds strictly below a
+//! probe value.
+//!
+//! The quantized engine bins an input by its rank in the per-feature
+//! ascending table of distinct thresholds: `bin(v) = #{b : b < v}`.
+//! On a sorted table the elements below `v` form a prefix, so that
+//! count *is* `table.partition_point(|&b| b < v)` — which means the
+//! branchy binary search can be replaced by a branch-free vector count
+//! for the short tables trained models produce: one lane-wide `b < v`
+//! compare plus a movemask popcount per group of 8 (AVX) or 4 (SSE2)
+//! floats. Above [`LINEAR_MAX`] entries the `O(log n)` search wins and
+//! every tier falls back to it; the two paths agree exactly by the
+//! prefix identity, so the cutoff never affects outputs.
+//!
+//! A NaN probe returns 0 on every path (`b < NaN` is false in both the
+//! scalar predicate and the ordered vector compares). The engine maps
+//! NaN inputs to its dedicated NaN bin before binning, so this is a
+//! parity property, not a hot case.
+
+use super::Tier;
+
+/// Table length above which every tier uses the binary search: the
+/// vector count is `O(n)`, and per-feature tables of trained compact
+/// models are usually far shorter than this.
+pub const LINEAR_MAX: usize = 128;
+
+/// `#{b ∈ table : b < v}` for an ascending `table` (sorted by
+/// `f32::total_cmp`, NaN-free). Bit-identical across tiers — the count
+/// equals `partition_point(|&b| b < v)` on any sorted table, so
+/// forcing [`Tier::Scalar`] yields the engine's historical
+/// binary-search twin exactly (property-tested below). Unsupported
+/// forced tiers clamp to the detected one.
+pub fn count_lt(tier: Tier, table: &[f32], v: f32) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    if table.len() <= LINEAR_MAX {
+        match tier.clamp_detected() {
+            // SAFETY: AVX (implied by the detected AVX2) / baseline
+            // SSE2 verified by clamp_detected.
+            Tier::Avx2 => return unsafe { x86::count_lt_avx(table, v) },
+            Tier::Sse2 => return unsafe { x86::count_lt_sse2(table, v) },
+            Tier::Scalar => {}
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = tier;
+    table.partition_point(|&b| b < v)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// Four `f32` lanes per compare; scalar tail under one group.
+    ///
+    /// # Safety
+    /// Requires SSE2, which is architecturally guaranteed on x86-64.
+    /// All vector loads are in-bounds unaligned loads over `table`.
+    #[inline]
+    pub unsafe fn count_lt_sse2(table: &[f32], v: f32) -> usize {
+        let probe = _mm_set1_ps(v);
+        let mut count = 0usize;
+        let mut i = 0usize;
+        while i + 4 <= table.len() {
+            let t = _mm_loadu_ps(table.as_ptr().add(i));
+            count += _mm_movemask_ps(_mm_cmplt_ps(t, probe)).count_ones() as usize;
+            i += 4;
+        }
+        count + table[i..].iter().filter(|&&b| b < v).count()
+    }
+
+    /// Eight `f32` lanes per compare; scalar tail under one group.
+    ///
+    /// # Safety
+    /// Caller must verify AVX support (the detected AVX2 tier implies
+    /// it — `Tier::clamp_detected`). All vector loads are in-bounds
+    /// unaligned loads over `table`.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn count_lt_avx(table: &[f32], v: f32) -> usize {
+        let probe = _mm256_set1_ps(v);
+        let mut count = 0usize;
+        let mut i = 0usize;
+        while i + 8 <= table.len() {
+            let t = _mm256_loadu_ps(table.as_ptr().add(i));
+            let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(t, probe);
+            count += _mm256_movemask_ps(lt).count_ones() as usize;
+            i += 8;
+        }
+        count + table[i..].iter().filter(|&&b| b < v).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::testutil::prop::run_prop;
+
+    #[test]
+    fn prop_every_tier_matches_partition_point() {
+        run_prop("simd count_lt == partition_point", 120, |g| {
+            let n = g.usize_in(0, LINEAR_MAX + 40);
+            let mut rng = Pcg64::new(g.case_seed ^ 0xB1);
+            let mut table: Vec<f32> = (0..n).map(|_| rng.gen_uniform(-50.0, 50.0) as f32).collect();
+            // Duplicates are legal in a sorted table (pre-dedup).
+            if n > 4 && rng.gen_bool(0.4) {
+                let i = 1 + rng.gen_range(n - 1);
+                table[i] = table[i - 1];
+            }
+            table.sort_by(f32::total_cmp);
+            let mut probes: Vec<f32> =
+                (0..8).map(|_| rng.gen_uniform(-60.0, 60.0) as f32).collect();
+            probes.extend([f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 0.0, -0.0]);
+            if n > 0 {
+                // The exact boundary cases: a table element and its
+                // adjacent representable floats.
+                let b = table[rng.gen_range(n)];
+                probes.push(b);
+                probes.push(f32::from_bits(b.to_bits().wrapping_add(1)));
+                probes.push(f32::from_bits(b.to_bits().wrapping_sub(1)));
+            }
+            for v in probes {
+                let want = table.partition_point(|&b| b < v);
+                for tier in crate::simd::available_tiers() {
+                    let got = count_lt(tier, &table, v);
+                    assert_eq!(got, want, "tier {} n {n} v {v}", tier.name());
+                }
+                // An unsupported forced tier must clamp, not crash.
+                assert_eq!(count_lt(Tier::Avx2, &table, v), want);
+            }
+        });
+    }
+
+    #[test]
+    fn long_tables_fall_back_to_search_on_every_tier() {
+        let table: Vec<f32> = (0..(LINEAR_MAX as i32) * 2).map(|i| i as f32 * 0.5).collect();
+        for tier in crate::simd::available_tiers() {
+            assert_eq!(
+                count_lt(tier, &table, 10.25),
+                table.partition_point(|&b| b < 10.25),
+                "tier {}",
+                tier.name()
+            );
+            assert_eq!(count_lt(tier, &table, -1.0), 0);
+            assert_eq!(count_lt(tier, &table, 1e9), table.len());
+        }
+    }
+
+    #[test]
+    fn empty_table_bins_everything_to_zero() {
+        for tier in crate::simd::available_tiers() {
+            assert_eq!(count_lt(tier, &[], 3.0), 0, "tier {}", tier.name());
+        }
+    }
+}

@@ -97,6 +97,55 @@ pub fn descend_complete(
     }
 }
 
+/// Descend a *subset* of a row-major code block through one complete
+/// tree: lane `l` walks row `rows[l]` of `xb`, writing its **leaf
+/// index** into `out[l]`. This is the gather twin of
+/// [`descend_complete`] behind the adaptive early-exit kernel
+/// (`inference::quantized`): as rows retire early, the caller
+/// swap-compacts survivors to the front of `rows`, so live rows keep
+/// filling whole 16/8-wide hardware lane groups instead of idling as
+/// masked lanes. The per-lane code fetch was already a scalar load
+/// through a lane-index spill in the direct kernels, so indirecting it
+/// through `rows` adds one index load per lane per level.
+///
+/// Requires `out.len() == rows.len()` and
+/// `(rows[l] as usize + 1) * nf ≤ xb.len()` for every lane. Every tier
+/// returns bit-identical indices (property-tested below); row order
+/// within `rows` does not affect any lane's result.
+#[allow(clippy::too_many_arguments)]
+pub fn descend_complete_gather(
+    tier: Tier,
+    feat: &[u16],
+    thr: &[u16],
+    depth: usize,
+    xb: &[u16],
+    nf: usize,
+    rows: &[u32],
+    out: &mut [u32],
+) {
+    debug_assert!(depth <= 15, "lane indices must fit u16 (depth {depth})");
+    debug_assert_eq!(feat.len(), (1usize << depth) - 1);
+    debug_assert_eq!(thr.len(), (1usize << depth) - 1);
+    debug_assert_eq!(rows.len(), out.len());
+    let n_rows = out.len();
+    let r = {
+        #[cfg(target_arch = "x86_64")]
+        {
+            gather_groups_x86(tier, feat, thr, depth, xb, nf, rows, out)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = tier;
+            gather_scalar_groups(feat, thr, depth, xb, nf, rows, out)
+        }
+    };
+    // Shared scalar tail (fewer lanes than one lane group).
+    for t in r..n_rows {
+        let row = rows[t] as usize;
+        out[t] = descend_row(feat, thr, &xb[row * nf..(row + 1) * nf]) as u32;
+    }
+}
+
 /// x86-64 lane-group dispatch; returns the first row not processed.
 #[cfg(target_arch = "x86_64")]
 fn descend_groups_x86(
@@ -157,6 +206,109 @@ fn descend_scalar_groups(
         for _ in 0..depth {
             for (l, i) in idx.iter_mut().enumerate() {
                 let code = xb[(r + l) * nf + feat[*i] as usize];
+                *i = 2 * *i + 2 - (code <= thr[*i]) as usize;
+            }
+        }
+        for (l, &i) in idx.iter().enumerate() {
+            out[r + l] = (i - n_internal) as u32;
+        }
+        r += SCALAR_LANES;
+    }
+    r
+}
+
+/// x86-64 lane-group dispatch of the gather variant; returns the first
+/// lane not processed.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+fn gather_groups_x86(
+    tier: Tier,
+    feat: &[u16],
+    thr: &[u16],
+    depth: usize,
+    xb: &[u16],
+    nf: usize,
+    rows: &[u32],
+    out: &mut [u32],
+) -> usize {
+    let n_rows = out.len();
+    let mut r = 0usize;
+    match tier.clamp_detected() {
+        Tier::Avx2 => {
+            while r + 16 <= n_rows {
+                // SAFETY: AVX2 verified by clamp_detected above.
+                unsafe {
+                    x86::descend16_avx2_gather(
+                        feat,
+                        thr,
+                        depth,
+                        xb,
+                        nf,
+                        &rows[r..r + 16],
+                        &mut out[r..r + 16],
+                    )
+                };
+                r += 16;
+            }
+            while r + 8 <= n_rows {
+                // SAFETY: SSE2 is baseline on x86-64.
+                unsafe {
+                    x86::descend8_sse2_gather(
+                        feat,
+                        thr,
+                        depth,
+                        xb,
+                        nf,
+                        &rows[r..r + 8],
+                        &mut out[r..r + 8],
+                    )
+                };
+                r += 8;
+            }
+            r
+        }
+        Tier::Sse2 => {
+            while r + 8 <= n_rows {
+                // SAFETY: SSE2 is baseline on x86-64.
+                unsafe {
+                    x86::descend8_sse2_gather(
+                        feat,
+                        thr,
+                        depth,
+                        xb,
+                        nf,
+                        &rows[r..r + 8],
+                        &mut out[r..r + 8],
+                    )
+                };
+                r += 8;
+            }
+            r
+        }
+        Tier::Scalar => gather_scalar_groups(feat, thr, depth, xb, nf, rows, out),
+    }
+}
+
+/// Scalar tier of the gather variant: [`SCALAR_LANES`] interleaved
+/// lane chains, each following its own `rows[r + l]` row. Returns the
+/// first lane not processed (the tail start).
+fn gather_scalar_groups(
+    feat: &[u16],
+    thr: &[u16],
+    depth: usize,
+    xb: &[u16],
+    nf: usize,
+    rows: &[u32],
+    out: &mut [u32],
+) -> usize {
+    let n_rows = out.len();
+    let n_internal = (1usize << depth) - 1;
+    let mut r = 0usize;
+    while r + SCALAR_LANES <= n_rows {
+        let mut idx = [0usize; SCALAR_LANES];
+        for _ in 0..depth {
+            for (l, i) in idx.iter_mut().enumerate() {
+                let code = xb[rows[r + l] as usize * nf + feat[*i] as usize];
                 *i = 2 * *i + 2 - (code <= thr[*i]) as usize;
             }
         }
@@ -257,6 +409,88 @@ mod x86 {
             *o = lane as u32 - n_internal;
         }
     }
+
+    /// Gather twin of [`descend8_sse2`]: lane `l` walks row `rows[l]`.
+    ///
+    /// # Safety
+    /// Requires SSE2, which is architecturally guaranteed on x86-64.
+    /// All memory accesses are bounds-checked slice indexing or loads/
+    /// stores of local fixed-size arrays.
+    #[inline]
+    pub unsafe fn descend8_sse2_gather(
+        feat: &[u16],
+        thr: &[u16],
+        depth: usize,
+        xb: &[u16],
+        nf: usize,
+        rows: &[u32],
+        out: &mut [u32],
+    ) {
+        let bias = _mm_set1_epi16(i16::MIN);
+        let one = _mm_set1_epi16(1);
+        let mut idx = _mm_setzero_si128();
+        let mut lanes = [0u16; 8];
+        let mut codes = [0u16; 8];
+        let mut thrs = [0u16; 8];
+        for _ in 0..depth {
+            _mm_storeu_si128(lanes.as_mut_ptr().cast(), idx);
+            for l in 0..8 {
+                let i = lanes[l] as usize;
+                codes[l] = xb[rows[l] as usize * nf + feat[i] as usize];
+                thrs[l] = thr[i];
+            }
+            let c = _mm_loadu_si128(codes.as_ptr().cast());
+            let t = _mm_loadu_si128(thrs.as_ptr().cast());
+            let gt = _mm_cmpgt_epi16(_mm_xor_si128(c, bias), _mm_xor_si128(t, bias));
+            idx = _mm_sub_epi16(_mm_add_epi16(_mm_add_epi16(idx, idx), one), gt);
+        }
+        _mm_storeu_si128(lanes.as_mut_ptr().cast(), idx);
+        let n_internal = (1u32 << depth) - 1;
+        for (o, &lane) in out.iter_mut().zip(&lanes) {
+            *o = lane as u32 - n_internal;
+        }
+    }
+
+    /// Gather twin of [`descend16_avx2`]: lane `l` walks row `rows[l]`.
+    ///
+    /// # Safety
+    /// Caller must verify AVX2 support (`Tier::clamp_detected`). All
+    /// memory accesses are bounds-checked slice indexing or loads/
+    /// stores of local fixed-size arrays.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn descend16_avx2_gather(
+        feat: &[u16],
+        thr: &[u16],
+        depth: usize,
+        xb: &[u16],
+        nf: usize,
+        rows: &[u32],
+        out: &mut [u32],
+    ) {
+        let bias = _mm256_set1_epi16(i16::MIN);
+        let one = _mm256_set1_epi16(1);
+        let mut idx = _mm256_setzero_si256();
+        let mut lanes = [0u16; 16];
+        let mut codes = [0u16; 16];
+        let mut thrs = [0u16; 16];
+        for _ in 0..depth {
+            _mm256_storeu_si256(lanes.as_mut_ptr().cast(), idx);
+            for l in 0..16 {
+                let i = lanes[l] as usize;
+                codes[l] = xb[rows[l] as usize * nf + feat[i] as usize];
+                thrs[l] = thr[i];
+            }
+            let c = _mm256_loadu_si256(codes.as_ptr().cast());
+            let t = _mm256_loadu_si256(thrs.as_ptr().cast());
+            let gt = _mm256_cmpgt_epi16(_mm256_xor_si256(c, bias), _mm256_xor_si256(t, bias));
+            idx = _mm256_sub_epi16(_mm256_add_epi16(_mm256_add_epi16(idx, idx), one), gt);
+        }
+        _mm256_storeu_si256(lanes.as_mut_ptr().cast(), idx);
+        let n_internal = (1u32 << depth) - 1;
+        for (o, &lane) in out.iter_mut().zip(&lanes) {
+            *o = lane as u32 - n_internal;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -315,6 +549,77 @@ mod tests {
             descend_complete(Tier::Avx2, &feat, &thr, depth, &xb, nf, &mut clamped);
             assert_eq!(clamped, want);
         });
+    }
+
+    #[test]
+    fn prop_gather_variant_matches_oracle_on_arbitrary_row_subsets() {
+        run_prop("simd gather descent == per-row oracle", 80, |g| {
+            let depth = g.usize_in(0, 10);
+            let n_internal = (1usize << depth) - 1;
+            let nf = g.usize_in(1, 9);
+            let mut rng = Pcg64::new(g.case_seed ^ 0x6A7);
+            let feat: Vec<u16> = (0..n_internal).map(|_| rng.gen_range(nf) as u16).collect();
+            let thr: Vec<u16> = (0..n_internal)
+                .map(|_| {
+                    if rng.gen_bool(0.15) {
+                        u16::MAX
+                    } else {
+                        rng.gen_range(300) as u16
+                    }
+                })
+                .collect();
+            let n_block = g.usize_in(1, 70);
+            let xb: Vec<u16> = (0..n_block * nf)
+                .map(|_| {
+                    if rng.gen_bool(0.1) {
+                        u16::MAX
+                    } else {
+                        rng.gen_range(300) as u16
+                    }
+                })
+                .collect();
+            // An arbitrary subset in arbitrary order, with repeats —
+            // exactly what the compacting early-exit caller produces.
+            let n_lanes = g.usize_in(0, 70);
+            let rows: Vec<u32> =
+                (0..n_lanes).map(|_| rng.gen_range(n_block) as u32).collect();
+            let want: Vec<u32> = rows
+                .iter()
+                .map(|&row| {
+                    let row = row as usize;
+                    descend_row(&feat, &thr, &xb[row * nf..(row + 1) * nf]) as u32
+                })
+                .collect();
+            for tier in crate::simd::available_tiers() {
+                let mut got = vec![0u32; n_lanes];
+                descend_complete_gather(tier, &feat, &thr, depth, &xb, nf, &rows, &mut got);
+                assert_eq!(got, want, "tier {} depth {depth} lanes {n_lanes}", tier.name());
+            }
+            // An unsupported forced tier must clamp, not crash.
+            let mut clamped = vec![0u32; n_lanes];
+            descend_complete_gather(Tier::Avx2, &feat, &thr, depth, &xb, nf, &rows, &mut clamped);
+            assert_eq!(clamped, want);
+        });
+    }
+
+    #[test]
+    fn gather_with_identity_rows_equals_direct_descent() {
+        let depth = 3usize;
+        let n_internal = (1usize << depth) - 1;
+        let mut rng = Pcg64::new(0xFEED);
+        let nf = 4usize;
+        let feat: Vec<u16> = (0..n_internal).map(|_| rng.gen_range(nf) as u16).collect();
+        let thr: Vec<u16> = (0..n_internal).map(|_| rng.gen_range(40) as u16).collect();
+        let n_rows = 37usize;
+        let xb: Vec<u16> = (0..n_rows * nf).map(|_| rng.gen_range(40) as u16).collect();
+        let rows: Vec<u32> = (0..n_rows as u32).collect();
+        for tier in crate::simd::available_tiers() {
+            let mut direct = vec![0u32; n_rows];
+            descend_complete(tier, &feat, &thr, depth, &xb, nf, &mut direct);
+            let mut gathered = vec![0u32; n_rows];
+            descend_complete_gather(tier, &feat, &thr, depth, &xb, nf, &rows, &mut gathered);
+            assert_eq!(gathered, direct, "tier {}", tier.name());
+        }
     }
 
     #[test]

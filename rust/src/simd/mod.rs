@@ -23,6 +23,17 @@
 //!   vector units help. Complete trees cap at depth
 //!   `MAX_COMPLETE_DEPTH = 10`, so lane indices (`≤ 2^{d+1} − 2`) fit
 //!   `u16` lanes with headroom through depth 15.
+//! * **Gather descent** ([`descend_complete_gather`]): the same level
+//!   step over an explicit lane→row index map, so the adaptive
+//!   early-exit kernel can swap-compact finished rows out of the lane
+//!   groups and keep survivors densely packed; since the per-lane code
+//!   fetch is scalar anyway, the indirection adds one index load per
+//!   lane per level.
+//! * **Binning** ([`count_lt`]): the per-row bin of the quantized
+//!   engine is `#{b : b < v}` over a short sorted threshold table,
+//!   which equals `partition_point` exactly — computed branch-free as
+//!   vector compares + movemask popcounts for tables up to
+//!   [`bin::LINEAR_MAX`] entries, binary search beyond.
 //! * **Histogram accumulation** ([`hist`]): bin codes stream in as
 //!   full vectors (dense path) or a software gather (leaf subsets),
 //!   and the triple-offset arithmetic `3·code` is widened and computed
@@ -45,10 +56,12 @@
 //! `tests/engine_parity.rs` and `tests/histogram_parity.rs` across all
 //! tiers the running CPU supports.
 
+pub mod bin;
 pub mod descent;
 pub mod hist;
 
-pub use descent::{descend_complete, descend_row, SCALAR_LANES};
+pub use bin::count_lt;
+pub use descent::{descend_complete, descend_complete_gather, descend_row, SCALAR_LANES};
 pub use hist::{accumulate_dense, accumulate_gathered, Code};
 
 use std::sync::OnceLock;

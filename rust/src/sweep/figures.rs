@@ -338,6 +338,54 @@ pub fn fig8_rows(
     out
 }
 
+// ------------------------------------------- Adaptive early-exit curve
+
+/// One tolerance point of the accuracy-vs-work curve for the
+/// margin-bounded early-exit engine
+/// ([`crate::inference::AdaptivePolicy`]).
+#[derive(Clone, Debug)]
+pub struct AdaptiveRow {
+    /// Exit tolerance (`0.0` is the unarmed/exact engine).
+    pub eps: f32,
+    /// Task metric under `Margin(eps)`.
+    pub score: f64,
+    /// Mean trees evaluated per row at this tolerance.
+    pub mean_trees: f64,
+    /// Task metric of the exact engine (constant across the grid).
+    pub exact_score: f64,
+    /// Full ensemble depth (the ceiling for `mean_trees`).
+    pub n_trees: usize,
+}
+
+/// The accuracy-vs-mean-trees-evaluated curve: train once, then sweep
+/// the exit tolerance over `eps_grid` through the adaptive engine. One
+/// model, one quantization — every point differs only in the serving
+/// policy, which is exactly the deployment question the curve answers
+/// (how much descent work a device class can skip at a given accuracy
+/// target).
+pub fn adaptive_rows(
+    ds: PaperDataset,
+    seed: u64,
+    rounds: usize,
+    depth: usize,
+    eps_grid: &[f32],
+    row_cap: usize,
+) -> Vec<AdaptiveRow> {
+    use crate::inference::{AdaptivePolicy, Predictor};
+    let (tr, te) = prep(ds, seed, row_cap);
+    let model = crate::gbdt::booster::train(&tr, GbdtParams::paper(rounds, depth));
+    let quant = model.quantize();
+    let n_trees = Predictor::n_trees(&quant);
+    let exact_score = Predictor::score(&quant, &te);
+    eps_grid
+        .iter()
+        .map(|&eps| {
+            let a = Predictor::score_adaptive(&quant, &te, AdaptivePolicy::Margin(eps));
+            AdaptiveRow { eps, score: a.score, mean_trees: a.mean_trees, exact_score, n_trees }
+        })
+        .collect()
+}
+
 // ------------------------------------------------- Table 2 (latency)
 
 /// One hardware row of Table 2.
@@ -447,6 +495,29 @@ mod tests {
         let free = rows.iter().find(|r| r.iota == 0.0 && r.xi == 0.0).unwrap();
         let heavy = rows.iter().find(|r| r.iota == 8.0 && r.xi == 8.0).unwrap();
         assert!(heavy.size_bytes <= free.size_bytes);
+    }
+
+    #[test]
+    fn adaptive_curve_trades_work_for_tolerance() {
+        let rows = adaptive_rows(PaperDataset::Mushroom, 1, 16, 2, &[0.0, 1e-6, 0.5, 4.0], 600);
+        assert_eq!(rows.len(), 4);
+        // eps = 0 is the unarmed engine: exact metric at full depth.
+        assert_eq!(rows[0].score, rows[0].exact_score);
+        assert_eq!(rows[0].mean_trees, rows[0].n_trees as f64);
+        // Work is monotone nonincreasing in the tolerance: a larger eps
+        // only widens every exit condition.
+        for w in rows.windows(2) {
+            assert!(
+                w[1].mean_trees <= w[0].mean_trees,
+                "mean_trees must not grow with eps: {} -> {}",
+                w[0].mean_trees,
+                w[1].mean_trees
+            );
+        }
+        // A separable task with an armed tolerance must shed real work
+        // without giving up the metric at tiny eps.
+        assert!(rows[1].mean_trees < rows[1].n_trees as f64, "no early exit at eps=1e-6");
+        assert!((rows[1].score - rows[1].exact_score).abs() < 1e-9);
     }
 
     #[test]

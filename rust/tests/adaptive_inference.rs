@@ -1,0 +1,233 @@
+//! Adaptive early-exit inference: safety and parity guarantees of the
+//! margin-bounded descent kernel (`AdaptivePolicy::Margin`) against the
+//! exact engines.
+//!
+//! * **Unarmed ≡ exact, bit for bit.** `Margin(0.0)` (and any
+//!   non-positive or NaN tolerance) must route through the exact kernel
+//!   and reproduce full descent exactly — same bits, full
+//!   `trees_evaluated` — on every SIMD tier, NaN rows and ragged block
+//!   tails included.
+//! * **Sign-decided exits never flip the class.** The suffix bounds are
+//!   true extrema of the remaining raw-score mass, so a row released
+//!   because its partial score ± the remaining bound cannot cross zero
+//!   must agree with full descent on the predicted class. Width exits
+//!   carry an error under `eps/2`, so they can flip only rows whose
+//!   full |raw| is inside the tolerance band.
+//! * **Lane compaction preserves row order.** The block kernel
+//!   swap-removes exited lanes mid-descent; outputs must still land on
+//!   their original rows — pinned by comparing whole batches against
+//!   per-row singleton calls at every block-boundary size, across
+//!   tiers, and between the row-major and columnar entry points.
+//! * **Easy-majority workloads save real work.** On a near-separable
+//!   task a tiny tolerance must strictly reduce mean trees evaluated
+//!   with zero class flips — the tentpole claim of the adaptive engine.
+
+use toad::data::synth::PaperDataset;
+use toad::gbdt::{booster, GbdtParams};
+use toad::inference::{AdaptivePolicy, Predictor, QuantizedFlatModel};
+use toad::simd::{self, Tier};
+use toad::testutil::prop::run_prop;
+
+/// Transpose rows into the columnar layout the zero-gather path eats.
+fn columns(rows: &[Vec<f32>], nf: usize) -> Vec<Vec<f32>> {
+    (0..nf).map(|f| rows.iter().map(|r| r[f]).collect()).collect()
+}
+
+#[test]
+fn prop_unarmed_policies_match_full_descent_bit_for_bit() {
+    run_prop("unarmed adaptive == exact descent", 10, |g| {
+        let data = g.regression_dataset(40, 200, 6);
+        let rounds = g.usize_in(2, 8);
+        let depth = g.usize_in(1, 5);
+        let model = booster::train(&data, GbdtParams::paper(rounds, depth));
+        let quant = QuantizedFlatModel::from_model(&model);
+        let n_trees = Predictor::n_trees(&quant) as u32;
+        // Ragged sizes around the lane groups, NaN injected.
+        let n_rows = if g.bool(0.5) { g.usize_in(1, 17) } else { g.usize_in(18, 80) };
+        let rows: Vec<Vec<f32>> = (0..n_rows)
+            .map(|i| {
+                let mut r = data.row(i % data.n_rows());
+                if g.bool(0.3) {
+                    let f = g.usize(r.len());
+                    r[f] = f32::NAN;
+                }
+                r
+            })
+            .collect();
+        let want = quant.predict_batch_with_tier(&rows, Tier::Scalar);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(want[i], model.predict_raw(row), "scalar batch vs pointer, row {i}");
+        }
+        let unarmed = [
+            AdaptivePolicy::Exact,
+            AdaptivePolicy::Margin(0.0),
+            AdaptivePolicy::Margin(-1.0),
+            AdaptivePolicy::Margin(f32::NAN),
+        ];
+        for tier in simd::available_tiers().into_iter().chain([Tier::Avx2]) {
+            for policy in unarmed {
+                let ab = quant.predict_batch_adaptive_with_tier(&rows, policy, tier);
+                assert_eq!(
+                    ab.scores,
+                    want,
+                    "unarmed {policy:?} diverged from full descent on tier {}",
+                    tier.name()
+                );
+                assert!(
+                    ab.trees_evaluated.iter().all(|&t| t == n_trees),
+                    "unarmed {policy:?} must report full depth"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sign_exits_never_flip_the_class() {
+    run_prop("margin exits preserve predicted class", 8, |g| {
+        let seed = g.u64(1_000) + 1;
+        let n = g.usize_in(120, 360);
+        let data = PaperDataset::BreastCancer
+            .generate(seed)
+            .select(&(0..n).collect::<Vec<_>>());
+        let rounds = g.usize_in(4, 24);
+        let model = booster::train(&data, GbdtParams::paper(rounds, 2));
+        let quant = model.quantize();
+        let n_trees = Predictor::n_trees(&quant) as u32;
+        let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i)).collect();
+        let full = quant.predict_batch(&rows);
+        let eps = [1e-12f32, 1e-3, 0.5][g.usize(3)];
+        let ab = quant.predict_batch_adaptive(&rows, AdaptivePolicy::Margin(eps));
+        for i in 0..rows.len() {
+            let t = ab.trees_evaluated[i];
+            assert!((1..=n_trees).contains(&t), "row {i}: trees_evaluated {t} out of range");
+            if t == n_trees {
+                // Rows that ran to completion are bit-identical: the
+                // compaction never reorders the summation of survivors.
+                assert_eq!(ab.scores[i], full[i], "row {i}: non-exited row diverged");
+            }
+            // Sign-decided exits agree with full descent by
+            // construction; width exits err below eps/2, so a class
+            // flip is only possible inside the tolerance band.
+            let flipped = (ab.scores[i][0] > 0.0) != (full[i][0] > 0.0);
+            assert!(
+                !flipped || full[i][0].abs() < f64::from(eps),
+                "row {i}: flip outside the eps band (full {}, adaptive {}, eps {eps})",
+                full[i][0],
+                ab.scores[i][0]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_margin_bounds_regression_error() {
+    run_prop("L2 width exits stay within eps/2", 8, |g| {
+        let data = g.regression_dataset(60, 220, 5);
+        let rounds = g.usize_in(2, 10);
+        let model = booster::train(&data, GbdtParams::paper(rounds, 3));
+        let quant = QuantizedFlatModel::from_model(&model);
+        let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i)).collect();
+        let full = quant.predict_batch(&rows);
+        let eps = g.f64_in(0.05, 4.0) as f32;
+        // L2 has no sign semantics, so only width exits arm: every
+        // released row's midpoint is within half the remaining band.
+        let ab = quant.predict_batch_adaptive(&rows, AdaptivePolicy::Margin(eps));
+        for i in 0..rows.len() {
+            let err = (ab.scores[i][0] - full[i][0]).abs();
+            assert!(
+                err <= 0.5 * f64::from(eps) + 1e-9,
+                "row {i}: width-exit error {err} exceeds eps/2 = {}",
+                0.5 * f64::from(eps)
+            );
+        }
+    });
+}
+
+#[test]
+fn lane_compaction_preserves_row_order_at_block_boundaries() {
+    // Near-separable task + small tolerance: most lanes exit early, so
+    // the swap-to-back compaction is genuinely exercised, and every
+    // output must still land on its original row. Singleton calls are
+    // the oracle — a row's exit depends only on its own partial sum, so
+    // batching must not change either score or depth.
+    let data = PaperDataset::Mushroom.generate(91).select(&(0..300).collect::<Vec<_>>());
+    let model = booster::train(&data, GbdtParams::paper(16, 2));
+    let quant = model.quantize();
+    let n_trees = Predictor::n_trees(&quant) as f64;
+    let policy = AdaptivePolicy::Margin(0.5);
+    let all_rows: Vec<Vec<f32>> = (0..135)
+        .map(|i| {
+            let mut r = data.row(i % data.n_rows());
+            if i % 11 == 0 {
+                r[i % r.len()] = f32::NAN;
+            }
+            r
+        })
+        .collect();
+    let nf = data.n_features();
+
+    // Per-row singleton oracle (computed once on the dispatched tier;
+    // every tier must agree below).
+    let oracle: Vec<(Vec<f64>, u32)> = all_rows
+        .iter()
+        .map(|r| {
+            let one = quant.predict_batch_adaptive(std::slice::from_ref(r), policy);
+            (one.scores[0].clone(), one.trees_evaluated[0])
+        })
+        .collect();
+
+    for n in [1usize, 63, 64, 65, 128, 135] {
+        let rows = &all_rows[..n];
+        let cols = columns(rows, nf);
+        let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        for tier in simd::available_tiers().into_iter().chain([Tier::Avx2]) {
+            let ab = quant.predict_batch_adaptive_with_tier(rows, policy, tier);
+            assert_eq!(ab.scores.len(), n);
+            for i in 0..n {
+                assert_eq!(
+                    (ab.scores[i].clone(), ab.trees_evaluated[i]),
+                    oracle[i],
+                    "n={n} row {i} tier {}: batched adaptive diverged from singleton",
+                    tier.name()
+                );
+            }
+            let cb = quant.predict_batch_columns_adaptive_with_tier(&col_refs, n, policy, tier);
+            assert_eq!(cb.scores, ab.scores, "n={n} tier {}: columnar scores", tier.name());
+            assert_eq!(
+                cb.trees_evaluated,
+                ab.trees_evaluated,
+                "n={n} tier {}: columnar depths",
+                tier.name()
+            );
+        }
+    }
+    // The compaction must actually have fired: a separable task at this
+    // tolerance cannot be running every row to full depth.
+    let mean = quant.predict_batch_adaptive(&all_rows, policy).mean_trees();
+    assert!(mean < n_trees, "no early exits — the compaction path went unexercised");
+}
+
+#[test]
+fn easy_majority_margin_saves_work_with_zero_flips() {
+    let data = PaperDataset::Mushroom.generate(93).select(&(0..600).collect::<Vec<_>>());
+    let model = booster::train(&data, GbdtParams::paper(32, 2));
+    let quant = model.quantize();
+    let n_trees = Predictor::n_trees(&quant);
+    let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i)).collect();
+    let full = quant.predict_batch(&rows);
+    let eps = 1e-6f32;
+    let ab = quant.predict_batch_adaptive(&rows, AdaptivePolicy::Margin(eps));
+    let mut flips = 0usize;
+    for i in 0..rows.len() {
+        if (ab.scores[i][0] > 0.0) != (full[i][0] > 0.0) && full[i][0].abs() >= f64::from(eps) {
+            flips += 1;
+        }
+    }
+    assert_eq!(flips, 0, "margin exits flipped classes outside the eps band");
+    assert!(
+        ab.mean_trees() < n_trees as f64,
+        "separable majority task must evaluate strictly fewer mean trees ({} vs {n_trees})",
+        ab.mean_trees()
+    );
+}

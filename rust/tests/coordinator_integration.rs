@@ -61,7 +61,12 @@ fn native_gateway_serves_batches() {
     let m = train_toad(&train_set, &params);
 
     let batcher = Batcher::spawn(
-        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), queue_depth: 1024 },
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            ..Default::default()
+        },
         Backend::Native(m.model.flatten()),
     );
     let mut server = FleetServer::new();
@@ -109,7 +114,12 @@ mod xla_gateway {
         let tm = tensorize(&m.model, 256, 4, 64, 1).unwrap();
 
         let batcher = Batcher::spawn(
-            BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), queue_depth: 1024 },
+            BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+                queue_depth: 1024,
+                ..Default::default()
+            },
             Backend::Xla { artifacts_dir: dir, features: 64, tensors: tm },
         );
         let mut server = FleetServer::new();

@@ -51,6 +51,7 @@ fn hot_swap_under_concurrent_load() {
             max_batch: 8,
             max_wait: Duration::from_micros(500),
             queue_depth: 4096,
+            ..Default::default()
         },
     );
 
@@ -144,7 +145,12 @@ fn overload_backpressure_surfaces_and_recovers() {
     let mut server = FleetServer::new();
     server.add_registry_gateway(
         "m",
-        BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(1), queue_depth: 2 },
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_secs(1),
+            queue_depth: 2,
+            ..Default::default()
+        },
     );
     let (model, expect) = constant_model(7.0);
     server.registry().publish("m", card("v", 0.9), model.quantize());
@@ -182,7 +188,12 @@ fn retire_fails_clean_and_republish_recovers() {
     let mut server = FleetServer::new();
     server.add_registry_gateway(
         "m",
-        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 64 },
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 64,
+            ..Default::default()
+        },
     );
     let (m1, c1) = constant_model(1.0);
     let d1 = server.registry().publish("m", card("v1", 0.9), m1.quantize());

@@ -176,6 +176,7 @@ pub fn train_ccp(data: &Dataset, params: GbdtParams, alpha: f64) -> GbdtModel {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

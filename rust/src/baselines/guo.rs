@@ -82,6 +82,7 @@ pub fn prune(rf: &RfModel, prune_set: &Dataset, k: usize, alpha: f64) -> RfModel
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::baselines::rf::{train_rf, RfParams};

@@ -308,6 +308,8 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 200-case random sweep - slow under Miri;
+                              // tests/miri_surface.rs keeps fixed-vector coverage.
     fn roundtrip_randomized() {
         // Property: any sequence of (value, width) writes reads back
         // identically — the core invariant the ToaD layout depends on.
@@ -391,6 +393,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 10k-sample numeric sweep - slow under Miri.
     fn f16_relative_error_bound() {
         let mut rng = Pcg64::new(0xF16);
         for _ in 0..10_000 {

@@ -38,13 +38,20 @@
 //! walked. Spawning several gateways over one registry key with
 //! different tolerances serves one published model to multiple device
 //! classes at different accuracy/latency points.
+//!
+//! The queue/close protocol — admission control (`enqueue`), the
+//! worker's wait-and-drain step (`next_batch`), and the worker-exit
+//! guard (`CloseOnExit`) — is factored into free functions over
+//! [`Shared`] so the loom models (`loom_` tests, run with
+//! `RUSTFLAGS="--cfg loom"`) can drive it exhaustively without real
+//! engines or timing, via the [`crate::sync`] shim.
 
 use super::registry::ModelRegistry;
 use crate::inference::{AdaptiveBatch, AdaptivePolicy, FlatModel, QuantizedFlatModel};
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -147,9 +154,113 @@ struct Shared {
 }
 
 impl Shared {
+    fn new(capacity: usize) -> Arc<Shared> {
+        Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                pending: VecDeque::with_capacity(capacity),
+                first_at: None,
+                closed: false,
+            }),
+            wake: Condvar::new(),
+        })
+    }
+
     fn lock(&self) -> MutexGuard<'_, QueueState> {
         self.queue.lock().unwrap_or_else(|e| e.into_inner())
     }
+}
+
+/// Worker-exit guard. If the worker dies — normal shutdown or an
+/// engine panic mid-flush — close the queue and drop any pending reply
+/// senders, so blocked clients see a disconnect instead of hanging and
+/// new submits are refused with [`SubmitError::Shutdown`].
+///
+/// Loom-verified: `loom_batcher_worker_exit_never_hangs_clients`
+/// checks that after the guard runs, no admitted request's receiver
+/// can block forever.
+struct CloseOnExit(Arc<Shared>);
+
+impl Drop for CloseOnExit {
+    fn drop(&mut self) {
+        let mut q = self.0.lock();
+        q.closed = true;
+        q.pending.clear();
+    }
+}
+
+/// Admission control: the body of [`Batcher::submit`], factored over
+/// [`Shared`] so the loom models can race it against close/drain
+/// without a spawned worker. Refuses with `Shutdown` once closed and
+/// with `Overloaded` at `queue_depth` pending requests; otherwise
+/// pushes the request, stamps the deadline clock if the queue was
+/// empty, and wakes the worker.
+fn enqueue(
+    shared: &Shared,
+    queue_depth: usize,
+    row: Vec<f32>,
+) -> Result<Receiver<BatchReply>, SubmitError> {
+    let (reply_tx, reply_rx) = channel();
+    let mut q = shared.lock();
+    if q.closed {
+        return Err(SubmitError::Shutdown);
+    }
+    if q.pending.len() >= queue_depth {
+        return Err(SubmitError::Overloaded { depth: queue_depth });
+    }
+    if q.pending.is_empty() {
+        q.first_at = Some(Instant::now());
+    }
+    q.pending.push_back(Request { row, reply: reply_tx });
+    drop(q);
+    shared.wake.notify_one();
+    Ok(reply_rx)
+}
+
+/// The worker's wait-and-drain step: block until a batch is due —
+/// full (`flush_at`), past its deadline (`max_wait` since the oldest
+/// pending request), or the gateway is closing — then drain up to
+/// `max_batch` requests. Returns `None` exactly when the gateway is
+/// closed *and* drained, i.e. when the worker should exit.
+///
+/// Every wait is inside a predicate-recheck loop and every state
+/// change (enqueue, close) notifies the condvar, so no wakeup can be
+/// lost; with `max_wait == Duration::ZERO` a non-empty queue is always
+/// immediately due, which is how the loom models keep the clock out of
+/// the explored state space.
+fn next_batch(
+    shared: &Shared,
+    flush_at: usize,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<Request>> {
+    let mut q = shared.lock();
+    loop {
+        if q.closed || q.pending.len() >= flush_at {
+            break;
+        }
+        match q.first_at {
+            Some(t0) => {
+                let deadline = t0 + max_wait;
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                q = crate::sync::wait_timeout(&shared.wake, q, deadline - now);
+            }
+            None => {
+                q = shared.wake.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+    if q.closed && q.pending.is_empty() {
+        return None;
+    }
+    let take = q.pending.len().min(max_batch.max(1));
+    let batch: Vec<Request> = q.pending.drain(..take).collect();
+    // Requests left behind restart the deadline clock — they still
+    // flush within `max_wait` of this drain.
+    q.first_at = if q.pending.is_empty() { None } else { Some(Instant::now()) };
+    Some(batch)
 }
 
 /// Handle to a batching worker. `Send + Sync`: clone-free concurrent
@@ -181,28 +292,9 @@ pub enum Backend {
 impl Batcher {
     /// Spawn a batching worker for the given `backend`.
     pub fn spawn(config: BatcherConfig, backend: Backend) -> Batcher {
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(QueueState {
-                pending: VecDeque::with_capacity(config.max_batch),
-                first_at: None,
-                closed: false,
-            }),
-            wake: Condvar::new(),
-        });
+        let shared = Shared::new(config.max_batch);
         let worker_shared = Arc::clone(&shared);
         let worker = std::thread::spawn(move || {
-            // If the worker dies — normal shutdown or an engine panic —
-            // close the queue and drop any pending reply senders, so
-            // blocked clients see a disconnect instead of hanging and
-            // new submits are refused with `Shutdown`.
-            struct CloseOnExit(Arc<Shared>);
-            impl Drop for CloseOnExit {
-                fn drop(&mut self) {
-                    let mut q = self.0.lock();
-                    q.closed = true;
-                    q.pending.clear();
-                }
-            }
             let _guard = CloseOnExit(Arc::clone(&worker_shared));
             worker_loop(config, backend, worker_shared);
         });
@@ -218,21 +310,7 @@ impl Batcher {
     /// zero-padded at flush time; rows longer than the model's feature
     /// count are truncated (both backends index only `0..n_features`).
     pub fn submit(&self, row: Vec<f32>) -> Result<Receiver<BatchReply>, SubmitError> {
-        let (reply_tx, reply_rx) = channel();
-        let mut q = self.shared.lock();
-        if q.closed {
-            return Err(SubmitError::Shutdown);
-        }
-        if q.pending.len() >= self.config.queue_depth {
-            return Err(SubmitError::Overloaded { depth: self.config.queue_depth });
-        }
-        if q.pending.is_empty() {
-            q.first_at = Some(Instant::now());
-        }
-        q.pending.push_back(Request { row, reply: reply_tx });
-        drop(q);
-        self.shared.wake.notify_one();
-        Ok(reply_rx)
+        enqueue(&self.shared, self.config.queue_depth, row)
     }
 
     /// Convenience: submit and wait for the scores.
@@ -300,38 +378,9 @@ fn worker_loop(config: BatcherConfig, backend: Backend, shared: Arc<Shared>) {
     loop {
         // Phase 1: wait until a batch is due — full, past its deadline,
         // or the gateway is closing (then drain what remains).
-        let mut batch: Vec<Request> = {
-            let mut q = shared.lock();
-            loop {
-                if q.closed || q.pending.len() >= flush_at {
-                    break;
-                }
-                match q.first_at {
-                    Some(t0) => {
-                        let deadline = t0 + config.max_wait;
-                        let now = Instant::now();
-                        if now >= deadline {
-                            break;
-                        }
-                        q = match shared.wake.wait_timeout(q, deadline - now) {
-                            Ok((g, _)) => g,
-                            Err(e) => e.into_inner().0,
-                        };
-                    }
-                    None => {
-                        q = shared.wake.wait(q).unwrap_or_else(|e| e.into_inner());
-                    }
-                }
-            }
-            if q.closed && q.pending.is_empty() {
-                return;
-            }
-            let take = q.pending.len().min(config.max_batch.max(1));
-            let batch: Vec<Request> = q.pending.drain(..take).collect();
-            // Requests left behind restart the deadline clock — they
-            // still flush within `max_wait` of this drain.
-            q.first_at = if q.pending.is_empty() { None } else { Some(Instant::now()) };
-            batch
+        let Some(mut batch) = next_batch(&shared, flush_at, config.max_batch, config.max_wait)
+        else {
+            return;
         };
         if !batch.is_empty() {
             flush(&mut engine, &mut batch, config.policy);
@@ -439,6 +488,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn native_batcher_matches_model() {
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
@@ -459,6 +509,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn quantized_batcher_matches_model_including_short_rows() {
         let (_, data, model) = fixtures();
         let b = Batcher::spawn(
@@ -485,6 +536,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn quantized_gateway_serves_partially_filled_final_block() {
         // 70 pending rows flush as one columnar batch: a full 64-row
         // descent block plus a 6-row final block (queue length not a
@@ -513,6 +565,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn partial_batches_flush_on_deadline() {
         let (flat, data, _) = fixtures();
         let b = Batcher::spawn(
@@ -531,6 +584,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn request_response_mapping_is_stable() {
         // Submit distinct rows concurrently; every reply must match its
         // own row's prediction (no cross-wiring in the batcher).
@@ -553,6 +607,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn overloaded_queue_rejects_then_recovers() {
         // A tiny bound and a tight submit loop: the submitter enqueues
         // in nanoseconds while every flush runs a real batch, so the
@@ -592,6 +647,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn full_queue_flushes_without_waiting_for_deadline() {
         // queue_depth < max_batch: a *full* queue must flush
         // immediately instead of idling out the 30 s deadline while
@@ -619,6 +675,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn concurrent_submitters_share_one_gateway() {
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
@@ -648,6 +705,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn drop_drains_pending() {
         let (flat, data, _) = fixtures();
         let rx;
@@ -669,6 +727,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn short_rows_are_zero_padded_not_fatal() {
         let (flat, data, model) = fixtures();
         let b = Batcher::spawn(
@@ -693,6 +752,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn multiclass_gateway_serves_all_outputs() {
         let data = PaperDataset::WineQuality.generate(72).select(&(0..400).collect::<Vec<_>>());
         let model = gbdt::booster::train(&data, GbdtParams::paper(3, 2));
@@ -711,6 +771,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn exact_policy_replies_report_full_depth() {
         let (_, data, model) = fixtures();
         let quant = model.quantize();
@@ -729,6 +790,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn margin_gateway_early_exits_and_preserves_classes() {
         // A near-separable task served through a Margin gateway: across
         // a 70-row flush (full 64-row block + ragged 6-row tail) most
@@ -772,6 +834,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // trains a real model — minutes under Miri
     fn registry_backend_swaps_between_flushes() {
         let (_, data, model_a) = fixtures();
         let small = data.select(&(0..200).collect::<Vec<_>>());
@@ -804,5 +867,158 @@ mod tests {
 
         registry.retire("m");
         assert_eq!(b.predict(data.row(0)).unwrap_err(), SubmitError::NoModel);
+    }
+}
+
+// Exhaustive interleaving models for the queue/close protocol. Run
+// with `RUSTFLAGS="--cfg loom" cargo test --release loom_`; under that
+// cfg the `crate::sync` shim swaps the Mutex/Condvar for loom's
+// instrumented twins and `loom::model` explores every schedule. The
+// models drive `enqueue`/`next_batch`/`CloseOnExit` directly — no
+// spawned std worker, no engine, `max_wait = ZERO` so the wall clock
+// never enters the explored state space (a non-empty queue is always
+// immediately "due").
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::sync::mpsc::TryRecvError;
+    use loom::thread;
+
+    fn reply() -> BatchReply {
+        BatchReply { scores: vec![0.0], version: 0, trees_evaluated: 1 }
+    }
+
+    /// After the worker has exited, an admitted request's receiver must
+    /// be resolved: either a reply was sent or its sender was dropped.
+    /// `Err(Empty)` here is exactly "the client blocks forever".
+    fn assert_resolved(rx: &Receiver<BatchReply>) {
+        match rx.try_recv() {
+            Ok(_) | Err(TryRecvError::Disconnected) => {}
+            Err(TryRecvError::Empty) => {
+                panic!("admitted request neither served nor disconnected: client would hang")
+            }
+        }
+    }
+
+    /// Normal shutdown: a client admits a request while another thread
+    /// closes the gateway (the `Drop for Batcher` sequence). The
+    /// worker must drain and exit, and the admitted request must be
+    /// served — never abandoned in the queue.
+    #[test]
+    fn loom_batcher_close_drains_admitted_requests() {
+        loom::model(|| {
+            let shared = Shared::new(2);
+
+            let worker_shared = Arc::clone(&shared);
+            let worker = thread::spawn(move || {
+                let _guard = CloseOnExit(Arc::clone(&worker_shared));
+                while let Some(batch) = next_batch(&worker_shared, 1, 1, Duration::ZERO) {
+                    for req in batch {
+                        let _ = req.reply.send(reply());
+                    }
+                }
+            });
+
+            let client_shared = Arc::clone(&shared);
+            let client = thread::spawn(move || {
+                let rx = enqueue(&client_shared, 2, vec![1.0])
+                    .expect("gateway is open and the queue is empty: must admit");
+                // The `Drop for Batcher` close sequence.
+                client_shared.lock().closed = true;
+                client_shared.wake.notify_all();
+                rx
+            });
+
+            let rx = client.join().unwrap();
+            worker.join().unwrap();
+
+            let q = shared.lock();
+            assert!(q.closed, "guard must leave the queue closed");
+            assert!(q.pending.is_empty(), "worker exited with requests still pending");
+            drop(q);
+            // The worker serves the request (Ok) unless the guard beat
+            // it to the drain after close — then the sender was dropped
+            // (Disconnected). Both resolve the client; Empty never can.
+            assert_resolved(&rx);
+        });
+    }
+
+    /// Worker death mid-flush (an engine panic): the worker takes a
+    /// batch and dies without replying. `CloseOnExit` must close the
+    /// queue and drop pending senders so the client is disconnected,
+    /// and later submits must be refused with `Shutdown`.
+    #[test]
+    fn loom_batcher_worker_exit_never_hangs_clients() {
+        loom::model(|| {
+            let shared = Shared::new(2);
+
+            let worker_shared = Arc::clone(&shared);
+            let worker = thread::spawn(move || {
+                let _guard = CloseOnExit(Arc::clone(&worker_shared));
+                // Take (at most) one batch and exit without replying —
+                // the moral equivalent of `flush` panicking. Dropping
+                // the batch drops its reply senders.
+                let _batch = next_batch(&worker_shared, 1, 1, Duration::ZERO);
+            });
+
+            let rx = enqueue(&shared, 2, vec![1.0])
+                .expect("gateway is open and the queue is empty: must admit");
+            worker.join().unwrap();
+
+            let q = shared.lock();
+            assert!(q.closed, "guard must close the queue on worker death");
+            assert!(q.pending.is_empty(), "guard must drop pending requests");
+            drop(q);
+            // The worker never sends, so the only legal outcome is a
+            // dropped sender — from the drained batch or the guard.
+            assert_eq!(
+                rx.try_recv(),
+                Err(TryRecvError::Disconnected),
+                "client of a dead worker must see a disconnect"
+            );
+            // A dead gateway refuses new work instead of queueing it.
+            match enqueue(&shared, 2, vec![2.0]) {
+                Err(SubmitError::Shutdown) => {}
+                other => panic!("submit after worker death must be Shutdown, got {other:?}"),
+            }
+        });
+    }
+
+    /// Close racing a submit: whichever order the schedule picks, the
+    /// submit either lands before the close (and must then be served by
+    /// the drain) or observes the close and is refused — there is no
+    /// third outcome where it is admitted and then ignored.
+    #[test]
+    fn loom_batcher_close_races_submit() {
+        loom::model(|| {
+            let shared = Shared::new(1);
+
+            let submitter_shared = Arc::clone(&shared);
+            let submitter = thread::spawn(move || enqueue(&submitter_shared, 1, vec![1.0]));
+
+            // Main thread plays `Drop for Batcher` + the worker's final
+            // drain: close, wake, then drain until closed-and-empty.
+            shared.lock().closed = true;
+            shared.wake.notify_all();
+            while let Some(batch) = next_batch(&shared, 1, 1, Duration::ZERO) {
+                for req in batch {
+                    let _ = req.reply.send(reply());
+                }
+            }
+
+            match submitter.join().unwrap() {
+                // Admitted before the close: the drain must have served it.
+                Ok(rx) => assert_eq!(
+                    rx.try_recv().map(|r| r.trees_evaluated),
+                    Ok(1),
+                    "request admitted before close was not served by the drain"
+                ),
+                // Observed the close: refused outright, nothing queued.
+                Err(SubmitError::Shutdown) => {}
+                Err(other) => panic!("unexpected submit refusal: {other:?}"),
+            }
+            let q = shared.lock();
+            assert!(q.closed && q.pending.is_empty());
+        });
     }
 }

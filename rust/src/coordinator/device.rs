@@ -140,6 +140,7 @@ impl SimulatedDevice {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

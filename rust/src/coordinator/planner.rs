@@ -200,6 +200,7 @@ impl DeploymentPlanner {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::coordinator::device::DeviceKind;

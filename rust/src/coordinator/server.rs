@@ -211,6 +211,7 @@ fn lock(dev: &Mutex<SimulatedDevice>) -> MutexGuard<'_, SimulatedDevice> {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::coordinator::batcher::{Backend, BatcherConfig};

@@ -175,6 +175,7 @@ fn midpoint(a: f32, b: f32) -> f32 {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::dataset::Task;

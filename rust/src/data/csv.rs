@@ -74,6 +74,7 @@ pub fn write_csv(data: &Dataset, path: &Path) -> crate::error::Result<()> {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

@@ -426,6 +426,7 @@ fn gen_breast_cancer(rng: &mut Pcg64, n: usize) -> Dataset {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
 

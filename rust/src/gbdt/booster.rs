@@ -328,6 +328,7 @@ pub fn train_with_penalty<P: SplitPenalty>(
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

@@ -595,6 +595,7 @@ impl HistogramPool {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::prng::Pcg64;

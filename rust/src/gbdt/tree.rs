@@ -205,6 +205,7 @@ pub fn predict_complete(
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::prng::Pcg64;

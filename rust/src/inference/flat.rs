@@ -322,6 +322,7 @@ impl From<&GbdtModel> for FlatModel {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

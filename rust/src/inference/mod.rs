@@ -322,6 +322,7 @@ pub fn predict_batch(p: &dyn Predictor, rows: &[Vec<f32>]) -> Vec<Vec<f64>> {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

@@ -779,6 +779,7 @@ impl From<&GbdtModel> for QuantizedFlatModel {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

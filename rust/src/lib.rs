@@ -40,7 +40,17 @@
 //!   and table of the paper's evaluation.
 //!
 //! See `DESIGN.md` for the system inventory and per-experiment index, and
-//! `EXPERIMENTS.md` for measured results.
+//! `EXPERIMENTS.md` for measured results. See the README's "Correctness
+//! tooling" section for the loom/Miri/sanitizer/fuzz verification layer
+//! and the unsafe-hygiene policy this crate enforces.
+
+// Unsafe-hygiene gate: the only module allowed to contain `unsafe` is
+// `simd` (vendor intrinsics and the width-punning kernels behind the
+// runtime tier dispatch) — see the allow on its declaration below.
+// Everything else is safe Rust by construction, and CI's clippy job
+// additionally requires a `// SAFETY:` contract on every unsafe block
+// (`-D clippy::undocumented_unsafe_blocks`).
+#![deny(unsafe_code)]
 
 pub mod baselines;
 pub mod bitio;
@@ -56,7 +66,11 @@ pub mod mcu;
 pub mod metrics;
 pub mod prng;
 pub mod runtime;
+// The single crate-wide exemption from `#![deny(unsafe_code)]`: all
+// intrinsics and raw-pointer kernels live here, behind tier checks.
+#[allow(unsafe_code)]
 pub mod simd;
 pub mod sweep;
+pub mod sync;
 pub mod testutil;
 pub mod toad;

@@ -119,6 +119,7 @@ pub fn eval_tensor_model(tm: &TensorModel, x: &[f32]) -> Vec<f64> {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

@@ -34,9 +34,14 @@ pub fn count_lt(tier: Tier, table: &[f32], v: f32) -> usize {
     #[cfg(target_arch = "x86_64")]
     if table.len() <= LINEAR_MAX {
         match tier.clamp_detected() {
-            // SAFETY: AVX (implied by the detected AVX2) / baseline
-            // SSE2 verified by clamp_detected.
+            // SAFETY: `clamp_detected` returned `Avx2`, so the running
+            // CPU detected AVX2, which implies the AVX feature this fn
+            // requires. `table` is a valid slice; the kernel reads only
+            // within its bounds.
             Tier::Avx2 => return unsafe { x86::count_lt_avx(table, v) },
+            // SAFETY: SSE2 is architecturally guaranteed on x86-64
+            // (this arm is compiled only for that target). `table` is a
+            // valid slice; the kernel reads only within its bounds.
             Tier::Sse2 => return unsafe { x86::count_lt_sse2(table, v) },
             Tier::Scalar => {}
         }
@@ -53,8 +58,11 @@ mod x86 {
     /// Four `f32` lanes per compare; scalar tail under one group.
     ///
     /// # Safety
-    /// Requires SSE2, which is architecturally guaranteed on x86-64.
-    /// All vector loads are in-bounds unaligned loads over `table`.
+    /// The caller must ensure the CPU supports SSE2 — architecturally
+    /// guaranteed on x86-64, the only target this module compiles for.
+    /// No other precondition: `table` may be any length (including 0);
+    /// every `_mm_loadu_ps(table.as_ptr().add(i))` is guarded by
+    /// `i + 4 <= table.len()`, so all unaligned loads stay in bounds.
     #[inline]
     pub unsafe fn count_lt_sse2(table: &[f32], v: f32) -> usize {
         let probe = _mm_set1_ps(v);
@@ -71,9 +79,13 @@ mod x86 {
     /// Eight `f32` lanes per compare; scalar tail under one group.
     ///
     /// # Safety
-    /// Caller must verify AVX support (the detected AVX2 tier implies
-    /// it — `Tier::clamp_detected`). All vector loads are in-bounds
-    /// unaligned loads over `table`.
+    /// The caller must verify the CPU supports AVX before calling (the
+    /// detected AVX2 tier implies it — route through
+    /// `Tier::clamp_detected`); calling without it is immediate UB
+    /// (`#[target_feature]`). No other precondition: `table` may be
+    /// any length (including 0); every
+    /// `_mm256_loadu_ps(table.as_ptr().add(i))` is guarded by
+    /// `i + 8 <= table.len()`, so all unaligned loads stay in bounds.
     #[target_feature(enable = "avx")]
     pub unsafe fn count_lt_avx(table: &[f32], v: f32) -> usize {
         let probe = _mm256_set1_ps(v);
@@ -96,6 +108,8 @@ mod tests {
     use crate::testutil::prop::run_prop;
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 120-case property sweep — slow under Miri;
+                              // `tests/miri_surface.rs` covers the scalar path.
     fn prop_every_tier_matches_partition_point() {
         run_prop("simd count_lt == partition_point", 120, |g| {
             let n = g.usize_in(0, LINEAR_MAX + 40);

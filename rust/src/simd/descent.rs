@@ -163,12 +163,15 @@ fn descend_groups_x86(
         Tier::Avx2 => {
             while r + 16 <= n_rows {
                 let lanes = &mut out[r..r + 16];
-                // SAFETY: AVX2 verified by clamp_detected above.
+                // SAFETY: AVX2 verified by clamp_detected above — the
+                // kernel's only soundness precondition (all its slice
+                // accesses are bounds-checked).
                 unsafe { x86::descend16_avx2(feat, thr, depth, xb, nf, r, lanes) };
                 r += 16;
             }
             while r + 8 <= n_rows {
-                // SAFETY: SSE2 is baseline on x86-64.
+                // SAFETY: SSE2 is baseline on x86-64 — the kernel's
+                // only soundness precondition.
                 unsafe { x86::descend8_sse2(feat, thr, depth, xb, nf, r, &mut out[r..r + 8]) };
                 r += 8;
             }
@@ -176,7 +179,8 @@ fn descend_groups_x86(
         }
         Tier::Sse2 => {
             while r + 8 <= n_rows {
-                // SAFETY: SSE2 is baseline on x86-64.
+                // SAFETY: SSE2 is baseline on x86-64 — the kernel's
+                // only soundness precondition.
                 unsafe { x86::descend8_sse2(feat, thr, depth, xb, nf, r, &mut out[r..r + 8]) };
                 r += 8;
             }
@@ -236,7 +240,10 @@ fn gather_groups_x86(
     match tier.clamp_detected() {
         Tier::Avx2 => {
             while r + 16 <= n_rows {
-                // SAFETY: AVX2 verified by clamp_detected above.
+                // SAFETY: AVX2 verified by clamp_detected above — the
+                // kernel's only soundness precondition (all its slice
+                // accesses, including the `rows` indirection, are
+                // bounds-checked).
                 unsafe {
                     x86::descend16_avx2_gather(
                         feat,
@@ -251,7 +258,8 @@ fn gather_groups_x86(
                 r += 16;
             }
             while r + 8 <= n_rows {
-                // SAFETY: SSE2 is baseline on x86-64.
+                // SAFETY: SSE2 is baseline on x86-64 — the kernel's
+                // only soundness precondition.
                 unsafe {
                     x86::descend8_sse2_gather(
                         feat,
@@ -269,7 +277,8 @@ fn gather_groups_x86(
         }
         Tier::Sse2 => {
             while r + 8 <= n_rows {
-                // SAFETY: SSE2 is baseline on x86-64.
+                // SAFETY: SSE2 is baseline on x86-64 — the kernel's
+                // only soundness precondition.
                 unsafe {
                     x86::descend8_sse2_gather(
                         feat,
@@ -328,9 +337,16 @@ mod x86 {
     /// writes leaf indices into `out[0..8]`.
     ///
     /// # Safety
-    /// Requires SSE2, which is architecturally guaranteed on x86-64.
-    /// All memory accesses are bounds-checked slice indexing or loads/
-    /// stores of local fixed-size arrays.
+    /// The **only** soundness precondition is the CPU feature: SSE2,
+    /// architecturally guaranteed on x86-64 (the only target this
+    /// module compiles for). There is no memory precondition — every
+    /// slice access (`xb[(r + l) * nf + feat[i]]`, `thr[i]`) is
+    /// bounds-checked indexing that panics on out-of-range inputs
+    /// rather than reading out of bounds, and the vector loads/stores
+    /// touch only the local fixed-size lane arrays
+    /// (`lanes`/`codes`/`thrs`, 8 × u16 each). Correctness (not
+    /// safety) additionally wants `out.len() >= 8`: fewer lanes are
+    /// silently left unwritten by the `zip`.
     #[inline]
     pub unsafe fn descend8_sse2(
         feat: &[u16],
@@ -372,9 +388,15 @@ mod x86 {
     /// writes leaf indices into `out[0..16]`.
     ///
     /// # Safety
-    /// Caller must verify AVX2 support (`Tier::clamp_detected`). All
-    /// memory accesses are bounds-checked slice indexing or loads/
-    /// stores of local fixed-size arrays.
+    /// The **only** soundness precondition is the CPU feature: the
+    /// caller must verify AVX2 support before calling (route through
+    /// `Tier::clamp_detected`); calling without it is immediate UB
+    /// (`#[target_feature]`). There is no memory precondition — every
+    /// slice access is bounds-checked indexing that panics rather than
+    /// reading out of bounds, and the vector loads/stores touch only
+    /// the local fixed-size lane arrays (`lanes`/`codes`/`thrs`,
+    /// 16 × u16 each). Correctness (not safety) additionally wants
+    /// `out.len() >= 16`: fewer lanes are silently left unwritten.
     #[target_feature(enable = "avx2")]
     pub unsafe fn descend16_avx2(
         feat: &[u16],
@@ -413,9 +435,13 @@ mod x86 {
     /// Gather twin of [`descend8_sse2`]: lane `l` walks row `rows[l]`.
     ///
     /// # Safety
-    /// Requires SSE2, which is architecturally guaranteed on x86-64.
-    /// All memory accesses are bounds-checked slice indexing or loads/
-    /// stores of local fixed-size arrays.
+    /// The **only** soundness precondition is the CPU feature: SSE2,
+    /// architecturally guaranteed on x86-64. No memory precondition —
+    /// the row indirection `xb[rows[l] as usize * nf + feat[i]]` and
+    /// `thr[i]` are bounds-checked indexing (an out-of-range `rows[l]`
+    /// panics, never reads out of bounds), and vector loads/stores
+    /// touch only the local fixed-size lane arrays. Correctness (not
+    /// safety) wants `rows.len() >= 8` and `out.len() >= 8`.
     #[inline]
     pub unsafe fn descend8_sse2_gather(
         feat: &[u16],
@@ -454,9 +480,15 @@ mod x86 {
     /// Gather twin of [`descend16_avx2`]: lane `l` walks row `rows[l]`.
     ///
     /// # Safety
-    /// Caller must verify AVX2 support (`Tier::clamp_detected`). All
-    /// memory accesses are bounds-checked slice indexing or loads/
-    /// stores of local fixed-size arrays.
+    /// The **only** soundness precondition is the CPU feature: the
+    /// caller must verify AVX2 support before calling (route through
+    /// `Tier::clamp_detected`); calling without it is immediate UB
+    /// (`#[target_feature]`). No memory precondition — the row
+    /// indirection and slot lookups are bounds-checked indexing (an
+    /// out-of-range `rows[l]` panics, never reads out of bounds), and
+    /// vector loads/stores touch only the local fixed-size lane
+    /// arrays. Correctness (not safety) wants `rows.len() >= 16` and
+    /// `out.len() >= 16`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn descend16_avx2_gather(
         feat: &[u16],
@@ -507,6 +539,8 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 80-case property sweep — slow under Miri;
+                              // the fixed-input tests below cover the scalar path.
     fn prop_every_tier_matches_the_per_row_oracle() {
         run_prop("simd descent == per-row oracle", 80, |g| {
             let depth = g.usize_in(0, 10);
@@ -552,6 +586,8 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 80-case property sweep — slow under Miri;
+                              // `gather_with_identity_rows_equals_direct_descent` runs.
     fn prop_gather_variant_matches_oracle_on_arbitrary_row_subsets() {
         run_prop("simd gather descent == per-row oracle", 80, |g| {
             let depth = g.usize_in(0, 10);

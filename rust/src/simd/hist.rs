@@ -136,17 +136,17 @@ fn dense_groups_x86<T: Code>(
         Tier::Avx2 => {
             let mut off3 = [0u32; 16];
             while i + 16 <= n {
-                // SAFETY: AVX2 verified by clamp_detected; ≥ 16 codes
-                // remain at `col[i..]`.
-                unsafe { x86::offsets16_avx2::<T>(col.as_ptr().add(i), &mut off3) };
+                // SAFETY: AVX2 verified by clamp_detected; the loop
+                // guard `i + 16 <= n` makes `col[i..]` ≥ 16 codes long.
+                unsafe { x86::offsets16_avx2::<T>(&col[i..], &mut off3) };
                 scatter(data, base3, &off3, &grad[i..i + 16], &hess[i..i + 16]);
                 i += 16;
             }
             if i + 8 <= n {
                 let mut off8 = [0u32; 8];
-                // SAFETY: SSE2 is baseline on x86-64; ≥ 8 codes remain
-                // at `col[i..]`.
-                unsafe { x86::offsets8_sse2::<T>(col.as_ptr().add(i), &mut off8) };
+                // SAFETY: SSE2 is baseline on x86-64; the branch guard
+                // `i + 8 <= n` makes `col[i..]` ≥ 8 codes long.
+                unsafe { x86::offsets8_sse2::<T>(&col[i..], &mut off8) };
                 scatter(data, base3, &off8, &grad[i..i + 8], &hess[i..i + 8]);
                 i += 8;
             }
@@ -155,9 +155,9 @@ fn dense_groups_x86<T: Code>(
         Tier::Sse2 => {
             let mut off3 = [0u32; 8];
             while i + 8 <= n {
-                // SAFETY: SSE2 is baseline on x86-64; ≥ 8 codes remain
-                // at `col[i..]`.
-                unsafe { x86::offsets8_sse2::<T>(col.as_ptr().add(i), &mut off3) };
+                // SAFETY: SSE2 is baseline on x86-64; the loop guard
+                // `i + 8 <= n` makes `col[i..]` ≥ 8 codes long.
+                unsafe { x86::offsets8_sse2::<T>(&col[i..], &mut off3) };
                 scatter(data, base3, &off3, &grad[i..i + 8], &hess[i..i + 8]);
                 i += 8;
             }
@@ -225,8 +225,8 @@ fn gathered_groups_x86<T: Code>(
                     *c = col[r as usize];
                 }
                 // SAFETY: AVX2 verified by clamp_detected; the lane
-                // buffer holds 16 codes.
-                unsafe { x86::offsets16_avx2::<T>(codes.as_ptr(), &mut off3) };
+                // buffer is a `[T; 16]`, exactly the 16 codes required.
+                unsafe { x86::offsets16_avx2::<T>(&codes, &mut off3) };
                 scatter(data, base3, &off3, &og[j..j + 16], &oh[j..j + 16]);
                 j += 16;
             }
@@ -236,8 +236,8 @@ fn gathered_groups_x86<T: Code>(
                     *c = col[r as usize];
                 }
                 // SAFETY: SSE2 is baseline on x86-64; the lane buffer
-                // holds ≥ 8 codes.
-                unsafe { x86::offsets8_sse2::<T>(codes.as_ptr(), &mut off8) };
+                // is a `[T; 16]`, more than the 8 codes required.
+                unsafe { x86::offsets8_sse2::<T>(&codes, &mut off8) };
                 scatter(data, base3, &off8, &og[j..j + 8], &oh[j..j + 8]);
                 j += 8;
             }
@@ -251,8 +251,8 @@ fn gathered_groups_x86<T: Code>(
                     *c = col[r as usize];
                 }
                 // SAFETY: SSE2 is baseline on x86-64; the lane buffer
-                // holds 8 codes.
-                unsafe { x86::offsets8_sse2::<T>(codes.as_ptr(), &mut off3) };
+                // is a `[T; 8]`, exactly the 8 codes required.
+                unsafe { x86::offsets8_sse2::<T>(&codes, &mut off3) };
                 scatter(data, base3, &off3, &og[j..j + 8], &oh[j..j + 8]);
                 j += 8;
             }
@@ -319,13 +319,20 @@ mod x86 {
     use super::Code;
     use core::arch::x86_64::*;
 
-    /// Widen 8 codes at `codes` to `u32` and store `3·code` into `out`.
+    /// Widen the first 8 codes of `codes` to `u32` and store `3·code`
+    /// into `out`.
     ///
     /// # Safety
-    /// Requires SSE2 (x86-64 baseline) and at least 8 readable codes
-    /// at `codes`.
+    /// The caller must ensure the CPU supports SSE2 — architecturally
+    /// guaranteed on x86-64, the only target this module compiles for —
+    /// and that `codes.len() >= 8`. The kernel performs exactly one
+    /// unaligned vector load of the first 8 elements (8 bytes for
+    /// `u8`, 16 bytes for `u16` — `T` is sealed to those two widths)
+    /// and never reads past them.
     #[inline]
-    pub unsafe fn offsets8_sse2<T: Code>(codes: *const T, out: &mut [u32; 8]) {
+    pub unsafe fn offsets8_sse2<T: Code>(codes: &[T], out: &mut [u32; 8]) {
+        debug_assert!(codes.len() >= 8, "offsets8_sse2 needs 8 codes, got {}", codes.len());
+        let codes = codes.as_ptr();
         let z = _mm_setzero_si128();
         // u16x8 lane group, whichever the source width.
         let w = if T::IS_U8 {
@@ -343,13 +350,20 @@ mod x86 {
         _mm_storeu_si128(out.as_mut_ptr().add(4).cast(), hi3);
     }
 
-    /// Widen 16 codes at `codes` to `u32` and store `3·code` into `out`.
+    /// Widen the first 16 codes of `codes` to `u32` and store `3·code`
+    /// into `out`.
     ///
     /// # Safety
-    /// Caller must verify AVX2 support (`Tier::clamp_detected`) and
-    /// provide at least 16 readable codes at `codes`.
+    /// The caller must verify the CPU supports AVX2 before calling
+    /// (route through `Tier::clamp_detected`); calling without it is
+    /// immediate UB (`#[target_feature]`). `codes.len() >= 16`: the
+    /// kernel reads exactly the first 16 elements (16 bytes for `u8`
+    /// in one load, 32 bytes for `u16` in two — `T` is sealed to those
+    /// two widths) and never past them.
     #[target_feature(enable = "avx2")]
-    pub unsafe fn offsets16_avx2<T: Code>(codes: *const T, out: &mut [u32; 16]) {
+    pub unsafe fn offsets16_avx2<T: Code>(codes: &[T], out: &mut [u32; 16]) {
+        debug_assert!(codes.len() >= 16, "offsets16_avx2 needs 16 codes, got {}", codes.len());
+        let codes = codes.as_ptr();
         let (lo, hi) = if T::IS_U8 {
             let v = _mm_loadu_si128(codes.cast()); // 16 bytes
             let w = _mm256_cvtepu8_epi16(v); // u16x16
@@ -367,6 +381,26 @@ mod x86 {
         let hi3 = _mm256_add_epi32(hi, _mm256_add_epi32(hi, hi));
         _mm256_storeu_si256(out.as_mut_ptr().cast(), lo3);
         _mm256_storeu_si256(out.as_mut_ptr().cast::<__m256i>().add(1), hi3);
+    }
+}
+
+/// Portable raw-pointer twin of the vector kernels' memory access:
+/// one unaligned-capable read per lane starting at the slice head,
+/// `3·code` widened to `u32`. Exists so Miri can check the pointer
+/// discipline the `x86` kernels rely on (same provenance, same
+/// bounds) without executing vendor intrinsics; the non-Miri test
+/// additionally pins it bit-equal to the real kernels.
+#[cfg(test)]
+fn offsets_ptr_model<T: Code>(codes: &[T], out: &mut [u32]) {
+    assert!(codes.len() >= out.len(), "lane group larger than the code slice");
+    let p = codes.as_ptr();
+    for (j, o) in out.iter_mut().enumerate() {
+        // SAFETY: `j < out.len() <= codes.len()`, so `p.add(j)` stays
+        // inside the slice's allocation and points at an initialized
+        // `T`; `read` is an unaligned-safe copy of a `Copy` type here
+        // because `T` (u8/u16) always meets its own alignment inside
+        // a slice.
+        *o = 3 * unsafe { p.add(j).read() }.idx() as u32;
     }
 }
 
@@ -430,11 +464,57 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 60-case property sweep — slow under Miri;
+                              // the pointer-model test below is the Miri twin.
     fn prop_every_tier_matches_the_scalar_oracle() {
         run_prop("simd histogram == scalar oracle", 60, |g| {
             check_width::<u8>(g, 37);
             check_width::<u16>(g, 37);
         });
+    }
+
+    /// Miri-runnable: the raw-pointer lane walk agrees with safe
+    /// indexing at every offset and both code widths, and (off Miri,
+    /// on x86-64) bit-matches the vector kernels it models.
+    #[test]
+    fn pointer_model_matches_safe_indexing_and_kernels() {
+        let codes8: Vec<u8> = (0..40u16).map(|i| (i * 7 % 251) as u8).collect();
+        let codes16: Vec<u16> = (0..40u16).map(|i| i * 331 % 1021).collect();
+
+        fn check<T: Code>(codes: &[T]) {
+            for lanes in [8usize, 16] {
+                for start in 0..=(codes.len() - lanes) {
+                    let mut got = vec![0u32; lanes];
+                    offsets_ptr_model(&codes[start..], &mut got);
+                    let want: Vec<u32> =
+                        codes[start..start + lanes].iter().map(|c| 3 * c.idx() as u32).collect();
+                    assert_eq!(got, want, "lanes {lanes} start {start}");
+
+                    #[cfg(all(target_arch = "x86_64", not(miri)))]
+                    {
+                        let tier = crate::simd::tier();
+                        if lanes == 8 && tier >= Tier::Sse2 {
+                            let mut out = [0u32; 8];
+                            // SAFETY: SSE2 is baseline on x86-64 and the
+                            // slice `codes[start..]` is ≥ 8 codes long
+                            // by the loop bound.
+                            unsafe { x86::offsets8_sse2::<T>(&codes[start..], &mut out) };
+                            assert_eq!(&out[..], &want[..], "sse2 start {start}");
+                        }
+                        if lanes == 16 && tier >= Tier::Avx2 {
+                            let mut out = [0u32; 16];
+                            // SAFETY: AVX2 detected (tier check above);
+                            // the slice `codes[start..]` is ≥ 16 codes
+                            // long by the loop bound.
+                            unsafe { x86::offsets16_avx2::<T>(&codes[start..], &mut out) };
+                            assert_eq!(&out[..], &want[..], "avx2 start {start}");
+                        }
+                    }
+                }
+            }
+        }
+        check(&codes8);
+        check(&codes16);
     }
 
     #[test]

@@ -91,8 +91,17 @@ impl Tier {
     }
 
     /// Probe the CPU (uncached — use [`tier`] on hot paths).
+    ///
+    /// Under Miri this always reports [`Tier::Scalar`]: the
+    /// interpreter cannot execute vendor intrinsics, and the scalar
+    /// twins are bit-identical by the parity contract anyway, so every
+    /// Miri run exercises the portable kernels end to end.
     pub fn detect() -> Tier {
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(miri)]
+        {
+            Tier::Scalar
+        }
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         {
             if std::arch::is_x86_feature_detected!("avx2") {
                 Tier::Avx2
@@ -101,7 +110,7 @@ impl Tier {
                 Tier::Sse2
             }
         }
-        #[cfg(not(target_arch = "x86_64"))]
+        #[cfg(all(not(target_arch = "x86_64"), not(miri)))]
         {
             Tier::Scalar
         }
@@ -145,9 +154,9 @@ mod tests {
         assert_eq!(t, tier(), "cached tier must be stable");
         assert_eq!(t, Tier::detect(), "cache must hold the detected tier");
         assert!(Tier::Scalar < Tier::Sse2 && Tier::Sse2 < Tier::Avx2);
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         assert!(t >= Tier::Sse2, "SSE2 is the x86-64 baseline");
-        #[cfg(not(target_arch = "x86_64"))]
+        #[cfg(any(not(target_arch = "x86_64"), miri))]
         assert_eq!(t, Tier::Scalar);
     }
 

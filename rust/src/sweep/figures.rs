@@ -428,6 +428,7 @@ pub fn table2_rows(seed: u64, row_cap: usize) -> (Vec<Table2Row>, PackedModel, D
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
 

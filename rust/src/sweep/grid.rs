@@ -291,6 +291,7 @@ pub fn pow2_rounds(log_max: u32) -> Vec<usize> {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

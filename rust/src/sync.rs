@@ -1,0 +1,76 @@
+//! Synchronization shim: `std::sync` in production, `loom` under model
+//! checking.
+//!
+//! The concurrent serving tier (`coordinator::{metrics, registry,
+//! batcher}`) imports every lock, condvar, and atomic through this
+//! module instead of `std::sync` directly. A normal build re-exports
+//! the `std` types unchanged — zero overhead, zero dependencies. A
+//! build with `RUSTFLAGS="--cfg loom"` swaps in [loom]'s instrumented
+//! twins, under which the `loom_` tests exhaustively explore every
+//! thread interleaving (and every allowed relaxed-memory outcome) of
+//! the serving tier's lock-free protocols:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release loom_
+//! ```
+//!
+//! [loom]: https://docs.rs/loom
+//!
+//! Two deliberate exceptions stay on `std` under both cfgs:
+//!
+//! * [`Arc`] — loom's `Arc` exists to catch code relying on the
+//!   release/acquire edges of the reference count itself. The serving
+//!   tier never does: `Arc` is pure shared ownership here, and every
+//!   cross-thread handoff is synchronized by a `Mutex`, `RwLock`,
+//!   `Condvar`, or tracked atomic. Keeping `std::sync::Arc` lets
+//!   loom-instrumented types flow through the rest of the crate
+//!   (`FleetServer`, examples, integration tests) without rethreading
+//!   every `Arc` consumer.
+//! * [`mpsc`] — loom has no channel model. The batcher's reply
+//!   channels are one-shot SPSC handoffs whose delivery/disconnect
+//!   semantics are `std`'s contract, not ours; the loom batcher models
+//!   check the queue/close protocol *around* them (see
+//!   `coordinator::batcher`).
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+pub use std::sync::mpsc;
+pub use std::sync::Arc;
+
+/// Timed condvar wait with poison recovery, ignoring the timed-out
+/// flag (callers re-check their predicate and deadline anyway).
+///
+/// Loom's model has no clock, so under `cfg(loom)` this is a plain
+/// `wait`: a timed wait is exactly "a wait that may also wake for no
+/// reason", and loom already explores the notified wakeup; callers
+/// must tolerate both, which is the condition-loop discipline the
+/// batcher follows.
+#[cfg(not(loom))]
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: std::time::Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, _)) => g,
+        Err(e) => e.into_inner().0,
+    }
+}
+
+/// See the `cfg(not(loom))` twin above.
+#[cfg(loom)]
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    _dur: std::time::Duration,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}

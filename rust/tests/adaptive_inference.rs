@@ -22,6 +22,11 @@
 //!   task a tiny tolerance must strictly reduce mean trees evaluated
 //!   with zero class flips — the tentpole claim of the adaptive engine.
 
+// Everything below trains real models, spawns threads, or sweeps large
+// inputs - orders of magnitude too slow under the Miri interpreter.
+// `tests/miri_surface.rs` holds the fast coverage that stays in Miri runs.
+#![cfg(not(miri))]
+
 use toad::data::synth::PaperDataset;
 use toad::gbdt::{booster, GbdtParams};
 use toad::inference::{AdaptivePolicy, Predictor, QuantizedFlatModel};

@@ -1,6 +1,11 @@
 //! Integration: full coordinator stack — sweep candidates → planner →
 //! devices + gateway batchers → served predictions.
 
+// Everything below trains real models, spawns threads, or sweeps large
+// inputs - orders of magnitude too slow under the Miri interpreter.
+// `tests/miri_surface.rs` holds the fast coverage that stays in Miri runs.
+#![cfg(not(miri))]
+
 use std::time::Duration;
 use toad::coordinator::batcher::{Backend, Batcher, BatcherConfig};
 use toad::coordinator::{DeploymentPlanner, DeviceKind, FleetServer, ModelCard, SimulatedDevice};

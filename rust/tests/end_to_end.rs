@@ -1,6 +1,11 @@
 //! End-to-end integration: train → penalize → encode → decode → packed
 //! inference, across every synthetic paper dataset.
 
+// Everything below trains real models, spawns threads, or sweeps large
+// inputs - orders of magnitude too slow under the Miri interpreter.
+// `tests/miri_surface.rs` holds the fast coverage that stays in Miri runs.
+#![cfg(not(miri))]
+
 use toad::data::synth::PaperDataset;
 use toad::data::train_test_split;
 use toad::gbdt::GbdtParams;

@@ -28,6 +28,11 @@
 //! AVX2), across NaN rows, every lane-tail length, and both `BinMatrix`
 //! arena widths on the columnar path.
 
+// Everything below trains real models, spawns threads, or sweeps large
+// inputs - orders of magnitude too slow under the Miri interpreter.
+// `tests/miri_surface.rs` holds the fast coverage that stays in Miri runs.
+#![cfg(not(miri))]
+
 use toad::gbdt::loss::Objective;
 use toad::gbdt::{booster, GbdtModel, GbdtParams, Node, Tree};
 use toad::inference::{FlatModel, QuantizedFlatModel};

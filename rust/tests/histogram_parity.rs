@@ -12,6 +12,11 @@
 //! of the accumulators — alone, sharded, and pooled — against the same
 //! oracle on both the u8 and u16 arenas.
 
+// Everything below trains real models, spawns threads, or sweeps large
+// inputs - orders of magnitude too slow under the Miri interpreter.
+// `tests/miri_surface.rs` holds the fast coverage that stays in Miri runs.
+#![cfg(not(miri))]
+
 use toad::data::BinMatrix;
 use toad::gbdt::histogram::{HistogramPool, HistogramSet};
 use toad::testutil::prop::run_prop;

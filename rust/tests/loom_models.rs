@@ -1,0 +1,120 @@
+//! Loom models of the registry's cross-thread contract.
+//!
+//! Compiled and run only under `RUSTFLAGS="--cfg loom"`:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release loom_
+//! ```
+//!
+//! Under that cfg the `toad::sync` shim swaps `std::sync` for loom's
+//! instrumented types throughout `coordinator::{metrics, registry,
+//! batcher}`, and `loom::model` exhaustively explores every thread
+//! interleaving (and every allowed relaxed-memory outcome) of the
+//! bodies below. The in-module models for the version-counter table
+//! and the batcher queue/close protocol live next to their code in
+//! `src/coordinator/{metrics,batcher}.rs`; this file models the
+//! `ModelRegistry` because its scenario needs a real trained
+//! deployment artifact, which the integration-test layer can build
+//! once and clone into every explored interleaving.
+#![cfg(loom)]
+
+use loom::thread;
+use std::sync::Arc;
+use toad::coordinator::planner::ModelCard;
+use toad::coordinator::registry::ModelRegistry;
+use toad::data::synth::PaperDataset;
+use toad::gbdt::{self, GbdtParams};
+use toad::inference::QuantizedFlatModel;
+use toad::layout::{encode, EncodeOptions, FeatureInfo};
+
+/// One real deployment artifact (trained once, outside the model —
+/// `ModelCard` and `QuantizedFlatModel` are `Clone`, so each explored
+/// interleaving gets a cheap copy, not a retrain).
+fn fixture(id: &str, rounds: usize) -> (ModelCard, QuantizedFlatModel) {
+    let data = PaperDataset::BreastCancer.generate(11).select(&(0..150).collect::<Vec<_>>());
+    let model = gbdt::booster::train(&data, GbdtParams::paper(rounds, 2));
+    let finfo = FeatureInfo::from_dataset(&data);
+    let blob = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
+    let card = ModelCard { id: id.into(), score: 0.9, size_bytes: blob.len(), blob };
+    (card, model.quantize())
+}
+
+/// Two threads race `publish` to the same key while a reader polls
+/// `version_of` twice. In every interleaving: the two publishes draw
+/// distinct versions, the reader never observes the live version going
+/// backwards, and after both joins the key serves the higher version
+/// (the registry assigns versions inside the write critical section —
+/// the property `publish`'s ordering comment cites this test for).
+#[test]
+fn loom_registry_publish_versions_are_monotonic_per_key() {
+    let (card_a, engine_a) = fixture("a", 2);
+    let (card_b, engine_b) = fixture("b", 3);
+    loom::model(move || {
+        let reg = Arc::new(ModelRegistry::new());
+
+        let fixtures = [(card_a.clone(), engine_a.clone()), (card_b.clone(), engine_b.clone())];
+        let publishers: Vec<_> = fixtures
+            .into_iter()
+            .map(|(card, engine)| {
+                let reg = Arc::clone(&reg);
+                thread::spawn(move || reg.publish("k", card, engine).version)
+            })
+            .collect();
+
+        let reader_reg = Arc::clone(&reg);
+        let reader = thread::spawn(move || {
+            let first = reader_reg.version_of("k");
+            let second = reader_reg.version_of("k");
+            (first, second)
+        });
+
+        let versions: Vec<u64> = publishers.into_iter().map(|h| h.join().unwrap()).collect();
+        let (first, second) = reader.join().unwrap();
+
+        assert_ne!(versions[0], versions[1], "racing publishes must draw distinct versions");
+        assert!(
+            first.unwrap_or(0) <= second.unwrap_or(0),
+            "live version regressed between reads: {first:?} -> {second:?}"
+        );
+        let last = versions[0].max(versions[1]);
+        assert_eq!(
+            reg.version_of("k"),
+            Some(last),
+            "after both publishes the key must serve the higher version"
+        );
+        assert_eq!(reg.latest_version(), last);
+    });
+}
+
+/// A reader races one publish: `current` returns either nothing (the
+/// publish has not landed) or the *complete* installed artifact —
+/// version, card id, and blob all from the same publish, never a torn
+/// mix. Exercises the claim that the `RwLock` write critical section,
+/// not the version counter's ordering, publishes the deployment.
+#[test]
+fn loom_registry_current_is_never_torn() {
+    let (card, engine) = fixture("only", 2);
+    let blob_len = card.blob.len();
+    loom::model(move || {
+        let reg = Arc::new(ModelRegistry::new());
+
+        let publisher_reg = Arc::clone(&reg);
+        let (pcard, pengine) = (card.clone(), engine.clone());
+        let publisher = thread::spawn(move || publisher_reg.publish("k", pcard, pengine).version);
+
+        let reader_reg = Arc::clone(&reg);
+        let reader = thread::spawn(move || {
+            reader_reg.current("k").map(|dep| {
+                // Every field must come from the one completed publish.
+                (dep.version, dep.card.id.clone(), dep.blob().len())
+            })
+        });
+
+        let published = publisher.join().unwrap();
+        if let Some((version, id, len)) = reader.join().unwrap() {
+            assert_eq!(version, published, "reader saw a version no publish installed");
+            assert_eq!(id, "only");
+            assert_eq!(len, blob_len, "deployment observed with a torn blob");
+        }
+    });
+}

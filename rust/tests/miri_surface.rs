@@ -1,0 +1,210 @@
+//! Fast, allocation-light tests sized for `cargo miri test`.
+//!
+//! Miri interprets every load and store, so the heavy property sweeps
+//! and model-training integration tests are tagged out of its runs
+//! (`#[cfg_attr(miri, ignore)]` / file-level `#![cfg(not(miri))]`).
+//! This file is the surface that *stays in*: hand-built fixtures over
+//! the crate's pointer-adjacent machinery — bit-level I/O, the
+//! width-punning `BinMatrix` arena, and the scalar twins of the SIMD
+//! kernels (under Miri `Tier::detect()` reports `Scalar`, so these are
+//! exactly the paths a Miri run executes end to end). Everything here
+//! also runs natively as a cheap smoke layer.
+
+use toad::bitio::{bits_for, BitReader, BitWriter};
+use toad::data::{BinColumns, BinMatrix};
+use toad::simd::{
+    accumulate_dense, accumulate_gathered, count_lt, descend_complete, descend_complete_gather,
+    descend_row, Tier,
+};
+
+#[test]
+fn miri_reports_the_scalar_tier() {
+    // Under Miri the dispatcher must never select a vector tier; the
+    // scalar twins are bit-identical, so nothing else changes.
+    #[cfg(miri)]
+    assert_eq!(toad::simd::tier(), Tier::Scalar);
+    // Natively: whatever was detected must be able to run.
+    assert!(toad::simd::available_tiers().contains(&toad::simd::tier()));
+}
+
+#[test]
+fn bitio_mixed_width_roundtrip() {
+    // Widths 0..=64 with values at the width boundary, crossing byte
+    // and 57-bit fast-path windows; the reader must reproduce every
+    // masked value in order.
+    let cases: Vec<(u64, u32)> = vec![
+        (0, 0),
+        (1, 1),
+        (0b101, 3),
+        (0xFF, 8),
+        (0x1FF, 9),
+        (0xABCD, 16),
+        (0xDEAD_BEEF, 32),
+        (0x0123_4567_89AB_CDEF, 57),
+        (u64::MAX, 64),
+        (u64::MAX, 7), // masked to 7 bits on write
+        (42, 64),
+    ];
+    let mut w = BitWriter::new();
+    for &(v, width) in &cases {
+        w.write(v, width);
+    }
+    let bytes = w.into_bytes();
+    let mut r = BitReader::new(&bytes);
+    for &(v, width) in &cases {
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        assert_eq!(r.read(width), v & mask, "width {width}");
+    }
+}
+
+#[test]
+fn bitio_float_and_alignment_roundtrip() {
+    let mut w = BitWriter::new();
+    w.write(0b11, 2); // misalign on purpose
+    w.write_f32(3.5);
+    w.write_f16(-0.125);
+    w.align_byte();
+    w.write(0x77, 8);
+    let bytes = w.into_bytes();
+
+    let mut r = BitReader::new(&bytes);
+    assert_eq!(r.read(2), 0b11);
+    assert_eq!(r.read_f32(), 3.5);
+    assert_eq!(r.read_f16(), -0.125); // exactly representable in f16
+    r.align_byte();
+    assert_eq!(r.read(8), 0x77);
+}
+
+#[test]
+fn bitio_seek_rereads_any_field() {
+    let mut w = BitWriter::new();
+    w.write(0x5, 4);
+    w.write(0x123, 12);
+    w.write(0x9, 5);
+    let bytes = w.into_bytes();
+
+    let mut r = BitReader::new(&bytes);
+    assert_eq!(r.read(4), 0x5);
+    let mid = r.bit_pos();
+    assert_eq!(r.read(12), 0x123);
+    assert_eq!(r.read(5), 0x9);
+    r.seek(mid);
+    assert_eq!(r.read(12), 0x123, "seek must rewind to a mid-stream field");
+    r.seek(0);
+    assert_eq!(r.read(4), 0x5);
+}
+
+#[test]
+fn bits_for_covers_the_small_range() {
+    assert_eq!(bits_for(0), 0);
+    assert_eq!(bits_for(1), 0);
+    assert_eq!(bits_for(2), 1);
+    assert_eq!(bits_for(3), 2);
+    assert_eq!(bits_for(256), 8);
+    assert_eq!(bits_for(257), 9);
+}
+
+#[test]
+fn binmatrix_picks_u8_arena_and_mirrors_row_major() {
+    // 3 rows × 2 features, all bin counts ≤ 256 → u8 arena.
+    let m = BinMatrix::from_u16_columns(vec![vec![0, 3, 1], vec![2, 0, 2]]);
+    assert!(m.is_u8());
+    assert_eq!((m.n_rows(), m.n_features()), (3, 2));
+    assert_eq!(m.bins_per_feature(), &[4, 3]);
+    match m.columns() {
+        BinColumns::U8(arena) => assert_eq!(arena, &[0, 3, 1, 2, 0, 2]),
+        BinColumns::U16(_) => panic!("small-bin matrix must use the u8 arena"),
+    }
+    assert_eq!(m.bin(0, 1), 3);
+    assert_eq!(m.bin(1, 2), 2);
+    // Row-major mirror: row i is [f0, f1].
+    assert_eq!(m.to_row_major(), vec![0, 2, 3, 0, 1, 2]);
+}
+
+#[test]
+fn binmatrix_widens_to_u16_when_any_feature_overflows_u8() {
+    // Feature 1 holds a code of 300 → 301 bins → whole arena is u16.
+    let m = BinMatrix::from_u16_columns(vec![vec![0, 1], vec![300, 2]]);
+    assert!(!m.is_u8());
+    match m.columns() {
+        BinColumns::U16(arena) => assert_eq!(arena, &[0, 1, 300, 2]),
+        BinColumns::U8(_) => panic!("wide-bin matrix must use the u16 arena"),
+    }
+    assert_eq!(m.to_u16_columns(), vec![vec![0, 1], vec![300, 2]]);
+}
+
+#[test]
+fn scalar_descent_walks_a_hand_built_tree() {
+    // Depth-2 complete tree, 2 features:
+    //        [f0 ≤ 5]
+    //       /        \
+    //   [f1 ≤ 2]   [f1 ≤ 7]
+    // Leaves left→right: 0..4.
+    let feat = [0u16, 1, 1];
+    let thr = [5u16, 2, 7];
+    // (f0, f1) → expected leaf.
+    let rows: [([u16; 2], usize); 4] =
+        [([3, 1], 0), ([3, 9], 1), ([9, 7], 2), ([9, 8], 3)];
+    for (row, leaf) in rows {
+        assert_eq!(descend_row(&feat, &thr, &row), leaf, "row {row:?}");
+    }
+
+    // The block kernel (scalar tier) must agree, including on a block
+    // longer than one 8-lane group so the unrolled body runs.
+    let mut xb = Vec::new();
+    let mut want = Vec::new();
+    for i in 0..19u16 {
+        let r = [i % 11, (i * 3) % 11];
+        want.push(descend_row(&feat, &thr, &r) as u32);
+        xb.extend_from_slice(&r);
+    }
+    let mut out = vec![0u32; 19];
+    descend_complete(Tier::Scalar, &feat, &thr, 2, &xb, 2, &mut out);
+    assert_eq!(out, want);
+
+    // The gather twin over a shuffled, repeating row subset.
+    let lane_rows: Vec<u32> = vec![4, 0, 18, 7, 7, 12, 3, 9, 1, 16];
+    let want_gather: Vec<u32> = lane_rows.iter().map(|&r| want[r as usize]).collect();
+    let mut got = vec![0u32; lane_rows.len()];
+    descend_complete_gather(Tier::Scalar, &feat, &thr, 2, &xb, 2, &lane_rows, &mut got);
+    assert_eq!(got, want_gather);
+}
+
+#[test]
+fn scalar_count_lt_is_partition_point() {
+    let table = [-2.0f32, -0.5, 0.0, 0.5, 0.5, 3.25];
+    for v in [-3.0f32, -2.0, -0.25, 0.0, 0.5, 0.75, 4.0, f32::NAN] {
+        assert_eq!(
+            count_lt(Tier::Scalar, &table, v),
+            table.partition_point(|&b| b < v),
+            "probe {v}"
+        );
+    }
+    assert_eq!(count_lt(Tier::Scalar, &[], 1.0), 0);
+}
+
+#[test]
+fn scalar_histogram_accumulation_matches_hand_totals() {
+    // 6 rows into 3 bins at offset 1; triples are [grad, hess, count].
+    let col: [u8; 6] = [0, 2, 1, 2, 0, 1];
+    let grad = [1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0];
+    let hess = [0.5f64; 6];
+    let mut data = vec![0.0f64; 3 * (3 + 1)];
+    accumulate_dense(Tier::Scalar, &mut data, 1, &col, &grad, &hess);
+    // bin 0 ← rows {0, 4}, bin 1 ← rows {2, 5}, bin 2 ← rows {1, 3}.
+    assert_eq!(&data[3..6], &[17.0, 1.0, 2.0]);
+    assert_eq!(&data[6..9], &[36.0, 1.0, 2.0]);
+    assert_eq!(&data[9..12], &[10.0, 1.0, 2.0]);
+    assert!(data[..3].iter().all(|&v| v == 0.0), "offset 0 must stay untouched");
+
+    // Gathered twin over the subset {1, 3, 5} (u16 codes this time).
+    let col16: [u16; 6] = [0, 2, 1, 2, 0, 1];
+    let rows = [1u32, 3, 5];
+    let og = [2.0f64, 8.0, 32.0];
+    let oh = [0.5f64; 3];
+    let mut data = vec![0.0f64; 3 * (3 + 1)];
+    accumulate_gathered(Tier::Scalar, &mut data, 1, &col16, &rows, &og, &oh);
+    assert_eq!(&data[6..9], &[32.0, 0.5, 1.0]); // bin 1 ← row 5
+    assert_eq!(&data[9..12], &[10.0, 1.0, 2.0]); // bin 2 ← rows 1, 3
+    assert_eq!(&data[3..6], &[0.0, 0.0, 0.0]); // bin 0: no subset row
+}

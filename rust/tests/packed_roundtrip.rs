@@ -9,6 +9,11 @@
 //! split in every engine). Each case goes encode → validate → decode →
 //! predict and through [`PackedModel`]'s direct bit-level execution.
 
+// Everything below trains real models, spawns threads, or sweeps large
+// inputs - orders of magnitude too slow under the Miri interpreter.
+// `tests/miri_surface.rs` holds the fast coverage that stays in Miri runs.
+#![cfg(not(miri))]
+
 use toad::gbdt::loss::Objective;
 use toad::gbdt::tree::{Node, Tree};
 use toad::gbdt::GbdtModel;

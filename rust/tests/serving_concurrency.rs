@@ -11,6 +11,11 @@
 //! * the bounded queue surfaces `SubmitError::Overloaded` backpressure
 //!   instead of buffering without limit.
 
+// Everything below trains real models, spawns threads, or sweeps large
+// inputs - orders of magnitude too slow under the Miri interpreter.
+// `tests/miri_surface.rs` holds the fast coverage that stays in Miri runs.
+#![cfg(not(miri))]
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;

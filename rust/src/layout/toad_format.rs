@@ -433,10 +433,15 @@ fn parse(bytes: &[u8]) -> Parsed {
 }
 
 /// Validate that a blob is structurally sound: the header parses, every
-/// component lies within the buffer, and reference widths are
-/// consistent. Returns the total bit length on success. Run this before
-/// [`decode`]/[`PackedModel::from_bytes`] on untrusted bytes (e.g. a
-/// blob read back from device flash).
+/// component lies within the buffer, reference widths are consistent,
+/// and every stored reference (map feature index, per-node feature ref
+/// and threshold rank, leaf-value ref) is in range — [`decode`] and
+/// [`PackedModel`] index their tables with these, so an unchecked
+/// reference would turn a single flipped bit into a panic. Returns the
+/// total bit length on success. Cost is `O(total bits)` (the tree
+/// bodies are walked node by node, not skipped by size). Run this
+/// before [`decode`]/[`PackedModel::from_bytes`] on untrusted bytes
+/// (e.g. a blob read back from device flash).
 pub fn validate_blob(bytes: &[u8]) -> Result<usize, String> {
     let total_bits = bytes.len() * 8;
     let header_min = (W_TASK + W_OUTPUTS + W_ROUNDS + W_DEPTH + W_D + W_FU + W_MAXT + W_NLEAF)
@@ -481,6 +486,7 @@ pub fn validate_blob(bytes: &[u8]) -> Result<usize, String> {
     }
     r.seek(r.bit_pos() + 32 * n_outputs);
     let mut thr_bits = 0usize;
+    let mut counts = Vec::with_capacity(n_used);
     for i in 0..n_used {
         let f = r.read(wd) as usize;
         if f >= n_features {
@@ -491,10 +497,17 @@ pub fn validate_blob(bytes: &[u8]) -> Result<usize, String> {
         if is_float && !(4..=5).contains(&exp) {
             return Err(format!("map[{i}]: invalid float width 2^{exp}"));
         }
+        // Legal integer widths are {1, 2, 4, 8, 16, 32} (exp 0..=5);
+        // exp 6/7 would make readers pull 64/128-bit threshold fields —
+        // 128 exceeds `BitReader::read`'s width contract.
+        if !is_float && exp > 5 {
+            return Err(format!("map[{i}]: invalid integer width 2^{exp}"));
+        }
         let count = r.read(wc) as usize + 1;
         if count > max_t {
             return Err(format!("map[{i}]: count {count} > maxT {max_t}"));
         }
+        counts.push(count);
         thr_bits += count * (1usize << exp);
     }
     let w_f = bits_for(n_used);
@@ -521,6 +534,35 @@ pub fn validate_blob(bytes: &[u8]) -> Result<usize, String> {
             + (1usize << d) * w_l as usize;
         if pos > total_bits {
             return Err(format!("tree {t}: body truncated"));
+        }
+        // The body fits — now check every stored reference. Reference
+        // fields are packed at power-of-two-rounded widths, so a blob
+        // can pass every size check yet hold an index past its table
+        // (one flipped bit is enough whenever the table length is not a
+        // power of two); `decode` and `PackedModel` index the map, the
+        // threshold tables, and the leaf-value table with these.
+        for s in 0..n_internal {
+            let fr = r2.read(w_f) as usize;
+            let tr = r2.read(w_t) as usize;
+            if fr >= n_used {
+                return Err(format!("tree {t} node {s}: feature ref {fr} >= |F_U| {n_used}"));
+            }
+            // Encoded slots (real and dummy alike) always store a rank
+            // below the feature's threshold count.
+            if tr >= counts[fr] {
+                return Err(format!(
+                    "tree {t} node {s}: threshold rank {tr} >= count {}",
+                    counts[fr]
+                ));
+            }
+        }
+        for s in 0..(1usize << d) {
+            let lr = r2.read(w_l) as usize;
+            if lr >= n_leaf_values {
+                return Err(format!(
+                    "tree {t} leaf {s}: leaf ref {lr} >= table {n_leaf_values}"
+                ));
+            }
         }
     }
     Ok(pos)
@@ -791,6 +833,7 @@ impl PackedModel {
 }
 
 #[cfg(test)]
+#[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
     use super::*;
     use crate::data::synth::PaperDataset;

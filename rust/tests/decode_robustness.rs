@@ -1,0 +1,349 @@
+//! Decode-robustness corpus: `try_decode` on hostile bytes.
+//!
+//! The ToaD blob is the crate's untrusted input surface — a model read
+//! back from device flash or over a wire arrives as raw bytes, and the
+//! documented contract is that [`toad_format::try_decode`] *returns*
+//! `Err` on anything malformed and never panics. This file pins that
+//! contract with a deterministic corpus:
+//!
+//! * every strict prefix of a real encoded blob (truncation),
+//! * every single-bit flip of a real encoded blob (corruption),
+//! * hand-packed headers exercising each `validate_blob` rejection
+//!   path, including the PR 2 width-overflow family (fields at or past
+//!   their fixed header widths) and the out-of-range reference family
+//!   (feature/threshold/leaf indices past their tables) that the
+//!   original size-only validator let through to a panicking `decode`.
+//!
+//! The two sweeps over the *trained* blob are tagged out of Miri (the
+//! blob is a few KB, so the sweep is quadratic in its size); the
+//! hand-packed corpus is small and stays in Miri runs, where it doubles
+//! as coverage of `BitReader`'s unaligned read paths.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use toad::bitio::BitWriter;
+use toad::data::synth::PaperDataset;
+use toad::gbdt::{self, GbdtParams};
+use toad::layout::toad_format::{try_decode, validate_blob};
+use toad::layout::{encode, EncodeOptions, FeatureInfo};
+
+/// A small real artifact: trained, encoded, and known-good.
+fn trained_blob() -> Vec<u8> {
+    let data = PaperDataset::BreastCancer.generate(7).select(&(0..120).collect::<Vec<_>>());
+    let model = gbdt::booster::train(&data, GbdtParams::paper(2, 2));
+    let finfo = FeatureInfo::from_dataset(&data);
+    encode(&model, &finfo, &EncodeOptions::default()).unwrap()
+}
+
+/// `try_decode` must return (Ok *or* Err) — panicking is the failure.
+fn decodes_without_panic(bytes: &[u8], what: &str) -> bool {
+    match catch_unwind(AssertUnwindSafe(|| try_decode(bytes))) {
+        Ok(result) => result.is_ok(),
+        Err(_) => panic!("try_decode panicked on {what}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sweeps over a real encoded model.
+// ---------------------------------------------------------------------
+
+#[test]
+#[cfg_attr(miri, ignore)] // trains a model and sweeps a KB-scale blob
+fn every_strict_prefix_of_a_real_blob_is_rejected() {
+    let blob = trained_blob();
+    assert!(try_decode(&blob).is_ok(), "the untruncated blob must decode");
+    for k in 0..blob.len() {
+        assert!(
+            !decodes_without_panic(&blob[..k], &format!("prefix of {k} bytes")),
+            "a {k}-byte prefix of a {}-byte blob validated as complete",
+            blob.len()
+        );
+    }
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // trains a model and sweeps every bit of the blob
+fn every_single_bit_flip_of_a_real_blob_is_handled() {
+    let blob = trained_blob();
+    let mut flipped = blob.clone();
+    for byte in 0..blob.len() {
+        for bit in 0..8 {
+            flipped[byte] ^= 1 << bit;
+            // Ok (benign flip, e.g. inside a leaf f32) and Err are both
+            // acceptable; the assertion is that neither path panics.
+            decodes_without_panic(&flipped, &format!("bit flip at byte {byte} bit {bit}"));
+            flipped[byte] ^= 1 << bit;
+        }
+    }
+    assert_eq!(flipped, blob, "sweep must restore the blob");
+}
+
+// ---------------------------------------------------------------------
+// Hand-packed corpus. Field widths mirror the format header exactly:
+// task(2) outputs(8) rounds(16) depth(4) d(16) |F_U|(16) maxT(16)
+// leafvals(24), then one f32 base score per output.
+// ---------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn header(
+    task: u64,
+    n_outputs: u64,
+    n_rounds: u64,
+    max_depth: u64,
+    n_features: u64,
+    n_used: u64,
+    max_t: u64,
+    n_leaf: u64,
+) -> BitWriter {
+    let mut w = BitWriter::new();
+    w.write(task, 2);
+    w.write(n_outputs, 8);
+    w.write(n_rounds, 16);
+    w.write(max_depth, 4);
+    w.write(n_features, 16);
+    w.write(n_used, 16);
+    w.write(max_t, 16);
+    w.write(n_leaf, 24);
+    for _ in 0..n_outputs {
+        w.write_f32(0.0);
+    }
+    w
+}
+
+/// Knobs for the hand-packed single-tree blob below. Defaults produce a
+/// blob that decodes cleanly; each test perturbs one knob.
+#[derive(Clone)]
+struct Tiny {
+    /// Width exponent + numeric-type bit of the feature-0 map entry.
+    f0_exp: u64,
+    f0_float: bool,
+    /// Stored tree depth (`max_depth` in the header is 2).
+    depth: u64,
+    /// Root split: feature ref (|F_U| = 3) and threshold rank
+    /// (feature 0 has 3 thresholds).
+    fr: u64,
+    tr: u64,
+    /// Leaf-value refs (table holds 5 entries).
+    lr: [u64; 2],
+}
+
+impl Default for Tiny {
+    fn default() -> Self {
+        Tiny { f0_exp: 0, f0_float: false, depth: 1, fr: 0, tr: 2, lr: [0, 4] }
+    }
+}
+
+/// Hand-pack a complete blob: task 0, 1 output, 1 round, max_depth 2,
+/// 3 features (all used, maxT 3), 5 leaf values, one stored tree.
+/// Derived widths: wd = wc = w_f = w_t = 2, w_l = 3, w_dep = 2.
+fn tiny_blob(t: &Tiny) -> Vec<u8> {
+    let mut w = header(0, 1, 1, 2, 3, 3, 3, 5);
+    // Map: (feature, exponent:3, is_float:1, count-1).
+    w.write(0, 2);
+    w.write(t.f0_exp, 3);
+    w.write(u64::from(t.f0_float), 1);
+    w.write(2, 2); // 3 thresholds
+    w.write(1, 2);
+    w.write(1, 3); // uint width 2
+    w.write(0, 1);
+    w.write(1, 2); // 2 thresholds
+    w.write(2, 2);
+    w.write(4, 3); // f16
+    w.write(1, 1);
+    w.write(0, 2); // 1 threshold
+    // Threshold tables sized for the *default* map (3×1 + 2×2 + 16
+    // bits); exponent-mutation tests are rejected during the map walk,
+    // before sizing matters.
+    w.write(0, 1);
+    w.write(1, 1);
+    w.write(1, 1);
+    w.write(1, 2);
+    w.write(2, 2);
+    w.write_f16(0.5);
+    for i in 0..5 {
+        w.write_f32(i as f32 * 0.25);
+    }
+    // One tree: depth, then a complete node array.
+    w.write(t.depth, 2);
+    let n_internal = (1usize << t.depth) - 1;
+    for _ in 0..n_internal {
+        w.write(t.fr, 2);
+        w.write(t.tr, 2);
+    }
+    for s in 0..(1usize << t.depth) {
+        w.write(t.lr[s % 2], 3);
+    }
+    w.into_bytes()
+}
+
+#[test]
+fn the_canonical_crafted_blob_decodes() {
+    let blob = tiny_blob(&Tiny::default());
+    let bits = validate_blob(&blob).expect("canonical blob must validate");
+    assert!(bits <= blob.len() * 8);
+    let model = try_decode(&blob).expect("canonical blob must decode");
+    assert_eq!(model.n_features, 3);
+    assert_eq!(model.trees.len(), 1, "one output");
+    assert_eq!(model.trees[0].len(), 1, "one round");
+}
+
+#[test]
+fn every_prefix_of_the_crafted_blob_is_rejected() {
+    let blob = tiny_blob(&Tiny::default());
+    for k in 0..blob.len() {
+        assert!(
+            !decodes_without_panic(&blob[..k], &format!("crafted prefix of {k} bytes")),
+            "a {k}-byte prefix validated as complete"
+        );
+    }
+}
+
+#[test]
+fn every_bit_flip_of_the_crafted_blob_is_handled() {
+    // Small enough to keep in Miri runs, where the sweep doubles as
+    // coverage of BitReader's unaligned read paths. Includes the flips
+    // that turn stored references out of range (e.g. leaf ref 4 → 5),
+    // which panicked decode before validate_blob walked tree bodies.
+    let blob = tiny_blob(&Tiny::default());
+    let mut flipped = blob.clone();
+    for byte in 0..blob.len() {
+        for bit in 0..8 {
+            flipped[byte] ^= 1 << bit;
+            decodes_without_panic(&flipped, &format!("crafted flip at byte {byte} bit {bit}"));
+            flipped[byte] ^= 1 << bit;
+        }
+    }
+}
+
+fn expect_err(bytes: &[u8], needle: &str, what: &str) {
+    match catch_unwind(AssertUnwindSafe(|| try_decode(bytes))) {
+        Ok(Err(msg)) => {
+            assert!(msg.contains(needle), "{what}: error {msg:?} lacks {needle:?}")
+        }
+        Ok(Ok(_)) => panic!("{what}: malformed blob decoded successfully"),
+        Err(_) => panic!("{what}: try_decode panicked instead of returning Err"),
+    }
+}
+
+#[test]
+fn rejects_malformed_headers() {
+    expect_err(&[], "blob too small", "empty blob");
+    expect_err(&[0x55; 4], "blob too small", "sub-header blob");
+    expect_err(&header(3, 1, 0, 0, 0, 0, 0, 0).into_bytes(), "invalid task code", "task 3");
+    expect_err(&header(0, 0, 0, 0, 0, 0, 0, 0).into_bytes(), "zero outputs", "0 outputs");
+    expect_err(
+        &header(0, 2, 0, 0, 0, 0, 0, 0).into_bytes(),
+        "requires 1 output",
+        "binary task with 2 outputs",
+    );
+    expect_err(
+        &header(0, 1, 0, 0, 1, 2, 3, 0).into_bytes(),
+        "exceeds d",
+        "|F_U| > d",
+    );
+    expect_err(
+        &header(0, 1, 0, 0, 2, 1, 0, 0).into_bytes(),
+        "no thresholds",
+        "used features with maxT 0",
+    );
+    expect_err(
+        &header(0, 1, 1, 0, 0, 0, 0, 0).into_bytes(),
+        "without leaf values",
+        "a round but an empty leaf table",
+    );
+}
+
+#[test]
+fn rejects_truncated_sections() {
+    // Header promises a map entry that is not there.
+    expect_err(&header(0, 1, 0, 0, 2, 1, 3, 1).into_bytes(), "map truncated", "missing map");
+    // Map present, threshold + leaf tables missing.
+    let mut w = header(0, 1, 0, 0, 2, 1, 3, 1);
+    w.write(0, 1); // feature 0 (wd = 1)
+    w.write(0, 3); // uint width 1
+    w.write(0, 1);
+    w.write(2, 2); // 3 thresholds
+    expect_err(&w.into_bytes(), "truncated", "missing threshold/leaf tables");
+}
+
+#[test]
+fn rejects_map_entries_that_overflow_their_tables() {
+    // Feature index past d (d = 3 → wd = 2, so the field can hold 3).
+    let mut w = header(0, 1, 0, 0, 3, 1, 3, 1);
+    w.write(3, 2); // feature 3 of 3
+    w.write(0, 3);
+    w.write(0, 1);
+    w.write(0, 2);
+    w.write_f32(0.0); // padding so the map-size check passes
+    expect_err(&w.into_bytes(), "out of range", "map feature index past d");
+
+    // Threshold count past maxT.
+    let mut w = header(0, 1, 0, 0, 2, 1, 3, 1);
+    w.write(1, 1); // wd = 1, feature 1 is in range…
+    w.write(0, 3);
+    w.write(0, 1);
+    w.write(3, 2); // …but count 4 > maxT 3
+    w.write_f32(0.0);
+    expect_err(&w.into_bytes(), "> maxT", "threshold count past maxT");
+}
+
+#[test]
+fn rejects_invalid_width_exponents() {
+    // Float thresholds narrower than f16 or wider than f32 do not
+    // exist; integer widths stop at 32 bits (exp 5) — exp 6/7 would
+    // demand 64/128-bit reads downstream.
+    expect_err(
+        &tiny_blob(&Tiny { f0_exp: 3, f0_float: true, ..Tiny::default() }),
+        "invalid float width",
+        "f8 thresholds",
+    );
+    expect_err(
+        &tiny_blob(&Tiny { f0_exp: 6, f0_float: false, ..Tiny::default() }),
+        "invalid integer width",
+        "u64 thresholds",
+    );
+    expect_err(
+        &tiny_blob(&Tiny { f0_exp: 7, f0_float: false, ..Tiny::default() }),
+        "invalid integer width",
+        "u128 thresholds",
+    );
+}
+
+#[test]
+fn rejects_trees_deeper_than_the_header_bound() {
+    // PR 2 gates this family at encode time (a depth field must fit its
+    // width); the decoder must reject the stored-side analogue: a tree
+    // whose own depth field exceeds the header's max_depth.
+    expect_err(
+        &tiny_blob(&Tiny { depth: 3, ..Tiny::default() }),
+        "> max",
+        "tree depth past header max_depth",
+    );
+}
+
+#[test]
+fn rejects_out_of_range_references_instead_of_panicking() {
+    // Pinning tests for the validator hardening: each of these passed
+    // the original size-only checks and panicked inside decode (map /
+    // leaf-table indexing) or seeked packed readers out of bounds.
+    expect_err(
+        &tiny_blob(&Tiny { fr: 3, ..Tiny::default() }),
+        "feature ref",
+        "node feature ref past |F_U|",
+    );
+    expect_err(
+        &tiny_blob(&Tiny { tr: 3, ..Tiny::default() }),
+        "threshold rank",
+        "node threshold rank past the feature's count",
+    );
+    expect_err(
+        &tiny_blob(&Tiny { lr: [0, 7], ..Tiny::default() }),
+        "leaf ref",
+        "leaf ref past the value table",
+    );
+    expect_err(
+        &tiny_blob(&Tiny { lr: [5, 0], ..Tiny::default() }),
+        "leaf ref",
+        "first leaf ref just past the value table",
+    );
+}

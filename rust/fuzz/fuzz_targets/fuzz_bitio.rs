@@ -1,0 +1,63 @@
+//! Structure-aware write/read round-trip over the bit-packing substrate.
+//!
+//! Input is parsed as 9-byte ops `(selector, u64 value)`:
+//!
+//! * selector 0..=64 — `write(value, selector)`; reading the field back
+//!   must yield `value mod 2^selector` (the writer masks, the reader
+//!   must agree bit for bit),
+//! * 65 — `align_byte` on both sides,
+//! * 66 — `write_f32` of the raw bits; the read-back bits must be
+//!   identical (including NaN payloads).
+//!
+//! Any mismatch, panic, or out-of-bounds read in either direction is a
+//! finding. This drives exactly the pointer-adjacent fast/slow read
+//! paths (`57-bit window vs byte loop) that the Miri surface tests pin
+//! with fixed vectors, but with fuzzer-chosen widths and alignments.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use toad::bitio::{BitReader, BitWriter};
+
+enum Op {
+    Field { value: u64, width: u32 },
+    Align,
+    F32(u32),
+}
+
+fuzz_target!(|data: &[u8]| {
+    let mut ops = Vec::new();
+    for chunk in data.chunks_exact(9) {
+        let sel = chunk[0] % 67;
+        let value = u64::from_le_bytes(chunk[1..9].try_into().unwrap());
+        ops.push(match sel {
+            0..=64 => Op::Field { value, width: sel as u32 },
+            65 => Op::Align,
+            _ => Op::F32(value as u32),
+        });
+    }
+
+    let mut w = BitWriter::new();
+    for op in &ops {
+        match op {
+            Op::Field { value, width } => w.write(*value, *width),
+            Op::Align => w.align_byte(),
+            Op::F32(bits) => w.write_f32(f32::from_bits(*bits)),
+        }
+    }
+    let expected_bits = w.len_bits();
+    let bytes = w.into_bytes();
+    assert!(bytes.len() * 8 >= expected_bits && bytes.len() * 8 < expected_bits + 8);
+
+    let mut r = BitReader::new(&bytes);
+    for op in &ops {
+        match op {
+            Op::Field { value, width } => {
+                let mask = if *width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+                assert_eq!(r.read(*width), value & mask, "width {width}");
+            }
+            Op::Align => r.align_byte(),
+            Op::F32(bits) => assert_eq!(r.read_f32().to_bits(), *bits),
+        }
+    }
+    assert_eq!(r.bit_pos(), expected_bits);
+});

@@ -1,0 +1,16 @@
+//! Arbitrary bytes into the untrusted-blob entry point.
+//!
+//! The contract under test: `try_decode` on *any* input returns
+//! `Ok`/`Err` — it must never panic, index out of bounds, or allocate
+//! unboundedly (every component's size is validated against the blob
+//! length before `decode` touches it). Seeds in `corpus/fuzz_decode/`
+//! include a minimal valid blob and the hand-packed single-tree blob
+//! from `tests/decode_robustness.rs`, so the fuzzer starts from inputs
+//! that reach deep into the tree walk rather than dying at the header.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let _ = toad::layout::toad_format::try_decode(data);
+});

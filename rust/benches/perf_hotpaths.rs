@@ -230,6 +230,38 @@ fn main() {
     });
     rec.push("quantized_batch_simd", per_desc_simd);
 
+    // ---- oblivious mode: level-shared splits, lookup descent ---------
+    // Trained separately (level-uniform trees are a different model),
+    // so this compares each engine on its natural model shape. The
+    // speedup is logged either way and NOT assumed >= 1: lookup
+    // descent drops per-node branching but a level-shared split can
+    // grow less discriminating trees, and on shallow depths the 2^d
+    // leaf-table gather can offset the branch savings.
+    let per_obl_train = time("oblivious boosting round (depth 3, 16k rows)", 5, || {
+        let mut p = GbdtParams::paper(1, 3);
+        p.growth = gbdt::GrowthMode::Oblivious;
+        let _ = gbdt::booster::train(&data, p);
+    });
+    rec.push("oblivious_train", per_obl_train);
+    let mut obl_params = GbdtParams::paper(64, 4);
+    obl_params.growth = gbdt::GrowthMode::Oblivious;
+    let obl_model = gbdt::booster::train(&data, obl_params);
+    let obl_quant = QuantizedFlatModel::from_model(&obl_model);
+    println!(
+        "oblivious engine: {} of {} trees in the level-shared sub-format",
+        obl_quant.n_oblivious_trees(),
+        obl_model.n_trees()
+    );
+    let per_obl = time("oblivious predict_batch (512 rows)", 20, || {
+        std::hint::black_box(obl_quant.predict_batch(&test_rows));
+    });
+    rec.push("oblivious_batch", per_obl);
+    println!(
+        "{:44} {:>12.1} K rows/s",
+        "  -> oblivious batch throughput",
+        512.0 / per_obl / 1e3
+    );
+
     // Columnar batch: feeds the dataset's own feature columns (no
     // per-row gather, one binning pass per column).
     let test_cols: Vec<&[f32]> = data.features.iter().map(|c| &c[..512]).collect();
@@ -376,6 +408,7 @@ fn main() {
     let simd_vs_scalar_histogram =
         rec.lookup("histogram_build_forced_scalar") / rec.lookup("histogram_build_simd");
     let adaptive_vs_full = rec.lookup("quantized_batch") / rec.lookup("adaptive_batch");
+    let oblivious_vs_quantized = rec.lookup("quantized_batch") / rec.lookup("oblivious_batch");
     println!("\n== speedups vs scalar baselines ==");
     println!("{:44} {:>11.2}x", "histogram build (dense)", hist_speedup);
     println!("{:44} {:>11.2}x", "histogram build (subset/gathered)", subset_speedup);
@@ -388,6 +421,7 @@ fn main() {
     println!("{:44} {:>11.2}x", "simd vs scalar descent", simd_vs_scalar_descent);
     println!("{:44} {:>11.2}x", "simd vs scalar histogram", simd_vs_scalar_histogram);
     println!("{:44} {:>11.2}x", "adaptive vs full quantized batch", adaptive_vs_full);
+    println!("{:44} {:>11.2}x", "oblivious vs quantized batch", oblivious_vs_quantized);
 
     let json = rec.to_json(
         &format!("covtype_binary_{n}x{d}"),
@@ -404,6 +438,7 @@ fn main() {
             ("simd_vs_scalar_descent", simd_vs_scalar_descent),
             ("simd_vs_scalar_histogram", simd_vs_scalar_histogram),
             ("adaptive_vs_full", adaptive_vs_full),
+            ("oblivious_vs_quantized", oblivious_vs_quantized),
         ],
         &[("mean_trees_evaluated", mean_trees), ("n_trees", model.n_trees() as f64)],
     );

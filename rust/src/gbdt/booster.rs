@@ -6,7 +6,7 @@
 //! paper §4.1) is built exactly this way: `toad::train_with_budget`
 //! drives rounds and measures the encoded model size after each one.
 
-use super::grower::{grow_tree, resolve_thresholds, GrowerParams};
+use super::grower::{grow_tree, resolve_thresholds, GrowerParams, GrowthMode};
 use super::histogram::HistogramPool;
 use super::loss::Objective;
 use super::model::GbdtModel;
@@ -39,6 +39,12 @@ pub struct GbdtParams {
     /// build sequentially, so deep-tree tail leaves never pay
     /// thread-spawn overhead.
     pub histogram_shards: usize,
+    /// Tree growth strategy: leaf-wise best-first (the default) or
+    /// CatBoost-style oblivious level-shared splits
+    /// ([`GrowthMode::Oblivious`]), which emit perfect complete trees
+    /// eligible for the compact oblivious ToaD body and the
+    /// table-lookup SIMD descent.
+    pub growth: GrowthMode,
 }
 
 impl Default for GbdtParams {
@@ -54,6 +60,7 @@ impl Default for GbdtParams {
             min_hess_in_leaf: 1e-3,
             max_bins: 255,
             histogram_shards: 0,
+            growth: GrowthMode::Leafwise,
         }
     }
 }
@@ -90,6 +97,7 @@ impl GbdtParams {
             max_depth: self.max_depth,
             max_leaves: self.max_leaves,
             learning_rate: self.learning_rate,
+            mode: self.growth,
         }
     }
 }
@@ -464,6 +472,37 @@ mod tests {
         }
         // An explicit count is taken verbatim.
         assert_eq!(GbdtParams { histogram_shards: 7, ..p }.resolved_shards(2), 7);
+    }
+
+    #[test]
+    fn oblivious_growth_trains_level_uniform_trees_end_to_end() {
+        let data = small(PaperDataset::BreastCancer, 400);
+        let (train_set, test_set) = train_test_split(&data, 0.2, 9);
+        let model = train(
+            &train_set,
+            GbdtParams { growth: GrowthMode::Oblivious, ..GbdtParams::paper(20, 3) },
+        );
+        let mut grew = 0usize;
+        for tree in model.trees.iter().flatten() {
+            if tree.depth() == 0 {
+                continue; // a degenerate round may emit a bare leaf
+            }
+            grew += 1;
+            let levels = tree.oblivious_levels();
+            assert!(levels.is_some(), "oblivious growth must emit level-uniform trees");
+            assert_eq!(tree.n_leaves(), 1 << tree.depth(), "perfect complete tree");
+        }
+        assert!(grew > 0, "at least one tree must actually split");
+        let acc = model.score(&test_set);
+        assert!(acc > 0.85, "oblivious breast cancer accuracy {acc} too low");
+        // The quantized engine routes every grown tree through the
+        // oblivious fast path.
+        let quant = crate::inference::QuantizedFlatModel::from_model(&model);
+        assert_eq!(quant.n_oblivious_trees(), grew);
+        for i in (0..test_set.n_rows()).step_by(17) {
+            let x = test_set.row(i);
+            assert_eq!(quant.predict_raw(&x), model.predict_raw(&x), "row {i}");
+        }
     }
 
     #[test]

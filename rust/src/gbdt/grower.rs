@@ -1,7 +1,9 @@
-//! Leaf-wise (best-first) tree growth with penalty-aware split selection.
+//! Leaf-wise (best-first) tree growth with penalty-aware split selection,
+//! plus the level-synchronous *oblivious* grower.
 //!
-//! The grower repeatedly splits the open leaf with the highest penalized
-//! gain, as LightGBM does, bounded by `max_depth` and `max_leaves`.
+//! The default grower repeatedly splits the open leaf with the highest
+//! penalized gain, as LightGBM does, bounded by `max_depth` and
+//! `max_leaves`.
 //!
 //! Reuse penalties make stored candidate gains *stale*: when a split is
 //! applied elsewhere, a feature/threshold that was "new" (and therefore
@@ -11,12 +13,34 @@
 //! on pop, a stale candidate is recomputed against the current registry
 //! and re-queued. The loop only ever *applies* a candidate whose version
 //! is current, so the applied split is always the true argmax.
+//!
+//! [`GrowthMode::Oblivious`] selects the CatBoost-style alternative:
+//! every level of the tree shares a single `(feature, boundary)` split,
+//! chosen to maximize the *summed* penalized gain across all frontier
+//! leaves at once (histograms are additive, so each leaf's contribution
+//! is its ordinary gain scan at that candidate). The resulting tree is a
+//! perfect complete tree describable by `depth` split pairs plus a
+//! `2^depth` leaf table — the shape [`super::tree::Tree::oblivious_levels`]
+//! detects, the ToaD blob stores in the compact oblivious body, and
+//! [`crate::simd::descend_oblivious`] serves with a table-lookup descent.
 
 use super::histogram::{HistogramPool, HistogramSet};
-use super::splitter::{best_split, leaf_weight, SplitInfo, SplitParams, SplitPenalty};
+use super::splitter::{best_split, leaf_weight, score, SplitInfo, SplitParams, SplitPenalty};
 use super::tree::{Node, Tree};
 use crate::data::{BinColumns, BinMatrix};
 use std::collections::BinaryHeap;
+
+/// Which growth strategy [`grow_tree`] runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GrowthMode {
+    /// Best-first leaf-wise growth (LightGBM-style) — the default.
+    #[default]
+    Leafwise,
+    /// Level-shared splits (CatBoost-style oblivious trees): one
+    /// `(feature, boundary)` pair per level, applied to every frontier
+    /// leaf, scored by summed gain across the level.
+    Oblivious,
+}
 
 /// Parameters controlling the growth of a single tree.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +52,8 @@ pub struct GrowerParams {
     pub max_leaves: usize,
     /// Shrinkage applied to leaf values.
     pub learning_rate: f64,
+    /// Growth strategy (leaf-wise or oblivious).
+    pub mode: GrowthMode,
 }
 
 impl Default for GrowerParams {
@@ -37,6 +63,7 @@ impl Default for GrowerParams {
             max_depth: 6,
             max_leaves: 31,
             learning_rate: 0.1,
+            mode: GrowthMode::Leafwise,
         }
     }
 }
@@ -98,6 +125,23 @@ pub struct GrownTree {
 /// pool alive across all rounds so steady-state growth allocates
 /// nothing on the histogram path.
 pub fn grow_tree(
+    binned: &BinMatrix,
+    pool: &mut HistogramPool,
+    rows: Vec<u32>,
+    grad: &[f64],
+    hess: &[f64],
+    params: &GrowerParams,
+    penalty: &mut dyn SplitPenalty,
+) -> GrownTree {
+    match params.mode {
+        GrowthMode::Leafwise => grow_tree_leafwise(binned, pool, rows, grad, hess, params, penalty),
+        GrowthMode::Oblivious => {
+            grow_tree_oblivious(binned, pool, rows, grad, hess, params, penalty)
+        }
+    }
+}
+
+fn grow_tree_leafwise(
     binned: &BinMatrix,
     pool: &mut HistogramPool,
     rows: Vec<u32>,
@@ -273,6 +317,224 @@ pub fn grow_tree(
     GrownTree { tree, leaf_rows }
 }
 
+/// A frontier leaf of the level-synchronous oblivious grower.
+struct ObliviousLeaf {
+    /// Index of the placeholder `Node::Leaf` in the tree being built.
+    node_idx: usize,
+    rows: Vec<u32>,
+    totals: (f64, f64, u32),
+    /// Present while this leaf can still be scored (dropped on the last
+    /// level, where children are final leaves and need no histogram).
+    hist: Option<HistogramSet>,
+}
+
+/// Gradient/hessian/count prefix of `hist`'s feature `f` through
+/// boundary `bin` — the left-side totals of splitting at `(f, bin)`.
+fn prefix_totals(hist: &HistogramSet, f: usize, bin: u16) -> (f64, f64, u32) {
+    let (mut g, mut h, mut c) = (0.0f64, 0.0f64, 0u32);
+    for tri in hist.feature_bins(f).chunks_exact(3).take(bin as usize + 1) {
+        g += tri[0];
+        h += tri[1];
+        c += tri[2] as u32;
+    }
+    (g, h, c)
+}
+
+/// Grow one *oblivious* tree: every level shares a single
+/// `(feature, boundary)` split, applied to all frontier leaves.
+///
+/// Per level the grower scores every candidate pair by its **summed**
+/// penalized gain across the frontier — histograms are additive, so each
+/// leaf contributes its ordinary gain-scan term at that candidate (zero
+/// when the leaf's side constraints fail, mirroring the leaf-wise scan
+/// skipping that boundary), while the reuse penalty is charged **once**
+/// for the whole level (the level shares one feature and one threshold,
+/// which is exactly why oblivious bodies are cheap to store). The
+/// winning pair is applied to every frontier leaf, splittable or not, so
+/// the tree stays a perfect complete tree; rows that cannot reach a side
+/// leave an empty cell whose value is `leaf_weight(0, 0, λ) = 0`.
+/// Growth stops at `max_depth` (clamped so `2^depth ≤ max_leaves`) or as
+/// soon as no candidate has positive summed gain.
+fn grow_tree_oblivious(
+    binned: &BinMatrix,
+    pool: &mut HistogramPool,
+    rows: Vec<u32>,
+    grad: &[f64],
+    hess: &[f64],
+    params: &GrowerParams,
+    penalty: &mut dyn SplitPenalty,
+) -> GrownTree {
+    let (gt, ht): (f64, f64) = rows
+        .iter()
+        .fold((0.0, 0.0), |(g, h), &i| (g + grad[i as usize], h + hess[i as usize]));
+    let root_value = leaf_weight(gt, ht, params.split.lambda) * params.learning_rate;
+
+    let mut tree = Tree { nodes: vec![Node::Leaf { value: root_value }] };
+    // Depth bound honoring both knobs: a depth-d oblivious tree has
+    // exactly 2^d leaves.
+    let depth_cap = params.max_depth.min(params.max_leaves.max(1).ilog2() as usize);
+    if depth_cap == 0 || rows.is_empty() {
+        return GrownTree { tree, leaf_rows: vec![(0, rows)] };
+    }
+
+    let hist = pool.build(binned, &rows, grad, hess);
+    let n_rows_total = rows.len() as u32;
+    let mut frontier = vec![ObliviousLeaf {
+        node_idx: 0,
+        rows,
+        totals: (gt, ht, n_rows_total),
+        hist: Some(hist),
+    }];
+
+    let n = binned.n_rows();
+    let lambda = params.split.lambda;
+    for level in 0..depth_cap {
+        // ---- score: summed penalized gain per (feature, boundary) ----
+        let hist0 = frontier[0].hist.as_ref().expect("frontier leaves carry histograms");
+        let n_features = hist0.n_features();
+        let offsets: Vec<usize> = {
+            let mut off = Vec::with_capacity(n_features + 1);
+            let mut acc = 0usize;
+            for f in 0..n_features {
+                off.push(acc);
+                acc += hist0.n_bins(f).saturating_sub(1);
+            }
+            off.push(acc);
+            off
+        };
+        let mut acc = vec![0.0f64; offsets[n_features]];
+        for leaf in &frontier {
+            let hist = leaf.hist.as_ref().expect("frontier leaves carry histograms");
+            let (lg, lh, lc) = leaf.totals;
+            if lc < 2 * params.split.min_data_in_leaf {
+                continue; // no boundary of this leaf can satisfy both sides
+            }
+            let parent_score = score(lg, lh, lambda);
+            for f in 0..n_features {
+                let n_bins = hist.n_bins(f);
+                if n_bins < 2 {
+                    continue;
+                }
+                let tri = hist.feature_bins(f);
+                let (mut gl, mut hl, mut cl) = (0.0f64, 0.0f64, 0u32);
+                let base = offsets[f];
+                for (b, bin) in tri.chunks_exact(3).take(n_bins - 1).enumerate() {
+                    gl += bin[0];
+                    hl += bin[1];
+                    cl += bin[2] as u32;
+                    let cr = lc - cl;
+                    if cl < params.split.min_data_in_leaf {
+                        continue;
+                    }
+                    if cr < params.split.min_data_in_leaf {
+                        break; // right side only shrinks from here on
+                    }
+                    let (gr, hr) = (lg - gl, lh - hl);
+                    if hl < params.split.min_hess_in_leaf || hr < params.split.min_hess_in_leaf {
+                        continue;
+                    }
+                    acc[base + b] += 0.5
+                        * (score(gl, hl, lambda) + score(gr, hr, lambda) - parent_score)
+                        - params.split.gamma;
+                }
+            }
+        }
+        let mut best: Option<(usize, u16, f64)> = None;
+        for f in 0..n_features {
+            for b in 0..offsets[f + 1] - offsets[f] {
+                let gain = acc[offsets[f] + b] - penalty.penalty(f, b as u16);
+                if gain > 0.0 && best.is_none_or(|(_, _, g)| gain > g) {
+                    best = Some((f, b as u16, gain));
+                }
+            }
+        }
+        let Some((bf, bb, _)) = best else {
+            break; // no level-wide positive gain — the tree ends here
+        };
+        penalty.on_split(bf, bb);
+
+        // ---- apply the winning pair to every frontier leaf ----
+        let last_level = level + 1 == depth_cap;
+        let (cs, ce) = (bf * n, (bf + 1) * n);
+        let mut next = Vec::with_capacity(frontier.len() * 2);
+        for leaf in frontier {
+            let ObliviousLeaf { node_idx, rows, totals, hist } = leaf;
+            let hist = hist.expect("frontier leaves carry histograms");
+            let (lg, lh, lc) = totals;
+            let (gl, hl, cl) = prefix_totals(&hist, bf, bb);
+            let (gr, hr, cr) = (lg - gl, lh - hl, lc - cl);
+            let mut left_rows = Vec::with_capacity(cl as usize);
+            let mut right_rows = Vec::with_capacity(cr as usize);
+            match binned.columns() {
+                BinColumns::U8(a) => {
+                    partition_rows(&a[cs..ce], bb, &rows, &mut left_rows, &mut right_rows)
+                }
+                BinColumns::U16(a) => {
+                    partition_rows(&a[cs..ce], bb, &rows, &mut left_rows, &mut right_rows)
+                }
+            }
+            debug_assert_eq!(left_rows.len() as u32, cl);
+            debug_assert_eq!(right_rows.len() as u32, cr);
+
+            let lv = leaf_weight(gl, hl, lambda) * params.learning_rate;
+            let rv = leaf_weight(gr, hr, lambda) * params.learning_rate;
+            let left_idx = tree.nodes.len();
+            tree.nodes.push(Node::Leaf { value: lv });
+            let right_idx = tree.nodes.len();
+            tree.nodes.push(Node::Leaf { value: rv });
+            tree.nodes[node_idx] = Node::Internal {
+                feature: bf,
+                bin: bb,
+                threshold: f32::NAN, // patched by `resolve_thresholds`
+                left: left_idx,
+                right: right_idx,
+            };
+
+            // Child histograms only if another level will be scored:
+            // smaller side from the pool, larger sibling by in-place
+            // subtraction from the parent's buffer (same trick as the
+            // leaf-wise grower).
+            let (lhist, rhist) = if last_level {
+                pool.recycle(hist);
+                (None, None)
+            } else {
+                let left_smaller = left_rows.len() <= right_rows.len();
+                let small_rows = if left_smaller { &left_rows } else { &right_rows };
+                let small = pool.build(binned, small_rows, grad, hess);
+                let mut large = hist;
+                large.subtract_assign(&small);
+                if left_smaller {
+                    (Some(small), Some(large))
+                } else {
+                    (Some(large), Some(small))
+                }
+            };
+            next.push(ObliviousLeaf {
+                node_idx: left_idx,
+                rows: left_rows,
+                totals: (gl, hl, cl),
+                hist: lhist,
+            });
+            next.push(ObliviousLeaf {
+                node_idx: right_idx,
+                rows: right_rows,
+                totals: (gr, hr, cr),
+                hist: rhist,
+            });
+        }
+        frontier = next;
+    }
+
+    let mut leaf_rows = Vec::with_capacity(frontier.len());
+    for leaf in frontier {
+        if let Some(h) = leaf.hist {
+            pool.recycle(h);
+        }
+        leaf_rows.push((leaf.node_idx, leaf.rows));
+    }
+    GrownTree { tree, leaf_rows }
+}
+
 /// Route each of `rows` left (`code ≤ bin`) or right, reading one
 /// contiguous feature column of the arena.
 fn partition_rows<T: Copy>(
@@ -431,6 +693,107 @@ mod tests {
         for (_, _, thr) in tree.splits() {
             assert!(thr.is_finite(), "threshold not resolved");
         }
+    }
+
+    #[test]
+    fn oblivious_mode_grows_level_uniform_complete_trees() {
+        struct Recorder {
+            splits: Vec<(usize, u16)>,
+        }
+        impl SplitPenalty for Recorder {
+            fn penalty(&self, _f: usize, _b: u16) -> f64 {
+                0.0
+            }
+            fn on_split(&mut self, f: usize, b: u16) {
+                self.splits.push((f, b));
+            }
+            fn version(&self) -> u64 {
+                self.splits.len() as u64
+            }
+        }
+        let mut rng = Pcg64::new(7);
+        let n = 800;
+        let x0: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+        let x1: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+        let y: Vec<f64> = x0
+            .iter()
+            .zip(&x1)
+            .map(|(&a, &b)| (a * 4.0).sin() as f64 + (b * 3.0) as f64)
+            .collect();
+        let ds = Dataset {
+            name: "obl".into(),
+            features: vec![x0, x1],
+            targets: y.clone(),
+            labels: vec![],
+            task: Task::Regression,
+        };
+        let grad: Vec<f64> = y.iter().map(|&v| -v).collect();
+        let hess = vec![1.0; n];
+        let binner = Binner::fit(&ds, 32);
+        let binned = binner.bin_matrix(&ds);
+        let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let mut pool = HistogramPool::new(&bins);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut rec = Recorder { splits: vec![] };
+        let max_depth = 3usize;
+        let params = GrowerParams {
+            split: SplitParams { min_data_in_leaf: 5, ..Default::default() },
+            max_depth,
+            max_leaves: 1 << max_depth,
+            learning_rate: 0.5,
+            mode: GrowthMode::Oblivious,
+        };
+        let grown = grow_tree(&binned, &mut pool, rows, &grad, &hess, &params, &mut rec);
+        let mut tree = grown.tree;
+        resolve_thresholds(&mut tree, |f, b| binner.threshold_value(f, b as usize));
+        let depth = tree.depth();
+        assert!(depth >= 1, "the continuous target must admit at least one split");
+        assert!(depth <= max_depth);
+        // Perfect complete tree: 2^depth leaves, and every level shares
+        // one split — the shape the oblivious fast paths key on.
+        assert_eq!(tree.n_leaves(), 1 << depth);
+        let levels = tree.oblivious_levels().expect("oblivious mode must emit uniform levels");
+        assert_eq!(levels.len(), depth);
+        for (_, _, thr) in tree.splits() {
+            assert!(thr.is_finite(), "threshold not resolved");
+        }
+        // The penalty hook fires exactly once per level, in level order.
+        assert_eq!(rec.splits.len(), depth);
+        for (lvl, &(f, b)) in rec.splits.iter().enumerate() {
+            assert_eq!((levels[lvl].0, levels[lvl].1), (f, b), "level {lvl}");
+        }
+        // leaf_rows partitions the training rows across the 2^depth leaves.
+        assert_eq!(grown.leaf_rows.len(), 1 << depth);
+        let mut all: Vec<u32> =
+            grown.leaf_rows.iter().flat_map(|(_, r)| r.iter().copied()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n as u32).collect::<Vec<_>>());
+        // Every checked-out histogram buffer was recycled: depth-capped
+        // growth never builds hists for the final level's children.
+        let expected_buffers =
+            if depth == max_depth { 1 << (depth - 1) } else { 1 << depth };
+        assert_eq!(pool.free_count(), expected_buffers, "histogram pool leak");
+    }
+
+    #[test]
+    fn oblivious_mode_respects_max_leaves_cap() {
+        let (ds, grad, hess) = stump_data(400, 11);
+        let binner = Binner::fit(&ds, 32);
+        let binned = binner.bin_matrix(&ds);
+        let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let mut pool = HistogramPool::new(&bins);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        // max_leaves 2 clamps a depth-4 request to a stump (2^1 leaves).
+        let params = GrowerParams {
+            split: SplitParams { min_data_in_leaf: 5, ..Default::default() },
+            max_depth: 4,
+            max_leaves: 2,
+            learning_rate: 1.0,
+            mode: GrowthMode::Oblivious,
+        };
+        let grown = grow_tree(&binned, &mut pool, rows, &grad, &hess, &params, &mut NoPenalty);
+        assert!(grown.tree.depth() <= 1);
+        assert!(grown.tree.n_leaves() <= 2);
     }
 
     #[test]

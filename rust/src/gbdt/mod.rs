@@ -20,6 +20,7 @@ pub mod splitter;
 pub mod tree;
 
 pub use booster::{Booster, GbdtParams};
+pub use grower::GrowthMode;
 pub use model::GbdtModel;
 pub use splitter::{NoPenalty, SplitPenalty};
 pub use tree::{Node, Tree};

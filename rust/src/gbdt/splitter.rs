@@ -82,8 +82,10 @@ pub struct SplitInfo {
 }
 
 /// Leaf-objective contribution `G²/(H+λ)` (×½ applied by the caller).
+/// `pub(crate)` so the oblivious grower's level scorer charges gains
+/// with the exact same formula as the leaf-wise scan here.
 #[inline]
-fn score(g: f64, h: f64, lambda: f64) -> f64 {
+pub(crate) fn score(g: f64, h: f64, lambda: f64) -> f64 {
     g * g / (h + lambda)
 }
 

@@ -111,6 +111,37 @@ impl Tree {
         self.to_complete_at(self.depth())
     }
 
+    /// If every level of the complete layout shares one `(feature, bin,
+    /// threshold)` split — a CatBoost-style *oblivious* tree — return
+    /// the per-level splits, root level first. `None` for bare leaves,
+    /// for trees with pass-through slots (an early leaf means part of a
+    /// level has no split to share), and for any level whose slots mix
+    /// splits. This is the single eligibility predicate shared by the
+    /// ToaD encoder's oblivious sub-format, its size model, and the
+    /// quantized engine's table-lookup descent, so the three can never
+    /// disagree about which trees are oblivious.
+    pub fn oblivious_levels(&self) -> Option<Vec<(usize, u16, f32)>> {
+        let d = self.depth();
+        if d == 0 {
+            return None;
+        }
+        let (internal, _) = self.to_complete();
+        let mut levels = Vec::with_capacity(d);
+        for lvl in 0..d {
+            let start = (1usize << lvl) - 1;
+            let end = (1usize << (lvl + 1)) - 1;
+            let first = internal[start]?;
+            for slot in &internal[start + 1..end] {
+                let (f, b, t) = (*slot)?;
+                if f != first.0 || b != first.1 || t.to_bits() != first.2.to_bits() {
+                    return None;
+                }
+            }
+            levels.push(first);
+        }
+        Some(levels)
+    }
+
     /// Like [`Tree::to_complete`] but padded to a caller-chosen depth
     /// `d >= self.depth()` (used to tensorize ensembles to a fixed shape
     /// for the XLA runtime).
@@ -291,6 +322,45 @@ mod tests {
         assert!(internal.is_empty());
         assert_eq!(leaves, vec![42.0]);
         assert_eq!(predict_complete(&internal, &leaves, &[1.0]), 42.0);
+    }
+
+    /// A depth-2 oblivious tree: both level-1 slots share (1, 7, 2.0).
+    fn oblivious_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Internal { feature: 0, bin: 3, threshold: 0.5, left: 1, right: 2 },
+                Node::Internal { feature: 1, bin: 7, threshold: 2.0, left: 3, right: 4 },
+                Node::Internal { feature: 1, bin: 7, threshold: 2.0, left: 5, right: 6 },
+                Node::Leaf { value: 1.0 },
+                Node::Leaf { value: 2.0 },
+                Node::Leaf { value: 3.0 },
+                Node::Leaf { value: 4.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn oblivious_levels_detects_level_uniform_trees() {
+        assert_eq!(
+            oblivious_tree().oblivious_levels(),
+            Some(vec![(0, 3, 0.5), (1, 7, 2.0)])
+        );
+        // A stump is a one-level oblivious tree.
+        let stump = Tree {
+            nodes: vec![
+                Node::Internal { feature: 2, bin: 1, threshold: 4.0, left: 1, right: 2 },
+                Node::Leaf { value: -1.0 },
+                Node::Leaf { value: 1.0 },
+            ],
+        };
+        assert_eq!(stump.oblivious_levels(), Some(vec![(2, 1, 4.0)]));
+        // Bare leaves, early leaves (pass-through slots), and levels
+        // mixing splits are all non-oblivious.
+        assert_eq!(Tree::leaf(0.5).oblivious_levels(), None);
+        assert_eq!(sample_tree().oblivious_levels(), None, "early leaf disqualifies");
+        let mut mixed = oblivious_tree();
+        mixed.nodes[2] = Node::Internal { feature: 0, bin: 3, threshold: 0.5, left: 5, right: 6 };
+        assert_eq!(mixed.oblivious_levels(), None, "mixed level disqualifies");
     }
 
     /// Build a random tree over `d` features with random structure.

@@ -67,6 +67,13 @@ pub(crate) enum TreeRef {
     /// General layout: node-local indices based at `off` in
     /// `feat`/`thr`/`children`.
     Nodes { off: u32 },
+    /// Oblivious (level-shared) layout: `depth` per-level split records
+    /// at `ooff` in the quantized engine's level arrays, `2^depth` leaf
+    /// slots at `loff` in `cleaf`. Only `QuantizedFlatModel` constructs
+    /// this variant — the float engine keeps oblivious trees on the
+    /// `Complete` path (its descent is threshold-value based, where the
+    /// level sharing buys nothing).
+    Oblivious { ooff: u32, loff: u32, depth: u8 },
 }
 
 /// A trained ensemble flattened for serving. Build one with
@@ -256,6 +263,11 @@ impl FlatModel {
                 self.eval_complete(ioff as usize, loff as usize, depth as usize, x)
             }
             TreeRef::Nodes { off } => self.eval_nodes(off as usize, x),
+            // `from_model` above routes every tree to Complete or
+            // Nodes; only the quantized engine builds Oblivious refs.
+            TreeRef::Oblivious { .. } => {
+                unreachable!("FlatModel never constructs TreeRef::Oblivious")
+            }
         }
     }
 
@@ -306,6 +318,11 @@ impl FlatModel {
                             for (r, x) in block.iter().enumerate() {
                                 out[start + r][k] += self.eval_nodes(off, x);
                             }
+                        }
+                        // See `eval_tree`: this engine never builds
+                        // Oblivious refs.
+                        TreeRef::Oblivious { .. } => {
+                            unreachable!("FlatModel never constructs TreeRef::Oblivious")
                         }
                     }
                 }

@@ -55,6 +55,19 @@
 //! amortized over every tree while the per-node stream is half as wide
 //! — the memory-bound MCU-batch regime the paper targets.
 //!
+//! * **Oblivious fast path.** A tree whose levels each share a single
+//!   `(feature, threshold)` split ([`crate::gbdt::tree::Tree::oblivious_levels`],
+//!   the CatBoost shape the `GrowthMode::Oblivious` grower emits) is
+//!   stored as just `depth` level pairs plus a `2^depth` leaf table and
+//!   descends through [`crate::simd::descend_oblivious`]: per level one
+//!   broadcast threshold, one shared-column code load per lane, a
+//!   vector compare, and a shift into the per-lane leaf index — no
+//!   per-lane node fetches at all, the one fully-vector descent in the
+//!   system. Leaf indices agree bit-for-bit with the `Complete` layout
+//!   of the same tree (both are the MSB-first path-bit integer), so
+//!   parity with the other engines is preserved by construction, and
+//!   the suffix-bound adaptive machinery applies unchanged.
+//!
 //! [`FlatModel`]: crate::inference::FlatModel
 
 use super::flat::{complete_layout_ok, TreeRef};
@@ -94,6 +107,12 @@ const NAN_BIN: u16 = u16::MAX;
 /// send NaN right — into a replica of the same value).
 const PASS: u16 = u16::MAX;
 
+/// Deepest tree eligible for the oblivious layout: the SIMD descent
+/// accumulates the leaf index in `u16` lanes, so indices must stay
+/// below `2^16` (`2^depth ≤ 2^15`). Trained oblivious trees are far
+/// shallower; this guard only matters for hand-built models.
+const MAX_OBLIVIOUS_DEPTH: usize = 15;
+
 /// A trained ensemble with rank-quantized thresholds. Build one with
 /// [`QuantizedFlatModel::from_model`] (or [`GbdtModel::quantize`]) and
 /// keep it for the model's serving lifetime.
@@ -112,6 +131,11 @@ pub struct QuantizedFlatModel {
     cfeat: Vec<u16>,
     cthr: Vec<u16>,
     cleaf: Vec<f64>,
+    // Oblivious-layout storage: one (feature, threshold-rank) pair per
+    // level, root level first; leaf tables live in `cleaf` like the
+    // complete layout's.
+    ofeat: Vec<u16>,
+    othr: Vec<u16>,
     // General node storage (siblings adjacent, as in the flat engine).
     feat: Vec<u16>,
     thr: Vec<u16>,
@@ -215,11 +239,28 @@ impl QuantizedFlatModel {
         let mut thr = Vec::new();
         let mut children = Vec::new();
         let mut leaf = Vec::new();
+        let mut ofeat = Vec::new();
+        let mut othr = Vec::new();
         for stream in &model.trees {
             let mut refs = Vec::with_capacity(stream.len());
             for tree in stream {
                 let depth = tree.depth();
-                if complete_layout_ok(depth, tree.n_nodes()) {
+                let levels = if depth > 0 && depth <= MAX_OBLIVIOUS_DEPTH {
+                    tree.oblivious_levels()
+                } else {
+                    None
+                };
+                if let Some(levels) = levels {
+                    let ooff = ofeat.len() as u32;
+                    let loff = cleaf.len() as u32;
+                    for &(f, _, t) in &levels {
+                        ofeat.push(f as u16);
+                        othr.push(rank_of(&bounds[f], t));
+                    }
+                    let (_, leaves) = tree.to_complete();
+                    cleaf.extend_from_slice(&leaves);
+                    refs.push(TreeRef::Oblivious { ooff, loff, depth: depth as u8 });
+                } else if complete_layout_ok(depth, tree.n_nodes()) {
                     let (internal, leaves) = tree.to_complete();
                     let ioff = cfeat.len() as u32;
                     let loff = cleaf.len() as u32;
@@ -284,6 +325,8 @@ impl QuantizedFlatModel {
             cfeat,
             cthr,
             cleaf,
+            ofeat,
+            othr,
             feat,
             thr,
             children,
@@ -332,6 +375,15 @@ impl QuantizedFlatModel {
             .count()
     }
 
+    /// How many trees took the oblivious fast path (introspection/tests).
+    pub fn n_oblivious_trees(&self) -> usize {
+        self.trees
+            .iter()
+            .flatten()
+            .filter(|t| matches!(t, TreeRef::Oblivious { .. }))
+            .count()
+    }
+
     /// Bin one dense row against the per-feature threshold tables.
     /// `out[f] ≤ k ⇔ x[f] ≤ bounds[f][k]` for every real `x[f]`; NaN
     /// maps to [`NAN_BIN`]. The rank count runs through the
@@ -376,10 +428,22 @@ impl QuantizedFlatModel {
     }
 
     #[inline]
+    fn eval_oblivious(&self, ooff: usize, loff: usize, depth: usize, xb: &[u16]) -> f64 {
+        let feat = &self.ofeat[ooff..ooff + depth];
+        let thr = &self.othr[ooff..ooff + depth];
+        // The same per-row routine the oblivious block kernel uses for
+        // its tails ([`crate::simd::descend_oblivious_row`]).
+        self.cleaf[loff + simd::descend_oblivious_row(feat, thr, xb)]
+    }
+
+    #[inline]
     fn eval_tree(&self, tref: TreeRef, xb: &[u16]) -> f64 {
         match tref {
             TreeRef::Complete { ioff, loff, depth } => {
                 self.eval_complete(ioff as usize, loff as usize, depth as usize, xb)
+            }
+            TreeRef::Oblivious { ooff, loff, depth } => {
+                self.eval_oblivious(ooff as usize, loff as usize, depth as usize, xb)
             }
             TreeRef::Nodes { off } => self.eval_nodes(off as usize, xb),
         }
@@ -426,6 +490,16 @@ impl QuantizedFlatModel {
                         let thr = &self.cthr[ioff..ioff + n_internal];
                         let leaf = &self.cleaf[loff..loff + (1usize << depth)];
                         simd::descend_complete(tier, feat, thr, depth, xb, nf, idx);
+                        for (o, &i) in out.iter_mut().zip(idx.iter()) {
+                            o[k] += leaf[i as usize];
+                        }
+                    }
+                    TreeRef::Oblivious { ooff, loff, depth } => {
+                        let (ooff, loff, depth) = (ooff as usize, loff as usize, depth as usize);
+                        let feat = &self.ofeat[ooff..ooff + depth];
+                        let thr = &self.othr[ooff..ooff + depth];
+                        let leaf = &self.cleaf[loff..loff + (1usize << depth)];
+                        simd::descend_oblivious(tier, feat, thr, xb, nf, idx);
                         for (o, &i) in out.iter_mut().zip(idx.iter()) {
                             o[k] += leaf[i as usize];
                         }
@@ -523,6 +597,24 @@ impl QuantizedFlatModel {
                         feat,
                         thr,
                         depth,
+                        xb,
+                        nf,
+                        rows,
+                        &mut idx[..n_active],
+                    );
+                    for (l, &r) in rows.iter().enumerate() {
+                        out[r as usize][0] += leaf[idx[l] as usize];
+                    }
+                }
+                TreeRef::Oblivious { ooff, loff, depth } => {
+                    let (ooff, loff, depth) = (ooff as usize, loff as usize, depth as usize);
+                    let feat = &self.ofeat[ooff..ooff + depth];
+                    let thr = &self.othr[ooff..ooff + depth];
+                    let leaf = &self.cleaf[loff..loff + (1usize << depth)];
+                    simd::descend_oblivious_gather(
+                        tier,
+                        feat,
+                        thr,
                         xb,
                         nf,
                         rows,
@@ -811,6 +903,36 @@ mod tests {
         }
     }
 
+    /// Complete pointer tree whose levels each share one
+    /// `(feature, bin, threshold)` split — the shape
+    /// [`Tree::oblivious_levels`] detects. `leaves[s]` lands in leaf
+    /// slot `s` (MSB-first path bits, the leaf-table order).
+    fn oblivious_pointer_tree(splits: &[(usize, u16, f32)], leaves: &[f64]) -> Tree {
+        fn grow(
+            level: usize,
+            slot: usize,
+            splits: &[(usize, u16, f32)],
+            leaves: &[f64],
+            nodes: &mut Vec<Node>,
+        ) -> usize {
+            let idx = nodes.len();
+            if level == splits.len() {
+                nodes.push(Node::Leaf { value: leaves[slot] });
+                return idx;
+            }
+            let (feature, bin, threshold) = splits[level];
+            nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+            let left = grow(level + 1, slot * 2, splits, leaves, nodes);
+            let right = grow(level + 1, slot * 2 + 1, splits, leaves, nodes);
+            nodes[idx] = Node::Internal { feature, bin, threshold, left, right };
+            idx
+        }
+        assert_eq!(leaves.len(), 1 << splits.len());
+        let mut nodes = Vec::new();
+        grow(0, 0, splits, leaves, &mut nodes);
+        Tree { nodes }
+    }
+
     /// A left-leaning chain deeper than the complete-layout cutoff, so
     /// it must take the general node path.
     fn chain_tree(depth: usize) -> Tree {
@@ -850,6 +972,153 @@ mod tests {
             assert_eq!(quant.predict_raw(&x), want);
             assert_eq!(quant.predict_raw(&x), flat.predict_raw(&x));
             assert_eq!(quant.predict_batch(&[x.to_vec()])[0], want);
+        }
+    }
+
+    #[test]
+    fn oblivious_trees_take_the_oblivious_path_and_match_the_other_engines() {
+        // Level 0 splits on x0 ≤ 0.5, level 1 on x1 ≤ 2.0; leaf slot s
+        // is the MSB-first path-bit integer, so the leaf values below
+        // pin the bit order as well as the routing.
+        let obl = oblivious_pointer_tree(
+            &[(0, 3, 0.5), (1, 7, 2.0)],
+            &[10.0, 20.0, 30.0, 40.0],
+        );
+        let model = wrap(vec![obl, sample_tree(), Tree::leaf(0.5), chain_tree(14)], 2);
+        let quant = QuantizedFlatModel::from_model(&model);
+        let flat = FlatModel::from_model(&model);
+        assert_eq!(quant.n_oblivious_trees(), 1);
+        assert_eq!(quant.n_complete_trees(), 2); // sample_tree + the bare leaf
+        for x in [
+            [0.4f32, 1.0],  // left-left  → 10.0 from the oblivious tree
+            [0.4, 3.0],     // left-right → 20.0
+            [0.6, 0.0],     // right-left → 30.0
+            [0.6, 3.0],     // right-right → 40.0
+            [0.5, 2.0],     // boundary: exact threshold routes left
+            [f32::NAN, 1.0],
+            [0.4, f32::NAN],
+            [f32::NAN, f32::NAN],
+        ] {
+            let want = model.predict_raw(&x);
+            assert_eq!(quant.predict_raw(&x), want);
+            assert_eq!(quant.predict_raw(&x), flat.predict_raw(&x));
+            assert_eq!(quant.predict_batch(&[x.to_vec()])[0], want);
+        }
+        // The tiered block kernel (full lane groups + tail) agrees with
+        // the per-row path on every tier the CPU supports.
+        let mut rng = Pcg64::new(0xb0b);
+        let mut rows: Vec<Vec<f32>> = (0..70)
+            .map(|_| (0..2).map(|_| rng.gen_uniform(-1.0, 4.0) as f32).collect())
+            .collect();
+        rows[7][0] = f32::NAN;
+        rows[66][1] = f32::NAN;
+        let want = quant.predict_batch_with_tier(&rows, Tier::Scalar);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(want[i], model.predict_raw(row), "row {i} vs pointer");
+        }
+        for tier in crate::simd::available_tiers() {
+            let got = quant.predict_batch_with_tier(&rows, tier);
+            assert_eq!(got, want, "tier {}", tier.name());
+        }
+    }
+
+    #[test]
+    fn prop_oblivious_models_match_pointer_on_random_level_splits() {
+        run_prop("oblivious quantized engine == pointer", 40, |g| {
+            let nf = g.usize_in(1, 5);
+            let mut rng = Pcg64::new(g.case_seed ^ 0x0b1);
+            let tables: Vec<Vec<f32>> = (0..nf)
+                .map(|_| {
+                    let mut t: Vec<f32> = (0..1 + rng.gen_range(9))
+                        .map(|_| rng.gen_uniform(-1.0, 1.0) as f32)
+                        .collect();
+                    t.sort_by(f32::total_cmp);
+                    t.dedup();
+                    t
+                })
+                .collect();
+            let n_trees = g.usize_in(1, 4);
+            let trees: Vec<Tree> = (0..n_trees)
+                .map(|_| {
+                    let depth = g.usize_in(1, 5);
+                    let splits: Vec<(usize, u16, f32)> = (0..depth)
+                        .map(|_| {
+                            let f = rng.gen_range(nf);
+                            let b = rng.gen_range(tables[f].len());
+                            (f, b as u16, tables[f][b])
+                        })
+                        .collect();
+                    let leaves: Vec<f64> =
+                        (0..1usize << depth).map(|_| rng.gen_uniform(-2.0, 2.0)).collect();
+                    oblivious_pointer_tree(&splits, &leaves)
+                })
+                .collect();
+            let model = wrap(trees, nf);
+            let quant = QuantizedFlatModel::from_model(&model);
+            assert_eq!(quant.n_oblivious_trees(), n_trees, "every tree is level-uniform");
+            let rows: Vec<Vec<f32>> = (0..g.usize_in(1, 70))
+                .map(|_| {
+                    (0..nf)
+                        .map(|_| {
+                            if g.bool(0.07) {
+                                f32::NAN
+                            } else {
+                                g.f64_in(-1.5, 1.5) as f32
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let batch = quant.predict_batch(&rows);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(batch[i], model.predict_raw(row), "row {i} vs pointer");
+                assert_eq!(batch[i], quant.predict_raw(row), "row {i} batch vs single");
+            }
+        });
+    }
+
+    #[test]
+    fn adaptive_policies_behave_identically_on_oblivious_models() {
+        // Margin(0.0) and Exact stay bit-identical to the exact batch
+        // on an all-oblivious ensemble; an armed width policy routes
+        // through the oblivious gather kernel and still matches the
+        // exact kernel for rows that never exit (eps too small).
+        let splits_a = [(0usize, 3u16, 0.5f32), (1, 7, 2.0)];
+        let splits_b = [(1usize, 2u16, 1.0f32), (0, 5, -0.25)];
+        let trees = vec![
+            oblivious_pointer_tree(&splits_a, &[1.0, 2.0, 3.0, 4.0]),
+            oblivious_pointer_tree(&splits_b, &[-1.0, 0.5, 0.25, 2.0]),
+        ];
+        let model = wrap(trees, 2);
+        let quant = QuantizedFlatModel::from_model(&model);
+        assert_eq!(quant.n_oblivious_trees(), 2);
+        let mut rng = Pcg64::new(0xada);
+        let mut rows: Vec<Vec<f32>> = (0..70)
+            .map(|_| (0..2).map(|_| rng.gen_uniform(-1.0, 3.0) as f32).collect())
+            .collect();
+        rows[11][1] = f32::NAN;
+        let want = quant.predict_batch(&rows);
+        for policy in [
+            AdaptivePolicy::Exact,
+            AdaptivePolicy::Margin(0.0),
+            AdaptivePolicy::Margin(1e-12), // armed, but the interval never narrows enough
+        ] {
+            let ab = quant.predict_batch_adaptive(&rows, policy);
+            assert_eq!(ab.scores, want, "{policy:?} must match the exact kernel");
+            assert!(ab.trees_evaluated.iter().all(|&t| t as usize == quant.n_trees()));
+        }
+        // A huge tolerance retires every row after tree 0 with the
+        // midpoint completion, through the oblivious gather arm.
+        let ab = quant.predict_batch_adaptive(&rows, AdaptivePolicy::Margin(100.0));
+        assert!(ab.trees_evaluated.iter().all(|&t| t == 1));
+        let (lo, hi) = quant.suffix_bounds(0);
+        let mid = (lo[1] + hi[1]) * 0.5;
+        let one = QuantizedFlatModel::from_model(&wrap(
+            vec![oblivious_pointer_tree(&splits_a, &[1.0, 2.0, 3.0, 4.0])],
+            2,
+        ));
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(ab.scores[i][0], one.predict_raw(row)[0] + mid, "row {i}");
         }
     }
 

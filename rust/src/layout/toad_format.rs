@@ -13,10 +13,18 @@
 //!    arrays at the feature's width, concatenated.
 //! 4. **Global Leaf Values** — deduplicated leaf values, fixed 32-bit
 //!    floats (paper §3.2.2), shared across all trees.
-//! 5. **Trees** — per tree: its depth, then the pointer-less complete
+//! 5. **Trees** — per tree: a 1-bit *oblivious* flag, its depth, then
+//!    one of two bodies. Flag 0 (general): the pointer-less complete
 //!    array (`2^depth − 1` internal slots of feature-ref + threshold-ref,
 //!    `2^depth` leaf slots of leaf-value refs; child of slot `i` is
-//!    `2i+1` / `2i+2`).
+//!    `2i+1` / `2i+2`). Flag 1 (oblivious, CatBoost-style): every level
+//!    shares one split, so the body stores just `depth` (feature-ref,
+//!    threshold-ref) pairs — root level first — followed by the same
+//!    `2^depth` leaf refs; descent is `idx ← 2·idx + (x > µ_level)` and
+//!    one leaf-table lookup. The encoder picks the flag per tree by
+//!    [`Tree::oblivious_levels`], the limit of the paper's reuse idea:
+//!    a level-uniform depth-d tree costs d node records instead of
+//!    `2^d − 1`.
 //!
 //! Early leaves of non-complete trees are *replicated* into their
 //! subtree: the pass-through internal slot stores the dummy reference
@@ -185,9 +193,12 @@ fn breakdown_from_plan(model: &GbdtModel, p: &EncodePlan) -> SizeBreakdown {
         .flatten()
         .map(|t| {
             let d = t.depth();
-            let n_internal = (1usize << d) - 1;
+            // Mirrors the encoder's per-tree choice: oblivious bodies
+            // store d (feature, threshold) pairs, general bodies the
+            // full 2^d − 1 slots; both prepend a 1-bit flag.
+            let n_pairs = if t.oblivious_levels().is_some() { d } else { (1usize << d) - 1 };
             let n_leaves = 1usize << d;
-            w_dep as usize + n_internal * (w_f + w_t) as usize + n_leaves * w_l as usize
+            1 + w_dep as usize + n_pairs * (w_f + w_t) as usize + n_leaves * w_l as usize
         })
         .sum();
     SizeBreakdown { header_bits, map_bits, thresholds_bits, leaf_values_bits, trees_bits }
@@ -312,21 +323,35 @@ pub fn encode(model: &GbdtModel, finfo: &[FeatureInfo], opts: &EncodeOptions) ->
 
     for tree in model.trees.iter().flatten() {
         let d = tree.depth();
-        w.write(d as u64, w_dep);
         let (internal, leaves) = tree.to_complete();
-        for slot in &internal {
-            match slot {
-                Some((f, b, _)) => {
-                    let fr = feat_rank[f];
-                    let tr = bin_rank[fr][b];
-                    w.write(fr as u64, w_f);
-                    w.write(tr as u64, w_t);
-                }
-                None => {
-                    // Pass-through: dummy reference; leaves below are
-                    // replicated so routing is unaffected.
-                    w.write(0, w_f);
-                    w.write(0, w_t);
+        if let Some(levels) = tree.oblivious_levels() {
+            // Oblivious body: d shared (feature, threshold) pairs, root
+            // level first, instead of 2^d − 1 per-slot records.
+            w.write(1, 1);
+            w.write(d as u64, w_dep);
+            for &(f, b, _) in &levels {
+                let fr = feat_rank[&f];
+                let tr = bin_rank[fr][&b];
+                w.write(fr as u64, w_f);
+                w.write(tr as u64, w_t);
+            }
+        } else {
+            w.write(0, 1);
+            w.write(d as u64, w_dep);
+            for slot in &internal {
+                match slot {
+                    Some((f, b, _)) => {
+                        let fr = feat_rank[f];
+                        let tr = bin_rank[fr][b];
+                        w.write(fr as u64, w_f);
+                        w.write(tr as u64, w_t);
+                    }
+                    None => {
+                        // Pass-through: dummy reference; leaves below are
+                        // replicated so routing is unaffected.
+                        w.write(0, w_f);
+                        w.write(0, w_t);
+                    }
                 }
             }
         }
@@ -520,17 +545,20 @@ pub fn validate_blob(bytes: &[u8]) -> Result<usize, String> {
     }
     let mut r2 = BitReader::new(bytes);
     for t in 0..n_outputs * n_rounds {
-        if pos + w_dep as usize > total_bits {
-            return Err(format!("tree {t}: depth field truncated"));
+        if pos + 1 + w_dep as usize > total_bits {
+            return Err(format!("tree {t}: flag/depth fields truncated"));
         }
         r2.seek(pos);
+        let oblivious = r2.read(1) == 1;
         let d = r2.read(w_dep) as usize;
         if d > max_depth {
             return Err(format!("tree {t}: depth {d} > max {max_depth}"));
         }
-        let n_internal = (1usize << d) - 1;
+        // Oblivious bodies store one (feature, threshold) pair per
+        // level; general bodies store the full complete array.
+        let n_pairs = if oblivious { d } else { (1usize << d) - 1 };
         pos = r2.bit_pos()
-            + n_internal * (w_f + w_t) as usize
+            + n_pairs * (w_f + w_t) as usize
             + (1usize << d) * w_l as usize;
         if pos > total_bits {
             return Err(format!("tree {t}: body truncated"));
@@ -541,7 +569,7 @@ pub fn validate_blob(bytes: &[u8]) -> Result<usize, String> {
         // (one flipped bit is enough whenever the table length is not a
         // power of two); `decode` and `PackedModel` index the map, the
         // threshold tables, and the leaf-value table with these.
-        for s in 0..n_internal {
+        for s in 0..n_pairs {
             let fr = r2.read(w_f) as usize;
             let tr = r2.read(w_t) as usize;
             if fr >= n_used {
@@ -604,14 +632,28 @@ pub fn decode(bytes: &[u8]) -> GbdtModel {
     let mut trees: Vec<Vec<Tree>> = vec![Vec::with_capacity(p.n_rounds); p.n_outputs];
     for out in trees.iter_mut() {
         for _ in 0..p.n_rounds {
+            let oblivious = r.read(1) == 1;
             let d = r.read(w_dep) as usize;
             let n_internal = (1usize << d) - 1;
             let n_leaves = 1usize << d;
             let mut internal = Vec::with_capacity(n_internal);
-            for _ in 0..n_internal {
-                let fr = r.read(w_f) as usize;
-                let tr = r.read(w_t) as usize;
-                internal.push((fr, tr));
+            if oblivious {
+                // d shared pairs, root level first: replicate the level
+                // split into every complete-array slot of that level
+                // (slot s lives on level ⌊log₂(s+1)⌋), then reuse the
+                // general reconstruction below unchanged.
+                let pairs: Vec<(usize, usize)> = (0..d)
+                    .map(|_| (r.read(w_f) as usize, r.read(w_t) as usize))
+                    .collect();
+                for s in 0..n_internal {
+                    internal.push(pairs[(s + 1).ilog2() as usize]);
+                }
+            } else {
+                for _ in 0..n_internal {
+                    let fr = r.read(w_f) as usize;
+                    let tr = r.read(w_t) as usize;
+                    internal.push((fr, tr));
+                }
             }
             let mut leaves = Vec::with_capacity(n_leaves);
             for _ in 0..n_leaves {
@@ -685,9 +727,9 @@ fn complete_to_tree(
 pub struct PackedModel {
     bytes: Vec<u8>,
     p: Parsed,
-    /// Per-tree (depth, internal bit offset, leaf bit offset), in
-    /// `[output][round]` order flattened.
-    tree_offsets: Vec<(usize, usize, usize)>,
+    /// Per-tree (depth, internal bit offset, leaf bit offset, oblivious
+    /// flag), in `[output][round]` order flattened.
+    tree_offsets: Vec<(usize, usize, usize, bool)>,
     /// Load-time flat per-used-feature geometry: (input feature,
     /// encoding, max threshold index, threshold array bit offset).
     /// Avoids re-deriving map entries on every node visit (§Perf
@@ -710,12 +752,13 @@ impl PackedModel {
         let n_trees = p.n_outputs * p.n_rounds;
         let mut tree_offsets = Vec::with_capacity(n_trees);
         for _ in 0..n_trees {
+            let obl = r.read(1) == 1;
             let d = r.read(w_dep) as usize;
             let internal_off = r.bit_pos();
-            let n_internal = (1usize << d) - 1;
-            let leaf_off = internal_off + n_internal * (w_f + w_t) as usize;
+            let n_pairs = if obl { d } else { (1usize << d) - 1 };
+            let leaf_off = internal_off + n_pairs * (w_f + w_t) as usize;
             let end = leaf_off + (1usize << d) * w_l as usize;
-            tree_offsets.push((d, internal_off, leaf_off));
+            tree_offsets.push((d, internal_off, leaf_off, obl));
             r.seek(end);
         }
         let feat_table = p
@@ -753,6 +796,20 @@ impl PackedModel {
         &self.bytes
     }
 
+    /// Trees stored in the oblivious sub-format (flag bit set).
+    pub fn n_oblivious_trees(&self) -> usize {
+        self.tree_offsets.iter().filter(|&&(_, _, _, obl)| obl).count()
+    }
+
+    /// Bit cost of tree `i` as actually packed — flag + depth field +
+    /// body — measured from the blob's offsets rather than recomputed
+    /// from a formula, so reports can't drift from the format.
+    pub fn tree_bits(&self, i: usize) -> usize {
+        let (d, internal_off, leaf_off, _) = self.tree_offsets[i];
+        let start = internal_off - bits_for(self.p.max_depth + 1) as usize - 1;
+        leaf_off + (1usize << d) * self.w_l as usize - start
+    }
+
     /// Read threshold `tr` of used-feature `fr` straight from the bits.
     #[inline]
     fn threshold(&self, fr: usize, tr: usize) -> f32 {
@@ -769,20 +826,42 @@ impl PackedModel {
         let node_w = (self.w_f + self.w_t) as usize;
         for k in 0..self.p.n_outputs {
             for t in 0..self.p.n_rounds {
-                let (d, internal_off, leaf_off) = self.tree_offsets[k * self.p.n_rounds + t];
-                let n_internal = (1usize << d) - 1;
-                let mut i = 0usize;
-                while i < n_internal {
-                    r.seek(internal_off + i * node_w);
-                    let fr = r.read(self.w_f) as usize;
-                    let tr = r.read(self.w_t) as usize;
-                    let (f, enc, max_tr, thr_off) = self.feat_table[fr];
-                    let tr = tr.min(max_tr);
-                    r.seek(thr_off + tr * enc.width_bits() as usize);
-                    let thr = read_threshold(&mut r, enc);
-                    i = if x[f] <= thr { 2 * i + 1 } else { 2 * i + 2 };
-                }
-                r.seek(leaf_off + (i - n_internal) * self.w_l as usize);
+                let (d, internal_off, leaf_off, obl) =
+                    self.tree_offsets[k * self.p.n_rounds + t];
+                let leaf_slot = if obl {
+                    // Oblivious descent: d sequential pair reads (no
+                    // per-node offset arithmetic), each compare shifts
+                    // one bit into the leaf-table index.
+                    let mut idx = 0usize;
+                    r.seek(internal_off);
+                    for _ in 0..d {
+                        let fr = r.read(self.w_f) as usize;
+                        let tr = r.read(self.w_t) as usize;
+                        let (f, enc, max_tr, thr_off) = self.feat_table[fr];
+                        let tr = tr.min(max_tr);
+                        let next = r.bit_pos();
+                        r.seek(thr_off + tr * enc.width_bits() as usize);
+                        let thr = read_threshold(&mut r, enc);
+                        idx = 2 * idx + usize::from(!(x[f] <= thr));
+                        r.seek(next);
+                    }
+                    idx
+                } else {
+                    let n_internal = (1usize << d) - 1;
+                    let mut i = 0usize;
+                    while i < n_internal {
+                        r.seek(internal_off + i * node_w);
+                        let fr = r.read(self.w_f) as usize;
+                        let tr = r.read(self.w_t) as usize;
+                        let (f, enc, max_tr, thr_off) = self.feat_table[fr];
+                        let tr = tr.min(max_tr);
+                        r.seek(thr_off + tr * enc.width_bits() as usize);
+                        let thr = read_threshold(&mut r, enc);
+                        i = if x[f] <= thr { 2 * i + 1 } else { 2 * i + 2 };
+                    }
+                    i - n_internal
+                };
+                r.seek(leaf_off + leaf_slot * self.w_l as usize);
                 let lref = r.read(self.w_l) as usize;
                 r.seek(self.p.leaf_off + lref * 32);
                 out[k] += r.read_f32() as f64;
@@ -809,20 +888,39 @@ impl PackedModel {
         let mut r = BitReader::new(&self.bytes);
         for k in 0..self.p.n_outputs {
             for t in 0..self.p.n_rounds {
-                let (d, internal_off, leaf_off) = self.tree_offsets[k * self.p.n_rounds + t];
-                let n_internal = (1usize << d) - 1;
-                let mut i = 0usize;
-                while i < n_internal {
-                    r.seek(internal_off + i * (self.w_f + self.w_t) as usize);
-                    let fr = r.read(self.w_f) as usize;
-                    let tr = r.read(self.w_t) as usize;
-                    let (f, enc, count) = self.p.map[fr];
-                    let thr = self.threshold(fr, tr.min(count - 1));
-                    nodes += 1;
-                    bits += (self.w_f + self.w_t + enc.width_bits()) as usize;
-                    i = if x[f] <= thr { 2 * i + 1 } else { 2 * i + 2 };
-                }
-                r.seek(leaf_off + (i - n_internal) * self.w_l as usize);
+                let (d, internal_off, leaf_off, obl) =
+                    self.tree_offsets[k * self.p.n_rounds + t];
+                let leaf_slot = if obl {
+                    let mut idx = 0usize;
+                    r.seek(internal_off);
+                    for _ in 0..d {
+                        let fr = r.read(self.w_f) as usize;
+                        let tr = r.read(self.w_t) as usize;
+                        let (f, enc, count) = self.p.map[fr];
+                        let next = r.bit_pos();
+                        let thr = self.threshold(fr, tr.min(count - 1));
+                        nodes += 1;
+                        bits += (self.w_f + self.w_t + enc.width_bits()) as usize;
+                        idx = 2 * idx + usize::from(!(x[f] <= thr));
+                        r.seek(next);
+                    }
+                    idx
+                } else {
+                    let n_internal = (1usize << d) - 1;
+                    let mut i = 0usize;
+                    while i < n_internal {
+                        r.seek(internal_off + i * (self.w_f + self.w_t) as usize);
+                        let fr = r.read(self.w_f) as usize;
+                        let tr = r.read(self.w_t) as usize;
+                        let (f, enc, count) = self.p.map[fr];
+                        let thr = self.threshold(fr, tr.min(count - 1));
+                        nodes += 1;
+                        bits += (self.w_f + self.w_t + enc.width_bits()) as usize;
+                        i = if x[f] <= thr { 2 * i + 1 } else { 2 * i + 2 };
+                    }
+                    i - n_internal
+                };
+                r.seek(leaf_off + leaf_slot * self.w_l as usize);
                 let _ = r.read(self.w_l);
                 bits += self.w_l as usize + 32;
                 nodes += 1;
@@ -1074,6 +1172,129 @@ mod tests {
             n_features,
             name: "width-test".into(),
         }
+    }
+
+    /// A complete depth-`depth` level-uniform (oblivious) tree: level
+    /// `ℓ` splits on feature `ℓ % 2` at threshold `ℓ + 0.5`, and the
+    /// 2^depth leaves hold their own slot index as the value.
+    fn oblivious_tree(depth: usize) -> Tree {
+        fn build(lvl: usize, depth: usize, leaf_base: f64, nodes: &mut Vec<Node>) -> usize {
+            let idx = nodes.len();
+            if lvl == depth {
+                nodes.push(Node::Leaf { value: leaf_base });
+                return idx;
+            }
+            nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+            let stride = (1usize << (depth - lvl - 1)) as f64;
+            let left = build(lvl + 1, depth, leaf_base, nodes);
+            let right = build(lvl + 1, depth, leaf_base + stride, nodes);
+            nodes[idx] = Node::Internal {
+                feature: lvl % 2,
+                bin: lvl as u16,
+                threshold: lvl as f32 + 0.5,
+                left,
+                right,
+            };
+            idx
+        }
+        let mut nodes = Vec::new();
+        build(0, depth, 0.0, &mut nodes);
+        Tree { nodes }
+    }
+
+    #[test]
+    fn oblivious_trees_roundtrip_through_all_decoders() {
+        let model = wrap(vec![vec![oblivious_tree(1), oblivious_tree(2), oblivious_tree(3)]], 2);
+        let finfo = [FeatureInfo::generic_float(), FeatureInfo::generic_float()];
+        let opts = EncodeOptions { allow_f16: false, ..Default::default() };
+        let bytes = encode(&model, &finfo, &opts).unwrap();
+
+        let bd = size_breakdown(&model, &finfo, &opts);
+        assert_eq!(bd.total_bytes(), bytes.len(), "size model must stay exact");
+        let bits = validate_blob(&bytes).unwrap();
+        assert!(bits + 8 > bytes.len() * 8, "no trailing garbage allowed");
+
+        let decoded = try_decode(&bytes).unwrap();
+        let packed = PackedModel::from_bytes(bytes);
+        assert_eq!(packed.n_oblivious_trees(), 3);
+        let probe = [-1.0f32, 0.7, 1.5, 2.6, f32::NAN];
+        for &a in &probe {
+            for &b in &probe {
+                let x = [a, b];
+                let want = model.predict_raw(&x);
+                let dec = decoded.predict_raw(&x);
+                let pck = packed.predict_raw(&x);
+                assert_eq!(want, dec, "decode mismatch at {x:?}");
+                assert_eq!(want, pck, "packed mismatch at {x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn oblivious_body_is_smaller_than_general() {
+        // The same depth-3 shape with one slot perturbed loses level
+        // uniformity and must fall back to the 2^d − 1 general body.
+        let obl = oblivious_tree(3);
+        let mut perturbed = oblivious_tree(3);
+        for n in perturbed.nodes.iter_mut() {
+            if let Node::Internal { feature, bin, threshold, .. } = n {
+                if *bin == 2 {
+                    *feature = 0;
+                    *bin = 4;
+                    *threshold = 4.5;
+                    break;
+                }
+            }
+        }
+        assert!(perturbed.oblivious_levels().is_none());
+        let finfo = [FeatureInfo::generic_float(), FeatureInfo::generic_float()];
+        let opts = EncodeOptions { allow_f16: false, ..Default::default() };
+        let m_obl = wrap(vec![vec![obl]], 2);
+        let m_gen = wrap(vec![vec![perturbed]], 2);
+        let bd_obl = size_breakdown(&m_obl, &finfo, &opts);
+        let bd_gen = size_breakdown(&m_gen, &finfo, &opts);
+        assert!(
+            bd_obl.trees_bits < bd_gen.trees_bits,
+            "oblivious body must be smaller: {} vs {}",
+            bd_obl.trees_bits,
+            bd_gen.trees_bits
+        );
+        // Both stay byte-exact against the real encoding.
+        for (m, bd) in [(&m_obl, bd_obl), (&m_gen, bd_gen)] {
+            let bytes = encode(m, &finfo, &opts).unwrap();
+            assert_eq!(bd.total_bytes(), bytes.len());
+        }
+    }
+
+    #[test]
+    fn mixed_ensemble_roundtrips_and_reports_per_tree_bits() {
+        // Oblivious + general + bare-leaf trees in one blob.
+        let model =
+            wrap(vec![vec![oblivious_tree(2), chain_tree(3), Tree::leaf(0.25)]], 2);
+        let finfo = [FeatureInfo::generic_float(), FeatureInfo::generic_float()];
+        let opts = EncodeOptions { allow_f16: false, ..Default::default() };
+        let bytes = encode(&model, &finfo, &opts).unwrap();
+        let bd = size_breakdown(&model, &finfo, &opts);
+        assert_eq!(bd.total_bytes(), bytes.len());
+        validate_blob(&bytes).unwrap();
+
+        let decoded = try_decode(&bytes).unwrap();
+        let packed = PackedModel::from_bytes(bytes);
+        assert_eq!(packed.n_oblivious_trees(), 1);
+        // Measured per-tree bits must sum to the size model's component.
+        let measured: usize = (0..packed.n_trees()).map(|i| packed.tree_bits(i)).sum();
+        assert_eq!(measured, bd.trees_bits);
+        let probe = [-1.0f32, 0.7, 1.5, 2.6, 3.5];
+        for &a in &probe {
+            for &b in &probe {
+                let x = [a, b];
+                assert_eq!(model.predict_raw(&x), decoded.predict_raw(&x));
+                assert_eq!(model.predict_raw(&x), packed.predict_raw(&x));
+            }
+        }
+        // trace_row on the oblivious tree counts d levels + 1 leaf.
+        let (nodes, bits) = packed.trace_row(&[0.0, 0.0]);
+        assert!(nodes >= 3 && bits > 0);
     }
 
     #[test]

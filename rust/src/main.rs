@@ -3,7 +3,8 @@
 //! ```text
 //! toad datasets                                    # Table 1
 //! toad train   --dataset breastcancer --rounds 32 --depth 2 \
-//!              [--iota 2] [--xi 1] [--forestsize 1024] [--out model.toad]
+//!              [--iota 2] [--xi 1] [--forestsize 1024] [--oblivious] \
+//!              [--out model.toad]
 //! toad size    --model model.toad                  # layout breakdown
 //! toad predict --model model.toad --dataset breastcancer [--n 10]
 //! toad bench-inference --dataset covtype_binary    # packed vs decoded
@@ -49,7 +50,8 @@ toad — Trees on a Diet (paper reproduction)
 
 commands:
   datasets               print the Table 1 dataset inventory
-  train                  train a ToaD model (see flags in main.rs docs)
+  train                  train a ToaD model (see flags in main.rs docs);
+                         --oblivious grows CatBoost-style level-shared trees
   size                   print the layout size breakdown of a .toad blob
   predict                run a saved model over a synthetic dataset
   sweep                  run a penalty sweep: --dataset D [--kind feature|threshold]
@@ -94,7 +96,11 @@ fn cmd_train(args: &Args) -> i32 {
         let seed = args.get_usize("seed", 1)? as u64;
         let data = ds.generate(seed);
         let (train_set, test_set) = train_test_split(&data, 0.2, seed);
-        let mut params = ToadParams::new(GbdtParams::paper(rounds, depth), iota, xi);
+        let mut gbdt = GbdtParams::paper(rounds, depth);
+        if args.get_bool("oblivious") {
+            gbdt.growth = toad::gbdt::GrowthMode::Oblivious;
+        }
+        let mut params = ToadParams::new(gbdt, iota, xi);
         let model = if let Some(fs) = args.get("forestsize") {
             params.forestsize_bytes =
                 Some(fs.parse().map_err(|_| "--forestsize: invalid".to_string())?);
@@ -112,6 +118,14 @@ fn cmd_train(args: &Args) -> i32 {
             model.stats.n_thresholds,
             model.reuse_factor(),
         );
+        if args.get_bool("oblivious") {
+            let packed = PackedModel::from_bytes(model.blob.clone());
+            println!(
+                "oblivious trees: {}/{} (level-shared splits, 2^d leaf tables)",
+                packed.n_oblivious_trees(),
+                packed.n_trees(),
+            );
+        }
         if let Some(out) = args.get("out") {
             std::fs::write(out, &model.blob).map_err(|e| e.to_string())?;
             println!("wrote {out} ({} bytes)", model.blob.len());

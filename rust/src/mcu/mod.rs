@@ -74,6 +74,25 @@ impl McuSpec {
             + cmp_branch
     }
 
+    /// Cycles per *level* of the oblivious lookup-descent interpreter.
+    ///
+    /// Oblivious trees store their d (feature-ref, threshold-ref)
+    /// records sequentially, so the bit cursor just advances — no
+    /// per-node offset recomputation. Each level extracts one pair,
+    /// resolves the threshold through the F&T map, compares, and
+    /// shifts the outcome bit into the leaf index; the compare feeds
+    /// a shift/or instead of a data-dependent branch.
+    pub fn oblivious_level_cycles(&self, w_f: f64, w_t: f64, w_thr: f64) -> f64 {
+        let feat_ref = self.bit_extract_cycles(w_f);
+        let thr_idx = self.bit_extract_cycles(w_t);
+        let map_lookup = 2.0 * self.c_load + 2.0 * self.c_alu; // F&T map entry
+        let thr_offset = 3.0 * self.c_alu; // per-feature base + idx*width
+        let thr_extract = self.bit_extract_cycles(w_thr);
+        let convert = 2.0 * self.c_alu; // int widen / f16 -> f32
+        let cmp_shift = self.c_fcmp + 2.0 * self.c_alu; // idx = 2*idx + gt
+        feat_ref + thr_idx + map_lookup + thr_offset + thr_extract + convert + cmp_shift
+    }
+
     /// Cycles per internal node of a pointer/array float32 layout.
     pub fn pointer_node_cycles(&self) -> f64 {
         // load feature id, load threshold, load x[f], compare, branch,
@@ -91,6 +110,22 @@ impl McuSpec {
         let cycles = nodes as f64
             * self.toad_node_cycles(avg_bits * 0.2, avg_bits * 0.2, avg_bits * 0.6);
         cycles / self.clock_hz
+    }
+
+    /// Estimated seconds per prediction for a packed model whose trees
+    /// use the oblivious sub-format (table-lookup descent).
+    ///
+    /// The trace counts one record per level; on top of the level
+    /// cycles each tree pays one final 2^d leaf-table lookup (index
+    /// scale plus a leaf-ref bit extraction).
+    pub fn oblivious_latency(&self, packed: &PackedModel, probe: &[f32]) -> f64 {
+        let (levels, bits) = packed.trace_row(probe);
+        let avg_bits = bits as f64 / levels.max(1) as f64;
+        let descent = levels as f64
+            * self.oblivious_level_cycles(avg_bits * 0.2, avg_bits * 0.2, avg_bits * 0.6);
+        let table_lookup = packed.n_trees() as f64
+            * (2.0 * self.c_alu + self.bit_extract_cycles(avg_bits * 0.2));
+        (descent + table_lookup) / self.clock_hz
     }
 
     /// Estimated seconds per prediction for the same tree structure in a
@@ -161,6 +196,31 @@ mod tests {
                 spec.toad_node_cycles(4.0, 4.0, 16.0) > spec.pointer_node_cycles(),
                 "bit extraction must cost more than word loads"
             );
+            // Lookup descent drops the per-node offset arithmetic and
+            // the data-dependent branch but keeps every bit extraction.
+            let obl = spec.oblivious_level_cycles(4.0, 4.0, 16.0);
+            assert!(obl < spec.toad_node_cycles(4.0, 4.0, 16.0), "{}: oblivious level must undercut the classic node", spec.name);
+            assert!(obl > spec.pointer_node_cycles(), "{}: still dominated by bit extraction", spec.name);
+        }
+    }
+
+    #[test]
+    fn oblivious_latency_undercuts_classic_toad() {
+        let data =
+            PaperDataset::CovertypeBinary.generate(51).select(&(0..3000).collect::<Vec<_>>());
+        let mut params = GbdtParams::paper(4, 4);
+        params.growth = gbdt::GrowthMode::Oblivious;
+        let model = gbdt::booster::train(&data, params);
+        let finfo = FeatureInfo::from_dataset(&data);
+        let blob = encode(&model, &finfo, &EncodeOptions::default()).unwrap();
+        let packed = PackedModel::from_bytes(blob);
+        assert!(packed.n_oblivious_trees() > 0, "oblivious growth must pack the sub-format");
+        let probe = data.row(0);
+        for spec in [ESP32_S3, NANO_33_BLE, UNO_R4] {
+            let obl = spec.oblivious_latency(&packed, &probe);
+            let toad = spec.toad_latency(&packed, &probe);
+            assert!(obl > 0.0 && obl.is_finite(), "{}: latency {obl}", spec.name);
+            assert!(obl < toad, "{}: lookup descent ({obl:.2e}s) must beat branchy descent ({toad:.2e}s)", spec.name);
         }
     }
 }

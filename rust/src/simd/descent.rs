@@ -27,6 +27,17 @@
 //! single-row engine path, the scalar tier, and the sub-lane-group
 //! tails of both vector tiers, so the tail and lane kernels cannot
 //! drift apart.
+//!
+//! **Oblivious descent** ([`descend_oblivious`]) is the fully-vector
+//! special case: an oblivious tree shares one `(feature, threshold)`
+//! pair per level, so the per-lane node fetches disappear — each level
+//! broadcasts the single threshold into every lane, fetches all lane
+//! codes from the *same* column offset, and shifts the compare bit into
+//! a per-lane leaf-table index `idx ← 2·idx + (code > µ)`. The kernel
+//! returns raw leaf-table indices (`0 .. 2^d`); the caller does the one
+//! leaf lookup per lane at the end. This erases the one scalar hole the
+//! general kernels have (per-lane `feat[i]`/`thr[i]` fetches), which is
+//! exactly why the mode exists.
 
 use super::Tier;
 
@@ -143,6 +154,108 @@ pub fn descend_complete_gather(
     for t in r..n_rows {
         let row = rows[t] as usize;
         out[t] = descend_row(feat, thr, &xb[row * nf..(row + 1) * nf]) as u32;
+    }
+}
+
+/// Descend one row through an *oblivious* tree and return the
+/// **leaf-table index** (`0 .. 2^d`). `feat`/`thr` hold one shared
+/// `(feature, threshold rank)` pair per level, root level first
+/// (`d = feat.len()`); bit `ℓ` of the index (MSB first) is
+/// `row[feat[ℓ]] > thr[ℓ]`.
+///
+/// Sentinel behavior matches the general kernels: the NaN bin `0xFFFF`
+/// exceeds every real stored rank, so NaN rows take the `1` bit (route
+/// right) at every level — the same unsigned compare, no special case.
+#[inline]
+pub fn descend_oblivious_row(feat: &[u16], thr: &[u16], row: &[u16]) -> usize {
+    let mut idx = 0usize;
+    for (&f, &t) in feat.iter().zip(thr) {
+        idx = 2 * idx + (row[f as usize] > t) as usize;
+    }
+    idx
+}
+
+/// Descend every row of a row-major code block through one *oblivious*
+/// tree, writing per-row **leaf-table indices** into `out`.
+///
+/// * `feat`/`thr`: one shared `(feature, threshold rank)` pair per
+///   level, root level first (`d = feat.len()`, at most 15 so indices
+///   fit `u16` lanes).
+/// * `xb`: `out.len() × nf` row-major bin codes (`xb[r * nf + f]`).
+/// * `tier`: requested dispatch tier, clamped by
+///   [`Tier::clamp_detected`].
+///
+/// Unlike [`descend_complete`] there are no per-lane node fetches: each
+/// level is one broadcast threshold + one vector compare + one shift,
+/// so the whole level step vectorizes. Every tier returns bit-identical
+/// indices; the caller resolves `out[r]` against the tree's `2^d` leaf
+/// table.
+pub fn descend_oblivious(
+    tier: Tier,
+    feat: &[u16],
+    thr: &[u16],
+    xb: &[u16],
+    nf: usize,
+    out: &mut [u32],
+) {
+    let depth = feat.len();
+    debug_assert!(depth <= 15, "leaf-table indices must fit u16 (depth {depth})");
+    debug_assert_eq!(thr.len(), depth);
+    debug_assert_eq!(xb.len(), out.len() * nf);
+    let n_rows = out.len();
+    let r = {
+        #[cfg(target_arch = "x86_64")]
+        {
+            oblivious_groups_x86(tier, feat, thr, xb, nf, out)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = tier;
+            oblivious_scalar_groups(feat, thr, xb, nf, out)
+        }
+    };
+    // Shared scalar tail (fewer rows than one lane group).
+    for t in r..n_rows {
+        out[t] = descend_oblivious_row(feat, thr, &xb[t * nf..(t + 1) * nf]) as u32;
+    }
+}
+
+/// Gather twin of [`descend_oblivious`]: lane `l` walks row `rows[l]`
+/// of `xb`, writing its **leaf-table index** into `out[l]` — the
+/// adaptive early-exit caller swap-compacts surviving rows to the front
+/// of `rows` exactly as with [`descend_complete_gather`].
+///
+/// Requires `out.len() == rows.len()` and
+/// `(rows[l] as usize + 1) * nf ≤ xb.len()` for every lane.
+pub fn descend_oblivious_gather(
+    tier: Tier,
+    feat: &[u16],
+    thr: &[u16],
+    xb: &[u16],
+    nf: usize,
+    rows: &[u32],
+    out: &mut [u32],
+) {
+    let depth = feat.len();
+    debug_assert!(depth <= 15, "leaf-table indices must fit u16 (depth {depth})");
+    debug_assert_eq!(thr.len(), depth);
+    debug_assert_eq!(rows.len(), out.len());
+    let n_rows = out.len();
+    let r = {
+        #[cfg(target_arch = "x86_64")]
+        {
+            oblivious_gather_groups_x86(tier, feat, thr, xb, nf, rows, out)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = tier;
+            oblivious_gather_scalar_groups(feat, thr, xb, nf, rows, out)
+        }
+    };
+    // Shared scalar tail (fewer lanes than one lane group).
+    for t in r..n_rows {
+        let row = rows[t] as usize;
+        out[t] = descend_oblivious_row(feat, thr, &xb[row * nf..(row + 1) * nf]) as u32;
     }
 }
 
@@ -323,6 +436,182 @@ fn gather_scalar_groups(
         }
         for (l, &i) in idx.iter().enumerate() {
             out[r + l] = (i - n_internal) as u32;
+        }
+        r += SCALAR_LANES;
+    }
+    r
+}
+
+/// x86-64 lane-group dispatch of the oblivious kernel; returns the
+/// first row not processed.
+#[cfg(target_arch = "x86_64")]
+fn oblivious_groups_x86(
+    tier: Tier,
+    feat: &[u16],
+    thr: &[u16],
+    xb: &[u16],
+    nf: usize,
+    out: &mut [u32],
+) -> usize {
+    let n_rows = out.len();
+    let mut r = 0usize;
+    match tier.clamp_detected() {
+        Tier::Avx2 => {
+            while r + 16 <= n_rows {
+                // SAFETY: AVX2 verified by clamp_detected above — the
+                // kernel's only soundness precondition (all its slice
+                // accesses are bounds-checked).
+                unsafe { x86::oblivious16_avx2(feat, thr, xb, nf, r, &mut out[r..r + 16]) };
+                r += 16;
+            }
+            while r + 8 <= n_rows {
+                // SAFETY: SSE2 is baseline on x86-64 — the kernel's
+                // only soundness precondition.
+                unsafe { x86::oblivious8_sse2(feat, thr, xb, nf, r, &mut out[r..r + 8]) };
+                r += 8;
+            }
+            r
+        }
+        Tier::Sse2 => {
+            while r + 8 <= n_rows {
+                // SAFETY: SSE2 is baseline on x86-64 — the kernel's
+                // only soundness precondition.
+                unsafe { x86::oblivious8_sse2(feat, thr, xb, nf, r, &mut out[r..r + 8]) };
+                r += 8;
+            }
+            r
+        }
+        Tier::Scalar => oblivious_scalar_groups(feat, thr, xb, nf, out),
+    }
+}
+
+/// Scalar tier of the oblivious kernel: [`SCALAR_LANES`] interleaved
+/// lane chains. The level loop is outermost, so the shared
+/// feature/threshold loads hoist out of the lane loop — the same shape
+/// the vector tiers express with a broadcast. Returns the first row not
+/// processed (the tail start).
+fn oblivious_scalar_groups(
+    feat: &[u16],
+    thr: &[u16],
+    xb: &[u16],
+    nf: usize,
+    out: &mut [u32],
+) -> usize {
+    let n_rows = out.len();
+    let mut r = 0usize;
+    while r + SCALAR_LANES <= n_rows {
+        let mut idx = [0usize; SCALAR_LANES];
+        for (&f, &t) in feat.iter().zip(thr) {
+            let f = f as usize;
+            for (l, i) in idx.iter_mut().enumerate() {
+                let code = xb[(r + l) * nf + f];
+                *i = 2 * *i + (code > t) as usize;
+            }
+        }
+        for (l, &i) in idx.iter().enumerate() {
+            out[r + l] = i as u32;
+        }
+        r += SCALAR_LANES;
+    }
+    r
+}
+
+/// x86-64 lane-group dispatch of the oblivious gather variant; returns
+/// the first lane not processed.
+#[cfg(target_arch = "x86_64")]
+fn oblivious_gather_groups_x86(
+    tier: Tier,
+    feat: &[u16],
+    thr: &[u16],
+    xb: &[u16],
+    nf: usize,
+    rows: &[u32],
+    out: &mut [u32],
+) -> usize {
+    let n_rows = out.len();
+    let mut r = 0usize;
+    match tier.clamp_detected() {
+        Tier::Avx2 => {
+            while r + 16 <= n_rows {
+                // SAFETY: AVX2 verified by clamp_detected above — the
+                // kernel's only soundness precondition (all its slice
+                // accesses, including the `rows` indirection, are
+                // bounds-checked).
+                unsafe {
+                    x86::oblivious16_avx2_gather(
+                        feat,
+                        thr,
+                        xb,
+                        nf,
+                        &rows[r..r + 16],
+                        &mut out[r..r + 16],
+                    )
+                };
+                r += 16;
+            }
+            while r + 8 <= n_rows {
+                // SAFETY: SSE2 is baseline on x86-64 — the kernel's
+                // only soundness precondition.
+                unsafe {
+                    x86::oblivious8_sse2_gather(
+                        feat,
+                        thr,
+                        xb,
+                        nf,
+                        &rows[r..r + 8],
+                        &mut out[r..r + 8],
+                    )
+                };
+                r += 8;
+            }
+            r
+        }
+        Tier::Sse2 => {
+            while r + 8 <= n_rows {
+                // SAFETY: SSE2 is baseline on x86-64 — the kernel's
+                // only soundness precondition.
+                unsafe {
+                    x86::oblivious8_sse2_gather(
+                        feat,
+                        thr,
+                        xb,
+                        nf,
+                        &rows[r..r + 8],
+                        &mut out[r..r + 8],
+                    )
+                };
+                r += 8;
+            }
+            r
+        }
+        Tier::Scalar => oblivious_gather_scalar_groups(feat, thr, xb, nf, rows, out),
+    }
+}
+
+/// Scalar tier of the oblivious gather variant: [`SCALAR_LANES`]
+/// interleaved lane chains, each following its own `rows[r + l]` row.
+/// Returns the first lane not processed (the tail start).
+fn oblivious_gather_scalar_groups(
+    feat: &[u16],
+    thr: &[u16],
+    xb: &[u16],
+    nf: usize,
+    rows: &[u32],
+    out: &mut [u32],
+) -> usize {
+    let n_rows = out.len();
+    let mut r = 0usize;
+    while r + SCALAR_LANES <= n_rows {
+        let mut idx = [0usize; SCALAR_LANES];
+        for (&f, &t) in feat.iter().zip(thr) {
+            let f = f as usize;
+            for (l, i) in idx.iter_mut().enumerate() {
+                let code = xb[rows[r + l] as usize * nf + f];
+                *i = 2 * *i + (code > t) as usize;
+            }
+        }
+        for (l, &i) in idx.iter().enumerate() {
+            out[r + l] = i as u32;
         }
         r += SCALAR_LANES;
     }
@@ -523,6 +812,176 @@ mod x86 {
             *o = lane as u32 - n_internal;
         }
     }
+
+    /// Eight rows (`r .. r + 8`) through an oblivious tree: per level,
+    /// one broadcast threshold, one shared-column code load, one vector
+    /// compare, one shift — no per-lane node fetches. Writes
+    /// leaf-*table* indices (`0 .. 2^d`) into `out[0..8]`.
+    ///
+    /// # Safety
+    /// The **only** soundness precondition is the CPU feature: SSE2,
+    /// architecturally guaranteed on x86-64 (the only target this
+    /// module compiles for). There is no memory precondition — every
+    /// slice access (`xb[(r + l) * nf + f]`) is bounds-checked indexing
+    /// that panics on out-of-range inputs rather than reading out of
+    /// bounds, and the vector loads/stores touch only the local
+    /// fixed-size lane arrays (`codes`/`lanes`, 8 × u16 each).
+    /// Correctness (not safety) additionally wants `out.len() >= 8`:
+    /// fewer lanes are silently left unwritten by the `zip`.
+    #[inline]
+    pub unsafe fn oblivious8_sse2(
+        feat: &[u16],
+        thr: &[u16],
+        xb: &[u16],
+        nf: usize,
+        r: usize,
+        out: &mut [u32],
+    ) {
+        let bias = _mm_set1_epi16(i16::MIN);
+        let mut idx = _mm_setzero_si128();
+        let mut codes = [0u16; 8];
+        for (&f, &t) in feat.iter().zip(thr) {
+            let f = f as usize;
+            for (l, c) in codes.iter_mut().enumerate() {
+                *c = xb[(r + l) * nf + f];
+            }
+            let c = _mm_loadu_si128(codes.as_ptr().cast());
+            let tv = _mm_xor_si128(_mm_set1_epi16(t as i16), bias);
+            // Unsigned `c > t` as signed compare of bias-flipped lanes;
+            // gt lanes are −1, so the subtract shifts the bit in:
+            // idx ← 2·idx + (c > t).
+            let gt = _mm_cmpgt_epi16(_mm_xor_si128(c, bias), tv);
+            idx = _mm_sub_epi16(_mm_add_epi16(idx, idx), gt);
+        }
+        let mut lanes = [0u16; 8];
+        _mm_storeu_si128(lanes.as_mut_ptr().cast(), idx);
+        for (o, &lane) in out.iter_mut().zip(&lanes) {
+            *o = lane as u32;
+        }
+    }
+
+    /// Sixteen rows (`r .. r + 16`) through an oblivious tree on
+    /// 256-bit vectors; writes leaf-*table* indices into `out[0..16]`.
+    ///
+    /// # Safety
+    /// The **only** soundness precondition is the CPU feature: the
+    /// caller must verify AVX2 support before calling (route through
+    /// `Tier::clamp_detected`); calling without it is immediate UB
+    /// (`#[target_feature]`). There is no memory precondition — every
+    /// slice access is bounds-checked indexing that panics rather than
+    /// reading out of bounds, and the vector loads/stores touch only
+    /// the local fixed-size lane arrays (`codes`/`lanes`, 16 × u16
+    /// each). Correctness (not safety) additionally wants
+    /// `out.len() >= 16`: fewer lanes are silently left unwritten.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn oblivious16_avx2(
+        feat: &[u16],
+        thr: &[u16],
+        xb: &[u16],
+        nf: usize,
+        r: usize,
+        out: &mut [u32],
+    ) {
+        let bias = _mm256_set1_epi16(i16::MIN);
+        let mut idx = _mm256_setzero_si256();
+        let mut codes = [0u16; 16];
+        for (&f, &t) in feat.iter().zip(thr) {
+            let f = f as usize;
+            for (l, c) in codes.iter_mut().enumerate() {
+                *c = xb[(r + l) * nf + f];
+            }
+            let c = _mm256_loadu_si256(codes.as_ptr().cast());
+            let tv = _mm256_xor_si256(_mm256_set1_epi16(t as i16), bias);
+            let gt = _mm256_cmpgt_epi16(_mm256_xor_si256(c, bias), tv);
+            idx = _mm256_sub_epi16(_mm256_add_epi16(idx, idx), gt);
+        }
+        let mut lanes = [0u16; 16];
+        _mm256_storeu_si256(lanes.as_mut_ptr().cast(), idx);
+        for (o, &lane) in out.iter_mut().zip(&lanes) {
+            *o = lane as u32;
+        }
+    }
+
+    /// Gather twin of [`oblivious8_sse2`]: lane `l` walks row `rows[l]`.
+    ///
+    /// # Safety
+    /// The **only** soundness precondition is the CPU feature: SSE2,
+    /// architecturally guaranteed on x86-64. No memory precondition —
+    /// the row indirection `xb[rows[l] as usize * nf + f]` is
+    /// bounds-checked indexing (an out-of-range `rows[l]` panics, never
+    /// reads out of bounds), and vector loads/stores touch only the
+    /// local fixed-size lane arrays. Correctness (not safety) wants
+    /// `rows.len() >= 8` and `out.len() >= 8`.
+    #[inline]
+    pub unsafe fn oblivious8_sse2_gather(
+        feat: &[u16],
+        thr: &[u16],
+        xb: &[u16],
+        nf: usize,
+        rows: &[u32],
+        out: &mut [u32],
+    ) {
+        let bias = _mm_set1_epi16(i16::MIN);
+        let mut idx = _mm_setzero_si128();
+        let mut codes = [0u16; 8];
+        for (&f, &t) in feat.iter().zip(thr) {
+            let f = f as usize;
+            for (l, c) in codes.iter_mut().enumerate() {
+                *c = xb[rows[l] as usize * nf + f];
+            }
+            let c = _mm_loadu_si128(codes.as_ptr().cast());
+            let tv = _mm_xor_si128(_mm_set1_epi16(t as i16), bias);
+            let gt = _mm_cmpgt_epi16(_mm_xor_si128(c, bias), tv);
+            idx = _mm_sub_epi16(_mm_add_epi16(idx, idx), gt);
+        }
+        let mut lanes = [0u16; 8];
+        _mm_storeu_si128(lanes.as_mut_ptr().cast(), idx);
+        for (o, &lane) in out.iter_mut().zip(&lanes) {
+            *o = lane as u32;
+        }
+    }
+
+    /// Gather twin of [`oblivious16_avx2`]: lane `l` walks row
+    /// `rows[l]`.
+    ///
+    /// # Safety
+    /// The **only** soundness precondition is the CPU feature: the
+    /// caller must verify AVX2 support before calling (route through
+    /// `Tier::clamp_detected`); calling without it is immediate UB
+    /// (`#[target_feature]`). No memory precondition — the row
+    /// indirection is bounds-checked indexing (an out-of-range
+    /// `rows[l]` panics, never reads out of bounds), and vector
+    /// loads/stores touch only the local fixed-size lane arrays.
+    /// Correctness (not safety) wants `rows.len() >= 16` and
+    /// `out.len() >= 16`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn oblivious16_avx2_gather(
+        feat: &[u16],
+        thr: &[u16],
+        xb: &[u16],
+        nf: usize,
+        rows: &[u32],
+        out: &mut [u32],
+    ) {
+        let bias = _mm256_set1_epi16(i16::MIN);
+        let mut idx = _mm256_setzero_si256();
+        let mut codes = [0u16; 16];
+        for (&f, &t) in feat.iter().zip(thr) {
+            let f = f as usize;
+            for (l, c) in codes.iter_mut().enumerate() {
+                *c = xb[rows[l] as usize * nf + f];
+            }
+            let c = _mm256_loadu_si256(codes.as_ptr().cast());
+            let tv = _mm256_xor_si256(_mm256_set1_epi16(t as i16), bias);
+            let gt = _mm256_cmpgt_epi16(_mm256_xor_si256(c, bias), tv);
+            idx = _mm256_sub_epi16(_mm256_add_epi16(idx, idx), gt);
+        }
+        let mut lanes = [0u16; 16];
+        _mm256_storeu_si256(lanes.as_mut_ptr().cast(), idx);
+        for (o, &lane) in out.iter_mut().zip(&lanes) {
+            *o = lane as u32;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -693,6 +1152,109 @@ mod tests {
             assert_eq!(out, [0, 0, 1, 1, 0, 1, 1, 0, 0], "tier {}", tier.name());
             descend_complete(tier, &feat, &thr_pass, 1, &xb, nf, &mut out);
             assert!(out.iter().all(|&i| i == 0), "pass-through must route left");
+        }
+    }
+
+    /// Replicate per-level splits into the dense complete-tree arrays:
+    /// slot `s` takes the split of its level `⌊log₂(s+1)⌋`.
+    fn replicate(lfeat: &[u16], lthr: &[u16]) -> (Vec<u16>, Vec<u16>) {
+        let d = lfeat.len();
+        let n_internal = (1usize << d) - 1;
+        let mut feat = Vec::with_capacity(n_internal);
+        let mut thr = Vec::with_capacity(n_internal);
+        for s in 0..n_internal {
+            let lvl = (s + 1).ilog2() as usize;
+            feat.push(lfeat[lvl]);
+            thr.push(lthr[lvl]);
+        }
+        (feat, thr)
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // 80-case property sweep — slow under Miri;
+                              // the fixed-input oblivious tests below run.
+    fn prop_oblivious_matches_replicated_complete_descent_on_every_tier() {
+        run_prop("oblivious == replicated complete descent", 80, |g| {
+            let depth = g.usize_in(1, 10);
+            let nf = g.usize_in(1, 9);
+            let mut rng = Pcg64::new(g.case_seed ^ 0x0B1);
+            let lfeat: Vec<u16> = (0..depth).map(|_| rng.gen_range(nf) as u16).collect();
+            let lthr: Vec<u16> = (0..depth).map(|_| rng.gen_range(300) as u16).collect();
+            let (rfeat, rthr) = replicate(&lfeat, &lthr);
+            // Row counts sweep the ragged tails of both lane widths
+            // (1..=17) and full blocks; codes include the NaN bin.
+            let n_rows = if g.bool(0.5) { g.usize_in(1, 17) } else { g.usize_in(18, 70) };
+            let xb: Vec<u16> = (0..n_rows * nf)
+                .map(|_| {
+                    if rng.gen_bool(0.1) {
+                        u16::MAX
+                    } else {
+                        rng.gen_range(300) as u16
+                    }
+                })
+                .collect();
+            // Oracle: the general kernel on the replicated dense tree.
+            // Its leaf index equals the oblivious d-bit table index
+            // (both are Σ bitℓ · 2^(d−1−ℓ)).
+            let mut want = vec![0u32; n_rows];
+            descend_complete(Tier::Scalar, &rfeat, &rthr, depth, &xb, nf, &mut want);
+            for tier in crate::simd::available_tiers() {
+                let mut got = vec![0u32; n_rows];
+                descend_oblivious(tier, &lfeat, &lthr, &xb, nf, &mut got);
+                assert_eq!(got, want, "tier {} depth {depth} rows {n_rows}", tier.name());
+            }
+            // Gather twin over an arbitrary row subset with repeats.
+            let n_lanes = g.usize_in(0, 40);
+            let rows: Vec<u32> =
+                (0..n_lanes).map(|_| rng.gen_range(n_rows) as u32).collect();
+            let want_g: Vec<u32> = rows
+                .iter()
+                .map(|&row| {
+                    let row = row as usize;
+                    descend_oblivious_row(&lfeat, &lthr, &xb[row * nf..(row + 1) * nf]) as u32
+                })
+                .collect();
+            for tier in crate::simd::available_tiers() {
+                let mut got = vec![0u32; n_lanes];
+                descend_oblivious_gather(tier, &lfeat, &lthr, &xb, nf, &rows, &mut got);
+                assert_eq!(got, want_g, "gather tier {} depth {depth}", tier.name());
+            }
+            // An unsupported forced tier must clamp, not crash.
+            let mut clamped = vec![0u32; n_rows];
+            descend_oblivious(Tier::Avx2, &lfeat, &lthr, &xb, nf, &mut clamped);
+            assert_eq!(clamped, want);
+        });
+    }
+
+    #[test]
+    fn oblivious_bit_order_is_msb_first_root_level() {
+        // Levels: (f0 > 5), (f1 > 10). Root level is the high bit.
+        let lfeat = [0u16, 1];
+        let lthr = [5u16, 10];
+        let nf = 2usize;
+        // Rows chosen to hit all four cells; NaN bin takes the 1 bit.
+        let xb = [
+            0u16, 0, // 00 → 0
+            0, 11, // 01 → 1
+            6, 0, // 10 → 2
+            6, 11, // 11 → 3
+            u16::MAX,
+            u16::MAX, // NaN row → 3
+        ];
+        for tier in crate::simd::available_tiers() {
+            let mut out = vec![0u32; 5];
+            descend_oblivious(tier, &lfeat, &lthr, &xb, nf, &mut out);
+            assert_eq!(out, [0, 1, 2, 3, 3], "tier {}", tier.name());
+        }
+    }
+
+    #[test]
+    fn oblivious_depth_zero_is_leaf_zero() {
+        let xb = vec![7u16; 24 * 3];
+        for tier in crate::simd::available_tiers() {
+            let mut out = vec![9u32; 24];
+            descend_oblivious(tier, &[], &[], &xb, 3, &mut out);
+            assert!(out.iter().all(|&i| i == 0), "tier {}", tier.name());
         }
     }
 }

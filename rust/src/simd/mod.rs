@@ -29,6 +29,13 @@
 //!   groups and keep survivors densely packed; since the per-lane code
 //!   fetch is scalar anyway, the indirection adds one index load per
 //!   lane per level.
+//! * **Oblivious descent** ([`descend_oblivious`], plus its gather
+//!   twin): the CatBoost-style special case where one
+//!   `(feature, threshold)` pair is shared by a whole level, so the
+//!   per-lane node fetches of the general kernels disappear entirely —
+//!   each level is a broadcast threshold, a shared-column code load, a
+//!   vector compare, and a shift into a per-lane `2^d` leaf-table
+//!   index. The one fully-vector descent in the system.
 //! * **Binning** ([`count_lt`]): the per-row bin of the quantized
 //!   engine is `#{b : b < v}` over a short sorted threshold table,
 //!   which equals `partition_point` exactly — computed branch-free as
@@ -61,7 +68,10 @@ pub mod descent;
 pub mod hist;
 
 pub use bin::count_lt;
-pub use descent::{descend_complete, descend_complete_gather, descend_row, SCALAR_LANES};
+pub use descent::{
+    descend_complete, descend_complete_gather, descend_oblivious, descend_oblivious_gather,
+    descend_oblivious_row, descend_row, SCALAR_LANES,
+};
 pub use hist::{accumulate_dense, accumulate_gathered, Code};
 
 use std::sync::OnceLock;

@@ -60,7 +60,13 @@ pub fn fig4_rows(
     row_cap: usize,
 ) -> Vec<Fig4Row> {
     let rounds = pow2_rounds(log_max_rounds);
-    let base_series = [Series::ToadPlain, Series::LgbmF32, Series::LgbmQ16, Series::LgbmArray];
+    let base_series = [
+        Series::ToadPlain,
+        Series::ToadOblivious,
+        Series::LgbmF32,
+        Series::LgbmQ16,
+        Series::LgbmArray,
+    ];
     let extra = [
         Series::Cegb { feature_cost: 2.0, split_cost: 0.1 },
         Series::Ccp { alpha: 0.01 },
@@ -444,8 +450,8 @@ mod tests {
             &limits,
             400,
         );
-        // 7 series × 3 limits
-        assert_eq!(rows.len(), 7 * 3);
+        // 8 series × 3 limits
+        assert_eq!(rows.len(), 8 * 3);
         // At a generous limit every series must reach a decent score.
         for r in rows.iter().filter(|r| r.limit_bytes == 8192) {
             assert!(r.n == 2, "{}: {} seeds", r.series, r.n);

@@ -280,6 +280,33 @@ mod tests {
     }
 
     #[test]
+    fn oblivious_growth_encodes_the_compact_body_end_to_end() {
+        // ToaD penalties and oblivious growth compose: the booster's
+        // `growth` knob reaches the grower through `ToadParams::gbdt`,
+        // every grown tree is level-uniform, and the encoder stores the
+        // compact oblivious body (d pairs + 2^d leaves) for each —
+        // which the packed reader serves back bit-exactly.
+        let (train_set, test_set) = small(PaperDataset::BreastCancer, 500, 12);
+        let mut gbdt = GbdtParams::paper(16, 3);
+        gbdt.growth = crate::gbdt::GrowthMode::Oblivious;
+        let m = train_toad(&train_set, &ToadParams::new(gbdt, 0.5, 0.25));
+        let grew = m.model.trees.iter().flatten().filter(|t| t.depth() > 0).count();
+        assert!(grew > 0, "oblivious ToaD must grow at least one real tree");
+        for tree in m.model.trees.iter().flatten().filter(|t| t.depth() > 0) {
+            assert!(tree.oblivious_levels().is_some());
+        }
+        let packed = crate::layout::PackedModel::from_bytes(m.blob.clone());
+        assert_eq!(packed.n_oblivious_trees(), grew, "every grown tree stores the compact body");
+        // The packed reader and the decoded pointer model agree
+        // bit-exactly (leaf quantization applies to both equally).
+        let decoded = crate::layout::decode(&m.blob);
+        for i in (0..test_set.n_rows()).step_by(19) {
+            let x = test_set.row(i);
+            assert_eq!(packed.predict_raw(&x), decoded.predict_raw(&x), "row {i}");
+        }
+    }
+
+    #[test]
     fn reuse_factor_at_least_one_for_nonempty() {
         let (train_set, _) = small(PaperDataset::KrVsKp, 1500, 7);
         let params = ToadParams::new(GbdtParams::paper(16, 2), 0.0, 2.0);

@@ -133,15 +133,16 @@ impl Default for Tiny {
     }
 }
 
-/// Hand-pack a complete blob: task 0, 1 output, 1 round, max_depth 2,
-/// 3 features (all used, maxT 3), 5 leaf values, one stored tree.
-/// Derived widths: wd = wc = w_f = w_t = 2, w_l = 3, w_dep = 2.
-fn tiny_blob(t: &Tiny) -> Vec<u8> {
+/// Shared header + map + threshold + leaf sections of the hand-packed
+/// blobs: task 0, 1 output, 1 round, max_depth 2, 3 features (all
+/// used, maxT 3), 5 leaf values. Derived widths: wd = wc = w_f = w_t =
+/// 2, w_l = 3, w_dep = 2.
+fn tiny_prefix(f0_exp: u64, f0_float: bool) -> BitWriter {
     let mut w = header(0, 1, 1, 2, 3, 3, 3, 5);
     // Map: (feature, exponent:3, is_float:1, count-1).
     w.write(0, 2);
-    w.write(t.f0_exp, 3);
-    w.write(u64::from(t.f0_float), 1);
+    w.write(f0_exp, 3);
+    w.write(u64::from(f0_float), 1);
     w.write(2, 2); // 3 thresholds
     w.write(1, 2);
     w.write(1, 3); // uint width 2
@@ -163,7 +164,14 @@ fn tiny_blob(t: &Tiny) -> Vec<u8> {
     for i in 0..5 {
         w.write_f32(i as f32 * 0.25);
     }
-    // One tree: depth, then a complete node array.
+    w
+}
+
+/// Hand-pack a complete blob with one general-body tree.
+fn tiny_blob(t: &Tiny) -> Vec<u8> {
+    let mut w = tiny_prefix(t.f0_exp, t.f0_float);
+    // One tree: flag 0 (general body), depth, complete node array.
+    w.write(0, 1);
     w.write(t.depth, 2);
     let n_internal = (1usize << t.depth) - 1;
     for _ in 0..n_internal {
@@ -172,6 +180,43 @@ fn tiny_blob(t: &Tiny) -> Vec<u8> {
     }
     for s in 0..(1usize << t.depth) {
         w.write(t.lr[s % 2], 3);
+    }
+    w.into_bytes()
+}
+
+/// Knobs for the hand-packed *oblivious*-body blob (same header/map
+/// sections as [`Tiny`]). Defaults decode cleanly; each test perturbs
+/// one knob.
+#[derive(Clone)]
+struct TinyObl {
+    /// Stored tree depth; governs both the pair count and the 2^d leaf
+    /// table (`max_depth` in the header is 2).
+    depth: u64,
+    /// Per-level (feature ref, threshold rank), root level first.
+    pairs: [(u64, u64); 2],
+    /// Leaf-table refs (value table holds 5 entries).
+    lr: [u64; 4],
+}
+
+impl Default for TinyObl {
+    fn default() -> Self {
+        TinyObl { depth: 2, pairs: [(0, 2), (1, 1)], lr: [0, 4, 1, 3] }
+    }
+}
+
+/// Hand-pack a blob with one oblivious-body tree: flag 1, depth d,
+/// d (feature-ref, threshold-rank) pairs, 2^d leaf refs.
+fn tiny_obl_blob(t: &TinyObl) -> Vec<u8> {
+    let mut w = tiny_prefix(0, false);
+    w.write(1, 1);
+    w.write(t.depth, 2);
+    for lvl in 0..t.depth as usize {
+        let (fr, tr) = t.pairs[lvl % 2];
+        w.write(fr, 2);
+        w.write(tr, 2);
+    }
+    for s in 0..(1usize << t.depth) {
+        w.write(t.lr[s % 4], 3);
     }
     w.into_bytes()
 }
@@ -345,5 +390,95 @@ fn rejects_out_of_range_references_instead_of_panicking() {
         &tiny_blob(&Tiny { lr: [5, 0], ..Tiny::default() }),
         "leaf ref",
         "first leaf ref just past the value table",
+    );
+}
+
+// ---------------------------------------------------------------------
+// Oblivious sub-format (flag 1): d (feature, threshold) pairs + a 2^d
+// leaf table. Same validator contract, new reference families.
+// ---------------------------------------------------------------------
+
+#[test]
+fn the_canonical_oblivious_blob_decodes() {
+    let blob = tiny_obl_blob(&TinyObl::default());
+    let bits = validate_blob(&blob).expect("canonical oblivious blob must validate");
+    assert!(bits <= blob.len() * 8);
+    let model = try_decode(&blob).expect("canonical oblivious blob must decode");
+    assert_eq!(model.trees[0].len(), 1, "one round");
+    let tree = &model.trees[0][0];
+    assert!(
+        tree.oblivious_levels().is_some(),
+        "decoded oblivious body must stay level-uniform"
+    );
+    // Level 0: feature 0 rank 2 → uint threshold 1; level 1: feature 1
+    // rank 1 → uint threshold 2. Leaf refs [0,4,1,3] → values
+    // [0.0, 1.0, 0.25, 0.75].
+    assert_eq!(model.predict_value(&[0.0, 0.0, 0.0]), 0.0);
+    assert_eq!(model.predict_value(&[0.0, 9.0, 0.0]), 1.0);
+    assert_eq!(model.predict_value(&[9.0, 0.0, 0.0]), 0.25);
+    assert_eq!(model.predict_value(&[9.0, 9.0, 0.0]), 0.75);
+}
+
+#[test]
+fn every_prefix_of_the_oblivious_blob_is_rejected() {
+    let blob = tiny_obl_blob(&TinyObl::default());
+    for k in 0..blob.len() {
+        assert!(
+            !decodes_without_panic(&blob[..k], &format!("oblivious prefix of {k} bytes")),
+            "a {k}-byte prefix validated as complete"
+        );
+    }
+}
+
+#[test]
+fn every_bit_flip_of_the_oblivious_blob_is_handled() {
+    // Miri-runnable like the general-body sweep. Covers flips of the
+    // sub-format flag itself (body re-parses under the wrong size),
+    // level references, and leaf-table refs.
+    let blob = tiny_obl_blob(&TinyObl::default());
+    let mut flipped = blob.clone();
+    for byte in 0..blob.len() {
+        for bit in 0..8 {
+            flipped[byte] ^= 1 << bit;
+            decodes_without_panic(&flipped, &format!("oblivious flip at byte {byte} bit {bit}"));
+            flipped[byte] ^= 1 << bit;
+        }
+    }
+}
+
+#[test]
+fn rejects_oblivious_out_of_range_level_references() {
+    expect_err(
+        &tiny_obl_blob(&TinyObl { pairs: [(3, 0), (1, 1)], ..Default::default() }),
+        "feature ref",
+        "level feature ref past |F_U|",
+    );
+    expect_err(
+        &tiny_obl_blob(&TinyObl { pairs: [(0, 2), (1, 3)], ..Default::default() }),
+        "threshold rank",
+        "level threshold rank past the feature's count",
+    );
+    // Per-feature counts apply, not just maxT: feature 2 has a single
+    // threshold, so rank 1 is out of range even though 1 < maxT.
+    expect_err(
+        &tiny_obl_blob(&TinyObl { pairs: [(2, 1), (1, 1)], ..Default::default() }),
+        "threshold rank",
+        "level threshold rank past a narrow feature's count",
+    );
+    expect_err(
+        &tiny_obl_blob(&TinyObl { lr: [0, 4, 5, 3], ..Default::default() }),
+        "leaf ref",
+        "oblivious leaf-table ref past the value table",
+    );
+}
+
+#[test]
+fn rejects_oblivious_trees_deeper_than_the_header_bound() {
+    // The stored depth sizes the 2^d leaf table, so an oversized depth
+    // is the oblivious "bad leaf-table size" malformation.
+    expect_err(
+        &tiny_obl_blob(&TinyObl { depth: 3, ..Default::default() }),
+        "> max",
+        "oblivious depth (and leaf table) past header max_depth",
     );
 }

@@ -217,6 +217,109 @@ fn prop_simd_descent_tiers_match_forced_scalar() {
     });
 }
 
+/// Build a perfect level-uniform tree: `levels[ℓ]` is the (feature,
+/// threshold) shared by every internal node on level ℓ, `leaves[s]` the
+/// value at MSB-first path slot `s`. Such trees are exactly what the
+/// quantized engine's oblivious detector accepts.
+fn level_uniform_tree(levels: &[(usize, f32)], leaves: &[f64]) -> Tree {
+    fn build(nodes: &mut Vec<Node>, levels: &[(usize, f32)], leaves: &[f64], slot: usize) -> usize {
+        let Some(&(feature, threshold)) = levels.first() else {
+            let idx = nodes.len();
+            nodes.push(Node::Leaf { value: leaves[slot] });
+            return idx;
+        };
+        let idx = nodes.len();
+        nodes.push(Node::Internal { feature, bin: 0, threshold, left: 0, right: 0 });
+        let l = build(nodes, &levels[1..], leaves, slot * 2);
+        let r = build(nodes, &levels[1..], leaves, slot * 2 + 1);
+        if let Node::Internal { left, right, .. } = &mut nodes[idx] {
+            *left = l;
+            *right = r;
+        }
+        idx
+    }
+    let mut nodes = Vec::new();
+    build(&mut nodes, levels, leaves, 0);
+    Tree { nodes }
+}
+
+/// Oblivious sub-format parity: level-uniform trees route through the
+/// table-lookup descent in the quantized engine and must stay
+/// bit-identical to the generic complete-layout kernel (`FlatModel`
+/// never constructs the oblivious layout — it replicates the same trees
+/// as dense complete blocks) and to the pointer trees — on every
+/// available SIMD tier plus the forced-scalar twin, across NaN rows,
+/// and on every ragged tail length 1..=17 of both lane widths.
+#[test]
+fn oblivious_descent_matches_generic_complete_kernel_on_every_tier() {
+    let trees = vec![
+        level_uniform_tree(&[(0, 0.3), (1, -0.4)], &[0.1, -0.2, 0.3, -0.4]),
+        level_uniform_tree(
+            &[(1, 0.9), (0, -1.1), (1, 0.15)],
+            &[1.0, -1.0, 0.5, -0.5, 0.25, -0.25, 0.125, -0.125],
+        ),
+        level_uniform_tree(
+            &[(0, -0.05), (0, 0.65), (1, -0.9), (1, 1.3)],
+            &(0..16).map(|i| i as f64 * 0.0625 - 0.5).collect::<Vec<_>>(),
+        ),
+    ];
+    let model = GbdtModel {
+        objective: Objective::L2,
+        base_scores: vec![0.05],
+        trees: vec![trees],
+        n_features: 2,
+        name: "oblivious-parity".into(),
+    };
+    let quant = QuantizedFlatModel::from_model(&model);
+    assert_eq!(quant.n_oblivious_trees(), 3, "every tree is level-uniform");
+    let flat = FlatModel::from_model(&model);
+
+    // Probe rows straddle every threshold; NaN injected on both
+    // features (NaN must route right at each level, same as `!(x ≤ t)`).
+    let all_rows: Vec<Vec<f32>> = (0..70)
+        .map(|i| {
+            let x = -1.7 + 0.053 * i as f32;
+            let y = -1.3 + 0.041 * i as f32;
+            match i % 7 {
+                0 => vec![f32::NAN, y],
+                3 => vec![x, f32::NAN],
+                6 => vec![f32::NAN, f32::NAN],
+                _ => vec![x, y],
+            }
+        })
+        .collect();
+    for n in (1..=17).chain([31, 32, 33, 64, 70]) {
+        let rows = &all_rows[..n];
+        let cols: Vec<Vec<f32>> = (0..2).map(|f| rows.iter().map(|r| r[f]).collect()).collect();
+        let col_refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let want = quant.predict_batch_with_tier(rows, Tier::Scalar);
+        let complete = flat.predict_batch(rows);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(want[i], model.predict_raw(row), "n={n} row {i}: oblivious vs pointer");
+            assert_eq!(
+                want[i], complete[i],
+                "n={n} row {i}: oblivious descent vs generic complete kernel"
+            );
+        }
+        for tier in simd::available_tiers() {
+            assert_eq!(
+                quant.predict_batch_with_tier(rows, tier),
+                want,
+                "n={n}, tier {}",
+                tier.name()
+            );
+            assert_eq!(
+                quant.predict_batch_columns_with_tier(&col_refs, n, tier),
+                want,
+                "n={n} columnar, tier {}",
+                tier.name()
+            );
+        }
+        // A tier the CPU may lack must clamp, never crash or diverge.
+        assert_eq!(quant.predict_batch_with_tier(rows, Tier::Avx2), want);
+    }
+}
+
 /// Deterministic tier parity on a handmade model whose feature 0 uses
 /// 300 distinct thresholds — more than 256 bins, so the columnar path's
 /// `BinMatrix` arena is forced to `u16` width (the trained-model

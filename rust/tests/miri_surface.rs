@@ -14,7 +14,7 @@ use toad::bitio::{bits_for, BitReader, BitWriter};
 use toad::data::{BinColumns, BinMatrix};
 use toad::simd::{
     accumulate_dense, accumulate_gathered, count_lt, descend_complete, descend_complete_gather,
-    descend_row, Tier,
+    descend_oblivious, descend_oblivious_gather, descend_oblivious_row, descend_row, Tier,
 };
 
 #[test]
@@ -167,6 +167,46 @@ fn scalar_descent_walks_a_hand_built_tree() {
     let want_gather: Vec<u32> = lane_rows.iter().map(|&r| want[r as usize]).collect();
     let mut got = vec![0u32; lane_rows.len()];
     descend_complete_gather(Tier::Scalar, &feat, &thr, 2, &xb, 2, &lane_rows, &mut got);
+    assert_eq!(got, want_gather);
+}
+
+#[test]
+fn scalar_oblivious_descent_walks_a_hand_built_level_table() {
+    // Depth-3 oblivious tree: every node on level ℓ shares feat[ℓ]/thr[ℓ].
+    // Root-first, so the level-0 outcome is the leaf index's MSB:
+    // idx = 4·(f0 > 5) + 2·(f1 > 2) + (f0 > 9).
+    let feat = [0u16, 1, 0];
+    let thr = [5u16, 2, 9];
+    let leaf = |r: &[u16; 2]| -> usize {
+        (usize::from(r[0] > 5) << 2) | (usize::from(r[1] > 2) << 1) | usize::from(r[0] > 9)
+    };
+    let rows: [[u16; 2]; 6] = [[3, 1], [3, 9], [9, 7], [12, 0], [12, 8], [6, 2]];
+    for r in &rows {
+        assert_eq!(descend_oblivious_row(&feat, &thr, r), leaf(r), "row {r:?}");
+    }
+    // The NaN sentinel bin (u16::MAX) must route right at every level
+    // that reads it, exactly like `!(x ≤ t)` on floats.
+    assert_eq!(descend_oblivious_row(&feat, &thr, &[u16::MAX, 0]), 0b101);
+    assert_eq!(descend_oblivious_row(&feat, &thr, &[0, u16::MAX]), 0b010);
+
+    // The block kernel (scalar tier) must agree on a block longer than
+    // one 8-lane group so the unrolled body runs, tail included.
+    let mut xb = Vec::new();
+    let mut want = Vec::new();
+    for i in 0..19u16 {
+        let r = [i % 13, (i * 3) % 13];
+        want.push(descend_oblivious_row(&feat, &thr, &r) as u32);
+        xb.extend_from_slice(&r);
+    }
+    let mut out = vec![0u32; 19];
+    descend_oblivious(Tier::Scalar, &feat, &thr, &xb, 2, &mut out);
+    assert_eq!(out, want);
+
+    // The gather twin over a shuffled, repeating row subset.
+    let lane_rows: Vec<u32> = vec![4, 0, 18, 7, 7, 12, 3, 9, 1, 16];
+    let want_gather: Vec<u32> = lane_rows.iter().map(|&r| want[r as usize]).collect();
+    let mut got = vec![0u32; lane_rows.len()];
+    descend_oblivious_gather(Tier::Scalar, &feat, &thr, &xb, 2, &lane_rows, &mut got);
     assert_eq!(got, want_gather);
 }
 

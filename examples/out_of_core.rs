@@ -1,0 +1,128 @@
+//! Out-of-core training demo and parity harness.
+//!
+//! Trains the same regression model two ways over the streaming
+//! `synth_rows` generator and emits its predictions as exact f64 bit
+//! patterns, so runs are comparable byte-for-byte:
+//!
+//! * `--mode ram` materializes the whole float matrix and trains the
+//!   ordinary resident booster;
+//! * `--mode chunked` streams row blocks through
+//!   `Binner::fit_transform_to_disk` into an on-disk bin arena and
+//!   trains from it — the float matrix never exists in memory, so the
+//!   dataset can be (much) larger than the address space. The CI
+//!   `out_of_core` job runs this mode under a `ulimit -v` cap smaller
+//!   than the float matrix and `cmp`s the prediction files of both
+//!   modes: chunked training is bit-identical to in-RAM training.
+//!
+//! ```bash
+//! cargo run --release --example out_of_core -- --mode ram     --rows 200000 --preds ram.txt
+//! cargo run --release --example out_of_core -- --mode chunked --rows 200000 --preds ooc.txt
+//! cmp ram.txt ooc.txt
+//! ```
+//!
+//! Flags: `--mode ram|chunked` (default ram), `--rows N`, `--block N`
+//! (chunk rows, default 65536), `--workers K` (row-sharded reduction,
+//! default 0 = off), `--rounds N`, `--depth D`, `--seed S`,
+//! `--preds FILE` (hex predictions of the first 512 rows; stdout if
+//! omitted), `--arena FILE` (arena path, default under the temp dir).
+
+use std::io::Write;
+use toad::data::binning::Binner;
+use toad::data::synth::{synth_rows, SYNTH_ROWS_FEATURES};
+use toad::data::{Dataset, Task};
+use toad::gbdt::booster::{train, train_chunked};
+use toad::gbdt::GbdtParams;
+
+fn flag(argv: &[String], name: &str) -> Option<String> {
+    argv.iter().position(|a| a == name).and_then(|i| argv.get(i + 1)).cloned()
+}
+
+fn parse<T: std::str::FromStr>(argv: &[String], name: &str, default: T) -> T {
+    match flag(argv, name) {
+        Some(v) => v.parse().unwrap_or_else(|_| panic!("invalid value for {name}: {v}")),
+        None => default,
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mode = flag(&argv, "--mode").unwrap_or_else(|| "ram".into());
+    let rows: usize = parse(&argv, "--rows", 100_000);
+    let block: usize = parse(&argv, "--block", 65_536);
+    let workers: usize = parse(&argv, "--workers", 0);
+    let rounds: usize = parse(&argv, "--rounds", 3);
+    let depth: usize = parse(&argv, "--depth", 3);
+    let seed: u64 = parse(&argv, "--seed", 42);
+    assert!(rows > 0 && block > 0, "--rows and --block must be positive");
+
+    let mut params = GbdtParams::paper(rounds, depth);
+    params.row_workers = workers;
+
+    let model = match mode.as_str() {
+        "ram" => {
+            let (features, targets) = synth_rows(seed, 0..rows);
+            let ds = Dataset {
+                name: "synth_rows".into(),
+                features,
+                targets,
+                labels: vec![],
+                task: Task::Regression,
+            };
+            train(&ds, params)
+        }
+        "chunked" => {
+            let arena = flag(&argv, "--arena").map(std::path::PathBuf::from).unwrap_or_else(|| {
+                std::env::temp_dir().join(format!("toad-ooc-{}.bin", std::process::id()))
+            });
+            // Targets are captured during the streaming passes (the
+            // closure runs twice per block; the writes are idempotent).
+            let mut targets = vec![0f64; rows];
+            let (binner, chunked) = Binner::fit_transform_to_disk(
+                &arena,
+                rows,
+                SYNTH_ROWS_FEATURES,
+                params.max_bins,
+                block,
+                |range| {
+                    let (cols, t) = synth_rows(seed, range.clone());
+                    targets[range].copy_from_slice(&t);
+                    cols
+                },
+            )
+            .expect("streaming fit/transform failed");
+            let model = train_chunked(
+                binner,
+                chunked,
+                targets,
+                vec![],
+                Task::Regression,
+                "synth_rows",
+                params,
+            );
+            let _ = std::fs::remove_file(&arena);
+            model
+        }
+        other => {
+            eprintln!("--mode must be ram|chunked, got `{other}`");
+            std::process::exit(2);
+        }
+    };
+
+    // Predictions of the first rows as exact bit patterns — `cmp`-able
+    // across modes, block sizes, and worker counts.
+    let n_preds = rows.min(512);
+    let (cols, _) = synth_rows(seed, 0..n_preds);
+    let mut out: Box<dyn Write> = match flag(&argv, "--preds") {
+        Some(p) => Box::new(std::fs::File::create(p).expect("create --preds file")),
+        None => Box::new(std::io::stdout().lock()),
+    };
+    for i in 0..n_preds {
+        let x: Vec<f32> = (0..SYNTH_ROWS_FEATURES).map(|f| cols[f][i]).collect();
+        writeln!(out, "{:016x}", model.predict_value(&x).to_bits()).expect("write prediction");
+    }
+    out.flush().expect("flush predictions");
+    eprintln!(
+        "mode={mode} rows={rows} block={block} workers={workers} trees={} preds={n_preds}",
+        model.n_trees()
+    );
+}

@@ -156,6 +156,64 @@ fn main() {
     });
     rec.push("boosting_round_d3", per);
 
+    // ---- histogram merge (row-sharded reduction primitive) -----------
+    // Seed-by-copy + one merge: exactly what the banded fold pays per
+    // reduced cell beyond the accumulation itself.
+    let odd_rows: Vec<u32> = (1..n as u32).step_by(2).collect();
+    let mut part_a = HistogramSet::new(&bins);
+    part_a.build(&binned, &half_rows, &grad, &hess);
+    let mut part_b = HistogramSet::new(&bins);
+    part_b.build(&binned, &odd_rows, &grad, &hess);
+    let mut folded = HistogramSet::new(&bins);
+    let per = time("histogram merge (copy seed + 1 merge)", 200, || {
+        folded.copy_from(&part_a);
+        folded.merge(&part_b);
+        std::hint::black_box(folded.bin(0, 0));
+    });
+    rec.push("histogram_merge", per);
+
+    // ---- out-of-core boosting round (streamed on-disk arena) ----------
+    // Full pipeline twin of `boosting_round_d3`: two streaming passes
+    // (sketch + transform) into a temp arena, then one boosting round
+    // reading row blocks back from disk. Bit-identical model; the delta
+    // over `boosting_round_d3` is the out-of-core tax.
+    let arena =
+        std::env::temp_dir().join(format!("toad-bench-arena-{}.bin", std::process::id()));
+    let per_ooc = time("out-of-core boosting round (block 4096)", 5, || {
+        let (b, c) = Binner::fit_transform_to_disk(&arena, n, d, 255, 4096, |range| {
+            data.features
+                .iter()
+                .map(|col| col[range.clone()].to_vec())
+                .collect::<Vec<Vec<f32>>>()
+        })
+        .expect("stream bench dataset to disk");
+        let _ = gbdt::booster::train_chunked(
+            b,
+            c,
+            data.targets.clone(),
+            data.labels.clone(),
+            data.task,
+            &data.name,
+            GbdtParams::paper(1, 3),
+        );
+    });
+    rec.push("train_out_of_core", per_ooc);
+    let _ = std::fs::remove_file(&arena);
+
+    // ---- row-sharded multi-worker boosting round ----------------------
+    // K = 1 is the single-node reference (same banded fold, one
+    // worker); the speedup below is logged, not asserted >= 1 — at 16k
+    // rows thread spawn can eat the win on small machines.
+    let row_workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8);
+    let per_rs_single = time("row-sharded boosting round (K=1)", 5, || {
+        let _ = gbdt::train_row_sharded(&data, GbdtParams::paper(1, 3), 1);
+    });
+    rec.push("train_row_sharded_single", per_rs_single);
+    let per_rs = time(&format!("row-sharded boosting round (K={row_workers})"), 5, || {
+        let _ = gbdt::train_row_sharded(&data, GbdtParams::paper(1, 3), row_workers);
+    });
+    rec.push("train_row_sharded", per_rs);
+
     // ---- inference: row-at-a-time pointer trees vs blocked flat ------
     let model = gbdt::booster::train(&data, GbdtParams::paper(64, 4));
     let finfo = FeatureInfo::from_dataset(&data);
@@ -409,6 +467,8 @@ fn main() {
         rec.lookup("histogram_build_forced_scalar") / rec.lookup("histogram_build_simd");
     let adaptive_vs_full = rec.lookup("quantized_batch") / rec.lookup("adaptive_batch");
     let oblivious_vs_quantized = rec.lookup("quantized_batch") / rec.lookup("oblivious_batch");
+    let row_sharded_vs_single =
+        rec.lookup("train_row_sharded_single") / rec.lookup("train_row_sharded");
     println!("\n== speedups vs scalar baselines ==");
     println!("{:44} {:>11.2}x", "histogram build (dense)", hist_speedup);
     println!("{:44} {:>11.2}x", "histogram build (subset/gathered)", subset_speedup);
@@ -422,6 +482,7 @@ fn main() {
     println!("{:44} {:>11.2}x", "simd vs scalar histogram", simd_vs_scalar_histogram);
     println!("{:44} {:>11.2}x", "adaptive vs full quantized batch", adaptive_vs_full);
     println!("{:44} {:>11.2}x", "oblivious vs quantized batch", oblivious_vs_quantized);
+    println!("{:44} {:>11.2}x", "row-sharded K vs K=1 boosting round", row_sharded_vs_single);
 
     let json = rec.to_json(
         &format!("covtype_binary_{n}x{d}"),
@@ -439,6 +500,7 @@ fn main() {
             ("simd_vs_scalar_histogram", simd_vs_scalar_histogram),
             ("adaptive_vs_full", adaptive_vs_full),
             ("oblivious_vs_quantized", oblivious_vs_quantized),
+            ("row_sharded_vs_single", row_sharded_vs_single),
         ],
         &[("mean_trees_evaluated", mean_trees), ("n_trees", model.n_trees() as f64)],
     );

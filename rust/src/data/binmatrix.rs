@@ -28,6 +28,14 @@
 //! produces training matrices (`Binner::bin_matrix` /
 //! `Binner::bin_columns`); the quantized engine builds its own over the
 //! model's threshold tables. Both go through [`BinMatrix::from_fn`].
+//!
+//! For datasets that do not fit in RAM, [`ChunkedBinMatrix`] stores the
+//! same arena in an on-disk file split into fixed-size row blocks
+//! (column-major *within* each block), and [`BinSource`] lets the
+//! grower and histogram pool run off either backing store.
+
+use crate::error::{Context, Result};
+use std::io::Write;
 
 /// Largest per-feature bin count representable in the `u8` arena.
 pub const U8_MAX_BINS: usize = 256;
@@ -185,6 +193,402 @@ impl BinMatrix {
         (0..self.n_features())
             .map(|f| (0..self.n_rows).map(|i| self.bin(f, i)).collect())
             .collect()
+    }
+
+    /// Adopt a ready-made column-major `u8` arena (chunk loading). The
+    /// caller guarantees `arena[f * n_rows + i]` layout and in-range
+    /// codes; `bins_per_feature` must all fit the `u8` width so the
+    /// store matches what [`BinMatrix::from_fn`] would have picked.
+    pub(crate) fn from_u8_arena(
+        n_rows: usize,
+        bins_per_feature: &[usize],
+        arena: Vec<u8>,
+    ) -> BinMatrix {
+        assert_eq!(arena.len(), n_rows * bins_per_feature.len());
+        assert!(bins_per_feature.iter().all(|&b| b <= U8_MAX_BINS));
+        BinMatrix { n_rows, bins_per_feature: bins_per_feature.to_vec(), store: Store::U8(arena) }
+    }
+
+    /// `u16` twin of [`BinMatrix::from_u8_arena`]; requires at least one
+    /// feature wider than the `u8` arena (width-choice parity).
+    pub(crate) fn from_u16_arena(
+        n_rows: usize,
+        bins_per_feature: &[usize],
+        arena: Vec<u16>,
+    ) -> BinMatrix {
+        assert_eq!(arena.len(), n_rows * bins_per_feature.len());
+        assert!(bins_per_feature.iter().any(|&b| b > U8_MAX_BINS));
+        BinMatrix { n_rows, bins_per_feature: bins_per_feature.to_vec(), store: Store::U16(arena) }
+    }
+}
+
+/// Route `rows` by comparing each row's code in `col` against the split
+/// bin: `code <= bin` goes left, else right. `base` is the global row
+/// id of `col[0]` (0 for a whole in-RAM column; the chunk's first row
+/// for a chunk-local column). Row order is preserved, which is what
+/// keeps every downstream histogram build order-identical.
+#[inline]
+pub(crate) fn route_rows<T: Copy>(
+    col: &[T],
+    bin: u16,
+    rows: &[u32],
+    base: u32,
+    left: &mut Vec<u32>,
+    right: &mut Vec<u32>,
+) where
+    u16: From<T>,
+{
+    for &i in rows {
+        if u16::from(col[(i - base) as usize]) <= bin {
+            left.push(i);
+        } else {
+            right.push(i);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// On-disk chunked arena
+// ---------------------------------------------------------------------
+
+/// Magic prefix of the on-disk arena format (version 1).
+pub const ARENA_MAGIC: [u8; 8] = *b"TOADBIN1";
+
+/// Fixed-size header prefix: magic (8) + width (1) + n_rows (u64) +
+/// chunk_rows (u64) + n_features (u32); followed by `n_features` u32
+/// bin counts. All integers little-endian.
+const ARENA_PREFIX_BYTES: u64 = 8 + 1 + 8 + 8 + 4;
+
+/// Hard cap on the header's feature count: rejects absurd headers
+/// before any allocation is sized from them (the per-feature bin table
+/// alone would be `4 * n_features` bytes).
+const ARENA_MAX_FEATURES: u64 = 1 << 24;
+
+/// The same bin arena as [`BinMatrix`], backed by an on-disk file of
+/// fixed-size row blocks so training memory is bounded by one block
+/// (plus model state) instead of the whole matrix.
+///
+/// Layout: the header above, then the blocks in row order. Block `c`
+/// covers global rows `c * chunk_rows .. min((c + 1) * chunk_rows,
+/// n_rows)` and is stored column-major *within* the block
+/// (`block[f * rows_in_block + i]`), i.e. each block is a serialized
+/// [`BinMatrix`] over its rows — [`ChunkedBinMatrix::load_chunk`]
+/// rehydrates exactly that. Codes are `u8` or `u16` little-endian by
+/// the same width rule as the in-RAM arena.
+///
+/// Reads go through positional I/O (`read_exact_at`), so a shared
+/// `&ChunkedBinMatrix` is usable from several worker threads at once.
+#[derive(Debug)]
+pub struct ChunkedBinMatrix {
+    file: std::fs::File,
+    n_rows: usize,
+    chunk_rows: usize,
+    bins_per_feature: Vec<usize>,
+    /// Bytes per code: 1 (`u8` arena) or 2 (`u16`).
+    width: usize,
+    header_bytes: u64,
+}
+
+impl ChunkedBinMatrix {
+    /// Open and fully validate an arena file. Any malformed header —
+    /// bad magic, impossible width, zero block size, a bin count that
+    /// contradicts the stored width, a size that does not match the
+    /// dimensions exactly — is a clean `Err`. Nothing is allocated
+    /// before the file's byte length has vouched for the dimensions,
+    /// so a hostile header cannot OOM the process (same discipline as
+    /// `layout::validate_blob`).
+    pub fn open(path: impl AsRef<std::path::Path>) -> Result<ChunkedBinMatrix> {
+        use std::io::Read;
+
+        let path = path.as_ref();
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("open bin arena {}", path.display()))?;
+        let file_len = file.metadata().context("stat bin arena")?.len();
+        crate::ensure!(
+            file_len >= ARENA_PREFIX_BYTES,
+            "bin arena truncated: {} bytes, header needs at least {}",
+            file_len,
+            ARENA_PREFIX_BYTES
+        );
+        // Sequential reads here (positional reads only start in
+        // `load_chunk`): this keeps header validation — and with it the
+        // malformed-file regression tests — runnable under Miri.
+        let mut prefix = [0u8; ARENA_PREFIX_BYTES as usize];
+        (&file).read_exact(&mut prefix).context("read bin arena header")?;
+        crate::ensure!(
+            prefix[..8] == ARENA_MAGIC,
+            "bin arena magic mismatch: got {:02x?}",
+            &prefix[..8]
+        );
+        let width = prefix[8] as usize;
+        crate::ensure!(width == 1 || width == 2, "bin arena width must be 1 or 2, got {width}");
+        let n_rows = u64::from_le_bytes(prefix[9..17].try_into().expect("8-byte slice"));
+        let chunk_rows = u64::from_le_bytes(prefix[17..25].try_into().expect("8-byte slice"));
+        let n_features = u32::from_le_bytes(prefix[25..29].try_into().expect("4-byte slice"));
+        crate::ensure!(chunk_rows > 0, "bin arena chunk_rows must be positive");
+        crate::ensure!(
+            u64::from(n_features) <= ARENA_MAX_FEATURES,
+            "bin arena claims {n_features} features (cap {ARENA_MAX_FEATURES})"
+        );
+
+        // Vouch for the dimensions with the actual file length before
+        // reading the bin table or sizing anything from the header.
+        let header_bytes = ARENA_PREFIX_BYTES + 4 * u64::from(n_features);
+        let body_bytes = n_rows
+            .checked_mul(u64::from(n_features))
+            .and_then(|cells| cells.checked_mul(width as u64))
+            .ok_or_else(|| crate::error::Error::msg("bin arena dimensions overflow"))?;
+        let expect = header_bytes
+            .checked_add(body_bytes)
+            .ok_or_else(|| crate::error::Error::msg("bin arena dimensions overflow"))?;
+        crate::ensure!(
+            file_len == expect,
+            "bin arena size mismatch: file is {file_len} bytes, dims say {expect}"
+        );
+
+        let mut bins_raw = vec![0u8; 4 * n_features as usize];
+        (&file).read_exact(&mut bins_raw).context("read bin table")?;
+        let bins_per_feature: Vec<usize> = bins_raw
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes(b.try_into().expect("4-byte chunk")) as usize)
+            .collect();
+        for (f, &b) in bins_per_feature.iter().enumerate() {
+            crate::ensure!(b >= 1, "feature {f} claims zero bins");
+            crate::ensure!(b <= u16::MAX as usize + 1, "feature {f} claims {b} bins (u16 codes)");
+        }
+        // The stored width must be exactly what `BinMatrix::from_fn`
+        // would derive, so loaded chunks are indistinguishable from the
+        // in-RAM arena (this is load-bearing for bit-parity).
+        let fits_u8 = bins_per_feature.iter().all(|&b| b <= U8_MAX_BINS);
+        crate::ensure!(
+            (width == 1) == fits_u8,
+            "bin arena width {width} contradicts bin counts (u8-compatible: {fits_u8})"
+        );
+
+        Ok(ChunkedBinMatrix {
+            file,
+            n_rows: n_rows.try_into().context("n_rows exceeds usize")?,
+            chunk_rows: chunk_rows.try_into().context("chunk_rows exceeds usize")?,
+            bins_per_feature,
+            width,
+            header_bytes,
+        })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.bins_per_feature.len()
+    }
+
+    pub fn n_bins(&self, f: usize) -> usize {
+        self.bins_per_feature[f]
+    }
+
+    pub fn bins_per_feature(&self) -> &[usize] {
+        &self.bins_per_feature
+    }
+
+    /// Rows per block (the last block may be ragged).
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Whether blocks decode into the `u8` arena.
+    pub fn is_u8(&self) -> bool {
+        self.width == 1
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.n_rows.div_ceil(self.chunk_rows)
+    }
+
+    /// Global row range covered by block `c`.
+    pub fn chunk_range(&self, c: usize) -> std::ops::Range<usize> {
+        let start = c * self.chunk_rows;
+        start..(start + self.chunk_rows).min(self.n_rows)
+    }
+
+    /// Read block `c` back into an in-RAM [`BinMatrix`] over its rows.
+    ///
+    /// # Panics
+    /// On I/O errors: `open` already vouched for the file's size and
+    /// header, so a failed read mid-training means the file was
+    /// truncated or the device failed underneath us — there is no
+    /// useful recovery for a half-built tree.
+    pub fn load_chunk(&self, c: usize) -> BinMatrix {
+        use std::os::unix::fs::FileExt;
+
+        let range = self.chunk_range(c);
+        let rows = range.len();
+        let nf = self.n_features();
+        let offset = self.header_bytes + (range.start * nf * self.width) as u64;
+        let mut raw = vec![0u8; rows * nf * self.width];
+        self.file
+            .read_exact_at(&mut raw, offset)
+            .expect("bin arena read failed mid-training (file truncated or device error)");
+        if self.width == 1 {
+            BinMatrix::from_u8_arena(rows, &self.bins_per_feature, raw)
+        } else {
+            let arena: Vec<u16> = raw
+                .chunks_exact(2)
+                .map(|b| u16::from_le_bytes(b.try_into().expect("2-byte chunk")))
+                .collect();
+            BinMatrix::from_u16_arena(rows, &self.bins_per_feature, arena)
+        }
+    }
+}
+
+/// Streaming writer for the on-disk arena: header first, then one
+/// column-major block per [`ArenaWriter::write_chunk`] call, in row
+/// order. Used by `Binner::fit_transform_to_disk`.
+pub(crate) struct ArenaWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    bins_per_feature: Vec<usize>,
+    n_rows: usize,
+    rows_written: usize,
+    chunk_rows: usize,
+}
+
+impl ArenaWriter {
+    pub(crate) fn create(
+        path: impl AsRef<std::path::Path>,
+        n_rows: usize,
+        chunk_rows: usize,
+        bins_per_feature: &[usize],
+    ) -> Result<ArenaWriter> {
+        assert!(chunk_rows > 0, "chunk_rows must be positive");
+        let path = path.as_ref();
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("create bin arena {}", path.display()))?;
+        let mut out = std::io::BufWriter::new(file);
+        let width: u8 = if bins_per_feature.iter().all(|&b| b <= U8_MAX_BINS) { 1 } else { 2 };
+        out.write_all(&ARENA_MAGIC)?;
+        out.write_all(&[width])?;
+        out.write_all(&(n_rows as u64).to_le_bytes())?;
+        out.write_all(&(chunk_rows as u64).to_le_bytes())?;
+        out.write_all(&(u32::try_from(bins_per_feature.len()).context("too many features")?)
+            .to_le_bytes())?;
+        for &b in bins_per_feature {
+            out.write_all(&(b as u32).to_le_bytes())?;
+        }
+        Ok(ArenaWriter {
+            out,
+            bins_per_feature: bins_per_feature.to_vec(),
+            n_rows,
+            rows_written: 0,
+            chunk_rows,
+        })
+    }
+
+    /// Append the next block. Every block but the last must hold
+    /// exactly `chunk_rows` rows.
+    pub(crate) fn write_chunk(&mut self, chunk: &BinMatrix) -> Result<()> {
+        assert_eq!(chunk.bins_per_feature(), &self.bins_per_feature[..]);
+        let rows = chunk.n_rows();
+        assert!(
+            rows == self.chunk_rows || self.rows_written + rows == self.n_rows,
+            "only the final block may be ragged"
+        );
+        match chunk.columns() {
+            BinColumns::U8(a) => self.out.write_all(a)?,
+            BinColumns::U16(a) => {
+                for &code in a {
+                    self.out.write_all(&code.to_le_bytes())?;
+                }
+            }
+        }
+        self.rows_written += rows;
+        Ok(())
+    }
+
+    pub(crate) fn finish(mut self) -> Result<()> {
+        assert_eq!(self.rows_written, self.n_rows, "arena writer closed early");
+        self.out.flush().context("flush bin arena")?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Backing-store dispatch
+// ---------------------------------------------------------------------
+
+/// The trainer's view over either backing store. The grower and the
+/// histogram pool take a `BinSource` and never know whether columns
+/// come from RAM or from disk blocks; both paths visit rows in the
+/// same ascending order, which is what keeps them bit-identical.
+#[derive(Clone, Copy, Debug)]
+pub enum BinSource<'a> {
+    Ram(&'a BinMatrix),
+    Chunked(&'a ChunkedBinMatrix),
+}
+
+impl BinSource<'_> {
+    pub fn n_rows(&self) -> usize {
+        match self {
+            BinSource::Ram(m) => m.n_rows(),
+            BinSource::Chunked(m) => m.n_rows(),
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        match self {
+            BinSource::Ram(m) => m.n_features(),
+            BinSource::Chunked(m) => m.n_features(),
+        }
+    }
+
+    pub fn bins_per_feature(&self) -> &[usize] {
+        match self {
+            BinSource::Ram(m) => m.bins_per_feature(),
+            BinSource::Chunked(m) => m.bins_per_feature(),
+        }
+    }
+
+    /// Split `rows` (ascending global ids) on `code(feature) <= bin`,
+    /// preserving order. In-RAM routes against the resident column; the
+    /// chunked store streams exactly the blocks that overlap `rows` and
+    /// routes each block's sub-range with chunk-local indices — the
+    /// emitted `left`/`right` sequences are identical either way.
+    pub fn partition(
+        &self,
+        feature: usize,
+        bin: u16,
+        rows: &[u32],
+        left: &mut Vec<u32>,
+        right: &mut Vec<u32>,
+    ) {
+        match self {
+            BinSource::Ram(m) => {
+                let n = m.n_rows();
+                let (cs, ce) = (feature * n, (feature + 1) * n);
+                match m.columns() {
+                    BinColumns::U8(a) => route_rows(&a[cs..ce], bin, rows, 0, left, right),
+                    BinColumns::U16(a) => route_rows(&a[cs..ce], bin, rows, 0, left, right),
+                }
+            }
+            BinSource::Chunked(m) => {
+                let mut done = 0usize;
+                while done < rows.len() {
+                    let c = rows[done] as usize / m.chunk_rows();
+                    let range = m.chunk_range(c);
+                    let end = done
+                        + rows[done..].partition_point(|&r| (r as usize) < range.end);
+                    let chunk = m.load_chunk(c);
+                    let rows_in = chunk.n_rows();
+                    let (cs, ce) = (feature * rows_in, (feature + 1) * rows_in);
+                    let base = range.start as u32;
+                    let sub = &rows[done..end];
+                    match chunk.columns() {
+                        BinColumns::U8(a) => route_rows(&a[cs..ce], bin, sub, base, left, right),
+                        BinColumns::U16(a) => route_rows(&a[cs..ce], bin, sub, base, left, right),
+                    }
+                    done = end;
+                }
+            }
+        }
     }
 }
 

@@ -9,8 +9,9 @@
 //! *value* is what ends up in the global threshold array of the memory
 //! layout (§3.2.2).
 
-use super::binmatrix::BinMatrix;
+use super::binmatrix::{ArenaWriter, BinMatrix, ChunkedBinMatrix};
 use super::dataset::Dataset;
+use crate::error::Result;
 
 /// Per-feature binning rule learned from training data.
 #[derive(Clone, Debug)]
@@ -50,35 +51,98 @@ impl Binner {
                         _ => distinct.push((x, 1)),
                     }
                 }
-                if distinct.len() <= 1 {
-                    return Vec::new(); // constant feature: no candidate splits
-                }
-                if distinct.len() <= max_bins {
-                    // One bin per distinct value; boundary at midpoints.
-                    return distinct
-                        .windows(2)
-                        .map(|w| midpoint(w[0].0, w[1].0))
-                        .collect();
-                }
-                // Equal-mass quantile placement over distinct values.
-                let n_bounds = max_bins - 1;
-                let mut bounds = Vec::with_capacity(n_bounds);
-                let mut cum = 0usize;
-                let mut target_idx = 1usize;
-                for w in distinct.windows(2) {
-                    cum += w[0].1;
-                    let target = target_idx * n / max_bins;
-                    if cum >= target && bounds.len() < n_bounds {
-                        bounds.push(midpoint(w[0].0, w[1].0));
-                        while target_idx * n / max_bins <= cum {
-                            target_idx += 1;
-                        }
-                    }
-                }
-                bounds
+                boundaries_from_distinct(&distinct, n, max_bins)
             })
             .collect();
         Binner { boundaries }
+    }
+
+    /// Two-pass streaming fit + transform that never materializes the
+    /// float matrix: pass 1 streams row blocks and folds each feature
+    /// into an exact sorted value→count sketch, pass 2 re-streams the
+    /// same blocks, bins them, and appends them to the on-disk arena at
+    /// `path`. Returns the fitted binner and the opened (re-validated)
+    /// [`ChunkedBinMatrix`].
+    ///
+    /// `source(range)` must yield the feature columns of exactly the
+    /// rows in `range` (column-major: `cols[f][i]` is feature `f` of
+    /// global row `range.start + i`) and must be deterministic — it is
+    /// called once per block per pass, in ascending row order.
+    ///
+    /// The sketch is *exact*, not approximate: [`Binner::fit`] only
+    /// consumes the sorted distinct (value, count) list per feature,
+    /// and that list is reproduced here verbatim (same `total_cmp`
+    /// order, same `==`-merge of `-0.0`/`0.0` keeping the first
+    /// representative), so the boundaries are bit-identical to an
+    /// in-RAM `fit` on the same rows. Memory scales with the number of
+    /// *distinct* values per feature, not with `n_rows` — sensors,
+    /// counters, and pre-quantized telemetry stay tiny.
+    pub fn fit_transform_to_disk<C: AsRef<[f32]>>(
+        path: impl AsRef<std::path::Path>,
+        n_rows: usize,
+        n_features: usize,
+        max_bins: usize,
+        chunk_rows: usize,
+        mut source: impl FnMut(std::ops::Range<usize>) -> Vec<C>,
+    ) -> Result<(Binner, ChunkedBinMatrix)> {
+        assert!(max_bins >= 2, "need at least 2 bins");
+        assert!(chunk_rows > 0, "chunk_rows must be positive");
+
+        // Pass 1: exact per-feature sketches, keyed so that ascending
+        // u32 key order == `f32::total_cmp` order (sign-aware bit flip).
+        let mut sketches: Vec<std::collections::BTreeMap<u32, usize>> =
+            (0..n_features).map(|_| std::collections::BTreeMap::new()).collect();
+        let mut counts = vec![0usize; n_features];
+        let mut start = 0usize;
+        while start < n_rows {
+            let range = start..(start + chunk_rows).min(n_rows);
+            let cols = source(range.clone());
+            assert_eq!(cols.len(), n_features, "source yielded wrong feature count");
+            for (f, col) in cols.iter().enumerate() {
+                let col = col.as_ref();
+                assert_eq!(col.len(), range.len(), "source yielded wrong row count");
+                for &x in col {
+                    if !x.is_nan() {
+                        *sketches[f].entry(total_cmp_key(x)).or_insert(0) += 1;
+                        counts[f] += 1;
+                    }
+                }
+            }
+            start = range.end;
+        }
+        let boundaries: Vec<Vec<f32>> = sketches
+            .iter()
+            .zip(&counts)
+            .map(|(sketch, &n)| {
+                // Ascending key walk == total_cmp-sorted values; merge
+                // `==`-equal neighbours (-0.0/0.0) exactly like `fit`.
+                let mut distinct: Vec<(f32, usize)> = Vec::with_capacity(sketch.len());
+                for (&k, &c) in sketch {
+                    let x = total_cmp_key_inv(k);
+                    match distinct.last_mut() {
+                        Some((d, dc)) if *d == x => *dc += c,
+                        _ => distinct.push((x, c)),
+                    }
+                }
+                boundaries_from_distinct(&distinct, n, max_bins)
+            })
+            .collect();
+        let binner = Binner { boundaries };
+
+        // Pass 2: bin each block and append it to the arena file.
+        let bins_per_feature: Vec<usize> =
+            (0..n_features).map(|f| binner.n_bins(f)).collect();
+        let mut writer = ArenaWriter::create(&path, n_rows, chunk_rows, &bins_per_feature)?;
+        let mut start = 0usize;
+        while start < n_rows {
+            let range = start..(start + chunk_rows).min(n_rows);
+            let cols = source(range.clone());
+            writer.write_chunk(&binner.bin_columns(&cols, range.len()))?;
+            start = range.end;
+        }
+        writer.finish()?;
+        let chunked = ChunkedBinMatrix::open(&path)?;
+        Ok((binner, chunked))
     }
 
     pub fn n_features(&self) -> usize {
@@ -160,6 +224,59 @@ pub fn bin_columns_over_tables<C: AsRef<[f32]>>(
             t.partition_point(|&b| b < x) as u16
         }
     })
+}
+
+/// Boundary placement over a feature's sorted distinct (value, count)
+/// list — the single fold shared by [`Binner::fit`] and the streaming
+/// [`Binner::fit_transform_to_disk`], so the two can never drift.
+/// `n` is the feature's non-NaN row count.
+fn boundaries_from_distinct(distinct: &[(f32, usize)], n: usize, max_bins: usize) -> Vec<f32> {
+    if distinct.len() <= 1 {
+        return Vec::new(); // constant feature: no candidate splits
+    }
+    if distinct.len() <= max_bins {
+        // One bin per distinct value; boundary at midpoints.
+        return distinct.windows(2).map(|w| midpoint(w[0].0, w[1].0)).collect();
+    }
+    // Equal-mass quantile placement over distinct values.
+    let n_bounds = max_bins - 1;
+    let mut bounds = Vec::with_capacity(n_bounds);
+    let mut cum = 0usize;
+    let mut target_idx = 1usize;
+    for w in distinct.windows(2) {
+        cum += w[0].1;
+        let target = target_idx * n / max_bins;
+        if cum >= target && bounds.len() < n_bounds {
+            bounds.push(midpoint(w[0].0, w[1].0));
+            while target_idx * n / max_bins <= cum {
+                target_idx += 1;
+            }
+        }
+    }
+    bounds
+}
+
+/// Order-preserving `f32 → u32` key: ascending `u32` order equals
+/// `f32::total_cmp` order (flip all bits of negatives, flip the sign
+/// bit of non-negatives). NaNs are filtered before keying.
+#[inline]
+fn total_cmp_key(x: f32) -> u32 {
+    let b = x.to_bits();
+    if b >> 31 == 1 {
+        !b
+    } else {
+        b ^ 0x8000_0000
+    }
+}
+
+/// Inverse of [`total_cmp_key`].
+#[inline]
+fn total_cmp_key_inv(k: u32) -> f32 {
+    if k >> 31 == 1 {
+        f32::from_bits(k ^ 0x8000_0000)
+    } else {
+        f32::from_bits(!k)
+    }
 }
 
 #[inline]

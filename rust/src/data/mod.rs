@@ -15,7 +15,7 @@ pub mod dataset;
 pub mod splits;
 pub mod synth;
 
-pub use binmatrix::{BinColumns, BinMatrix};
+pub use binmatrix::{BinColumns, BinMatrix, BinSource, ChunkedBinMatrix};
 pub use binning::Binner;
 pub use dataset::{Dataset, Task};
 pub use splits::{kfold, train_test_split, train_valid_test_split};

@@ -425,6 +425,54 @@ fn gen_breast_cancer(rng: &mut Pcg64, n: usize) -> Dataset {
     Dataset { name: "breastcancer".into(), features, targets: vec![], labels, task: Task::Binary }
 }
 
+/// Feature count of [`synth_rows`].
+pub const SYNTH_ROWS_FEATURES: usize = 16;
+
+/// Range-restartable streaming row generator for the out-of-core paths
+/// (regression, [`SYNTH_ROWS_FEATURES`] features).
+///
+/// Each row is generated by a fresh [`Pcg64`] seeded from
+/// `(seed, global row index)`, so any block decomposition concatenates
+/// to the same rows: `synth_rows(s, a..b)` followed by
+/// `synth_rows(s, b..c)` is bit-identical to `synth_rows(s, a..c)`.
+/// That is exactly what `Binner::fit_transform_to_disk` needs from its
+/// block source — and it means arbitrarily large datasets can be
+/// streamed without ever holding more than one block in memory (the CI
+/// out-of-core smoke job trains a dataset bigger than its address-space
+/// cap this way).
+///
+/// Feature values are quantized to a 1024-level grid in `[0, 1)`, so
+/// per-feature distinct counts are bounded: fitting with
+/// `max_bins ≤ 255` yields a u8 arena and `max_bins ≥ 257` (e.g. 400) a
+/// u16 arena, letting tests exercise both code widths from one
+/// generator. The target is a smooth interaction of the first five
+/// features — tree-learnable, exercising non-trivial splits.
+///
+/// Returns `(column-major features, targets)` for the requested rows.
+pub fn synth_rows(seed: u64, range: std::ops::Range<usize>) -> (Vec<Vec<f32>>, Vec<f64>) {
+    let d = SYNTH_ROWS_FEATURES;
+    let n = range.len();
+    let mut features = vec![vec![0f32; n]; d];
+    let mut targets = vec![0f64; n];
+    for (i, row) in range.enumerate() {
+        let row_salt = (row as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut rng = Pcg64::new(seed ^ fxhash("synth_rows") ^ row_salt);
+        let mut vals = [0f32; SYNTH_ROWS_FEATURES];
+        for v in vals.iter_mut() {
+            *v = rng.gen_range(1024) as f32 / 1024.0;
+        }
+        let t = (vals[0] as f64 * 4.0).sin()
+            + vals[1] as f64 * 3.0
+            + vals[2] as f64 * vals[3] as f64
+            - 0.5 * vals[4] as f64;
+        for f in 0..d {
+            features[f][i] = vals[f];
+        }
+        targets[i] = t;
+    }
+    (features, targets)
+}
+
 #[cfg(test)]
 #[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
@@ -438,6 +486,24 @@ mod tests {
             assert_eq!(d.n_features(), ds.n_features(), "{}", ds.name());
             assert_eq!(d.n_rows(), ds.gen_rows(), "{}", ds.name());
             assert_eq!(d.task, ds.task(), "{}", ds.name());
+        }
+    }
+
+    #[test]
+    fn synth_rows_blocks_concatenate_exactly() {
+        let (full_x, full_y) = synth_rows(9, 0..100);
+        for splits in [vec![0, 1, 100], vec![0, 37, 64, 100], vec![0, 100]] {
+            let mut x = vec![Vec::new(); SYNTH_ROWS_FEATURES];
+            let mut y = Vec::new();
+            for w in splits.windows(2) {
+                let (bx, by) = synth_rows(9, w[0]..w[1]);
+                for (acc, col) in x.iter_mut().zip(bx) {
+                    acc.extend(col);
+                }
+                y.extend(by);
+            }
+            assert_eq!(x, full_x);
+            assert_eq!(y, full_y);
         }
     }
 

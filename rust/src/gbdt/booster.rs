@@ -12,7 +12,7 @@ use super::loss::Objective;
 use super::model::GbdtModel;
 use super::splitter::{NoPenalty, SplitParams, SplitPenalty};
 use super::tree::{Node, Tree};
-use crate::data::{BinMatrix, Binner, Dataset};
+use crate::data::{BinMatrix, BinSource, Binner, ChunkedBinMatrix, Dataset, Task};
 
 /// Hyperparameters of a boosting run. Field names follow the paper's
 /// grid (§4): `n_rounds` = "maximum number of iterations", `max_depth` =
@@ -39,6 +39,16 @@ pub struct GbdtParams {
     /// build sequentially, so deep-tree tail leaves never pay
     /// thread-spawn overhead.
     pub histogram_shards: usize,
+    /// Worker threads for the *row*-sharded histogram reduction
+    /// ([`super::distributed`]). `0` (the default) keeps the plain
+    /// sequential fold — bit-identical to every earlier release. Any
+    /// `K ≥ 1` routes big-leaf builds through the fixed-grid banded
+    /// fold: models are bit-identical for **every** `K ≥ 1` (the
+    /// reduction grid never depends on the worker count), but differ in
+    /// the last ulp from `K = 0` on non-integer statistics because the
+    /// same f64 adds are grouped differently. Composes freely with
+    /// `histogram_shards` and with the out-of-core store.
+    pub row_workers: usize,
     /// Tree growth strategy: leaf-wise best-first (the default) or
     /// CatBoost-style oblivious level-shared splits
     /// ([`GrowthMode::Oblivious`]), which emit perfect complete trees
@@ -60,6 +70,7 @@ impl Default for GbdtParams {
             min_hess_in_leaf: 1e-3,
             max_bins: 255,
             histogram_shards: 0,
+            row_workers: 0,
             growth: GrowthMode::Leafwise,
         }
     }
@@ -102,12 +113,41 @@ impl GbdtParams {
     }
 }
 
+/// Where the binned training matrix lives: fully resident (the
+/// historical path, produced by [`Binner::bin_matrix`]) or an on-disk
+/// chunked arena streamed block-by-block
+/// ([`Binner::fit_transform_to_disk`]). Training is bit-identical over
+/// both — histograms accumulate the same f64 adds in the same order and
+/// partitioning routes the same rows — so the store is purely a memory
+/// knob.
+pub enum BinStore {
+    Ram(BinMatrix),
+    Chunked(ChunkedBinMatrix),
+}
+
+impl BinStore {
+    fn source(&self) -> BinSource<'_> {
+        match self {
+            BinStore::Ram(m) => BinSource::Ram(m),
+            BinStore::Chunked(m) => BinSource::Chunked(m),
+        }
+    }
+
+    fn n_rows(&self) -> usize {
+        self.source().n_rows()
+    }
+
+    fn n_features(&self) -> usize {
+        self.source().n_features()
+    }
+}
+
 /// Incremental boosting state.
 pub struct Booster<P: SplitPenalty> {
     params: GbdtParams,
     objective: Objective,
     binner: Binner,
-    binned: BinMatrix,
+    store: BinStore,
     /// Reused per-leaf histogram buffers + gather scratch, shared across
     /// every tree of every round.
     pool: HistogramPool,
@@ -126,33 +166,90 @@ impl<P: SplitPenalty> Booster<P> {
     /// Bin the training data and initialize raw scores at the base score.
     pub fn new(train: &Dataset, params: GbdtParams, penalty: P) -> Booster<P> {
         train.validate().expect("invalid training dataset");
-        let objective = Objective::for_task(train.task);
         let binner = Binner::fit(train, params.max_bins);
-        let binned = binner.bin_matrix(train);
+        let store = BinStore::Ram(binner.bin_matrix(train));
+        Booster::from_parts(
+            binner,
+            store,
+            train.targets.clone(),
+            train.labels.clone(),
+            train.task,
+            train.name.clone(),
+            params,
+            penalty,
+        )
+    }
+
+    /// Out-of-core constructor: train from an on-disk chunked arena (and
+    /// its fitted binner), both produced by
+    /// [`Binner::fit_transform_to_disk`], without ever materializing the
+    /// resident bin matrix. Targets and labels stay resident — they are
+    /// O(n), small next to the n×d feature matrix that streaming avoids.
+    /// Training is bit-identical to the in-RAM path for any block size.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_chunked(
+        binner: Binner,
+        chunked: ChunkedBinMatrix,
+        targets: Vec<f64>,
+        labels: Vec<usize>,
+        task: Task,
+        name: String,
+        params: GbdtParams,
+        penalty: P,
+    ) -> Booster<P> {
+        assert_eq!(chunked.n_features(), binner.n_features(), "arena/binner feature mismatch");
+        assert_eq!(chunked.n_rows(), targets.len(), "arena/targets row mismatch");
+        Booster::from_parts(
+            binner,
+            BinStore::Chunked(chunked),
+            targets,
+            labels,
+            task,
+            name,
+            params,
+            penalty,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn from_parts(
+        binner: Binner,
+        store: BinStore,
+        targets: Vec<f64>,
+        labels: Vec<usize>,
+        task: Task,
+        name: String,
+        params: GbdtParams,
+        penalty: P,
+    ) -> Booster<P> {
+        let objective = Objective::for_task(task);
         let bins_per_feature: Vec<usize> =
             (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
-        let n = train.n_rows();
+        let n = store.n_rows();
+        let n_features = store.n_features();
         let n_out = objective.n_outputs();
-        let base = objective.base_scores(&train.targets, &train.labels);
+        let base = objective.base_scores(&targets, &labels);
         let raw: Vec<Vec<f64>> = base.iter().map(|&b| vec![b; n]).collect();
         let model = GbdtModel {
             objective,
             base_scores: base,
             trees: vec![Vec::new(); n_out],
-            n_features: train.n_features(),
-            name: train.name.clone(),
+            n_features,
+            name,
         };
+        let mut pool =
+            HistogramPool::with_shards(&bins_per_feature, params.resolved_shards(n_features));
+        if params.row_workers > 0 {
+            pool.set_row_sharding(n, params.row_workers);
+        }
         Booster {
             params,
             objective,
             binner,
-            binned,
-            pool: HistogramPool::with_shards(
-                &bins_per_feature,
-                params.resolved_shards(train.n_features()),
-            ),
-            targets: train.targets.clone(),
-            labels: train.labels.clone(),
+            store,
+            pool,
+            targets,
+            labels,
             raw,
             grad: vec![vec![0.0; n]; n_out],
             hess: vec![vec![0.0; n]; n_out],
@@ -181,7 +278,8 @@ impl<P: SplitPenalty> Booster<P> {
     /// Run one boosting round where each grown tree is first passed
     /// through `map` (e.g. a pruning pass) before being committed; the
     /// raw-score update then re-routes rows through the mapped tree.
-    /// Used by the CCP baseline.
+    /// Used by the CCP baseline. Requires a resident bin matrix (the
+    /// mapping pass re-reads arbitrary rows); panics on a chunked store.
     pub fn boost_round_map(
         &mut self,
         mut map: impl FnMut(&BinMatrix, &[f64], &[f64], Tree) -> Tree,
@@ -193,13 +291,16 @@ impl<P: SplitPenalty> Booster<P> {
             &mut self.grad,
             &mut self.hess,
         );
+        let BinStore::Ram(binned) = &self.store else {
+            panic!("boost_round_map requires a resident bin matrix; train CCP in RAM")
+        };
         let grower = self.params.grower();
-        let n = self.binned.n_rows();
+        let n = binned.n_rows();
         let mut any_split = false;
         for k in 0..self.objective.n_outputs() {
             let rows: Vec<u32> = (0..n as u32).collect();
             let grown = grow_tree(
-                &self.binned,
+                BinSource::Ram(binned),
                 &mut self.pool,
                 rows,
                 &self.grad[k],
@@ -207,11 +308,11 @@ impl<P: SplitPenalty> Booster<P> {
                 &grower,
                 &mut self.penalty,
             );
-            let mut tree = map(&self.binned, &self.grad[k], &self.hess[k], grown.tree);
+            let mut tree = map(binned, &self.grad[k], &self.hess[k], grown.tree);
             resolve_thresholds(&mut tree, |f, b| self.binner.threshold_value(f, b as usize));
             any_split |= tree.n_internal() > 0;
             for i in 0..n {
-                self.raw[k][i] += super::model::predict_binned(&tree, &self.binned, i);
+                self.raw[k][i] += super::model::predict_binned(&tree, binned, i);
             }
             self.model.trees[k].push(tree);
         }
@@ -231,12 +332,12 @@ impl<P: SplitPenalty> Booster<P> {
             &mut self.hess,
         );
         let grower = self.params.grower();
-        let n = self.binned.n_rows();
+        let n = self.store.n_rows();
         let mut any_split = false;
         for k in 0..self.objective.n_outputs() {
             let rows: Vec<u32> = (0..n as u32).collect();
             let grown = grow_tree(
-                &self.binned,
+                self.store.source(),
                 &mut self.pool,
                 rows,
                 &self.grad[k],
@@ -319,6 +420,33 @@ impl<P: SplitPenalty> Booster<P> {
 /// One-shot training without penalties.
 pub fn train(data: &Dataset, params: GbdtParams) -> GbdtModel {
     let mut b = Booster::new(data, params, NoPenalty);
+    b.run();
+    b.into_model()
+}
+
+/// One-shot out-of-core training without penalties, from a chunked
+/// on-disk arena and its fitted binner
+/// ([`Binner::fit_transform_to_disk`]). Produces the same model bytes
+/// as [`train`] on the equivalent resident dataset, for any block size.
+pub fn train_chunked(
+    binner: Binner,
+    chunked: ChunkedBinMatrix,
+    targets: Vec<f64>,
+    labels: Vec<usize>,
+    task: Task,
+    name: &str,
+    params: GbdtParams,
+) -> GbdtModel {
+    let mut b = Booster::from_chunked(
+        binner,
+        chunked,
+        targets,
+        labels,
+        task,
+        name.to_string(),
+        params,
+        NoPenalty,
+    );
     b.run();
     b.into_model()
 }

@@ -1,0 +1,164 @@
+//! Row-sharded multi-worker training — the distributed reduction layer.
+//!
+//! MemoryConstrainedTreeBoosting.jl's recipe ("use all the memory on
+//! your machine, or several machines") applies directly to this stack:
+//! bin codes are compact (u8/u16 arena, optionally on disk via
+//! [`crate::data::ChunkedBinMatrix`]), and histograms are *additive* —
+//! for a leaf with rows `I` split into disjoint row shards `I_j`,
+//! `hist(I) = Σ_j hist(I_j)` bin-for-bin. PR 3 proved the feature-axis
+//! version of this (disjoint feature ranges, no merge needed); this
+//! module adds the row axis, where partials overlap every bin and a
+//! reduction ([`HistogramSet::merge`]) sums them.
+//!
+//! # Determinism: the fixed reduction grid
+//!
+//! f64 addition commutes but does **not** associate, so "split rows
+//! across K workers, sum K partials" produces K-dependent last-ulp
+//! results if the split depends on K. We pin the summation tree
+//! instead: rows are always split at [`REDUCE_SHARDS`] *fixed* global
+//! row bounds ([`shard_bounds`]), workers are assigned whole cells, and
+//! the reducer folds cell partials in ascending cell order, seeding
+//! with a copy of the first non-empty cell ([`HistogramSet::copy_from`]
+//! — adding onto zeros could flip a `-0.0` sum's sign). Every quantity
+//! in that pipeline is independent of the worker count and of the
+//! backing store, so row-sharded training is bit-identical for every
+//! `K ≥ 1`, in RAM or out-of-core, at any block size — "single-node"
+//! is just `K = 1`. (It is *not* bit-identical to `row_workers = 0`,
+//! which keeps the historical ungrouped fold; on integer-exact
+//! statistics the two coincide, pinned in `tests/out_of_core_parity.rs`.)
+//!
+//! # Topology
+//!
+//! Workers are `std::thread::scope` threads owning disjoint contiguous
+//! cell ranges of the shared (`Sync`) bin source; the reducer runs in
+//! the calling thread ([`SumReducer`]). The [`Reducer`] trait is the
+//! seam for a socket transport later: a remote worker would serialize
+//! its cell partials and a network reducer would `absorb` them in the
+//! same ascending cell order — the determinism argument only needs the
+//! fold order, not shared memory. That follow-up is noted in
+//! ROADMAP.md; nothing here assumes locality beyond the trait.
+
+use super::booster::{train, GbdtParams};
+use super::histogram::HistogramSet;
+use super::model::GbdtModel;
+use crate::data::Dataset;
+
+/// Number of fixed row-range cells every row-sharded build reduces
+/// over, independent of the worker count (workers clamp to this). 8
+/// cells keep the merge overhead at ≤ 7 histogram adds per big-leaf
+/// build while allowing up to 8-way row parallelism; the bounds come
+/// from [`shard_bounds`].
+pub const REDUCE_SHARDS: usize = 8;
+
+/// The fixed global row bounds of the reduction grid: cell `j` covers
+/// rows `bounds[j]..bounds[j + 1]`, with `bounds[j] = j·n / 8`. A
+/// leaf's ascending row list splits into cells by binary search; the
+/// bounds depend only on `n_rows`, never on the worker count.
+pub fn shard_bounds(n_rows: usize) -> [u32; REDUCE_SHARDS + 1] {
+    let mut bounds = [0u32; REDUCE_SHARDS + 1];
+    for (j, b) in bounds.iter_mut().enumerate() {
+        *b = (j * n_rows / REDUCE_SHARDS) as u32;
+    }
+    bounds
+}
+
+/// The reduction seam of row-sharded training. The in-process
+/// implementation is [`SumReducer`]; a socket transport slots in by
+/// implementing this over deserialized partials. Contract: `absorb`
+/// is called once per **non-empty** cell, in ascending cell order —
+/// implementations must preserve that order (it is what makes the
+/// reduction worker-count-independent).
+pub trait Reducer {
+    /// Fold in the next cell partial (ascending cell order).
+    fn absorb(&mut self, cell: &HistogramSet);
+    /// Complete the reduction and yield the leaf histogram.
+    fn finish(self) -> HistogramSet;
+}
+
+/// In-process reducer: seed by copying the first partial, then
+/// [`HistogramSet::merge`] the rest. The accumulator is caller-provided
+/// (a pool checkout), so steady-state reduction allocates nothing.
+pub struct SumReducer {
+    acc: HistogramSet,
+    seeded: bool,
+}
+
+impl SumReducer {
+    /// `acc` is the buffer the reduction folds into; its prior contents
+    /// are ignored (overwritten by the first `absorb`, zeroed by
+    /// `finish` if nothing was absorbed).
+    pub fn new(acc: HistogramSet) -> SumReducer {
+        SumReducer { acc, seeded: false }
+    }
+}
+
+impl Reducer for SumReducer {
+    fn absorb(&mut self, cell: &HistogramSet) {
+        if self.seeded {
+            self.acc.merge(cell);
+        } else {
+            self.acc.copy_from(cell);
+            self.seeded = true;
+        }
+    }
+
+    fn finish(mut self) -> HistogramSet {
+        if !self.seeded {
+            self.acc.reset();
+        }
+        self.acc
+    }
+}
+
+/// Train with `workers` row-shard threads: convenience wrapper that
+/// sets [`GbdtParams::row_workers`] and runs the standard trainer. The
+/// returned model is bit-identical for every `workers ≥ 1` (see the
+/// module docs); `workers = 0` is the plain single-threaded path.
+pub fn train_row_sharded(data: &Dataset, params: GbdtParams, workers: usize) -> GbdtModel {
+    let mut p = params;
+    p.row_workers = workers;
+    train(data, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_bounds_cover_and_are_monotone() {
+        for n in [0usize, 1, 7, 8, 9, 4096, 6001] {
+            let b = shard_bounds(n);
+            assert_eq!(b[0], 0);
+            assert_eq!(b[REDUCE_SHARDS] as usize, n);
+            for w in b.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn sum_reducer_seeds_then_merges() {
+        let mut a = HistogramSet::new(&[2]);
+        let toy = crate::data::BinMatrix::from_u16_columns(vec![vec![0, 1, 1]]);
+        a.build(&toy, &[0, 1], &[1.0, 2.0, 4.0], &[1.0; 3]);
+        let mut b = HistogramSet::new(&[2]);
+        b.build(&toy, &[2], &[1.0, 2.0, 4.0], &[1.0; 3]);
+        let mut red = SumReducer::new(HistogramSet::new(&[2]));
+        red.absorb(&a);
+        red.absorb(&b);
+        let out = red.finish();
+        assert_eq!(out.bin(0, 0), (1.0, 1.0, 1));
+        assert_eq!(out.bin(0, 1), (6.0, 2.0, 2));
+    }
+
+    #[test]
+    fn empty_reduction_yields_zeros() {
+        let mut dirty = HistogramSet::new(&[3]);
+        let toy = crate::data::BinMatrix::from_u16_columns(vec![vec![2, 0, 1]]);
+        dirty.build(&toy, &[0, 1, 2], &[1.0; 3], &[1.0; 3]);
+        let out = SumReducer::new(dirty).finish();
+        for b in 0..3 {
+            assert_eq!(out.bin(0, b), (0.0, 0.0, 0));
+        }
+    }
+}

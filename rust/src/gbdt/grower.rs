@@ -27,7 +27,7 @@
 use super::histogram::{HistogramPool, HistogramSet};
 use super::splitter::{best_split, leaf_weight, score, SplitInfo, SplitParams, SplitPenalty};
 use super::tree::{Node, Tree};
-use crate::data::{BinColumns, BinMatrix};
+use crate::data::BinSource;
 use std::collections::BinaryHeap;
 
 /// Which growth strategy [`grow_tree`] runs.
@@ -124,8 +124,13 @@ pub struct GrownTree {
 /// tree is done) and the shared gather scratch; the booster keeps one
 /// pool alive across all rounds so steady-state growth allocates
 /// nothing on the histogram path.
+///
+/// `src` is either backing store ([`BinSource`]): the grower only ever
+/// builds histograms and partitions ascending row lists, and both
+/// operations are bit-identical between the resident and the chunked
+/// on-disk arena, so the grown tree is too.
 pub fn grow_tree(
-    binned: &BinMatrix,
+    src: BinSource<'_>,
     pool: &mut HistogramPool,
     rows: Vec<u32>,
     grad: &[f64],
@@ -134,15 +139,13 @@ pub fn grow_tree(
     penalty: &mut dyn SplitPenalty,
 ) -> GrownTree {
     match params.mode {
-        GrowthMode::Leafwise => grow_tree_leafwise(binned, pool, rows, grad, hess, params, penalty),
-        GrowthMode::Oblivious => {
-            grow_tree_oblivious(binned, pool, rows, grad, hess, params, penalty)
-        }
+        GrowthMode::Leafwise => grow_tree_leafwise(src, pool, rows, grad, hess, params, penalty),
+        GrowthMode::Oblivious => grow_tree_oblivious(src, pool, rows, grad, hess, params, penalty),
     }
 }
 
 fn grow_tree_leafwise(
-    binned: &BinMatrix,
+    src: BinSource<'_>,
     pool: &mut HistogramPool,
     rows: Vec<u32>,
     grad: &[f64],
@@ -160,7 +163,7 @@ fn grow_tree_leafwise(
         return GrownTree { tree, leaf_rows: vec![(0, rows)] };
     }
 
-    let hist = pool.build(binned, &rows, grad, hess);
+    let hist = pool.build_source(src, &rows, grad, hess);
     let totals = (gt, ht, rows.len() as u32);
 
     let mut leaves: Vec<LeafState> = Vec::new();
@@ -213,20 +216,11 @@ fn grow_tree_leafwise(
         penalty.on_split(split.feature, split.bin);
 
         // Partition rows by the split predicate (u8/u16 monomorphized
-        // over the arena's code width).
+        // over the arena's code width, chunk-by-chunk when out-of-core).
         let parent_rows = std::mem::take(&mut leaves[leaf_id].rows);
         let mut left_rows = Vec::with_capacity(split.left_count as usize);
         let mut right_rows = Vec::with_capacity(split.right_count as usize);
-        let n = binned.n_rows();
-        let (cs, ce) = (split.feature * n, (split.feature + 1) * n);
-        match binned.columns() {
-            BinColumns::U8(a) => {
-                partition_rows(&a[cs..ce], split.bin, &parent_rows, &mut left_rows, &mut right_rows)
-            }
-            BinColumns::U16(a) => {
-                partition_rows(&a[cs..ce], split.bin, &parent_rows, &mut left_rows, &mut right_rows)
-            }
-        }
+        src.partition(split.feature, split.bin, &parent_rows, &mut left_rows, &mut right_rows);
         debug_assert_eq!(left_rows.len() as u32, split.left_count);
         debug_assert_eq!(right_rows.len() as u32, split.right_count);
 
@@ -264,7 +258,7 @@ fn grow_tree_leafwise(
         } else {
             (right_rows, left_rows, false)
         };
-        let small_hist = pool.build(binned, &small_rows, grad, hess);
+        let small_hist = pool.build_source(src, &small_rows, grad, hess);
         let mut large_hist = parent_hist;
         large_hist.subtract_assign(&small_hist);
 
@@ -356,7 +350,7 @@ fn prefix_totals(hist: &HistogramSet, f: usize, bin: u16) -> (f64, f64, u32) {
 /// Growth stops at `max_depth` (clamped so `2^depth ≤ max_leaves`) or as
 /// soon as no candidate has positive summed gain.
 fn grow_tree_oblivious(
-    binned: &BinMatrix,
+    src: BinSource<'_>,
     pool: &mut HistogramPool,
     rows: Vec<u32>,
     grad: &[f64],
@@ -377,7 +371,7 @@ fn grow_tree_oblivious(
         return GrownTree { tree, leaf_rows: vec![(0, rows)] };
     }
 
-    let hist = pool.build(binned, &rows, grad, hess);
+    let hist = pool.build_source(src, &rows, grad, hess);
     let n_rows_total = rows.len() as u32;
     let mut frontier = vec![ObliviousLeaf {
         node_idx: 0,
@@ -386,7 +380,6 @@ fn grow_tree_oblivious(
         hist: Some(hist),
     }];
 
-    let n = binned.n_rows();
     let lambda = params.split.lambda;
     for level in 0..depth_cap {
         // ---- score: summed penalized gain per (feature, boundary) ----
@@ -455,7 +448,6 @@ fn grow_tree_oblivious(
 
         // ---- apply the winning pair to every frontier leaf ----
         let last_level = level + 1 == depth_cap;
-        let (cs, ce) = (bf * n, (bf + 1) * n);
         let mut next = Vec::with_capacity(frontier.len() * 2);
         for leaf in frontier {
             let ObliviousLeaf { node_idx, rows, totals, hist } = leaf;
@@ -465,14 +457,7 @@ fn grow_tree_oblivious(
             let (gr, hr, cr) = (lg - gl, lh - hl, lc - cl);
             let mut left_rows = Vec::with_capacity(cl as usize);
             let mut right_rows = Vec::with_capacity(cr as usize);
-            match binned.columns() {
-                BinColumns::U8(a) => {
-                    partition_rows(&a[cs..ce], bb, &rows, &mut left_rows, &mut right_rows)
-                }
-                BinColumns::U16(a) => {
-                    partition_rows(&a[cs..ce], bb, &rows, &mut left_rows, &mut right_rows)
-                }
-            }
+            src.partition(bf, bb, &rows, &mut left_rows, &mut right_rows);
             debug_assert_eq!(left_rows.len() as u32, cl);
             debug_assert_eq!(right_rows.len() as u32, cr);
 
@@ -500,7 +485,7 @@ fn grow_tree_oblivious(
             } else {
                 let left_smaller = left_rows.len() <= right_rows.len();
                 let small_rows = if left_smaller { &left_rows } else { &right_rows };
-                let small = pool.build(binned, small_rows, grad, hess);
+                let small = pool.build_source(src, small_rows, grad, hess);
                 let mut large = hist;
                 large.subtract_assign(&small);
                 if left_smaller {
@@ -533,26 +518,6 @@ fn grow_tree_oblivious(
         leaf_rows.push((leaf.node_idx, leaf.rows));
     }
     GrownTree { tree, leaf_rows }
-}
-
-/// Route each of `rows` left (`code ≤ bin`) or right, reading one
-/// contiguous feature column of the arena.
-fn partition_rows<T: Copy>(
-    col: &[T],
-    bin: u16,
-    rows: &[u32],
-    left: &mut Vec<u32>,
-    right: &mut Vec<u32>,
-) where
-    u16: From<T>,
-{
-    for &i in rows {
-        if u16::from(col[i as usize]) <= bin {
-            left.push(i);
-        } else {
-            right.push(i);
-        }
-    }
 }
 
 /// Patch the float threshold values into a grown tree using the binner's
@@ -601,7 +566,8 @@ mod tests {
         let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
         let mut pool = HistogramPool::new(&bins);
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-        let grown = grow_tree(&binned, &mut pool, rows, grad, hess, params, &mut NoPenalty);
+        let grown =
+            grow_tree(BinSource::Ram(&binned), &mut pool, rows, grad, hess, params, &mut NoPenalty);
         // Every checked-out leaf histogram must be back on the free list
         // afterwards (the bare-leaf early return never checks one out).
         assert!(
@@ -628,6 +594,7 @@ mod tests {
             max_depth: 1,
             max_leaves: 2,
             learning_rate: 1.0,
+            mode: GrowthMode::Leafwise,
         };
         let (tree, _) = grow_on(&ds, &grad, &hess, &params);
         assert_eq!(tree.depth(), 1);
@@ -663,6 +630,7 @@ mod tests {
                 max_depth,
                 max_leaves: 1 << max_depth,
                 learning_rate: 0.5,
+                mode: GrowthMode::Leafwise,
             };
             let (tree, _) = grow_on(&ds, &grad, &hess, &params);
             assert!(tree.depth() <= max_depth, "depth {} > {}", tree.depth(), max_depth);
@@ -688,6 +656,7 @@ mod tests {
             max_depth: 3,
             max_leaves: 8,
             learning_rate: 1.0,
+            mode: GrowthMode::Leafwise,
         };
         let (tree, _) = grow_on(&ds, &grad, &hess, &params);
         for (_, _, thr) in tree.splits() {
@@ -743,7 +712,8 @@ mod tests {
             learning_rate: 0.5,
             mode: GrowthMode::Oblivious,
         };
-        let grown = grow_tree(&binned, &mut pool, rows, &grad, &hess, &params, &mut rec);
+        let grown =
+            grow_tree(BinSource::Ram(&binned), &mut pool, rows, &grad, &hess, &params, &mut rec);
         let mut tree = grown.tree;
         resolve_thresholds(&mut tree, |f, b| binner.threshold_value(f, b as usize));
         let depth = tree.depth();
@@ -791,7 +761,15 @@ mod tests {
             learning_rate: 1.0,
             mode: GrowthMode::Oblivious,
         };
-        let grown = grow_tree(&binned, &mut pool, rows, &grad, &hess, &params, &mut NoPenalty);
+        let grown = grow_tree(
+            BinSource::Ram(&binned),
+            &mut pool,
+            rows,
+            &grad,
+            &hess,
+            &params,
+            &mut NoPenalty,
+        );
         assert!(grown.tree.depth() <= 1);
         assert!(grown.tree.n_leaves() <= 2);
     }
@@ -824,8 +802,10 @@ mod tests {
             max_depth: 3,
             max_leaves: 8,
             learning_rate: 1.0,
+            mode: GrowthMode::Leafwise,
         };
-        let grown = grow_tree(&binned, &mut pool, rows, &grad, &hess, &params, &mut rec);
+        let grown =
+            grow_tree(BinSource::Ram(&binned), &mut pool, rows, &grad, &hess, &params, &mut rec);
         assert_eq!(rec.splits.len(), grown.tree.n_internal());
         assert_eq!(grown.leaf_rows.len(), grown.tree.n_leaves());
     }

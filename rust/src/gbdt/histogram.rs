@@ -73,7 +73,8 @@
 //! SIMD kernels (each worker runs the same tier-dispatched loops over
 //! its feature range).
 
-use crate::data::{BinColumns, BinMatrix};
+use crate::data::{BinColumns, BinMatrix, BinSource, ChunkedBinMatrix};
+use crate::gbdt::distributed::{shard_bounds, SumReducer, Reducer, REDUCE_SHARDS};
 use crate::simd::{self, Code, Tier};
 
 /// Row-count threshold below which [`HistogramPool::build`] ignores the
@@ -434,6 +435,132 @@ impl HistogramSet {
         });
     }
 
+    /// `self += other` bin-for-bin — the reduction step of row-sharded
+    /// training (`hist(leaf) = Σ hist(leaf ∩ row shard)`, the same
+    /// additivity that powers the subtraction trick). Plain f64 adds in
+    /// storage order; any fixed merge order is deterministic, and the
+    /// fixed-grid fold in [`HistogramPool::build_source`] makes the
+    /// result independent of the worker count.
+    pub fn merge(&mut self, other: &HistogramSet) {
+        assert_eq!(self.offsets, other.offsets, "merging differently-shaped histograms");
+        for (d, s) in self.data.iter_mut().zip(&other.data) {
+            *d += *s;
+        }
+    }
+
+    /// `self = other` (same shape). Seeding a reduction by copying the
+    /// first partial — rather than `reset()` then `merge` — keeps the
+    /// fold bit-exact: IEEE-754 has `0.0 + (-0.0) == +0.0`, so adding
+    /// onto a zeroed buffer could flip the sign of a `-0.0` sum.
+    pub fn copy_from(&mut self, other: &HistogramSet) {
+        assert_eq!(self.offsets, other.offsets, "copying differently-shaped histograms");
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Continue accumulating the rows of `sub` into `self` — **no
+    /// reset** — from either backing store. `sub` must be sorted
+    /// ascending (leaf row sets always are: the root is `0..n` and
+    /// partitioning preserves order).
+    ///
+    /// This is the out-of-core primitive: per bin, the add sequence is
+    /// the ascending-row sequence — *literally the same* f64 adds, in
+    /// the same order, as the resident-matrix build — so chaining it
+    /// over disk blocks is bit-identical to [`HistogramSet::build`] on
+    /// the whole matrix, for any block size. (A per-block build + merge
+    /// would not be: f64 addition is not associative.)
+    fn accumulate_rows(
+        &mut self,
+        src: BinSource<'_>,
+        sub: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+        tier: Tier,
+        scr: &mut RowScratch,
+    ) {
+        debug_assert!(sub.windows(2).all(|w| w[0] < w[1]), "row sets must be ascending");
+        match src {
+            BinSource::Ram(m) => {
+                let n = m.n_rows();
+                if sub.len() == n {
+                    match m.columns() {
+                        BinColumns::U8(a) => self.dense_cols(tier, a, n, grad, hess),
+                        BinColumns::U16(a) => self.dense_cols(tier, a, n, grad, hess),
+                    }
+                    return;
+                }
+                scr.og.clear();
+                scr.oh.clear();
+                scr.og.reserve(sub.len());
+                scr.oh.reserve(sub.len());
+                for &i in sub {
+                    scr.og.push(grad[i as usize]);
+                    scr.oh.push(hess[i as usize]);
+                }
+                match m.columns() {
+                    BinColumns::U8(a) => self.gathered_cols(tier, a, n, sub, &scr.og, &scr.oh),
+                    BinColumns::U16(a) => self.gathered_cols(tier, a, n, sub, &scr.og, &scr.oh),
+                }
+            }
+            BinSource::Chunked(m) => self.accumulate_chunked(m, sub, grad, hess, tier, scr),
+        }
+    }
+
+    /// Chunked-store body of [`HistogramSet::accumulate_rows`]: stream
+    /// exactly the disk blocks that overlap `rows`, in ascending order,
+    /// continuing the accumulation across blocks. A fully-selected
+    /// block takes the dense sweep (`grad`/`hess` sliced at the block's
+    /// global offset); a partial block gathers with chunk-local row
+    /// ids. Both scatter in row order, so per bin the add sequence is
+    /// identical to the in-RAM build over the same rows.
+    fn accumulate_chunked(
+        &mut self,
+        m: &ChunkedBinMatrix,
+        rows: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+        tier: Tier,
+        scr: &mut RowScratch,
+    ) {
+        let mut done = 0usize;
+        while done < rows.len() {
+            let c = rows[done] as usize / m.chunk_rows();
+            let range = m.chunk_range(c);
+            let end = done + rows[done..].partition_point(|&r| (r as usize) < range.end);
+            let sub = &rows[done..end];
+            let chunk = m.load_chunk(c);
+            let rows_in = chunk.n_rows();
+            if sub.len() == rows_in {
+                let (gs, hs) = (&grad[range.clone()], &hess[range.clone()]);
+                match chunk.columns() {
+                    BinColumns::U8(a) => self.dense_cols(tier, a, rows_in, gs, hs),
+                    BinColumns::U16(a) => self.dense_cols(tier, a, rows_in, gs, hs),
+                }
+            } else {
+                let base = range.start as u32;
+                scr.og.clear();
+                scr.oh.clear();
+                scr.lrows.clear();
+                scr.og.reserve(sub.len());
+                scr.oh.reserve(sub.len());
+                scr.lrows.reserve(sub.len());
+                for &i in sub {
+                    scr.og.push(grad[i as usize]);
+                    scr.oh.push(hess[i as usize]);
+                    scr.lrows.push(i - base);
+                }
+                match chunk.columns() {
+                    BinColumns::U8(a) => {
+                        self.gathered_cols(tier, a, rows_in, &scr.lrows, &scr.og, &scr.oh)
+                    }
+                    BinColumns::U16(a) => {
+                        self.gathered_cols(tier, a, rows_in, &scr.lrows, &scr.og, &scr.oh)
+                    }
+                }
+            }
+            done = end;
+        }
+    }
+
     /// `self = parent − sibling`, the histogram-subtraction trick.
     pub fn subtract_into(&mut self, parent: &HistogramSet, sibling: &HistogramSet) {
         debug_assert_eq!(self.data.len(), parent.data.len());
@@ -482,6 +609,15 @@ impl HistogramSet {
     }
 }
 
+/// Per-worker gather scratch for the continued-accumulation paths:
+/// ordered grad/hess plus (chunked store only) chunk-local row ids.
+#[derive(Debug, Default)]
+struct RowScratch {
+    og: Vec<f64>,
+    oh: Vec<f64>,
+    lrows: Vec<u32>,
+}
+
 /// A checkout pool of histogram buffers plus the shared gather scratch.
 ///
 /// Leaf-wise growth builds one histogram per open leaf; before the pool,
@@ -499,6 +635,19 @@ pub struct HistogramPool {
     /// Worker threads for [`HistogramSet::build_sharded`]; 1 = the
     /// sequential columnar kernel.
     shards: usize,
+    /// Row-sharded reduction mode ([`HistogramPool::set_row_sharding`]);
+    /// 0 = off. When on, big-leaf builds go through the fixed-grid
+    /// banded fold of [`HistogramPool::build_source`].
+    row_workers: usize,
+    /// The [`REDUCE_SHARDS`] + 1 global row bounds of the reduction
+    /// grid (empty when row sharding is off). Fixed at setup — *not*
+    /// derived from the worker count — so the banded fold sums the same
+    /// partials in the same order for every `row_workers` value.
+    row_bounds: Vec<u32>,
+    /// One gather scratch per row-shard worker.
+    wscratch: Vec<RowScratch>,
+    /// Gather scratch of the sequential chunked (out-of-core) build.
+    seq_scratch: RowScratch,
 }
 
 impl HistogramPool {
@@ -516,7 +665,27 @@ impl HistogramPool {
             og: Vec::new(),
             oh: Vec::new(),
             shards: shards.max(1),
+            row_workers: 0,
+            row_bounds: Vec::new(),
+            wscratch: Vec::new(),
+            seq_scratch: RowScratch::default(),
         }
+    }
+
+    /// Arm (or with `workers == 0`, disarm) the row-sharded reduction
+    /// mode: big-leaf [`HistogramPool::build_source`] calls split the
+    /// leaf's rows at [`REDUCE_SHARDS`] fixed global row bounds over
+    /// `0..n_rows`, accumulate each cell on up to `workers` scoped
+    /// threads, and fold the cells in ascending order. The grid is
+    /// fixed, so results are bit-identical for every worker count.
+    pub fn set_row_sharding(&mut self, n_rows: usize, workers: usize) {
+        self.row_workers = workers;
+        self.row_bounds =
+            if workers > 0 { shard_bounds(n_rows).to_vec() } else { Vec::new() };
+    }
+
+    pub fn row_workers(&self) -> usize {
+        self.row_workers
     }
 
     pub fn set_shards(&mut self, shards: usize) {
@@ -581,6 +750,138 @@ impl HistogramPool {
             &mut self.oh,
         );
         h
+    }
+
+    /// [`HistogramPool::build`] over either backing store — the entry
+    /// point the grower uses. Dispatch:
+    ///
+    /// * row sharding armed and the leaf spans ≥ [`SHARD_MIN_ROWS`]
+    ///   rows → the fixed-grid banded fold (below), in RAM or chunked;
+    /// * in-RAM otherwise → exactly the pre-existing
+    ///   [`HistogramPool::build`] path (dense/gathered, feature-sharded
+    ///   when configured) — untouched, bit-identical;
+    /// * chunked otherwise → one sequential continued accumulation over
+    ///   the overlapping disk blocks, bit-identical to the in-RAM build
+    ///   by the argument on [`HistogramSet::accumulate_rows`].
+    ///
+    /// `rows` must be ascending (leaf row sets always are).
+    pub fn build_source(
+        &mut self,
+        src: BinSource<'_>,
+        rows: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+    ) -> HistogramSet {
+        self.build_source_with_tier(src, rows, grad, hess, simd::tier())
+    }
+
+    /// [`HistogramPool::build_source`] on an explicit dispatch tier
+    /// (parity tests, benches).
+    pub fn build_source_with_tier(
+        &mut self,
+        src: BinSource<'_>,
+        rows: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+        tier: Tier,
+    ) -> HistogramSet {
+        if self.row_workers > 0 && rows.len() >= SHARD_MIN_ROWS {
+            return self.build_row_sharded(src, rows, grad, hess, tier);
+        }
+        match src {
+            BinSource::Ram(m) => self.build_with_tier(m, rows, grad, hess, tier),
+            BinSource::Chunked(_) => {
+                let mut h = self.checkout();
+                h.reset();
+                h.accumulate_rows(src, rows, grad, hess, tier, &mut self.seq_scratch);
+                h
+            }
+        }
+    }
+
+    /// The row-sharded build: split the leaf's ascending rows at the
+    /// pool's fixed [`REDUCE_SHARDS`] global row bounds, accumulate
+    /// each non-trivial cell into its own pooled partial on up to
+    /// `row_workers` scoped threads (each worker owns a contiguous cell
+    /// range), then fold the non-empty cells ascending through a
+    /// [`SumReducer`].
+    ///
+    /// Determinism: the cell boundaries come from `n_rows` alone, each
+    /// cell is accumulated sequentially in ascending row order, and the
+    /// fold order is ascending cell index with empty cells skipped
+    /// (emptiness is decided by the data, not the schedule) — so the
+    /// result is bit-identical for every worker count, over both
+    /// backing stores, for any block size. It is *not* claimed
+    /// bit-identical to the unsharded build on arbitrary data: the
+    /// banded fold groups the same f64 adds differently, and f64
+    /// addition is not associative. On integer-exact statistics the two
+    /// families coincide exactly (pinned in `tests/out_of_core_parity.rs`).
+    fn build_row_sharded(
+        &mut self,
+        src: BinSource<'_>,
+        rows: &[u32],
+        grad: &[f64],
+        hess: &[f64],
+        tier: Tier,
+    ) -> HistogramSet {
+        debug_assert_eq!(self.row_bounds.len(), REDUCE_SHARDS + 1);
+        // Leaf rows are ascending, so each grid cell is one contiguous
+        // sub-slice, found by binary search on the fixed bounds.
+        let mut spans = [(0usize, 0usize); REDUCE_SHARDS];
+        let mut s = 0usize;
+        for (j, span) in spans.iter_mut().enumerate() {
+            let e = s + rows[s..].partition_point(|&r| r < self.row_bounds[j + 1]);
+            *span = (s, e);
+            s = e;
+        }
+        debug_assert_eq!(s, rows.len(), "rows outside the sharding grid");
+
+        let workers = self.row_workers.clamp(1, REDUCE_SHARDS);
+        let mut cells: Vec<HistogramSet> = Vec::with_capacity(REDUCE_SHARDS);
+        for _ in 0..REDUCE_SHARDS {
+            let c = self.checkout();
+            cells.push(c);
+        }
+        while self.wscratch.len() < workers {
+            self.wscratch.push(RowScratch::default());
+        }
+        {
+            let wscratch = &mut self.wscratch[..workers];
+            let spans = &spans;
+            std::thread::scope(|scope| {
+                let mut rest: &mut [HistogramSet] = &mut cells;
+                let mut start = 0usize;
+                for (w, scr) in wscratch.iter_mut().enumerate() {
+                    let end = ((w + 1) * REDUCE_SHARDS) / workers;
+                    // Move `rest` out before splitting so the halves
+                    // keep the long lifetime.
+                    let taken = std::mem::take(&mut rest);
+                    let (head, tail) = taken.split_at_mut(end - start);
+                    rest = tail;
+                    scope.spawn(move || {
+                        for (j, cell) in (start..end).zip(head.iter_mut()) {
+                            let (cs, ce) = spans[j];
+                            cell.reset();
+                            if cs < ce {
+                                cell.accumulate_rows(src, &rows[cs..ce], grad, hess, tier, scr);
+                            }
+                        }
+                    });
+                    start = end;
+                }
+            });
+        }
+        let mut red = SumReducer::new(self.checkout());
+        for (j, cell) in cells.iter().enumerate() {
+            if spans[j].0 < spans[j].1 {
+                red.absorb(cell);
+            }
+        }
+        let out = red.finish();
+        for cell in cells {
+            self.recycle(cell);
+        }
+        out
     }
 
     /// Return a buffer to the free list. Buffers of a different shape

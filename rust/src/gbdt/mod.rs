@@ -12,6 +12,7 @@
 //! baseline (Peter et al., 2017).
 
 pub mod booster;
+pub mod distributed;
 pub mod grower;
 pub mod histogram;
 pub mod loss;
@@ -19,7 +20,8 @@ pub mod model;
 pub mod splitter;
 pub mod tree;
 
-pub use booster::{Booster, GbdtParams};
+pub use booster::{BinStore, Booster, GbdtParams};
+pub use distributed::{train_row_sharded, Reducer, SumReducer, REDUCE_SHARDS};
 pub use grower::GrowthMode;
 pub use model::GbdtModel;
 pub use splitter::{NoPenalty, SplitPenalty};

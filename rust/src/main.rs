@@ -4,6 +4,7 @@
 //! toad datasets                                    # Table 1
 //! toad train   --dataset breastcancer --rounds 32 --depth 2 \
 //!              [--iota 2] [--xi 1] [--forestsize 1024] [--oblivious] \
+//!              [--workers K] [--out-of-core [--row-block N]] \
 //!              [--out model.toad]
 //! toad size    --model model.toad                  # layout breakdown
 //! toad predict --model model.toad --dataset breastcancer [--n 10]
@@ -51,7 +52,10 @@ toad — Trees on a Diet (paper reproduction)
 commands:
   datasets               print the Table 1 dataset inventory
   train                  train a ToaD model (see flags in main.rs docs);
-                         --oblivious grows CatBoost-style level-shared trees
+                         --oblivious grows CatBoost-style level-shared trees;
+                         --workers K row-shards histogram builds over K threads;
+                         --out-of-core streams bins through an on-disk arena
+                         (--row-block N rows per block, default 65536)
   size                   print the layout size breakdown of a .toad blob
   predict                run a saved model over a synthetic dataset
   sweep                  run a penalty sweep: --dataset D [--kind feature|threshold]
@@ -99,6 +103,49 @@ fn cmd_train(args: &Args) -> i32 {
         let mut gbdt = GbdtParams::paper(rounds, depth);
         if args.get_bool("oblivious") {
             gbdt.growth = toad::gbdt::GrowthMode::Oblivious;
+        }
+        gbdt.row_workers = args.get_usize("workers", 0)?;
+        if args.get_bool("out-of-core") {
+            // Plain GBDT trained from an on-disk arena streamed in row
+            // blocks — the penalty/budget machinery stays in-RAM only.
+            let block = args.get_usize("row-block", 65_536)?;
+            if block == 0 {
+                return Err("--row-block must be positive".into());
+            }
+            let arena = std::env::temp_dir().join(format!("toad-arena-{}.bin", std::process::id()));
+            let n = train_set.n_rows();
+            let (binner, chunked) = toad::data::binning::Binner::fit_transform_to_disk(
+                &arena,
+                n,
+                train_set.n_features(),
+                gbdt.max_bins,
+                block,
+                |range| {
+                    train_set
+                        .features
+                        .iter()
+                        .map(|col| col[range.clone()].to_vec())
+                        .collect::<Vec<Vec<f32>>>()
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            let model = toad::gbdt::booster::train_chunked(
+                binner,
+                chunked,
+                train_set.targets.clone(),
+                train_set.labels.clone(),
+                train_set.task,
+                &train_set.name,
+                gbdt,
+            );
+            let _ = std::fs::remove_file(&arena);
+            let score = model.score(&test_set);
+            println!(
+                "{name} (out-of-core, block={block}, workers={}): score={score:.4} trees={}",
+                gbdt.row_workers,
+                model.n_trees(),
+            );
+            return Ok(0);
         }
         let mut params = ToadParams::new(gbdt, iota, xi);
         let model = if let Some(fs) = args.get("forestsize") {

@@ -1,0 +1,450 @@
+//! Bit-parity suite for the out-of-core trainer and the row-sharded
+//! histogram reduction.
+//!
+//! The claims under test (see `gbdt::distributed` and
+//! `data::binmatrix` module docs):
+//!
+//! * chunked (on-disk arena) training produces the **same model bits**
+//!   as in-RAM training, for every block size and both code widths —
+//!   the streamed histogram accumulation and partition perform the
+//!   same f64 adds in the same order;
+//! * row-sharded training is bit-identical for **every** worker count
+//!   `K ≥ 1` (the reduction grid is fixed, never derived from `K`),
+//!   over both stores, including ragged shards and empty grid cells;
+//! * `HistogramSet::merge` is an exact sum — pinned against the scalar
+//!   oracle on integer statistics, where f64 addition is associative;
+//! * on integer-exact statistics the row-sharded fold coincides bit-
+//!   for-bit with the plain (`row_workers = 0`) path;
+//! * a malformed arena file is a clean `Err` from
+//!   `ChunkedBinMatrix::open` — never a panic or a header-sized
+//!   allocation (these tests are Miri-runnable; training tests are
+//!   not, and are compiled out under Miri).
+
+use toad::data::synth::synth_rows;
+use toad::data::{ChunkedBinMatrix, Dataset, Task};
+use toad::gbdt::{GbdtModel, Node};
+
+fn arena_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("toad-parity-{}-{tag}.bin", std::process::id()))
+}
+
+/// Exact structural bits of a model: every tree node's discriminant and
+/// payload with floats as raw bits, plus the base scores. Two models
+/// compare equal here iff training made identical decisions *and*
+/// identical arithmetic.
+fn model_bits(m: &GbdtModel) -> Vec<u64> {
+    let mut out: Vec<u64> = m.base_scores.iter().map(|b| b.to_bits()).collect();
+    for stream in &m.trees {
+        out.push(stream.len() as u64);
+        for tree in stream {
+            out.push(tree.nodes.len() as u64);
+            for node in &tree.nodes {
+                match *node {
+                    Node::Internal { feature, bin, threshold, left, right } => {
+                        out.push(0);
+                        out.push(feature as u64);
+                        out.push(bin as u64);
+                        out.push(threshold.to_bits() as u64);
+                        out.push(left as u64);
+                        out.push(right as u64);
+                    }
+                    Node::Leaf { value } => {
+                        out.push(1);
+                        out.push(value.to_bits());
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn synth_dataset(seed: u64, n: usize) -> Dataset {
+    let (features, targets) = synth_rows(seed, 0..n);
+    Dataset { name: "synth_rows".into(), features, targets, labels: vec![], task: Task::Regression }
+}
+
+#[cfg(not(miri))]
+mod training {
+    use super::*;
+    use toad::data::binning::Binner;
+    use toad::data::{BinMatrix, BinSource};
+    use toad::gbdt::booster::{train, train_chunked, GbdtParams};
+    use toad::gbdt::distributed::train_row_sharded;
+    use toad::gbdt::histogram::{HistogramPool, HistogramSet, SHARD_MIN_ROWS};
+
+    fn params(max_bins: usize) -> GbdtParams {
+        GbdtParams { max_bins, ..GbdtParams::paper(3, 3) }
+    }
+
+    fn train_via_disk(ds: &Dataset, p: GbdtParams, block: usize, tag: &str) -> GbdtModel {
+        let path = arena_path(tag);
+        let n = ds.n_rows();
+        let (binner, chunked) = Binner::fit_transform_to_disk(
+            &path,
+            n,
+            ds.n_features(),
+            p.max_bins,
+            block,
+            |range| {
+                ds.features.iter().map(|col| col[range.clone()].to_vec()).collect::<Vec<Vec<f32>>>()
+            },
+        )
+        .expect("streaming fit/transform");
+        let model =
+            train_chunked(binner, chunked, ds.targets.clone(), vec![], ds.task, &ds.name, p);
+        let _ = std::fs::remove_file(&path);
+        model
+    }
+
+    /// Tentpole claim, axis 1: chunked ≡ in-RAM, bit for bit, for every
+    /// block size — including block 1, a ragged 63, an aligned 64, and
+    /// a block larger than the dataset — over both code widths
+    /// (max_bins 255 → u8 arena, 400 → u16).
+    #[test]
+    fn chunked_training_is_bit_identical_to_ram() {
+        let n = 3000;
+        let ds = synth_dataset(11, n);
+        for max_bins in [255usize, 400] {
+            let p = params(max_bins);
+            let want = model_bits(&train(&ds, p));
+            for block in [1usize, 63, 64, 4096, n + 1] {
+                let tag = format!("{max_bins}-{block}");
+                let got = model_bits(&train_via_disk(&ds, p, block, &tag));
+                assert_eq!(want, got, "max_bins={max_bins} block={block}");
+            }
+        }
+    }
+
+    /// The two memory axes compose: chunked + row-sharded ≡ in-RAM +
+    /// row-sharded, bit for bit, at any block size and worker count.
+    #[test]
+    fn chunked_and_row_sharding_compose_bit_identically() {
+        let n = 6000;
+        let ds = synth_dataset(13, n);
+        let p = GbdtParams { row_workers: 1, ..params(255) };
+        let want = model_bits(&train(&ds, p));
+        for (block, workers) in [(997usize, 2usize), (4096, 7)] {
+            let pw = GbdtParams { row_workers: workers, ..p };
+            let tag = format!("rs-{block}-{workers}");
+            let got = model_bits(&train_via_disk(&ds, pw, block, &tag));
+            assert_eq!(want, got, "block={block} workers={workers}");
+        }
+    }
+
+    /// Tentpole claim, axis 2: every worker count K ≥ 1 trains the same
+    /// model bits ("single-node" is K = 1), on row counts chosen so the
+    /// fixed grid has ragged cells.
+    #[test]
+    fn row_sharded_is_bit_identical_across_worker_counts() {
+        for n in [6000usize, 6001] {
+            let ds = synth_dataset(17, n);
+            let p = params(255);
+            let want = model_bits(&train_row_sharded(&ds, p, 1));
+            for workers in [2usize, 3, 7] {
+                let got = model_bits(&train_row_sharded(&ds, p, workers));
+                assert_eq!(want, got, "n={n} workers={workers}");
+            }
+        }
+    }
+
+    fn hist_bits(h: &HistogramSet, bins: &[usize]) -> Vec<u64> {
+        let mut out = Vec::new();
+        for (f, &nb) in bins.iter().enumerate() {
+            for b in 0..nb {
+                let (g, h_, c) = h.bin(f, b);
+                out.extend([g.to_bits(), h_.to_bits(), c as u64]);
+            }
+        }
+        out
+    }
+
+    /// Direct pool-level check with *empty grid cells*: a leaf whose
+    /// rows occupy only the first and last of the 8 fixed cells reduces
+    /// to the same bits for every worker count (empty cells are skipped
+    /// by data, not by schedule).
+    #[test]
+    fn row_sharded_build_handles_empty_cells_identically() {
+        let n = 16 * 1024;
+        let ds = synth_dataset(19, n);
+        let binner = Binner::fit(&ds, 255);
+        let binned = binner.bin_matrix(&ds);
+        let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let grad: Vec<f64> = ds.targets.clone();
+        let hess = vec![1.0; n];
+        // ≥ SHARD_MIN_ROWS rows, but cells 1..7 of the fixed 8-cell grid
+        // are empty (cell width is n/8 = 2048).
+        let rows: Vec<u32> = (0..2048u32).chain((n as u32 - 2048)..n as u32).collect();
+        assert!(rows.len() >= SHARD_MIN_ROWS);
+        let mut want: Option<Vec<u64>> = None;
+        for workers in [1usize, 2, 3, 7, 8] {
+            let mut pool = HistogramPool::new(&bins);
+            pool.set_row_sharding(n, workers);
+            let h = pool.build_source(BinSource::Ram(&binned), &rows, &grad, &hess);
+            let got = hist_bits(&h, &bins);
+            match &want {
+                None => want = Some(got),
+                Some(w) => assert_eq!(w, &got, "workers={workers}"),
+            }
+        }
+    }
+
+    /// `merge` is an exact bin-for-bin sum: on integer statistics
+    /// (where f64 addition is associative) merging two disjoint
+    /// partials equals the scalar oracle on the union, bit for bit.
+    #[test]
+    fn merge_matches_scalar_oracle_on_union() {
+        let cols: Vec<Vec<u16>> = vec![
+            (0..600).map(|i| (i % 5) as u16).collect(),
+            (0..600).map(|i| (i % 3) as u16).collect(),
+        ];
+        let binned = BinMatrix::from_u16_columns(cols);
+        let grad: Vec<f64> = (0..600).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let hess = vec![1.0; 600];
+        let union: Vec<u32> = (0..600).collect();
+        let (a_rows, b_rows): (Vec<u32>, Vec<u32>) = (0..600u32).partition(|&i| i % 7 < 3);
+        let bins = [5usize, 3];
+        let mut a = HistogramSet::new(&bins);
+        a.build(&binned, &a_rows, &grad, &hess);
+        let mut b = HistogramSet::new(&bins);
+        b.build(&binned, &b_rows, &grad, &hess);
+        a.merge(&b);
+        let mut oracle = HistogramSet::new(&bins);
+        oracle.build_scalar(&binned, &union, &grad, &hess);
+        assert_eq!(hist_bits(&a, &bins), hist_bits(&oracle, &bins));
+    }
+
+    /// On integer-exact statistics the banded fold and the historical
+    /// ungrouped fold compute identical sums, so round 1 of row-sharded
+    /// training coincides bit-for-bit with `row_workers = 0`. (On
+    /// general data they differ in the last ulp — that is expected and
+    /// why `row_workers = 0` stays the default.)
+    #[test]
+    fn row_sharded_round_one_matches_plain_on_integer_stats() {
+        let n = SHARD_MIN_ROWS;
+        // Balanced ±1 targets (base score exactly 0.0 ⇒ grads are ±1,
+        // hessians 1), split-learnable from two small-integer features.
+        let f0: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let f1: Vec<f32> = (0..n).map(|i| ((i / 2) % 4) as f32).collect();
+        let targets: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let ds = Dataset {
+            name: "int_exact".into(),
+            features: vec![f0, f1],
+            targets,
+            labels: vec![],
+            task: Task::Regression,
+        };
+        let p = GbdtParams { max_bins: 16, ..GbdtParams::paper(1, 2) };
+        let plain = model_bits(&train(&ds, p));
+        for workers in [1usize, 3] {
+            let sharded = model_bits(&train_row_sharded(&ds, p, workers));
+            assert_eq!(plain, sharded, "workers={workers}");
+        }
+    }
+
+    /// Streaming two-pass fit reproduces `Binner::fit` boundaries bit
+    /// for bit, including NaNs (skipped), heavy duplicates, and the
+    /// `-0.0`/`0.0` merge.
+    #[test]
+    fn streaming_fit_boundaries_match_in_ram_fit() {
+        let n = 997;
+        let mut col0: Vec<f32> = (0..n)
+            .map(|i| match i % 7 {
+                0 => f32::NAN,
+                1 => -0.0,
+                2 => 0.0,
+                k => (k as f32) * 0.25 - 0.5,
+            })
+            .collect();
+        col0[500] = -1.5e30;
+        col0[501] = 1.5e30;
+        let col1: Vec<f32> = (0..n).map(|i| ((i * 37) % 101) as f32 / 7.0).collect();
+        let ds = Dataset {
+            name: "fitcheck".into(),
+            features: vec![col0, col1],
+            targets: vec![0.0; n],
+            labels: vec![],
+            task: Task::Regression,
+        };
+        for max_bins in [8usize, 64, 255] {
+            let want = Binner::fit(&ds, max_bins);
+            let path = arena_path(&format!("fit-{max_bins}"));
+            let (got, _chunked) = Binner::fit_transform_to_disk(
+                &path,
+                n,
+                ds.n_features(),
+                max_bins,
+                64,
+                |range| {
+                    ds.features
+                        .iter()
+                        .map(|col| col[range.clone()].to_vec())
+                        .collect::<Vec<Vec<f32>>>()
+                },
+            )
+            .expect("streaming fit");
+            let _ = std::fs::remove_file(&path);
+            for f in 0..ds.n_features() {
+                assert_eq!(want.n_bins(f), got.n_bins(f), "max_bins={max_bins} f={f}");
+                for b in 0..want.n_bins(f).saturating_sub(1) {
+                    assert_eq!(
+                        want.threshold_value(f, b).to_bits(),
+                        got.threshold_value(f, b).to_bits(),
+                        "max_bins={max_bins} f={f} boundary {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Chunk loads rehydrate exactly the columns `bin_matrix` produces,
+    /// at both code widths (positional reads; not Miri-runnable).
+    #[test]
+    fn arena_roundtrip_matches_resident_matrix() {
+        let n = 333;
+        let ds = synth_dataset(23, n);
+        for max_bins in [255usize, 400] {
+            let binner = Binner::fit(&ds, max_bins);
+            let want = binner.bin_matrix(&ds);
+            let path = arena_path(&format!("rt-{max_bins}"));
+            let (_b2, chunked) = Binner::fit_transform_to_disk(
+                &path,
+                n,
+                ds.n_features(),
+                max_bins,
+                50,
+                |range| {
+                    ds.features
+                        .iter()
+                        .map(|col| col[range.clone()].to_vec())
+                        .collect::<Vec<Vec<f32>>>()
+                },
+            )
+            .expect("streaming fit");
+            assert_eq!(chunked.is_u8(), want.is_u8(), "width parity (max_bins={max_bins})");
+            assert_eq!(chunked.n_chunks(), n.div_ceil(50));
+            for c in 0..chunked.n_chunks() {
+                let range = chunked.chunk_range(c);
+                let chunk = chunked.load_chunk(c);
+                for f in 0..want.n_features() {
+                    for (i, row) in range.clone().enumerate() {
+                        assert_eq!(chunk.bin(f, i), want.bin(f, row), "chunk {c} f={f} row {row}");
+                    }
+                }
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Malformed-arena robustness (Miri-runnable: `open` uses sequential
+// reads only and never allocates from an unvouched header).
+// ---------------------------------------------------------------------
+
+/// A syntactically valid little header: magic, width 1, n_rows 4,
+/// chunk_rows 2, 2 features of 4 bins each, and the 8 body bytes.
+fn valid_arena_bytes() -> Vec<u8> {
+    let mut v = Vec::new();
+    v.extend_from_slice(b"TOADBIN1");
+    v.push(1); // width
+    v.extend_from_slice(&4u64.to_le_bytes()); // n_rows
+    v.extend_from_slice(&2u64.to_le_bytes()); // chunk_rows
+    v.extend_from_slice(&2u32.to_le_bytes()); // n_features
+    v.extend_from_slice(&4u32.to_le_bytes()); // bins f0
+    v.extend_from_slice(&4u32.to_le_bytes()); // bins f1
+    v.extend_from_slice(&[0, 1, 2, 3, 3, 2, 1, 0]); // body: 4 rows × 2 features
+    v
+}
+
+fn open_bytes(tag: &str, bytes: &[u8]) -> Result<ChunkedBinMatrix, toad::error::Error> {
+    let path = arena_path(tag);
+    std::fs::write(&path, bytes).expect("write test arena");
+    let r = ChunkedBinMatrix::open(&path);
+    let _ = std::fs::remove_file(&path);
+    r
+}
+
+#[test]
+fn well_formed_header_opens() {
+    let m = open_bytes("ok", &valid_arena_bytes()).expect("valid arena must open");
+    assert_eq!(m.n_rows(), 4);
+    assert_eq!(m.n_features(), 2);
+    assert_eq!(m.chunk_rows(), 2);
+    assert!(m.is_u8());
+}
+
+#[test]
+fn truncated_prefix_is_err() {
+    for len in [0usize, 7, 28] {
+        assert!(open_bytes("trunc", &valid_arena_bytes()[..len]).is_err(), "len {len}");
+    }
+}
+
+#[test]
+fn bad_magic_is_err() {
+    let mut v = valid_arena_bytes();
+    v[0] ^= 0x20;
+    assert!(open_bytes("magic", &v).is_err());
+}
+
+#[test]
+fn bad_width_is_err() {
+    for w in [0u8, 3, 255] {
+        let mut v = valid_arena_bytes();
+        v[8] = w;
+        assert!(open_bytes("width", &v).is_err(), "width {w}");
+    }
+}
+
+#[test]
+fn zero_chunk_rows_is_err() {
+    let mut v = valid_arena_bytes();
+    v[17..25].copy_from_slice(&0u64.to_le_bytes());
+    assert!(open_bytes("chunk0", &v).is_err());
+}
+
+#[test]
+fn width_bin_contradiction_is_err() {
+    // Width 2 but every bin count fits u8: `from_fn` would have chosen
+    // width 1, so loaded chunks could not match the resident arena.
+    let mut v = valid_arena_bytes();
+    v[8] = 2;
+    v.extend_from_slice(&[0u8; 8]); // body grows to 4 rows × 2 features × 2 bytes
+    assert!(open_bytes("contradict", &v).is_err());
+}
+
+#[test]
+fn size_mismatch_is_err() {
+    let mut v = valid_arena_bytes();
+    v.push(0); // one trailing byte
+    assert!(open_bytes("long", &v).is_err());
+    let mut v = valid_arena_bytes();
+    v.truncate(v.len() - 1); // one missing body byte
+    assert!(open_bytes("short", &v).is_err());
+}
+
+#[test]
+fn zero_bin_feature_is_err() {
+    let mut v = valid_arena_bytes();
+    v[29..33].copy_from_slice(&0u32.to_le_bytes());
+    assert!(open_bytes("zerobin", &v).is_err());
+}
+
+#[test]
+fn hostile_dimensions_do_not_allocate() {
+    // Claims ~16M features / huge rows in a tiny file: must be a clean
+    // Err (the length check precedes any header-sized allocation), not
+    // an OOM or capacity panic.
+    let mut v = valid_arena_bytes();
+    v[25..29].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(open_bytes("bigf", &v).is_err());
+    let mut v = valid_arena_bytes();
+    v[9..17].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(open_bytes("bigrows", &v).is_err());
+    // Overflow bait: n_rows × n_features × width wraps u64.
+    let mut v = valid_arena_bytes();
+    v[9..17].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+    v[25..29].copy_from_slice(&8u32.to_le_bytes());
+    assert!(open_bytes("overflow", &v).is_err());
+}

@@ -29,10 +29,23 @@
 //! `Binner::bin_columns`); the quantized engine builds its own over the
 //! model's threshold tables. Both go through [`BinMatrix::from_fn`].
 //!
+//! * **Mixed sparse/dense columns.** A mostly-absent feature (density
+//!   below `binning::SPARSE_DENSITY_THRESHOLD`) is stored as a
+//!   [`SparseBinColumn`]: the ascending present-row index list, the
+//!   present entries' codes, and the feature's **default bin** — the
+//!   bin the implicit value `0.0` falls in, which every absent row
+//!   carries without being stored. Dense columns of the same matrix
+//!   keep the contiguous arena; a per-feature slot table dispatches
+//!   ([`BinMatrix::col_view`]). Every dense-only constructor produces
+//!   the identity mapping, so the legacy layout (and every consumer of
+//!   it) is byte-for-byte unchanged when no column is sparse.
+//!
 //! For datasets that do not fit in RAM, [`ChunkedBinMatrix`] stores the
 //! same arena in an on-disk file split into fixed-size row blocks
 //! (column-major *within* each block), and [`BinSource`] lets the
-//! grower and histogram pool run off either backing store.
+//! grower and histogram pool run off either backing store. The chunked
+//! store remains dense-only (a sparse out-of-core arena is a ROADMAP
+//! follow-up).
 
 use crate::error::{Context, Result};
 use std::io::Write;
@@ -55,6 +68,99 @@ enum Store {
     U16(Vec<u16>),
 }
 
+/// One mostly-absent feature column: present entries only, plus the
+/// default bin every absent row implicitly carries.
+///
+/// `rows` is strictly ascending (derived from an in-order CSR walk) and
+/// `codes[k]` is the bin of present entry `rows[k]` — including
+/// explicit zeros (which bin to `default_bin`) and NaNs (top bin),
+/// stored verbatim so a sparse column reproduces the densified
+/// column's codes cell for cell.
+#[derive(Clone, Debug)]
+pub struct SparseBinColumn {
+    rows: Vec<u32>,
+    codes: Vec<u16>,
+    default_bin: u16,
+}
+
+impl SparseBinColumn {
+    /// Number of present entries.
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// The bin of the implicit value `0.0` — what every absent row
+    /// reads as.
+    pub fn default_bin(&self) -> u16 {
+        self.default_bin
+    }
+
+    /// Ascending present-row indices.
+    pub(crate) fn present_rows(&self) -> &[u32] {
+        &self.rows
+    }
+
+    /// Codes of the present entries, parallel to `present_rows`.
+    pub(crate) fn present_codes(&self) -> &[u16] {
+        &self.codes
+    }
+
+    /// The code of row `i` (binary search; absent rows read the
+    /// default bin).
+    pub fn code_at(&self, i: u32) -> u16 {
+        match self.rows.binary_search(&i) {
+            Ok(k) => self.codes[k],
+            Err(_) => self.default_bin,
+        }
+    }
+
+    /// Order-preserving split of `rows` on `code <= bin` — the sparse
+    /// twin of [`route_rows`]: a merge walk over the ascending leaf
+    /// rows and the ascending present rows, so the emitted
+    /// `left`/`right` sequences are identical to routing the densified
+    /// column.
+    fn route_rows(&self, bin: u16, rows: &[u32], left: &mut Vec<u32>, right: &mut Vec<u32>) {
+        let mut p = 0usize;
+        for &i in rows {
+            while p < self.rows.len() && self.rows[p] < i {
+                p += 1;
+            }
+            let code = if p < self.rows.len() && self.rows[p] == i {
+                self.codes[p]
+            } else {
+                self.default_bin
+            };
+            if code <= bin {
+                left.push(i);
+            } else {
+                right.push(i);
+            }
+        }
+    }
+}
+
+/// Where feature `f`'s codes live: a dense arena slot or the sparse
+/// side table.
+#[derive(Clone, Copy, Debug)]
+enum ColSlot {
+    Dense(u32),
+    Sparse(u32),
+}
+
+/// Borrowed per-feature view, dispatched by [`BinMatrix::col_view`].
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum ColView<'a> {
+    U8(&'a [u8]),
+    U16(&'a [u16]),
+    Sparse(&'a SparseBinColumn),
+}
+
+/// One column handed to the mixed-arena constructor.
+pub(crate) enum MixedCol {
+    Dense(Vec<u16>),
+    Sparse { rows: Vec<u32>, codes: Vec<u16>, default_bin: u16 },
+}
+
 /// A dataset mapped to bin codes: one contiguous column-major arena
 /// with adaptive u8/u16 element width. See the module docs.
 #[derive(Clone, Debug)]
@@ -64,6 +170,12 @@ pub struct BinMatrix {
     /// (`bin(f, i) < bins_per_feature[f]`).
     bins_per_feature: Vec<usize>,
     store: Store,
+    /// Per-feature dispatch. Empty means the identity dense mapping
+    /// (feature `f` at arena slot `f`) — what every dense-only
+    /// constructor produces.
+    slots: Vec<ColSlot>,
+    /// Side table of sparse columns (empty for dense-only matrices).
+    sparse: Vec<SparseBinColumn>,
 }
 
 impl BinMatrix {
@@ -106,7 +218,63 @@ impl BinMatrix {
             }
             Store::U16(arena)
         };
-        BinMatrix { n_rows, bins_per_feature: bins_per_feature.to_vec(), store }
+        BinMatrix {
+            n_rows,
+            bins_per_feature: bins_per_feature.to_vec(),
+            store,
+            slots: Vec::new(),
+            sparse: Vec::new(),
+        }
+    }
+
+    /// Build a mixed matrix: dense columns are packed into the
+    /// contiguous arena (in feature order), sparse columns go to the
+    /// side table. The arena width rule is the same global predicate as
+    /// [`BinMatrix::from_fn`] — `u8` iff *every* feature (sparse ones
+    /// included) has ≤ [`U8_MAX_BINS`] bins — so `is_u8` keeps its
+    /// meaning across representations. Sparse present-row lists must be
+    /// strictly ascending.
+    pub(crate) fn from_mixed_cols(
+        n_rows: usize,
+        bins_per_feature: &[usize],
+        cols: Vec<MixedCol>,
+    ) -> BinMatrix {
+        let nf = bins_per_feature.len();
+        assert_eq!(cols.len(), nf);
+        let u8_arena = bins_per_feature.iter().all(|&b| b <= U8_MAX_BINS);
+        let mut slots = Vec::with_capacity(nf);
+        let mut sparse: Vec<SparseBinColumn> = Vec::new();
+        let mut arena8: Vec<u8> = Vec::new();
+        let mut arena16: Vec<u16> = Vec::new();
+        let mut dense_slots = 0u32;
+        for (f, col) in cols.into_iter().enumerate() {
+            match col {
+                MixedCol::Dense(codes) => {
+                    assert_eq!(codes.len(), n_rows, "dense column {f} length mismatch");
+                    debug_assert!(codes.iter().all(|&c| (c as usize) < bins_per_feature[f]));
+                    slots.push(ColSlot::Dense(dense_slots));
+                    dense_slots += 1;
+                    if u8_arena {
+                        arena8.extend(codes.iter().map(|&c| c as u8));
+                    } else {
+                        arena16.extend_from_slice(&codes);
+                    }
+                }
+                MixedCol::Sparse { rows, codes, default_bin } => {
+                    assert_eq!(rows.len(), codes.len(), "sparse column {f} shape mismatch");
+                    debug_assert!(rows.windows(2).all(|w| w[0] < w[1]));
+                    debug_assert!(rows.iter().all(|&r| (r as usize) < n_rows));
+                    debug_assert!(codes
+                        .iter()
+                        .chain(std::iter::once(&default_bin))
+                        .all(|&c| (c as usize) < bins_per_feature[f]));
+                    slots.push(ColSlot::Sparse(sparse.len() as u32));
+                    sparse.push(SparseBinColumn { rows, codes, default_bin });
+                }
+            }
+        }
+        let store = if u8_arena { Store::U8(arena8) } else { Store::U16(arena16) };
+        BinMatrix { n_rows, bins_per_feature: bins_per_feature.to_vec(), store, slots, sparse }
     }
 
     /// Adopt ready-made `u16` columns (tests, hand-built fixtures). Bin
@@ -146,29 +314,83 @@ impl BinMatrix {
         matches!(self.store, Store::U8(_))
     }
 
-    /// Arena bytes (introspection: the u8 arena halves this).
+    /// Arena bytes (introspection: the u8 arena halves this; sparse
+    /// columns contribute their index + code storage).
     pub fn arena_bytes(&self) -> usize {
-        match &self.store {
+        let dense = match &self.store {
             Store::U8(a) => a.len(),
             Store::U16(a) => 2 * a.len(),
+        };
+        dense + self.sparse.iter().map(|s| 4 * s.rows.len() + 2 * s.codes.len()).sum::<usize>()
+    }
+
+    /// Whether any column is stored sparse (side-table dispatch).
+    pub fn has_sparse(&self) -> bool {
+        !self.sparse.is_empty()
+    }
+
+    /// Whether feature `f` is stored as a [`SparseBinColumn`].
+    pub fn is_sparse_col(&self, f: usize) -> bool {
+        matches!(self.slot(f), ColSlot::Sparse(_))
+    }
+
+    /// Number of sparse-stored columns.
+    pub fn n_sparse_cols(&self) -> usize {
+        self.sparse.len()
+    }
+
+    #[inline]
+    fn slot(&self, f: usize) -> ColSlot {
+        if self.slots.is_empty() {
+            ColSlot::Dense(f as u32)
+        } else {
+            self.slots[f]
+        }
+    }
+
+    /// Per-feature dispatched view — the entry point every
+    /// sparse-aware consumer (histogram build, partition, transpose)
+    /// branches on once per column.
+    #[inline]
+    pub(crate) fn col_view(&self, f: usize) -> ColView<'_> {
+        match self.slot(f) {
+            ColSlot::Dense(s) => {
+                let (cs, ce) = (s as usize * self.n_rows, (s as usize + 1) * self.n_rows);
+                match &self.store {
+                    Store::U8(a) => ColView::U8(&a[cs..ce]),
+                    Store::U16(a) => ColView::U16(&a[cs..ce]),
+                }
+            }
+            ColSlot::Sparse(s) => ColView::Sparse(&self.sparse[s as usize]),
         }
     }
 
     /// Random-access lookup (baselines, per-row routing). Hot kernels
-    /// should dispatch once via [`BinMatrix::columns`] instead.
+    /// should dispatch once via [`BinMatrix::columns`] (dense-only
+    /// matrices) or per column via `col_view` instead. Sparse columns
+    /// answer through a binary search over their present rows.
     #[inline]
     pub fn bin(&self, f: usize, i: usize) -> u16 {
         debug_assert!(i < self.n_rows);
-        let idx = f * self.n_rows + i;
-        match &self.store {
-            Store::U8(a) => a[idx] as u16,
-            Store::U16(a) => a[idx],
+        match self.slot(f) {
+            ColSlot::Dense(s) => {
+                let idx = s as usize * self.n_rows + i;
+                match &self.store {
+                    Store::U8(a) => a[idx] as u16,
+                    Store::U16(a) => a[idx],
+                }
+            }
+            ColSlot::Sparse(s) => self.sparse[s as usize].code_at(i as u32),
         }
     }
 
-    /// The whole column-major arena, width-dispatched.
+    /// The whole column-major arena, width-dispatched. Only meaningful
+    /// for dense-only matrices — the arena of a mixed matrix holds only
+    /// its dense columns, so this asserts `!has_sparse()` (mixed
+    /// consumers dispatch per column via `col_view`).
     #[inline]
     pub fn columns(&self) -> BinColumns<'_> {
+        assert!(!self.has_sparse(), "columns() on a mixed sparse/dense matrix");
         match &self.store {
             Store::U8(a) => BinColumns::U8(a),
             Store::U16(a) => BinColumns::U16(a),
@@ -177,15 +399,62 @@ impl BinMatrix {
 
     /// Materialize the row-major `u16` mirror (`out[i * n_features + f]`)
     /// — the orientation tree descent wants. Built on demand; the
-    /// column arena stays the source of truth.
+    /// column arena stays the source of truth. Sparse columns fill
+    /// their default bin first, then scatter the present entries.
     pub fn to_row_major(&self) -> Vec<u16> {
         let nf = self.n_features();
         let mut out = vec![0u16; self.n_rows * nf];
-        match &self.store {
-            Store::U8(a) => transpose_into(a, self.n_rows, nf, &mut out),
-            Store::U16(a) => transpose_into(a, self.n_rows, nf, &mut out),
+        if !self.has_sparse() {
+            match &self.store {
+                Store::U8(a) => transpose_into(a, self.n_rows, nf, &mut out),
+                Store::U16(a) => transpose_into(a, self.n_rows, nf, &mut out),
+            }
+            return out;
+        }
+        for f in 0..nf {
+            match self.col_view(f) {
+                ColView::U8(col) => {
+                    for (i, &v) in col.iter().enumerate() {
+                        out[i * nf + f] = v as u16;
+                    }
+                }
+                ColView::U16(col) => {
+                    for (i, &v) in col.iter().enumerate() {
+                        out[i * nf + f] = v;
+                    }
+                }
+                ColView::Sparse(sc) => {
+                    if sc.default_bin != 0 {
+                        for i in 0..self.n_rows {
+                            out[i * nf + f] = sc.default_bin;
+                        }
+                    }
+                    for (k, &r) in sc.rows.iter().enumerate() {
+                        out[r as usize * nf + f] = sc.codes[k];
+                    }
+                }
+            }
         }
         out
+    }
+
+    /// Order-preserving split of `rows` on `code(feature) <= bin`,
+    /// dispatched per representation — dense columns route through the
+    /// arena slice exactly as before, sparse columns through the merge
+    /// walk of [`SparseBinColumn::route_rows`].
+    pub(crate) fn partition_col(
+        &self,
+        feature: usize,
+        bin: u16,
+        rows: &[u32],
+        left: &mut Vec<u32>,
+        right: &mut Vec<u32>,
+    ) {
+        match self.col_view(feature) {
+            ColView::U8(col) => route_rows(col, bin, rows, 0, left, right),
+            ColView::U16(col) => route_rows(col, bin, rows, 0, left, right),
+            ColView::Sparse(sc) => sc.route_rows(bin, rows, left, right),
+        }
     }
 
     /// Widen back to plain `u16` columns (XLA tensor staging, tests).
@@ -206,7 +475,13 @@ impl BinMatrix {
     ) -> BinMatrix {
         assert_eq!(arena.len(), n_rows * bins_per_feature.len());
         assert!(bins_per_feature.iter().all(|&b| b <= U8_MAX_BINS));
-        BinMatrix { n_rows, bins_per_feature: bins_per_feature.to_vec(), store: Store::U8(arena) }
+        BinMatrix {
+            n_rows,
+            bins_per_feature: bins_per_feature.to_vec(),
+            store: Store::U8(arena),
+            slots: Vec::new(),
+            sparse: Vec::new(),
+        }
     }
 
     /// `u16` twin of [`BinMatrix::from_u8_arena`]; requires at least one
@@ -218,7 +493,13 @@ impl BinMatrix {
     ) -> BinMatrix {
         assert_eq!(arena.len(), n_rows * bins_per_feature.len());
         assert!(bins_per_feature.iter().any(|&b| b > U8_MAX_BINS));
-        BinMatrix { n_rows, bins_per_feature: bins_per_feature.to_vec(), store: Store::U16(arena) }
+        BinMatrix {
+            n_rows,
+            bins_per_feature: bins_per_feature.to_vec(),
+            store: Store::U16(arena),
+            slots: Vec::new(),
+            sparse: Vec::new(),
+        }
     }
 }
 
@@ -561,14 +842,7 @@ impl BinSource<'_> {
         right: &mut Vec<u32>,
     ) {
         match self {
-            BinSource::Ram(m) => {
-                let n = m.n_rows();
-                let (cs, ce) = (feature * n, (feature + 1) * n);
-                match m.columns() {
-                    BinColumns::U8(a) => route_rows(&a[cs..ce], bin, rows, 0, left, right),
-                    BinColumns::U16(a) => route_rows(&a[cs..ce], bin, rows, 0, left, right),
-                }
-            }
+            BinSource::Ram(m) => m.partition_col(feature, bin, rows, left, right),
             BinSource::Chunked(m) => {
                 let mut done = 0usize;
                 while done < rows.len() {
@@ -657,5 +931,82 @@ mod tests {
         assert_eq!(bm.n_rows(), 0);
         assert_eq!(bm.n_features(), 0);
         assert!(bm.to_row_major().is_empty());
+    }
+
+    /// A 3-column mixed matrix: dense, sparse (default bin 1), dense.
+    /// Dense twin: f0 = [0,1,2,3], f1 = [1,5,1,2], f2 = [3,2,1,0].
+    fn mixed_fixture() -> (BinMatrix, BinMatrix) {
+        let mixed = BinMatrix::from_mixed_cols(
+            4,
+            &[4, 6, 4],
+            vec![
+                MixedCol::Dense(vec![0, 1, 2, 3]),
+                MixedCol::Sparse { rows: vec![1, 3], codes: vec![5, 2], default_bin: 1 },
+                MixedCol::Dense(vec![3, 2, 1, 0]),
+            ],
+        );
+        let dense = BinMatrix::from_u16_columns(vec![
+            vec![0, 1, 2, 3],
+            vec![1, 5, 1, 2],
+            vec![3, 2, 1, 0],
+        ]);
+        (mixed, dense)
+    }
+
+    #[test]
+    fn mixed_matrix_bin_matches_dense_twin() {
+        let (mixed, dense) = mixed_fixture();
+        assert!(mixed.has_sparse());
+        assert!(!mixed.is_sparse_col(0));
+        assert!(mixed.is_sparse_col(1));
+        assert_eq!(mixed.n_sparse_cols(), 1);
+        for f in 0..3 {
+            for i in 0..4 {
+                assert_eq!(mixed.bin(f, i), dense.bin(f, i), "f={f} i={i}");
+            }
+        }
+        assert_eq!(mixed.to_row_major(), dense.to_row_major());
+    }
+
+    #[test]
+    fn mixed_matrix_partitions_like_dense_twin() {
+        let (mixed, dense) = mixed_fixture();
+        let rows: Vec<u32> = vec![0, 1, 2, 3];
+        for f in 0..3 {
+            for bin in 0..6u16 {
+                let (mut ml, mut mr) = (Vec::new(), Vec::new());
+                let (mut dl, mut dr) = (Vec::new(), Vec::new());
+                mixed.partition_col(f, bin, &rows, &mut ml, &mut mr);
+                dense.partition_col(f, bin, &rows, &mut dl, &mut dr);
+                assert_eq!((ml, mr), (dl, dr), "f={f} bin={bin}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_matrix_arena_width_follows_global_rule() {
+        // All bin counts fit u8 → dense columns land in a u8 arena even
+        // though a sparse column sits between them.
+        let bm = BinMatrix::from_mixed_cols(
+            2,
+            &[4, 4],
+            vec![
+                MixedCol::Sparse { rows: vec![1], codes: vec![3], default_bin: 0 },
+                MixedCol::Dense(vec![2, 0]),
+            ],
+        );
+        assert!(bm.is_u8());
+        assert_eq!(bm.bin(0, 0), 0);
+        assert_eq!(bm.bin(0, 1), 3);
+        assert_eq!(bm.bin(1, 0), 2);
+        // 1 dense col (2 bytes) + sparse col (4 + 2 bytes).
+        assert_eq!(bm.arena_bytes(), 2 + 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed sparse/dense")]
+    fn columns_rejects_mixed_matrix() {
+        let (mixed, _) = mixed_fixture();
+        let _ = mixed.columns();
     }
 }

@@ -9,9 +9,19 @@
 //! *value* is what ends up in the global threshold array of the memory
 //! layout (§3.2.2).
 
-use super::binmatrix::{ArenaWriter, BinMatrix, ChunkedBinMatrix};
+use super::binmatrix::{ArenaWriter, BinMatrix, ChunkedBinMatrix, MixedCol};
 use super::dataset::Dataset;
+use super::sparse::{CsrMatrix, SparseDataset};
 use crate::error::Result;
+
+/// A feature column is stored sparse (present-rows + codes side table)
+/// when its density is strictly below this fraction of `n_rows`; denser
+/// columns are materialized into the contiguous dense arena. 0.35 is
+/// the break-even of the sparse histogram walk (one index load + one
+/// code load + correction amortization) against the dense scatter on
+/// the row counts the benches cover; both representations bin to
+/// identical codes, so the threshold only moves cost, never results.
+pub const SPARSE_DENSITY_THRESHOLD: f64 = 0.35;
 
 /// Per-feature binning rule learned from training data.
 #[derive(Clone, Debug)]
@@ -52,6 +62,55 @@ impl Binner {
                     }
                 }
                 boundaries_from_distinct(&distinct, n, max_bins)
+            })
+            .collect();
+        Binner { boundaries }
+    }
+
+    /// Sparse twin of [`Binner::fit`]: learn boundaries from a CSR
+    /// matrix without densifying it. Per feature the present non-NaN
+    /// values are sorted and `==`-merged exactly like `fit`, then the
+    /// implicit value `0.0` is merged in with multiplicity `n_rows −
+    /// present`, so the resulting distinct (value, count) list — and
+    /// therefore every boundary — is bit-identical to running `fit` on
+    /// the densified matrix. Present NaN entries count as *missing*
+    /// (they are neither zeros nor boundary mass), matching how `fit`
+    /// filters NaN from a densified column.
+    pub fn fit_sparse(data: &SparseDataset, max_bins: usize) -> Binner {
+        assert!(max_bins >= 2, "need at least 2 bins");
+        let n_rows = data.n_rows();
+        let boundaries = data
+            .x
+            .to_columns()
+            .into_iter()
+            .map(|(rows, vals)| {
+                let present = rows.len();
+                let mut v: Vec<f32> = vals.iter().copied().filter(|x| !x.is_nan()).collect();
+                let n_present = v.len();
+                v.sort_by(f32::total_cmp);
+                let mut distinct: Vec<(f32, usize)> = Vec::new();
+                for &x in &v {
+                    match distinct.last_mut() {
+                        Some((d, c)) if *d == x => *c += 1,
+                        _ => distinct.push((x, 1)),
+                    }
+                }
+                // Merge the implicit zeros. `== 0.0` matches an explicit
+                // -0.0 entry too, keeping its representative — the same
+                // value `fit` would keep after total_cmp-sorting the
+                // densified column (-0.0 sorts before 0.0, first wins).
+                let n_implicit = n_rows - present;
+                if n_implicit > 0 {
+                    if let Some((_, c)) = distinct.iter_mut().find(|(d, _)| *d == 0.0) {
+                        *c += n_implicit;
+                    } else {
+                        let at = distinct.partition_point(|(d, _)| {
+                            d.total_cmp(&0.0) == std::cmp::Ordering::Less
+                        });
+                        distinct.insert(at, (0.0, n_implicit));
+                    }
+                }
+                boundaries_from_distinct(&distinct, n_present + n_implicit, max_bins)
             })
             .collect();
         Binner { boundaries }
@@ -191,6 +250,48 @@ impl Binner {
     /// the input's feature columns).
     pub fn bin_matrix(&self, data: &Dataset) -> BinMatrix {
         self.bin_columns(&data.features, data.n_rows())
+    }
+
+    /// The bin of feature `f`'s implicit value `0.0` — what every
+    /// absent cell of a sparse matrix reads as.
+    #[inline]
+    pub fn default_bin(&self, f: usize) -> u16 {
+        self.bin_value(f, 0.0)
+    }
+
+    /// Bin a CSR matrix into a (possibly mixed) [`BinMatrix`] without
+    /// densifying: per feature, present entries are binned by the exact
+    /// [`Binner::bin_value`] rule (explicit `0.0` lands in the default
+    /// bin, present NaN in the top bin) and the column is stored as a
+    /// [`super::binmatrix::SparseBinColumn`] when its density is below
+    /// [`SPARSE_DENSITY_THRESHOLD`], or materialized into the dense
+    /// arena (absent rows filled with the default bin) otherwise. Cell
+    /// for cell the result equals `bin_matrix` on the densified input.
+    pub fn bin_sparse(&self, x: &CsrMatrix) -> BinMatrix {
+        assert_eq!(x.n_cols, self.n_features(), "feature count mismatch");
+        let n_rows = x.n_rows;
+        let bins_per_feature: Vec<usize> =
+            (0..self.n_features()).map(|f| self.n_bins(f)).collect();
+        let cols = x.to_columns();
+        let mixed: Vec<MixedCol> = cols
+            .into_iter()
+            .enumerate()
+            .map(|(f, (rows, vals))| {
+                let codes: Vec<u16> =
+                    vals.iter().map(|&v| self.bin_value(f, v)).collect();
+                let default_bin = self.default_bin(f);
+                if (rows.len() as f64) < SPARSE_DENSITY_THRESHOLD * n_rows as f64 {
+                    MixedCol::Sparse { rows, codes, default_bin }
+                } else {
+                    let mut col = vec![default_bin; n_rows];
+                    for (k, &r) in rows.iter().enumerate() {
+                        col[r as usize] = codes[k];
+                    }
+                    MixedCol::Dense(col)
+                }
+            })
+            .collect();
+        BinMatrix::from_mixed_cols(n_rows, &bins_per_feature, mixed)
     }
 
     /// The threshold *value* represented by boundary index `b` of feature
@@ -517,6 +618,113 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn sparse_fixture(density: f64, n: usize, seed: u64) -> crate::data::sparse::SparseDataset {
+        use crate::data::sparse::{CsrMatrix, SparseDataset};
+        let mut rng = Pcg64::new(seed);
+        let mut x = CsrMatrix::empty(4);
+        for _ in 0..n {
+            let mut row: Vec<(u32, f32)> = Vec::new();
+            for f in 0..4u32 {
+                if (rng.gen_range(1000) as f64) < density * 1000.0 {
+                    // Values straddle 0.0 so the default bin is interior;
+                    // draw 512 produces an explicit 0.0, and a rare NaN
+                    // exercises the present-NaN path.
+                    let v = if rng.gen_range(100) == 0 {
+                        f32::NAN
+                    } else {
+                        (rng.gen_range(1024) as f32 - 512.0) / 1024.0
+                    };
+                    row.push((f, v));
+                }
+            }
+            x.push_row(&row);
+        }
+        let targets = vec![0.0; n];
+        SparseDataset { name: "s".into(), x, targets, labels: vec![], task: Task::Regression }
+    }
+
+    #[test]
+    fn fit_sparse_boundaries_match_fit_on_densified() {
+        for density in [0.01, 0.2, 0.9] {
+            let sd = sparse_fixture(density, 600, 31);
+            let dense = sd.densify();
+            for max_bins in [16usize, 255, 400] {
+                let bs = Binner::fit_sparse(&sd, max_bins);
+                let bd = Binner::fit(&dense, max_bins);
+                for f in 0..4 {
+                    assert_eq!(
+                        bs.boundaries[f]
+                            .iter()
+                            .map(|b| b.to_bits())
+                            .collect::<Vec<u32>>(),
+                        bd.boundaries[f]
+                            .iter()
+                            .map(|b| b.to_bits())
+                            .collect::<Vec<u32>>(),
+                        "density={density} max_bins={max_bins} f={f}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bin_sparse_matches_densified_bin_matrix_cell_for_cell() {
+        for density in [0.01, 0.2, 0.9] {
+            let sd = sparse_fixture(density, 500, 33);
+            let dense = sd.densify();
+            let b = Binner::fit_sparse(&sd, 64);
+            let ms = b.bin_sparse(&sd.x);
+            let md = b.bin_matrix(&dense);
+            assert_eq!(ms.n_rows(), md.n_rows());
+            // Low densities store sparse columns, 0.9 stays fully dense.
+            assert_eq!(ms.has_sparse(), density < SPARSE_DENSITY_THRESHOLD);
+            for f in 0..4 {
+                for i in 0..ms.n_rows() {
+                    assert_eq!(ms.bin(f, i), md.bin(f, i), "density={density} f={f} i={i}");
+                }
+            }
+            assert_eq!(ms.to_row_major(), md.to_row_major());
+        }
+    }
+
+    #[test]
+    fn sparse_default_bin_is_bin_of_zero_and_interior() {
+        let sd = sparse_fixture(0.1, 800, 35);
+        let b = Binner::fit_sparse(&sd, 32);
+        for f in 0..4 {
+            assert_eq!(b.default_bin(f), b.bin_value(f, 0.0));
+            // Values straddle zero, so zero's bin must not be bin 0 or
+            // the top bin (the correction must hit an interior bin).
+            assert!(b.default_bin(f) > 0, "f={f}");
+            assert!((b.default_bin(f) as usize) < b.n_bins(f) - 1, "f={f}");
+        }
+    }
+
+    #[test]
+    fn present_nan_bins_to_top_not_default() {
+        use crate::data::sparse::CsrMatrix;
+        let mut x = CsrMatrix::empty(1);
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            x.push_row(&[(0, v)]);
+        }
+        x.push_row(&[(0, f32::NAN)]);
+        x.push_row(&[]); // absent → 0.0
+        let sd = crate::data::sparse::SparseDataset {
+            name: "nan".into(),
+            x,
+            targets: vec![0.0; 6],
+            labels: vec![],
+            task: Task::Regression,
+        };
+        let b = Binner::fit_sparse(&sd, 16);
+        let m = b.bin_sparse(&sd.x);
+        let top = b.boundaries[0].len() as u16;
+        assert_eq!(m.bin(0, 4), top, "present NaN routes to the top bin");
+        assert_eq!(m.bin(0, 5), b.default_bin(0), "absent row reads the default bin");
+        assert_ne!(top, b.default_bin(0));
     }
 
     #[test]

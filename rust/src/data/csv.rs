@@ -1,12 +1,17 @@
-//! Minimal CSV reader/writer for [`Dataset`]s.
+//! Minimal CSV reader/writer for [`Dataset`]s, plus a libsvm/svmlight
+//! loader for sparse data.
 //!
 //! Real data can be dropped into the experiments through this module
-//! (replacing the synthetic generators) — the format is a plain numeric
-//! CSV with a header row; the label/target column is named `target`.
-//! No external CSV crate is available offline, so this is a small,
-//! strict parser: numeric fields only, comma separator, no quoting.
+//! (replacing the synthetic generators) — the dense format is a plain
+//! numeric CSV with a header row; the label/target column is named
+//! `target`. The sparse format is standard libsvm: one `label
+//! idx:value ...` line per row with 1-based strictly increasing
+//! indices. No external parsing crate is available offline, so both
+//! are small, strict parsers: malformed lines are a clean `Err`, never
+//! a panic.
 
 use super::dataset::{Dataset, Task};
+use super::sparse::SparseDataset;
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
@@ -51,6 +56,68 @@ pub fn read_csv(path: &Path, name: &str, task: Task) -> crate::error::Result<Dat
     }
     let ds = Dataset { name: name.to_string(), features, targets, labels, task };
     ds.validate().map_err(|e| crate::anyhow!(e))?;
+    Ok(ds)
+}
+
+/// Read a sparse dataset in libsvm/svmlight format: one row per line,
+/// `label idx:value idx:value ...`, indices 1-based and strictly
+/// increasing within a line. Blank lines and lines starting with `#`
+/// are skipped; anything else malformed (truncated `idx:` pairs,
+/// non-numeric fields, index 0, out-of-order indices, labels that do
+/// not fit `task`) is a clean `Err` naming the line. The feature count
+/// is the largest index seen; `values` accepts anything `f32` parses,
+/// including `nan` (a present NaN, which bins to the top bin — it is
+/// *not* an absent cell).
+pub fn read_libsvm(path: &Path, name: &str, task: Task) -> crate::error::Result<SparseDataset> {
+    let file = std::fs::File::open(path)?;
+    let mut x = super::sparse::CsrMatrix::empty(0);
+    let mut targets: Vec<f64> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut max_col = 0u32;
+
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let bad = |what: &str| crate::anyhow!("line {}: {what}: {line:?}", lineno + 1);
+        let mut fields = line.split_ascii_whitespace();
+        let label = fields.next().ok_or_else(|| bad("missing label"))?;
+        let label: f64 = label.parse().map_err(|_| bad("unparseable label"))?;
+        match task {
+            Task::Regression => targets.push(label),
+            Task::Binary => labels.push(if label > 0.0 { 1 } else { 0 }),
+            Task::Multiclass(c) => {
+                if label.fract() != 0.0 || label < 0.0 || label >= c as f64 {
+                    return Err(bad(&format!("label out of range for {c} classes")));
+                }
+                labels.push(label as usize);
+            }
+        }
+        let mut row: Vec<(u32, f32)> = Vec::new();
+        for pair in fields {
+            let (idx, val) =
+                pair.split_once(':').ok_or_else(|| bad("feature without `idx:value`"))?;
+            let idx: u32 = idx.parse().map_err(|_| bad("unparseable feature index"))?;
+            if idx == 0 {
+                return Err(bad("libsvm indices are 1-based; found index 0"));
+            }
+            let val: f32 = val.parse().map_err(|_| bad("unparseable feature value"))?;
+            let col = idx - 1;
+            if let Some(&(prev, _)) = row.last() {
+                if prev >= col {
+                    return Err(bad("feature indices must be strictly increasing"));
+                }
+            }
+            max_col = max_col.max(col);
+            row.push((col, val));
+        }
+        x.push_row(&row);
+    }
+    x.n_cols = if x.nnz() == 0 { 0 } else { max_col as usize + 1 };
+    let ds = SparseDataset { name: name.to_string(), x, targets, labels, task };
+    ds.validate().map_err(|e| crate::anyhow!("{}: {e}", path.display()))?;
     Ok(ds)
 }
 
@@ -137,5 +204,80 @@ mod tests {
         std::fs::write(&path, "f0,target\n1,0\n1,2,3\n").unwrap();
         assert!(read_csv(&path, "x", Task::Binary).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    fn libsvm_file(tag: &str, body: &str) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!("toad_test_libsvm_{tag}.txt"));
+        std::fs::write(&path, body).unwrap();
+        path
+    }
+
+    #[test]
+    fn libsvm_parses_regression_rows() {
+        let path = libsvm_file(
+            "reg",
+            "# comment line\n1.5 1:0.5 3:-2.0\n\n-0.25 2:1.0\n0 \n",
+        );
+        let d = read_libsvm(&path, "reg", Task::Regression).unwrap();
+        assert_eq!(d.n_rows(), 3);
+        assert_eq!(d.n_features(), 3); // max index 3 → 3 columns
+        assert_eq!(d.targets, vec![1.5, -0.25, 0.0]);
+        assert_eq!(d.x.row(0), (&[0u32, 2][..], &[0.5f32, -2.0][..]));
+        assert_eq!(d.x.row(1), (&[1u32][..], &[1.0f32][..]));
+        assert_eq!(d.x.row(2), (&[][..], &[][..]));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn libsvm_binary_maps_signed_labels() {
+        let path = libsvm_file("bin", "+1 1:2.0\n-1 2:3.0\n");
+        let d = read_libsvm(&path, "bin", Task::Binary).unwrap();
+        assert_eq!(d.labels, vec![1, 0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn libsvm_nan_value_is_present_not_absent() {
+        let path = libsvm_file("nan", "1.0 1:nan 2:1.0\n");
+        let d = read_libsvm(&path, "nan", Task::Regression).unwrap();
+        assert!(d.x.row(0).1[0].is_nan());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn libsvm_rejects_malformed_lines_cleanly() {
+        // Each malformed body must produce an `Err` (never a panic) that
+        // names the offending line.
+        let cases: &[(&str, &str)] = &[
+            ("truncated", "1.0 3:\n"),
+            ("no_colon", "1.0 3\n"),
+            ("garbage", "1.0 banana\n"),
+            ("garbage_idx", "1.0 x:1.5\n"),
+            ("idx_zero", "1.0 0:1.5\n"),
+            ("out_of_order", "1.0 2:1.0 2:2.0\n"),
+            ("decreasing", "1.0 3:1.0 1:2.0\n"),
+            ("bad_label", "cat 1:1.0\n"),
+            ("empty_line_label", "1:1.0\n"), // bare pair: label slot unparseable
+        ];
+        for (tag, body) in cases {
+            let path = libsvm_file(tag, body);
+            let err = read_libsvm(&path, "x", Task::Regression).unwrap_err();
+            assert!(
+                err.to_string().contains("line 1"),
+                "{tag}: error should name the line, got: {err}"
+            );
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn libsvm_rejects_out_of_range_multiclass_label() {
+        let path = libsvm_file("mc", "3 1:1.0\n");
+        assert!(read_libsvm(&path, "mc", Task::Multiclass(3)).is_err());
+        let path2 = libsvm_file("mc_ok", "2 1:1.0\n0 2:1.0\n");
+        let d = read_libsvm(&path2, "mc", Task::Multiclass(3)).unwrap();
+        assert_eq!(d.labels, vec![2, 0]);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
     }
 }

@@ -12,10 +12,12 @@ pub mod binmatrix;
 pub mod binning;
 pub mod csv;
 pub mod dataset;
+pub mod sparse;
 pub mod splits;
 pub mod synth;
 
 pub use binmatrix::{BinColumns, BinMatrix, BinSource, ChunkedBinMatrix};
-pub use binning::Binner;
+pub use binning::{Binner, SPARSE_DENSITY_THRESHOLD};
 pub use dataset::{Dataset, Task};
+pub use sparse::{train_test_split_sparse, CsrMatrix, SparseDataset};
 pub use splits::{kfold, train_test_split, train_valid_test_split};

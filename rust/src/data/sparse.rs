@@ -1,0 +1,362 @@
+//! Sparse (CSR) feature matrices and datasets.
+//!
+//! High-dimensional telemetry (one-hot/categorical-heavy, hashed
+//! features) is mostly *absent*: a cell that is not stored carries the
+//! implicit value `0.0`. [`CsrMatrix`] is the standard compressed
+//! sparse row triple (`row_ptr` / `col_idx` / `values`) over `f32`
+//! values, and [`SparseDataset`] pairs it with the same target/label/
+//! task fields as the dense [`Dataset`] so the training and scoring
+//! surfaces mirror each other.
+//!
+//! Semantics pinned here and relied on by the whole sparse pipeline
+//! (`data::binning`, `gbdt::histogram`, `inference::quantized`):
+//!
+//! * an **absent** cell means exactly `0.0` — densifying and training
+//!   dense must see the same values the sparse path sees;
+//! * a **present** `0.0` (an explicitly stored zero) is legal and
+//!   equivalent to an absent cell value-wise; it is kept verbatim in
+//!   the stored representation;
+//! * a **present NaN is not an absent cell**: NaN keeps its dense
+//!   meaning (skipped by the binner fit, routed to the top bin when
+//!   binned) and never collapses to the implicit `0.0`;
+//! * column indices within a row are **strictly increasing** — the
+//!   loaders and generators produce this order and [`CsrMatrix::validate`]
+//!   enforces it, so per-column row lists derived from a CSR walk are
+//!   ascending by construction (the add order every sparse kernel pins).
+
+use super::dataset::{Dataset, Task};
+
+/// Compressed sparse row matrix over `f32` values.
+///
+/// `row_ptr` has `n_rows + 1` entries; row `i` owns
+/// `col_idx[row_ptr[i]..row_ptr[i+1]]` / `values[..]`, with strictly
+/// increasing column indices inside each row.
+#[derive(Clone, Debug, Default)]
+pub struct CsrMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// An empty matrix with `n_cols` columns and no rows.
+    pub fn empty(n_cols: usize) -> CsrMatrix {
+        CsrMatrix { n_rows: 0, n_cols, row_ptr: vec![0], col_idx: Vec::new(), values: Vec::new() }
+    }
+
+    /// Number of stored (present) entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of stored cells, `nnz / (rows × cols)` (`0.0` when
+    /// either dimension is zero).
+    pub fn density(&self) -> f64 {
+        let cells = self.n_rows * self.n_cols;
+        if cells == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+
+    /// The stored entries of row `i` as `(column indices, values)`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.values[s..e])
+    }
+
+    /// Append one row given its `(col, value)` pairs (columns must be
+    /// strictly increasing and `< n_cols`; checked by `validate`, not
+    /// here).
+    pub fn push_row(&mut self, entries: &[(u32, f32)]) {
+        for &(c, v) in entries {
+            self.col_idx.push(c);
+            self.values.push(v);
+        }
+        self.n_rows += 1;
+        self.row_ptr.push(self.col_idx.len());
+    }
+
+    /// Structural invariants: pointer shape, monotone `row_ptr`,
+    /// in-range and strictly increasing column indices per row.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.n_rows + 1 {
+            return Err(format!(
+                "row_ptr has {} entries, expected n_rows + 1 = {}",
+                self.row_ptr.len(),
+                self.n_rows + 1
+            ));
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.col_idx.len() {
+            return Err("row_ptr must start at 0 and end at nnz".into());
+        }
+        if self.col_idx.len() != self.values.len() {
+            return Err("col_idx and values lengths differ".into());
+        }
+        for i in 0..self.n_rows {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            if s > e {
+                return Err(format!("row_ptr not monotone at row {i}"));
+            }
+            let cols = &self.col_idx[s..e];
+            for (k, &c) in cols.iter().enumerate() {
+                if c as usize >= self.n_cols {
+                    return Err(format!("row {i}: column {c} out of range ({})", self.n_cols));
+                }
+                if k > 0 && cols[k - 1] >= c {
+                    return Err(format!(
+                        "row {i}: column indices not strictly increasing ({} then {c})",
+                        cols[k - 1]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Column-major view: per column, the `(ascending row indices,
+    /// values)` of its present entries. One counting pass over the CSR
+    /// body — rows are walked in order, so each column's row list comes
+    /// out ascending (the order the sparse kernels pin).
+    pub fn to_columns(&self) -> Vec<(Vec<u32>, Vec<f32>)> {
+        let mut counts = vec![0usize; self.n_cols];
+        for &c in &self.col_idx {
+            counts[c as usize] += 1;
+        }
+        let mut out: Vec<(Vec<u32>, Vec<f32>)> = counts
+            .iter()
+            .map(|&c| (Vec::with_capacity(c), Vec::with_capacity(c)))
+            .collect();
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let slot = &mut out[c as usize];
+                slot.0.push(i as u32);
+                slot.1.push(v);
+            }
+        }
+        out
+    }
+
+    /// Dense column-major mirror: absent cells become `0.0`, present
+    /// entries (including explicit zeros and NaNs) are kept verbatim.
+    pub fn densify(&self) -> Vec<Vec<f32>> {
+        let mut cols = vec![vec![0f32; self.n_rows]; self.n_cols];
+        for i in 0..self.n_rows {
+            let (cidx, vals) = self.row(i);
+            for (&c, &v) in cidx.iter().zip(vals) {
+                cols[c as usize][i] = v;
+            }
+        }
+        cols
+    }
+
+    /// Rows `idx` (in the given order) as a new matrix.
+    pub fn select(&self, idx: &[usize]) -> CsrMatrix {
+        let mut out = CsrMatrix::empty(self.n_cols);
+        for &i in idx {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            out.col_idx.extend_from_slice(&self.col_idx[s..e]);
+            out.values.extend_from_slice(&self.values[s..e]);
+            out.n_rows += 1;
+            out.row_ptr.push(out.col_idx.len());
+        }
+        out
+    }
+}
+
+/// A sparse dataset: CSR features plus the same target/label/task
+/// fields as [`Dataset`]. [`SparseDataset::densify`] produces the exact
+/// dense equivalent (absent → `0.0`), which is what every bit-parity
+/// test trains against.
+#[derive(Clone, Debug)]
+pub struct SparseDataset {
+    pub name: String,
+    pub x: CsrMatrix,
+    pub targets: Vec<f64>,
+    pub labels: Vec<usize>,
+    pub task: Task,
+}
+
+impl SparseDataset {
+    pub fn n_rows(&self) -> usize {
+        self.x.n_rows
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.n_cols
+    }
+
+    /// The dense equivalent dataset: absent cells become `0.0`,
+    /// everything else (name, targets, labels, task) is carried over.
+    pub fn densify(&self) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            features: self.x.densify(),
+            targets: self.targets.clone(),
+            labels: self.labels.clone(),
+            task: self.task,
+        }
+    }
+
+    /// Rows `idx` (in the given order) as a new dataset.
+    pub fn select(&self, idx: &[usize]) -> SparseDataset {
+        SparseDataset {
+            name: self.name.clone(),
+            x: self.x.select(idx),
+            targets: idx.iter().map(|&i| self.targets.get(i).copied().unwrap_or(0.0)).collect(),
+            labels: if self.labels.is_empty() {
+                Vec::new()
+            } else {
+                idx.iter().map(|&i| self.labels[i]).collect()
+            },
+            task: self.task,
+        }
+    }
+
+    /// Widen the feature space to `n` columns (feature alignment when a
+    /// libsvm test file mentions fewer indices than the train file).
+    /// Errors if the matrix already has more columns than `n`.
+    pub fn pad_features(&mut self, n: usize) -> Result<(), String> {
+        if self.x.n_cols > n {
+            return Err(format!(
+                "cannot shrink feature space: have {} columns, requested {n}",
+                self.x.n_cols
+            ));
+        }
+        self.x.n_cols = n;
+        Ok(())
+    }
+
+    /// Structural + label invariants, mirroring [`Dataset::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        self.x.validate()?;
+        match self.task {
+            Task::Regression => {
+                if self.targets.len() != self.x.n_rows {
+                    return Err(format!(
+                        "{} targets for {} rows",
+                        self.targets.len(),
+                        self.x.n_rows
+                    ));
+                }
+            }
+            _ => {
+                if self.labels.len() != self.x.n_rows {
+                    return Err(format!("{} labels for {} rows", self.labels.len(), self.x.n_rows));
+                }
+                let c = self.task.n_classes();
+                if let Some(&bad) = self.labels.iter().find(|&&l| l >= c) {
+                    return Err(format!("label {bad} out of range for {c} classes"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Random train/test split of a sparse dataset — the **same** shuffle
+/// as [`super::splits::train_test_split`] (same seed mix, same index
+/// permutation, same rounding), so splitting a sparse dataset and
+/// splitting its densified twin select identical rows.
+pub fn train_test_split_sparse(
+    data: &SparseDataset,
+    test_frac: f64,
+    seed: u64,
+) -> (SparseDataset, SparseDataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let n = data.n_rows();
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = crate::prng::Pcg64::new(seed ^ 0x5111_7000);
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    (data.select(train_idx), data.select(test_idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        let mut m = CsrMatrix::empty(4);
+        m.push_row(&[(0, 1.0), (2, -2.0)]);
+        m.push_row(&[]);
+        m.push_row(&[(1, 0.0), (3, f32::NAN)]);
+        m
+    }
+
+    #[test]
+    fn csr_shape_and_access() {
+        let m = sample();
+        m.validate().unwrap();
+        assert_eq!(m.n_rows, 3);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(0), (&[0u32, 2][..], &[1.0f32, -2.0][..]));
+        assert_eq!(m.row(1), (&[][..], &[][..]));
+        let cols = m.to_columns();
+        assert_eq!(cols[0], (vec![0], vec![1.0]));
+        assert_eq!(cols[1], (vec![2], vec![0.0]));
+        assert_eq!(cols[2], (vec![0], vec![-2.0]));
+        assert_eq!(cols[3].0, vec![2]);
+        assert!(cols[3].1[0].is_nan());
+    }
+
+    #[test]
+    fn densify_fills_absent_with_zero_and_keeps_nan() {
+        let d = sample().densify();
+        assert_eq!(d[0], vec![1.0, 0.0, 0.0]);
+        assert_eq!(d[1], vec![0.0, 0.0, 0.0]); // explicit 0.0 present
+        assert_eq!(d[2], vec![-2.0, 0.0, 0.0]);
+        assert!(d[3][2].is_nan());
+        assert_eq!(d[3][0], 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_malformed() {
+        let mut m = sample();
+        m.col_idx[1] = 9; // out of range
+        assert!(m.validate().is_err());
+        let mut m = sample();
+        m.col_idx[1] = 0; // duplicates column 0 in row 0
+        assert!(m.validate().is_err());
+        let mut m = sample();
+        m.row_ptr[1] = 5; // not monotone / past nnz
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn select_reorders_rows() {
+        let m = sample();
+        let s = m.select(&[2, 0]);
+        s.validate().unwrap();
+        assert_eq!(s.n_rows, 2);
+        assert_eq!(s.row(1), m.row(0));
+        assert_eq!(s.row(0).0, m.row(2).0);
+    }
+
+    #[test]
+    fn sparse_split_matches_dense_split_rows() {
+        // Same permutation as `train_test_split` on the densified twin.
+        let mut x = CsrMatrix::empty(3);
+        for i in 0..20u32 {
+            x.push_row(&[(i % 3, i as f32)]);
+        }
+        let ds = SparseDataset {
+            name: "s".into(),
+            x,
+            targets: (0..20).map(|i| i as f64).collect(),
+            labels: vec![],
+            task: Task::Regression,
+        };
+        let dense = ds.densify();
+        let (tr_s, te_s) = train_test_split_sparse(&ds, 0.25, 7);
+        let (tr_d, te_d) = super::super::splits::train_test_split(&dense, 0.25, 7);
+        assert_eq!(tr_s.targets, tr_d.targets);
+        assert_eq!(te_s.targets, te_d.targets);
+        assert_eq!(tr_s.densify().features, tr_d.features);
+    }
+}

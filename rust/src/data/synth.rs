@@ -473,6 +473,59 @@ pub fn synth_rows(seed: u64, range: std::ops::Range<usize>) -> (Vec<Vec<f32>>, V
     (features, targets)
 }
 
+/// Range-restartable streaming **sparse** row generator — the CSR twin
+/// of [`synth_rows`], for sparse parity tests and benches.
+///
+/// Each row draws from a fresh [`Pcg64`] seeded from `(seed, global row
+/// index)`, so any block decomposition concatenates exactly:
+/// `synth_sparse_rows(s, a..b, ..)` then `synth_sparse_rows(s, b..c, ..)`
+/// appends to the same matrix as `synth_sparse_rows(s, a..c, ..)`.
+///
+/// Per feature, the cell is present with probability `density`; a value
+/// is only drawn when present (presence and value draws stay aligned
+/// across block boundaries). Values are quantized to a 1024-level grid
+/// in `[-0.5, 0.5)`, straddling the implicit `0.0` so the default bin
+/// is *interior* — the histogram correction and split routing around it
+/// get exercised, not just the degenerate "zero is the lowest bin"
+/// case. Draw 512 produces an explicit `0.0`: a present cell whose
+/// value equals the implicit one, stored verbatim. The target is the
+/// same smooth interaction as `synth_rows`, evaluated over the
+/// implicit-zero-filled values.
+pub fn synth_sparse_rows(
+    seed: u64,
+    range: std::ops::Range<usize>,
+    n_features: usize,
+    density: f64,
+) -> (super::sparse::CsrMatrix, Vec<f64>) {
+    assert!((0.0..=1.0).contains(&density));
+    let present_cut = (density * 1e6) as usize;
+    let mut x = super::sparse::CsrMatrix::empty(n_features);
+    let mut targets = Vec::with_capacity(range.len());
+    let mut row_buf: Vec<(u32, f32)> = Vec::with_capacity(n_features);
+    for row in range {
+        let row_salt = (row as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut rng = Pcg64::new(seed ^ fxhash("synth_sparse_rows") ^ row_salt);
+        row_buf.clear();
+        let mut vals = [0f32; 5];
+        for f in 0..n_features {
+            if rng.gen_range(1_000_000) < present_cut {
+                let v = (rng.gen_range(1024) as f32 - 512.0) / 1024.0;
+                row_buf.push((f as u32, v));
+                if f < 5 {
+                    vals[f] = v;
+                }
+            }
+        }
+        let t = (vals[0] as f64 * 4.0).sin()
+            + vals[1] as f64 * 3.0
+            + vals[2] as f64 * vals[3] as f64
+            - 0.5 * vals[4] as f64;
+        x.push_row(&row_buf);
+        targets.push(t);
+    }
+    (x, targets)
+}
+
 #[cfg(test)]
 #[cfg(not(miri))] // trains models / generates datasets - too slow under the Miri interpreter
 mod tests {
@@ -505,6 +558,43 @@ mod tests {
             assert_eq!(x, full_x);
             assert_eq!(y, full_y);
         }
+    }
+
+    #[test]
+    fn synth_sparse_rows_blocks_concatenate_exactly() {
+        let (full_x, full_y) = synth_sparse_rows(9, 0..100, 24, 0.15);
+        full_x.validate().unwrap();
+        for splits in [vec![0, 1, 100], vec![0, 37, 64, 100], vec![0, 100]] {
+            let mut x = crate::data::sparse::CsrMatrix::empty(24);
+            let mut y = Vec::new();
+            for w in splits.windows(2) {
+                let (bx, by) = synth_sparse_rows(9, w[0]..w[1], 24, 0.15);
+                for i in 0..bx.n_rows {
+                    let (cols, vals) = bx.row(i);
+                    let entries: Vec<(u32, f32)> =
+                        cols.iter().zip(vals).map(|(&c, &v)| (c, v)).collect();
+                    x.push_row(&entries);
+                }
+                y.extend(by);
+            }
+            assert_eq!(x.row_ptr, full_x.row_ptr);
+            assert_eq!(x.col_idx, full_x.col_idx);
+            assert_eq!(
+                x.values.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                full_x.values.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+            );
+            assert_eq!(y, full_y);
+        }
+    }
+
+    #[test]
+    fn synth_sparse_rows_hits_requested_density() {
+        let (x, _) = synth_sparse_rows(3, 0..4000, 32, 0.05);
+        let d = x.density();
+        assert!((0.03..0.07).contains(&d), "density {d} far from 0.05");
+        // Values straddle zero (both signs occur).
+        assert!(x.values.iter().any(|&v| v < 0.0));
+        assert!(x.values.iter().any(|&v| v > 0.0));
     }
 
     #[test]

@@ -12,7 +12,7 @@ use super::loss::Objective;
 use super::model::GbdtModel;
 use super::splitter::{NoPenalty, SplitParams, SplitPenalty};
 use super::tree::{Node, Tree};
-use crate::data::{BinMatrix, BinSource, Binner, ChunkedBinMatrix, Dataset, Task};
+use crate::data::{BinMatrix, BinSource, Binner, ChunkedBinMatrix, Dataset, SparseDataset, Task};
 
 /// Hyperparameters of a boosting run. Field names follow the paper's
 /// grid (§4): `n_rounds` = "maximum number of iterations", `max_depth` =
@@ -168,6 +168,30 @@ impl<P: SplitPenalty> Booster<P> {
         train.validate().expect("invalid training dataset");
         let binner = Binner::fit(train, params.max_bins);
         let store = BinStore::Ram(binner.bin_matrix(train));
+        Booster::from_parts(
+            binner,
+            store,
+            train.targets.clone(),
+            train.labels.clone(),
+            train.task,
+            train.name.clone(),
+            params,
+            penalty,
+        )
+    }
+
+    /// Sparse constructor: fit the binner over the CSR matrix without
+    /// densifying ([`Binner::fit_sparse`]) and bin it into a mixed
+    /// sparse/dense arena ([`Binner::bin_sparse`]); training then runs
+    /// the O(nnz) sparse histogram kernel on the sparse-stored columns.
+    /// Boundaries are bit-identical to fitting the densified twin, and
+    /// on integer-exact statistics the grown model matches the dense
+    /// path bit for bit (see the contract in [`super::histogram`];
+    /// pinned in `tests/sparse_parity.rs`).
+    pub fn from_sparse(train: &SparseDataset, params: GbdtParams, penalty: P) -> Booster<P> {
+        train.validate().expect("invalid sparse training dataset");
+        let binner = Binner::fit_sparse(train, params.max_bins);
+        let store = BinStore::Ram(binner.bin_sparse(&train.x));
         Booster::from_parts(
             binner,
             store,
@@ -458,6 +482,25 @@ pub fn train_with_penalty<P: SplitPenalty>(
     penalty: P,
 ) -> (GbdtModel, P) {
     let mut b = Booster::new(data, params, penalty);
+    b.run();
+    let Booster { model, penalty, .. } = b;
+    (model, penalty)
+}
+
+/// One-shot sparse training without penalties ([`Booster::from_sparse`]).
+pub fn train_sparse(data: &SparseDataset, params: GbdtParams) -> GbdtModel {
+    let mut b = Booster::from_sparse(data, params, NoPenalty);
+    b.run();
+    b.into_model()
+}
+
+/// One-shot sparse training with a custom penalty.
+pub fn train_sparse_with_penalty<P: SplitPenalty>(
+    data: &SparseDataset,
+    params: GbdtParams,
+    penalty: P,
+) -> (GbdtModel, P) {
+    let mut b = Booster::from_sparse(data, params, penalty);
     b.run();
     let Booster { model, penalty, .. } = b;
     (model, penalty)

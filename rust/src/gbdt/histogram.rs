@@ -72,7 +72,42 @@
 //! parity tests and benches, and the sharded build composes with the
 //! SIMD kernels (each worker runs the same tier-dispatched loops over
 //! its feature range).
+//!
+//! # The sparse kernel (§Perf iteration 10)
+//!
+//! Columns a [`BinMatrix`] stores sparse (`SparseBinColumn`: present
+//! rows + codes + default bin) accumulate in O(leaf-local nnz) instead
+//! of O(|leaf|): only present entries scatter, then one closed-form
+//! **default-bin correction** per statistic lands everything absent —
+//! `hist[default] += (leaf_total − present_sum)` for grad, hess, and
+//! count (every absent cell is exactly the implicit `0.0`, so they all
+//! share one bin). The add order is pinned:
+//!
+//! 1. per feature, present entries in **ascending row order** (the
+//!    merge-advance intersection of the ascending leaf rows with the
+//!    ascending present rows — sparse-aware builds require ascending
+//!    row sets, which leaf row sets always are);
+//! 2. then exactly **one** correction add per statistic into the
+//!    default bin, computed from leaf totals folded **once** per build
+//!    in ascending row order and shared by every feature and every
+//!    shard (so the feature-sharded build is bit-identical for every
+//!    shard count).
+//!
+//! Sparse columns take this scalar walk on *every* SIMD tier (the tier
+//! only dispatches the dense columns of a mixed matrix), so all (tier,
+//! shard count) combinations are bit-identical **within the sparse
+//! family**. The result is *not* claimed bit-identical to densifying
+//! and running the dense kernel on arbitrary floats: `fl(T − P)`
+//! regroups the f64 adds the dense path performs row by row, and f64
+//! addition is not associative. On integer-exact statistics the two
+//! families coincide exactly — pinned in `tests/sparse_parity.rs`, the
+//! same contract `tests/out_of_core_parity.rs` pins for the row-sharded
+//! fold. The row-sharded build composes too: each grid cell corrects
+//! from its own sub-range's totals, so the per-worker-count invariance
+//! argument of [`HistogramPool::build_row_sharded`] carries over
+//! unchanged.
 
+use crate::data::binmatrix::{ColView, SparseBinColumn};
 use crate::data::{BinColumns, BinMatrix, BinSource, ChunkedBinMatrix};
 use crate::gbdt::distributed::{shard_bounds, SumReducer, Reducer, REDUCE_SHARDS};
 use crate::simd::{self, Code, Tier};
@@ -159,6 +194,137 @@ fn accumulate_shard<T: Code>(
     }
 }
 
+/// [`accumulate_shard`]'s twin for mixed sparse/dense matrices: dense
+/// columns run the same tier-dispatched SIMD accumulators, sparse
+/// columns run [`accumulate_sparse`]. `totals` is the leaf's `(G, H,
+/// count)` fold, computed once by the caller and shared across every
+/// feature and shard (see the module docs' pinned-order contract).
+#[allow(clippy::too_many_arguments)]
+fn accumulate_shard_mixed(
+    tier: Tier,
+    chunk: &mut [f64],
+    offsets: &[usize],
+    range: std::ops::Range<usize>,
+    binned: &BinMatrix,
+    dense: bool,
+    rows: &[u32],
+    grad: &[f64],
+    hess: &[f64],
+    og: &[f64],
+    oh: &[f64],
+    totals: (f64, f64, f64),
+) {
+    debug_assert!(
+        dense || rows.windows(2).all(|w| w[0] < w[1]),
+        "sparse-aware builds require ascending row sets"
+    );
+    let base = offsets[range.start];
+    for f in range {
+        let off = offsets[f] - base;
+        match binned.col_view(f) {
+            ColView::U8(col) => {
+                if dense {
+                    simd::accumulate_dense(tier, chunk, off, col, grad, hess);
+                } else {
+                    simd::accumulate_gathered(tier, chunk, off, col, rows, og, oh);
+                }
+            }
+            ColView::U16(col) => {
+                if dense {
+                    simd::accumulate_dense(tier, chunk, off, col, grad, hess);
+                } else {
+                    simd::accumulate_gathered(tier, chunk, off, col, rows, og, oh);
+                }
+            }
+            ColView::Sparse(sc) => {
+                accumulate_sparse(chunk, off, sc, dense, rows, grad, hess, totals);
+            }
+        }
+    }
+}
+
+/// The O(leaf-local nnz) sparse column kernel: scatter the present
+/// entries that fall in the leaf (ascending row order — a merge-advance
+/// intersection when the leaf is a subset, a straight sweep when it is
+/// the whole dataset), tallying their `(G, H, count)` sums on the way,
+/// then land everything absent in the default bin with one correction
+/// add per statistic: `leaf totals − present sums`. Scalar on every
+/// SIMD tier, which is what makes all tiers bit-identical here.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_sparse(
+    chunk: &mut [f64],
+    off: usize,
+    sc: &SparseBinColumn,
+    dense: bool,
+    rows: &[u32],
+    grad: &[f64],
+    hess: &[f64],
+    totals: (f64, f64, f64),
+) {
+    let prows = sc.present_rows();
+    let codes = sc.present_codes();
+    let (mut pg, mut ph, mut pc) = (0.0f64, 0.0f64, 0.0f64);
+    if dense {
+        // Whole leaf: every present entry is in the row set.
+        for (k, &r) in prows.iter().enumerate() {
+            let i = r as usize;
+            let (g, h) = (grad[i], hess[i]);
+            let b = 3 * (off + codes[k] as usize);
+            chunk[b] += g;
+            chunk[b + 1] += h;
+            chunk[b + 2] += 1.0;
+            pg += g;
+            ph += h;
+            pc += 1.0;
+        }
+    } else {
+        let mut p = 0usize;
+        for &i in rows {
+            while p < prows.len() && prows[p] < i {
+                p += 1;
+            }
+            if p == prows.len() {
+                break;
+            }
+            if prows[p] == i {
+                let (g, h) = (grad[i as usize], hess[i as usize]);
+                let b = 3 * (off + codes[p] as usize);
+                chunk[b] += g;
+                chunk[b + 1] += h;
+                chunk[b + 2] += 1.0;
+                pg += g;
+                ph += h;
+                pc += 1.0;
+            }
+        }
+    }
+    let db = 3 * (off + sc.default_bin() as usize);
+    chunk[db] += totals.0 - pg;
+    chunk[db + 1] += totals.1 - ph;
+    chunk[db + 2] += totals.2 - pc;
+}
+
+/// The leaf's `(G, H, count)` totals as one ascending-row f64 fold —
+/// the shared input of every sparse column's default-bin correction.
+/// Folded over `0..n` when the leaf is the whole dataset (row *order*
+/// is then irrelevant to the dense kernels, so the fold must not depend
+/// on it either) and over the ascending `rows` otherwise.
+fn leaf_totals(n: usize, rows: &[u32], grad: &[f64], hess: &[f64]) -> (f64, f64, f64) {
+    let (mut g, mut h) = (0.0f64, 0.0f64);
+    if rows.len() == n {
+        for i in 0..n {
+            g += grad[i];
+            h += hess[i];
+        }
+    } else {
+        for &i in rows {
+            g += grad[i as usize];
+            h += hess[i as usize];
+        }
+    }
+    (g, h, rows.len() as f64)
+}
+
 impl HistogramSet {
     /// Allocate for the given per-feature bin counts.
     pub fn new(bins_per_feature: &[usize]) -> HistogramSet {
@@ -229,7 +395,7 @@ impl HistogramSet {
     ) {
         self.reset();
         let n = binned.n_rows();
-        if rows.len() == n {
+        if rows.len() == n && !binned.has_sparse() {
             // Row sets hold distinct indices, so full length ⇒ the whole
             // dataset: iteration order is free (sums commute up to fp
             // rounding) and the indirection drops out.
@@ -237,6 +403,15 @@ impl HistogramSet {
                 BinColumns::U8(a) => self.dense_cols(tier, a, n, grad, hess),
                 BinColumns::U16(a) => self.dense_cols(tier, a, n, grad, hess),
             }
+            return;
+        }
+        if binned.has_sparse() && rows.len() == n {
+            let totals = leaf_totals(n, rows, grad, hess);
+            let nf = self.n_features();
+            let HistogramSet { offsets, data } = self;
+            accumulate_shard_mixed(
+                tier, data, offsets, 0..nf, binned, true, rows, grad, hess, &[], &[], totals,
+            );
             return;
         }
         // Ordered gather: one random-access pass over grad/hess instead
@@ -249,6 +424,15 @@ impl HistogramSet {
         for &i in rows {
             og.push(grad[i as usize]);
             oh.push(hess[i as usize]);
+        }
+        if binned.has_sparse() {
+            let totals = leaf_totals(n, rows, grad, hess);
+            let nf = self.n_features();
+            let HistogramSet { offsets, data } = self;
+            accumulate_shard_mixed(
+                tier, data, offsets, 0..nf, binned, false, rows, grad, hess, og, oh, totals,
+            );
+            return;
         }
         match binned.columns() {
             BinColumns::U8(a) => self.gathered_cols(tier, a, n, rows, og, oh),
@@ -291,6 +475,25 @@ impl HistogramSet {
     pub fn build_scalar(&mut self, binned: &BinMatrix, rows: &[u32], grad: &[f64], hess: &[f64]) {
         self.reset();
         let n = binned.n_rows();
+        if binned.has_sparse() {
+            // Densified oracle over a mixed matrix: one random-access
+            // `bin` lookup per (row, feature), scattering in row order
+            // exactly like the dense scalar loop would on the densified
+            // twin — the O(rows × features) reference the O(nnz) kernel
+            // is checked against.
+            for f in 0..self.n_features() {
+                let off = self.offsets[f];
+                let data = &mut self.data;
+                for &i in rows {
+                    let i = i as usize;
+                    let b = 3 * (off + binned.bin(f, i) as usize);
+                    data[b] += grad[i];
+                    data[b + 1] += hess[i];
+                    data[b + 2] += 1.0;
+                }
+            }
+            return;
+        }
         match binned.columns() {
             BinColumns::U8(a) => self.scalar_cols(a, n, rows, grad, hess),
             BinColumns::U16(a) => self.scalar_cols(a, n, rows, grad, hess),
@@ -396,6 +599,12 @@ impl HistogramSet {
         }
         let og: &[f64] = og;
         let oh: &[f64] = oh;
+        // Leaf totals for the sparse columns' default-bin correction:
+        // folded once here, shared read-only by every shard, so the
+        // correction is identical for every shard count.
+        let has_sparse = binned.has_sparse();
+        let totals =
+            if has_sparse { leaf_totals(n, rows, grad, hess) } else { (0.0, 0.0, 0.0) };
         let HistogramSet { offsets, data } = self;
         let offsets: &[usize] = offsets;
 
@@ -423,13 +632,22 @@ impl HistogramSet {
 
         std::thread::scope(|scope| {
             for (range, chunk) in shards {
-                scope.spawn(move || match binned.columns() {
-                    BinColumns::U8(a) => accumulate_shard(
-                        tier, chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
-                    ),
-                    BinColumns::U16(a) => accumulate_shard(
-                        tier, chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
-                    ),
+                scope.spawn(move || {
+                    if has_sparse {
+                        accumulate_shard_mixed(
+                            tier, chunk, offsets, range, binned, dense, rows, grad, hess, og,
+                            oh, totals,
+                        );
+                        return;
+                    }
+                    match binned.columns() {
+                        BinColumns::U8(a) => accumulate_shard(
+                            tier, chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
+                        ),
+                        BinColumns::U16(a) => accumulate_shard(
+                            tier, chunk, offsets, range, a, n, dense, rows, grad, hess, og, oh,
+                        ),
+                    }
                 });
             }
         });
@@ -481,6 +699,32 @@ impl HistogramSet {
         match src {
             BinSource::Ram(m) => {
                 let n = m.n_rows();
+                if m.has_sparse() {
+                    // Mixed matrix: continued accumulation with the
+                    // correction computed from *this call's* rows — in
+                    // the row-sharded fold each grid cell corrects from
+                    // its own sub-range, which keeps the per-cell sums
+                    // independent of the worker schedule.
+                    let dense = sub.len() == n;
+                    let totals = leaf_totals(n, sub, grad, hess);
+                    if !dense {
+                        scr.og.clear();
+                        scr.oh.clear();
+                        scr.og.reserve(sub.len());
+                        scr.oh.reserve(sub.len());
+                        for &i in sub {
+                            scr.og.push(grad[i as usize]);
+                            scr.oh.push(hess[i as usize]);
+                        }
+                    }
+                    let nf = self.n_features();
+                    let HistogramSet { offsets, data } = self;
+                    accumulate_shard_mixed(
+                        tier, data, offsets, 0..nf, m, dense, sub, grad, hess, &scr.og,
+                        &scr.oh, totals,
+                    );
+                    return;
+                }
                 if sub.len() == n {
                     match m.columns() {
                         BinColumns::U8(a) => self.dense_cols(tier, a, n, grad, hess),
@@ -1075,6 +1319,61 @@ mod tests {
         pool.recycle(HistogramSet::new(&[]));
         pool.recycle(HistogramSet::new(&[5]));
         assert_eq!(pool.free_count(), 1);
+    }
+
+    /// The O(nnz) sparse kernel on a mixed matrix must equal the
+    /// densified scalar oracle bit-for-bit on integer-exact statistics,
+    /// for every tier and shard count, on whole-leaf and subset row
+    /// sets (the module-doc contract).
+    #[test]
+    fn sparse_kernel_matches_densified_oracle_on_integer_stats() {
+        use crate::data::binmatrix::MixedCol;
+        let n = 40usize;
+        // f0 sparse (default bin 1 — interior), f1 dense, f2 sparse
+        // with explicit default-bin codes among the present entries.
+        let (mut r0, mut c0) = (Vec::new(), Vec::new());
+        let (mut r2, mut c2) = (Vec::new(), Vec::new());
+        for i in (0..n).step_by(3) {
+            r0.push(i as u32);
+            c0.push(((i / 3) % 4) as u16);
+        }
+        for i in (0..n).step_by(7) {
+            r2.push(i as u32);
+            c2.push(if i % 2 == 0 { 2u16 } else { 3u16 }); // 2 == default
+        }
+        let mid: Vec<u16> = (0..n).map(|i| (i % 5) as u16).collect();
+        let mixed = BinMatrix::from_mixed_cols(
+            n,
+            &[4, 5, 4],
+            vec![
+                MixedCol::Sparse { rows: r0, codes: c0, default_bin: 1 },
+                MixedCol::Dense(mid),
+                MixedCol::Sparse { rows: r2, codes: c2, default_bin: 2 },
+            ],
+        );
+        let grad: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let hess = vec![1.0; n];
+        let all: Vec<u32> = (0..n as u32).collect();
+        let subset: Vec<u32> = (0..n as u32).filter(|i| i % 3 != 1).collect();
+        for rows in [&all[..], &subset[..]] {
+            let mut want = HistogramSet::new(&[4, 5, 4]);
+            want.build_scalar(&mixed, rows, &grad, &hess);
+            for tier in crate::simd::available_tiers() {
+                for k in [1usize, 2, 3] {
+                    let mut got = HistogramSet::new(&[4, 5, 4]);
+                    got.build_sharded_with_tier(&mixed, rows, &grad, &hess, k, tier);
+                    for f in 0..3 {
+                        for b in 0..want.n_bins(f) {
+                            let (g0, h0, c0) = want.bin(f, b);
+                            let (g1, h1, c1) = got.bin(f, b);
+                            assert_eq!(c0, c1, "tier={tier:?} k={k} f={f} b={b}");
+                            assert_eq!(g0.to_bits(), g1.to_bits(), "tier={tier:?} k={k} f={f} b={b}");
+                            assert_eq!(h0.to_bits(), h1.to_bits(), "tier={tier:?} k={k} f={f} b={b}");
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

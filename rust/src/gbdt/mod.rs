@@ -20,7 +20,9 @@ pub mod model;
 pub mod splitter;
 pub mod tree;
 
-pub use booster::{BinStore, Booster, GbdtParams};
+pub use booster::{
+    train_sparse, train_sparse_with_penalty, BinStore, Booster, GbdtParams,
+};
 pub use distributed::{train_row_sharded, Reducer, SumReducer, REDUCE_SHARDS};
 pub use grower::GrowthMode;
 pub use model::GbdtModel;

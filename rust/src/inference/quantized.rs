@@ -72,6 +72,7 @@
 
 use super::flat::{complete_layout_ok, TreeRef};
 use super::{AdaptiveBatch, AdaptivePolicy};
+use crate::data::{CsrMatrix, SparseDataset, Task};
 use crate::gbdt::loss::Objective;
 use crate::gbdt::tree::{Node, Tree};
 use crate::gbdt::GbdtModel;
@@ -861,6 +862,96 @@ impl QuantizedFlatModel {
             }
         }
         AdaptiveBatch { scores: out, trees_evaluated }
+    }
+
+    /// Columnar batched raw scores over a sparse (CSR) matrix. Absent
+    /// entries are the implicit `0.0`, so each chunk's row-major bin
+    /// block is seeded with every feature's **default code** — the bin
+    /// of `0.0` under the model's distinct-threshold table — in one
+    /// pass, and only present entries are binned and scattered on top
+    /// (a present NaN takes the top bin `bounds[f].len()`, exactly the
+    /// dense rule). One binary search per present entry, an O(nnz)
+    /// scatter per chunk, then the identical blocked descent as
+    /// [`QuantizedFlatModel::predict_batch_columns`] — so outputs are
+    /// bit-identical to densifying the matrix and running the dense
+    /// columnar path (pinned in `tests/sparse_parity.rs`). Columns
+    /// beyond the model's feature count are ignored, mirroring the
+    /// dense paths.
+    pub fn predict_batch_columns_sparse(&self, x: &CsrMatrix) -> Vec<Vec<f64>> {
+        self.predict_batch_columns_sparse_with_tier(x, simd::tier())
+    }
+
+    /// [`QuantizedFlatModel::predict_batch_columns_sparse`] on an
+    /// explicit dispatch tier (parity tests, benches). Unsupported
+    /// tiers clamp to the detected one; every tier is bit-identical.
+    pub fn predict_batch_columns_sparse_with_tier(
+        &self,
+        x: &CsrMatrix,
+        tier: Tier,
+    ) -> Vec<Vec<f64>> {
+        let nf = self.n_features;
+        assert!(
+            x.n_cols >= nf,
+            "need one column per model feature: got {}, model has {nf}",
+            x.n_cols
+        );
+        let n_rows = x.n_rows;
+        // The code every absent entry bins to: `#{bounds[f] < 0.0}`,
+        // identical to feeding an explicit 0.0 through the dense rule.
+        let default_codes: Vec<u16> = self
+            .bounds
+            .iter()
+            .map(|t| t.partition_point(|&b| b < 0.0) as u16)
+            .collect();
+        let mut out: Vec<Vec<f64>> = (0..n_rows).map(|_| self.base_scores.clone()).collect();
+        let mut xb = vec![0u16; COLUMNAR_CHUNK_ROWS.min(n_rows) * nf];
+        for cstart in (0..n_rows).step_by(COLUMNAR_CHUNK_ROWS) {
+            let cend = (cstart + COLUMNAR_CHUNK_ROWS).min(n_rows);
+            let xb = &mut xb[..(cend - cstart) * nf];
+            for (r, row) in xb.chunks_exact_mut(nf).enumerate() {
+                row.copy_from_slice(&default_codes);
+                let (idx, vals) = x.row(cstart + r);
+                for (&f, &v) in idx.iter().zip(vals) {
+                    let f = f as usize;
+                    if f >= nf {
+                        break; // column indices ascend; the rest are extras
+                    }
+                    let t = &self.bounds[f];
+                    row[f] = if v.is_nan() {
+                        t.len() as u16
+                    } else {
+                        t.partition_point(|&b| b < v) as u16
+                    };
+                }
+            }
+            for start in (0..cend - cstart).step_by(BLOCK_ROWS) {
+                let end = (start + BLOCK_ROWS).min(cend - cstart);
+                let rows = &mut out[cstart + start..cstart + end];
+                self.descend_block_tiered(&xb[start * nf..end * nf], nf, rows, tier);
+            }
+        }
+        out
+    }
+
+    /// Dataset score over a sparse test set: accuracy (classification)
+    /// or R² (regression), computed exactly like
+    /// [`crate::inference::Predictor::score`] but served through
+    /// [`QuantizedFlatModel::predict_batch_columns_sparse`] — the CSR
+    /// rows are binned straight into the chunked columnar descent, so
+    /// no dense float matrix is ever materialized.
+    pub fn score_sparse(&self, data: &SparseDataset) -> f64 {
+        let scores = self.predict_batch_columns_sparse(&data.x);
+        match data.task {
+            Task::Regression => {
+                let preds: Vec<f64> = scores.iter().map(|r| r[0]).collect();
+                crate::metrics::r2_score(&data.targets, &preds)
+            }
+            _ => {
+                let preds: Vec<usize> =
+                    scores.iter().map(|r| self.objective.predict_class(r)).collect();
+                crate::metrics::accuracy(&data.labels, &preds)
+            }
+        }
     }
 }
 

@@ -6,13 +6,15 @@
 //!              [--iota 2] [--xi 1] [--forestsize 1024] [--oblivious] \
 //!              [--workers K] [--out-of-core [--row-block N]] \
 //!              [--out model.toad]
+//! toad train   --libsvm data.svm [--task regression|binary|multiclass:K] \
+//!              --rounds 32 --depth 2     # sparse CSR pipeline end to end
 //! toad size    --model model.toad                  # layout breakdown
 //! toad predict --model model.toad --dataset breastcancer [--n 10]
 //! toad bench-inference --dataset covtype_binary    # packed vs decoded
 //! ```
 
 use toad::cli::{dataset_by_name, Args};
-use toad::data::train_test_split;
+use toad::data::{train_test_split, train_test_split_sparse, Task};
 use toad::gbdt::GbdtParams;
 use toad::layout::{self, toad_format::size_breakdown, EncodeOptions, FeatureInfo, PackedModel};
 use toad::sweep::table;
@@ -55,11 +57,16 @@ commands:
                          --oblivious grows CatBoost-style level-shared trees;
                          --workers K row-shards histogram builds over K threads;
                          --out-of-core streams bins through an on-disk arena
-                         (--row-block N rows per block, default 65536)
+                         (--row-block N rows per block, default 65536);
+                         --libsvm F trains on a sparse libsvm/svmlight file
+                         (--task regression|binary|multiclass:K, default
+                         regression) through the nnz-scaled CSR pipeline
   size                   print the layout size breakdown of a .toad blob
   predict                run a saved model over a synthetic dataset
   sweep                  run a penalty sweep: --dataset D [--kind feature|threshold]
-                         [--rounds N] [--depth D] (Figure 6-style table)
+                         [--rounds N] [--depth D] (Figure 6-style table);
+                         --libsvm F [--libsvm-test F2] sweeps a sparse
+                         dataset through the CSR trainer + sparse scorer
   export-c               generate a self-contained C99 file from a blob:
                          --model model.toad --out model.c [--outputs N --features D]
   help                   this text
@@ -86,7 +93,67 @@ fn cmd_datasets() -> i32 {
     0
 }
 
+/// `--task regression|binary|multiclass:K` (default regression) — the
+/// label convention a libsvm file should be read under.
+fn parse_task(args: &Args) -> Result<Task, String> {
+    let spec = args.get_or("task", "regression");
+    match spec.as_str() {
+        "regression" => Ok(Task::Regression),
+        "binary" => Ok(Task::Binary),
+        other => match other.strip_prefix("multiclass:") {
+            Some(kstr) => {
+                let k: usize = kstr
+                    .parse()
+                    .map_err(|_| format!("--task: invalid class count `{kstr}`"))?;
+                if k < 2 {
+                    return Err("--task multiclass:K needs K >= 2".into());
+                }
+                Ok(Task::Multiclass(k))
+            }
+            None => Err(format!("--task must be regression|binary|multiclass:K, got `{other}`")),
+        },
+    }
+}
+
+/// `train --libsvm <path>`: train on a sparse libsvm/svmlight file
+/// through the CSR pipeline — sparse binning, the nnz-scaled histogram
+/// kernel, and sparse columnar scoring; no dense float matrix is ever
+/// materialized.
+fn cmd_train_libsvm(args: &Args, path: &str) -> i32 {
+    let run = || -> Result<i32, String> {
+        let rounds = args.get_usize("rounds", 32)?;
+        let depth = args.get_usize("depth", 2)?;
+        let seed = args.get_usize("seed", 1)? as u64;
+        let task = parse_task(args)?;
+        let data = toad::data::csv::read_libsvm(std::path::Path::new(path), path, task)
+            .map_err(|e| e.to_string())?;
+        let (train_set, test_set) = train_test_split_sparse(&data, 0.2, seed);
+        let mut gbdt = GbdtParams::paper(rounds, depth);
+        if args.get_bool("oblivious") {
+            gbdt.growth = toad::gbdt::GrowthMode::Oblivious;
+        }
+        gbdt.row_workers = args.get_usize("workers", 0)?;
+        let model = toad::gbdt::train_sparse(&train_set, gbdt);
+        let score = model.quantize().score_sparse(&test_set);
+        println!(
+            "{path}: rows={} features={} density={:.4} score={score:.4} trees={}",
+            data.n_rows(),
+            data.n_features(),
+            data.x.density(),
+            model.n_trees(),
+        );
+        Ok(0)
+    };
+    run().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        2
+    })
+}
+
 fn cmd_train(args: &Args) -> i32 {
+    if let Some(path) = args.get("libsvm") {
+        return cmd_train_libsvm(args, path);
+    }
     let name = args.get_or("dataset", "breastcancer");
     let Some(ds) = dataset_by_name(&name) else {
         eprintln!("unknown dataset `{name}`");
@@ -212,13 +279,40 @@ fn cmd_size(args: &Args) -> i32 {
     0
 }
 
+/// The `sweep --libsvm` rows: load (and, with `--libsvm-test`, align)
+/// sparse train/test sets, then run the univariate grid through the
+/// CSR trainer and sparse columnar scorer.
+fn sweep_rows_libsvm(
+    args: &Args,
+    path: &str,
+    kind: toad::sweep::figures::PenaltyKind,
+    values: &[f64],
+    rounds: usize,
+    depth: usize,
+) -> Result<Vec<toad::sweep::figures::UniRow>, String> {
+    use toad::sweep::figures::univariate_rows_sparse;
+    let task = parse_task(args)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+    let train =
+        toad::data::csv::read_libsvm(std::path::Path::new(path), path, task).map_err(|e| e.to_string())?;
+    if let Some(tpath) = args.get("libsvm-test") {
+        let mut train = train;
+        let mut test = toad::data::csv::read_libsvm(std::path::Path::new(tpath), tpath, task)
+            .map_err(|e| e.to_string())?;
+        // The two files may mention different max feature indices;
+        // widen both to the common feature space before training.
+        let nf = train.n_features().max(test.n_features());
+        train.pad_features(nf)?;
+        test.pad_features(nf)?;
+        Ok(univariate_rows_sparse(&train, &test, kind, values, rounds, depth))
+    } else {
+        let (tr, te) = train_test_split_sparse(&train, 0.2, seed);
+        Ok(univariate_rows_sparse(&tr, &te, kind, values, rounds, depth))
+    }
+}
+
 fn cmd_sweep(args: &Args) -> i32 {
     use toad::sweep::figures::{univariate_rows, PenaltyKind};
-    let name = args.get_or("dataset", "breastcancer");
-    let Some(ds) = dataset_by_name(&name) else {
-        eprintln!("unknown dataset `{name}`");
-        return 2;
-    };
     let kind = match args.get_or("kind", "threshold").as_str() {
         "feature" => PenaltyKind::Feature,
         "threshold" => PenaltyKind::Threshold,
@@ -230,7 +324,22 @@ fn cmd_sweep(args: &Args) -> i32 {
     let rounds = args.get_usize("rounds", 64).unwrap_or(64);
     let depth = args.get_usize("depth", 2).unwrap_or(2);
     let values: Vec<f64> = (-4..=15).step_by(2).map(|e| 2f64.powi(e)).collect();
-    let rows = univariate_rows(ds, 1, kind, &values, rounds, depth, 4000);
+    let rows = if let Some(path) = args.get("libsvm") {
+        match sweep_rows_libsvm(args, path, kind, &values, rounds, depth) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let name = args.get_or("dataset", "breastcancer");
+        let Some(ds) = dataset_by_name(&name) else {
+            eprintln!("unknown dataset `{name}`");
+            return 2;
+        };
+        univariate_rows(ds, 1, kind, &values, rounds, depth, 4000)
+    };
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {

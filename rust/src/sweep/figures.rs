@@ -242,6 +242,48 @@ pub fn univariate_rows(
         .collect()
 }
 
+/// [`univariate_rows`] over a sparse (libsvm-loaded) train/test pair:
+/// the same penalty grid and reported statistics, but trained through
+/// [`crate::gbdt::train_sparse_with_penalty`] and scored through
+/// [`crate::inference::QuantizedFlatModel::score_sparse`], so neither
+/// side ever materializes a dense float matrix. `test` must have at
+/// most as many features as `train` after
+/// [`crate::data::SparseDataset::pad_features`] alignment (the CLI
+/// pads before calling).
+pub fn univariate_rows_sparse(
+    train: &crate::data::SparseDataset,
+    test: &crate::data::SparseDataset,
+    kind: PenaltyKind,
+    values: &[f64],
+    rounds: usize,
+    depth: usize,
+) -> Vec<UniRow> {
+    values
+        .iter()
+        .map(|&v| {
+            let (iota, xi) = match kind {
+                PenaltyKind::Feature => (v, 0.0),
+                PenaltyKind::Threshold => (0.0, v),
+            };
+            let penalty = crate::toad::ToadPenalty::new(train.n_features(), iota, xi);
+            let (model, _) = crate::gbdt::train_sparse_with_penalty(
+                train,
+                GbdtParams::paper(rounds, depth),
+                penalty,
+            );
+            let stats = crate::toad::ReuseStats::from_model(&model);
+            let score = model.quantize().score_sparse(test);
+            UniRow {
+                penalty: v,
+                score,
+                n_features: stats.n_features_used,
+                n_global_values: stats.n_global_values(),
+                reuse_factor: stats.reuse_factor(),
+            }
+        })
+        .collect()
+}
+
 // ------------------------------------------------- Figure 8 (RF comparison)
 
 /// One (series, limit) point of the Appendix D comparison.

@@ -1,0 +1,364 @@
+//! Bit-parity suite for the sparse CSR pipeline.
+//!
+//! The claims under test (see `gbdt::histogram` and `data::binning`
+//! module docs):
+//!
+//! * `Binner::fit_sparse` boundaries are bit-equal to `Binner::fit` on
+//!   the densified input, and `bin_sparse` equals `bin_matrix` on the
+//!   densified input cell for cell — universally, NaN-valued present
+//!   entries and explicit zeros included;
+//! * the nnz-scaled histogram kernel (present-entry accumulation + one
+//!   closed-form default-bin correction) is bit-identical across every
+//!   (SIMD tier, feature-shard count) combination, and coincides bit
+//!   for bit with the densified kernel on integer-exact statistics —
+//!   so one-round training on balanced ±1 targets produces the same
+//!   model bits sparse as densified, over every density, code width,
+//!   shard count, and row-worker count;
+//! * multi-round sparse training (arbitrary float statistics) is
+//!   invariant within its family: the same model bits for every
+//!   feature-shard count, and for every row-worker count `K ≥ 1`;
+//! * sparse columnar inference (`predict_batch_columns_sparse`) equals
+//!   dense columnar inference on the densified input bit for bit, on
+//!   every tier, NaN present entries included — and `score_sparse`
+//!   therefore equals `Predictor::score` on the densified test set;
+//! * a present NaN is *not* an absent entry: it routes to the top bin,
+//!   never the feature's default bin.
+
+use toad::data::binning::Binner;
+use toad::data::synth::synth_sparse_rows;
+use toad::data::{
+    train_test_split_sparse, CsrMatrix, SparseDataset, Task, SPARSE_DENSITY_THRESHOLD,
+};
+use toad::gbdt::{GbdtModel, Node};
+
+/// Exact structural bits of a model: every tree node's discriminant and
+/// payload with floats as raw bits, plus the base scores. Two models
+/// compare equal here iff training made identical decisions *and*
+/// identical arithmetic.
+fn model_bits(m: &GbdtModel) -> Vec<u64> {
+    let mut out: Vec<u64> = m.base_scores.iter().map(|b| b.to_bits()).collect();
+    for stream in &m.trees {
+        out.push(stream.len() as u64);
+        for tree in stream {
+            out.push(tree.nodes.len() as u64);
+            for node in &tree.nodes {
+                match *node {
+                    Node::Internal { feature, bin, threshold, left, right } => {
+                        out.push(0);
+                        out.push(feature as u64);
+                        out.push(bin as u64);
+                        out.push(threshold.to_bits() as u64);
+                        out.push(left as u64);
+                        out.push(right as u64);
+                    }
+                    Node::Leaf { value } => {
+                        out.push(1);
+                        out.push(value.to_bits());
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn sparse_dataset(seed: u64, n: usize, nf: usize, density: f64) -> SparseDataset {
+    let (x, targets) = synth_sparse_rows(seed, 0..n, nf, density);
+    SparseDataset {
+        name: "synth_sparse".into(),
+        x,
+        targets,
+        labels: vec![],
+        task: Task::Regression,
+    }
+}
+
+/// A deterministic sparse dataset with *integer-exact* statistics:
+/// small-integer feature values (feature 0 wide enough to force a u16
+/// arena at max_bins 400), balanced ±1 regression targets (⇒ base
+/// score exactly 0.0, round-1 gradients ±1, hessians 1), and a
+/// `density_pct`-percent presence rule. On these, every histogram sum
+/// is integer-valued, so f64 addition is associative and the sparse
+/// default-bin correction `T − P` is exact.
+fn int_sparse(n: usize, nf: usize, density_pct: usize) -> SparseDataset {
+    assert!(n % 2 == 0, "balanced targets need even n");
+    let mut x = CsrMatrix::empty(nf);
+    let mut row: Vec<(u32, f32)> = Vec::new();
+    for i in 0..n {
+        row.clear();
+        for f in 0..nf {
+            if (i * 31 + f * 17 + 7) % 100 < density_pct {
+                let v = if f == 0 {
+                    ((i * 7) % 300) as f32 - 150.0
+                } else {
+                    ((i + 2 * f) % 7) as f32 - 3.0 // includes explicit 0.0
+                };
+                row.push((f as u32, v));
+            }
+        }
+        x.push_row(&row);
+    }
+    let targets: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    SparseDataset { name: "int_sparse".into(), x, targets, labels: vec![], task: Task::Regression }
+}
+
+fn bits2(scores: &[Vec<f64>]) -> Vec<u64> {
+    scores.iter().flat_map(|r| r.iter().map(|v| v.to_bits())).collect()
+}
+
+#[cfg(not(miri))]
+mod training {
+    use super::*;
+    use toad::data::BinMatrix;
+    use toad::gbdt::booster::train;
+    use toad::gbdt::histogram::HistogramSet;
+    use toad::gbdt::{train_sparse, GbdtParams};
+    use toad::inference::Predictor;
+
+    fn params(max_bins: usize) -> GbdtParams {
+        GbdtParams { max_bins, ..GbdtParams::paper(1, 3) }
+    }
+
+    /// Tentpole claim: on integer-exact statistics, sparse training is
+    /// bit-identical to training the dense pipeline on the densified
+    /// input — for every density (sparse-stored, mixed, dense-stored),
+    /// both code widths, every feature-shard count, and row-sharded
+    /// reduction too. The root leaf has ≥ SHARD_MIN_ROWS rows, so the
+    /// sharded paths genuinely engage.
+    #[test]
+    fn sparse_training_matches_densified_on_integer_stats() {
+        let n = 5000;
+        for density_pct in [1usize, 20, 90] {
+            let sds = int_sparse(n, 8, density_pct);
+            let dense = sds.densify();
+            for max_bins in [255usize, 400] {
+                for (shards, workers) in [(1usize, 0usize), (3, 0), (1, 2), (3, 3)] {
+                    let p = GbdtParams {
+                        histogram_shards: shards,
+                        row_workers: workers,
+                        ..params(max_bins)
+                    };
+                    let want = model_bits(&train(&dense, p));
+                    let got = model_bits(&train_sparse(&sds, p));
+                    assert_eq!(
+                        want, got,
+                        "density={density_pct}% max_bins={max_bins} \
+                         shards={shards} workers={workers}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Within the sparse family, multi-round training on arbitrary
+    /// float statistics is invariant: every feature-shard count trains
+    /// the same bits as the sequential build, and every row-worker
+    /// count `K ≥ 1` trains the same bits as `K = 1` (the `K = 0` /
+    /// `K ≥ 1` last-ulp split is the same documented contract as the
+    /// dense pipeline's).
+    #[test]
+    fn sparse_training_invariant_across_shards_and_workers() {
+        let sds = sparse_dataset(29, 5000, 24, 0.05);
+        let p0 = GbdtParams { max_bins: 255, ..GbdtParams::paper(4, 3) };
+        let want = model_bits(&train_sparse(&sds, GbdtParams { histogram_shards: 1, ..p0 }));
+        for shards in [2usize, 3, 8] {
+            let got = model_bits(&train_sparse(&sds, GbdtParams { histogram_shards: shards, ..p0 }));
+            assert_eq!(want, got, "shards={shards}");
+        }
+        let w1 = model_bits(&train_sparse(&sds, GbdtParams { row_workers: 1, ..p0 }));
+        for workers in [2usize, 3] {
+            let got = model_bits(&train_sparse(&sds, GbdtParams { row_workers: workers, ..p0 }));
+            assert_eq!(w1, got, "row_workers={workers}");
+        }
+    }
+
+    fn hist_bits(h: &HistogramSet, bins: &[usize]) -> Vec<u64> {
+        let mut out = Vec::new();
+        for (f, &nb) in bins.iter().enumerate() {
+            for b in 0..nb {
+                let (g, h_, c) = h.bin(f, b);
+                out.extend([g.to_bits(), h_.to_bits(), c as u64]);
+            }
+        }
+        out
+    }
+
+    /// The sparse kernel over a real mixed `bin_sparse` arena is
+    /// bit-identical across every (SIMD tier, shard count) combination,
+    /// on arbitrary float statistics, for full-leaf and subset row
+    /// sets.
+    #[test]
+    fn sparse_histogram_kernel_is_tier_and_shard_invariant() {
+        let n = 3000;
+        let sds = sparse_dataset(31, n, 10, 0.08);
+        let binner = Binner::fit_sparse(&sds, 255);
+        let binned = binner.bin_sparse(&sds.x);
+        assert!(binned.has_sparse(), "fixture must exercise sparse columns");
+        let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let grad: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let hess: Vec<f64> = (0..n).map(|i| 0.5 + ((i * 13) % 7) as f64 * 0.1).collect();
+        let full: Vec<u32> = (0..n as u32).collect();
+        let subset: Vec<u32> = (0..n as u32).filter(|i| i % 5 != 2).collect();
+        for rows in [&full, &subset] {
+            let mut want: Option<Vec<u64>> = None;
+            for tier in toad::simd::available_tiers() {
+                for shards in [1usize, 2, 5] {
+                    let mut h = HistogramSet::new(&bins);
+                    h.build_sharded_with_tier(&binned, rows, &grad, &hess, shards, tier);
+                    let got = hist_bits(&h, &bins);
+                    match &want {
+                        None => want = Some(got),
+                        Some(w) => assert_eq!(
+                            w,
+                            &got,
+                            "tier={tier:?} shards={shards} rows={}",
+                            rows.len()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    /// End-to-end histogram cross-check on integer statistics: the
+    /// sparse kernel over `bin_sparse` equals the scalar oracle over
+    /// `bin_matrix(densify)` bit for bit (both matrices are cell-equal;
+    /// on integer stats the add regrouping is exact).
+    #[test]
+    fn sparse_histogram_matches_densified_oracle_on_integer_stats() {
+        let n = 1200;
+        let sds = int_sparse(n, 6, 10);
+        let binner = Binner::fit_sparse(&sds, 255);
+        let sparse_binned = binner.bin_sparse(&sds.x);
+        assert!(sparse_binned.has_sparse());
+        let dense_binned = binner.bin_matrix(&sds.densify());
+        let bins: Vec<usize> = (0..binner.n_features()).map(|f| binner.n_bins(f)).collect();
+        let grad: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let hess = vec![1.0; n];
+        let rows: Vec<u32> = (0..n as u32).filter(|i| i % 3 != 1).collect();
+        let mut oracle = HistogramSet::new(&bins);
+        oracle.build_scalar(&dense_binned, &rows, &grad, &hess);
+        for tier in toad::simd::available_tiers() {
+            for shards in [1usize, 3] {
+                let mut h = HistogramSet::new(&bins);
+                h.build_sharded_with_tier(&sparse_binned, &rows, &grad, &hess, shards, tier);
+                assert_eq!(
+                    hist_bits(&oracle, &bins),
+                    hist_bits(&h, &bins),
+                    "tier={tier:?} shards={shards}"
+                );
+            }
+        }
+    }
+
+    /// Sparse binning equals densified binning cell for cell —
+    /// universally (no integer-stat caveat), NaN present entries
+    /// included — and the storage choice follows the density
+    /// threshold.
+    #[test]
+    fn bin_sparse_matches_densified_binning_with_nans() {
+        for density in [0.01f64, 0.2, 0.9] {
+            let mut sds = sparse_dataset(37, 1500, 12, density);
+            for k in (0..sds.x.values.len()).step_by(53) {
+                sds.x.values[k] = f32::NAN;
+            }
+            let dense = sds.densify();
+            for max_bins in [16usize, 255, 400] {
+                let want_binner = Binner::fit(&dense, max_bins);
+                let binner = Binner::fit_sparse(&sds, max_bins);
+                for f in 0..binner.n_features() {
+                    assert_eq!(want_binner.n_bins(f), binner.n_bins(f), "f={f}");
+                    for b in 0..binner.n_bins(f).saturating_sub(1) {
+                        assert_eq!(
+                            want_binner.threshold_value(f, b).to_bits(),
+                            binner.threshold_value(f, b).to_bits(),
+                            "density={density} max_bins={max_bins} f={f} boundary {b}"
+                        );
+                    }
+                }
+                let ms: BinMatrix = binner.bin_sparse(&sds.x);
+                assert_eq!(
+                    ms.has_sparse(),
+                    density < SPARSE_DENSITY_THRESHOLD,
+                    "storage choice at density {density}"
+                );
+                let md = want_binner.bin_matrix(&dense);
+                assert_eq!(
+                    ms.to_row_major(),
+                    md.to_row_major(),
+                    "density={density} max_bins={max_bins}"
+                );
+            }
+        }
+    }
+
+    /// Sparse columnar inference equals dense columnar inference on the
+    /// densified input bit for bit, on every tier, NaN present entries
+    /// included — `score`/sweeps/gateway can serve sparse datasets
+    /// through the same descent kernels unchanged.
+    #[test]
+    fn sparse_columnar_inference_matches_dense_bit_for_bit() {
+        for density in [0.01f64, 0.2, 0.9] {
+            let mut sds = sparse_dataset(41, 2000, 12, density);
+            for k in (0..sds.x.values.len()).step_by(97) {
+                sds.x.values[k] = f32::NAN;
+            }
+            let model = train_sparse(&sds, GbdtParams::paper(8, 3));
+            let quant = model.quantize();
+            let dense = sds.densify();
+            let cols: Vec<&[f32]> = dense.features.iter().map(|c| c.as_slice()).collect();
+            let want = bits2(&quant.predict_batch_columns(&cols, sds.n_rows()));
+            for tier in toad::simd::available_tiers() {
+                let got = bits2(&quant.predict_batch_columns_sparse_with_tier(&sds.x, tier));
+                assert_eq!(want, got, "density={density} tier={tier:?}");
+            }
+        }
+    }
+
+    /// `score_sparse` computes the identical metric (same predictions,
+    /// same fold) as `Predictor::score` on the densified test set.
+    #[test]
+    fn score_sparse_equals_dense_score() {
+        let sds = sparse_dataset(43, 1500, 10, 0.1);
+        let (tr, te) = train_test_split_sparse(&sds, 0.2, 5);
+        let model = train_sparse(&tr, GbdtParams::paper(8, 3));
+        let quant = model.quantize();
+        let want = quant.score(&te.densify());
+        assert_eq!(want.to_bits(), quant.score_sparse(&te).to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Miri-runnable: pure binning semantics, no training.
+// ---------------------------------------------------------------------
+
+/// A present NaN is not an absent entry: it bins to the top bin (routes
+/// right at every split), while absent rows read the feature's default
+/// bin — the bin of the implicit 0.0.
+#[test]
+fn nan_present_entry_routes_to_top_bin_not_default() {
+    let mut x = CsrMatrix::empty(1);
+    x.push_row(&[(0, 1.0)]);
+    x.push_row(&[(0, 2.0)]);
+    x.push_row(&[(0, 3.0)]);
+    x.push_row(&[(0, f32::NAN)]);
+    x.push_row(&[]); // absent ⇒ implicit 0.0
+    x.push_row(&[(0, -1.0)]);
+    let sds = SparseDataset {
+        name: "nan_vs_absent".into(),
+        x,
+        targets: vec![0.0; 6],
+        labels: vec![],
+        task: Task::Regression,
+    };
+    let binner = Binner::fit_sparse(&sds, 16);
+    let binned = binner.bin_sparse(&sds.x);
+    let top = (binner.n_bins(0) - 1) as u16;
+    let default = binner.default_bin(0);
+    assert_ne!(top, default);
+    assert_eq!(binned.bin(0, 3), top, "present NaN takes the top bin");
+    assert_eq!(binned.bin(0, 4), default, "absent entry takes the default bin");
+    // Distinct values {-1, 0 (implicit), 1, 2, 3} ⇒ 0.0 is interior,
+    // not bin 0: absent ≠ "smallest".
+    assert_ne!(default, 0);
+}
